@@ -1,0 +1,64 @@
+//! Convolutional flow (paper §6.2.2): the SVHN-like LeNet network uses
+//! the HLS-flow path — conv CMVM kernels are optimized once and
+//! time-multiplexed over image positions, so the network is simulated
+//! layer-by-layer and resources are reported per kernel instance.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example svhn_conv
+//! ```
+
+use anyhow::Result;
+use da4ml::cmvm::Strategy;
+use da4ml::estimate::FpgaModel;
+use da4ml::nn::{self, NetworkSpec, TestVectors};
+use da4ml::pipeline::PipelineConfig;
+use da4ml::report::Table;
+use da4ml::runtime;
+
+fn main() -> Result<()> {
+    let dir = runtime::artifacts_dir();
+    let spec = NetworkSpec::from_json(&runtime::load_text(dir.join("svhn.weights.json"))?)?;
+    let vecs = TestVectors::from_json(&runtime::load_text(dir.join("svhn.testvec.json"))?)?;
+
+    // Bit-exact layered simulation vs the exported JAX golden outputs.
+    let outs = nn::sim::forward_batch(&spec, &vecs.inputs);
+    let exact = outs.iter().zip(&vecs.outputs).filter(|(a, b)| a == b).count();
+    println!("{}/{} outputs bit-exact vs JAX/Pallas export", exact, outs.len());
+    assert_eq!(exact, outs.len());
+    if !vecs.labels.is_empty() {
+        println!("accuracy on test vectors: {:.3}", nn::sim::accuracy(&outs, &vecs.labels));
+    }
+
+    let model = FpgaModel::default();
+    let cfg = PipelineConfig::every_n_adders(5);
+    let mut table = Table::new(
+        "SVHN-like conv net, per-layer CMVM (paper Table 7 shape)",
+        &["layer", "strategy", "inst", "LUT", "DSP", "FF", "adders"],
+    );
+    for s in [Strategy::Latency, Strategy::Da { dc: 2 }] {
+        let reports = nn::compile::layer_reports(&spec, s, &model, &cfg)?;
+        for r in &reports {
+            table.push(vec![
+                r.name.clone(),
+                s.name().into(),
+                r.instances.to_string(),
+                r.total.lut.to_string(),
+                r.total.dsp.to_string(),
+                r.total.ff.to_string(),
+                r.total.adders.to_string(),
+            ]);
+        }
+        let agg = nn::compile::aggregate(&reports);
+        table.push(vec![
+            "TOTAL".into(),
+            s.name().into(),
+            "-".into(),
+            agg.lut.to_string(),
+            agg.dsp.to_string(),
+            agg.ff.to_string(),
+            agg.adders.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,128 @@
+"""AOT artifact builder (`make artifacts`): trains the benchmark
+networks, integerizes them at every quantization level, and exports
+
+* ``<name>_w{W}a{A}.weights.json``  — layer spec for the rust frontend
+* ``<name>_w{W}a{A}.testvec.json``  — integer inputs + golden outputs
+* ``<name>.weights.json``           — alias of the finest level
+* ``<name>.hlo.txt``                — integer forward pass as HLO text
+* ``model.hlo.txt``                 — alias of jet_mlp (Makefile target)
+* ``metrics.json``                  — accuracy / resolution per level
+
+HLO **text** is the interchange format (not serialized protos): jax
+>= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects,
+while the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Python runs once here and never on the rust request path.
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from . import quant
+from .model import forward_int, lower_hlo_text
+from .train import BUILDERS, LEVELS
+
+N_TESTVEC = 256  # vectors exported for rust golden cross-checking
+N_METRIC = 4000  # vectors used for the accuracy/resolution metrics
+
+
+def _int_inputs(name, x, a_bits):
+    if name == "muon":
+        return quant.binary_input(x)
+    return quant.quantize_input(x, a_bits)
+
+
+def _metric(name, outputs, labels, a_bits):
+    """Accuracy for classifiers; truncated-MSE resolution (mrad-like
+    units) for the muon regression."""
+    if name == "muon":
+        s = quant.act_scale(a_bits) * 10.0  # target was scaled by 10
+        pred = outputs[:, 0] / s
+        err = np.clip(pred - labels, -0.05, 0.05)  # truncated MSE
+        return {"resolution_mrad": float(np.sqrt(np.mean(err**2)) * 1000.0)}
+    acc = float(np.mean(np.argmax(outputs, axis=1) == labels))
+    return {"accuracy": acc}
+
+
+def build_all(outdir: str, models=None, force: bool = False) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    manifest_path = os.path.join(outdir, "metrics.json")
+    if os.path.exists(manifest_path) and not force:
+        print(f"{manifest_path} exists; skipping (use --force to rebuild)")
+        return
+
+    metrics = {}
+    for name, builder in BUILDERS.items():
+        if models and name not in models:
+            continue
+        print(f"[aot] training {name} ...")
+        _, _, _, (xt, yt), make_spec = builder()
+        metrics[name] = {}
+        for w_bits, a_bits in LEVELS:
+            tag = f"{name}_w{w_bits}a{a_bits}"
+            spec = make_spec(w_bits, a_bits)
+            with open(os.path.join(outdir, f"{tag}.weights.json"), "w") as f:
+                json.dump(spec, f)
+
+            # Integer golden outputs via the L2/L1 path (Pallas kernel).
+            xi = _int_inputs(name, xt, a_bits)
+            out = np.array(
+                forward_int(spec, xi[:N_METRIC].astype(np.int32))
+            )
+            m = _metric(name, out[:N_METRIC], yt[:N_METRIC], a_bits)
+            m["w_bits"], m["a_bits"] = w_bits, a_bits
+            metrics[name][f"w{w_bits}a{a_bits}"] = m
+
+            vec = {
+                "inputs": xi[:N_TESTVEC].reshape(min(N_TESTVEC, len(xi)), -1)
+                .astype(int)
+                .tolist(),
+                "outputs": out[:N_TESTVEC].astype(int).tolist(),
+            }
+            if name != "muon":
+                vec["labels"] = yt[:N_TESTVEC].astype(int).tolist()
+            with open(os.path.join(outdir, f"{tag}.testvec.json"), "w") as f:
+                json.dump(vec, f)
+            print(f"[aot]   {tag}: {m}")
+
+        # Finest level is the canonical artifact + HLO golden model.
+        w_bits, a_bits = LEVELS[0]
+        spec = make_spec(w_bits, a_bits)
+        with open(os.path.join(outdir, f"{name}.weights.json"), "w") as f:
+            json.dump(spec, f)
+        tag = f"{name}_w{w_bits}a{a_bits}"
+        for suffix in ("testvec",):
+            src = os.path.join(outdir, f"{tag}.{suffix}.json")
+            dst = os.path.join(outdir, f"{name}.{suffix}.json")
+            with open(src) as f_in, open(dst, "w") as f_out:
+                f_out.write(f_in.read())
+        print(f"[aot] lowering {name} to HLO text ...")
+        hlo = lower_hlo_text(spec)
+        with open(os.path.join(outdir, f"{name}.hlo.txt"), "w") as f:
+            f.write(hlo)
+
+    # Makefile's canonical artifact.
+    jet = os.path.join(outdir, "jet_mlp.hlo.txt")
+    if os.path.exists(jet):
+        with open(jet) as f_in, open(os.path.join(outdir, "model.hlo.txt"), "w") as f_out:
+            f_out.write(f_in.read())
+
+    with open(manifest_path, "w") as f:
+        json.dump(metrics, f, indent=1)
+    print(f"[aot] wrote {manifest_path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--models", nargs="*", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    build_all(args.out, models=args.models, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

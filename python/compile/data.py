@@ -1,0 +1,73 @@
+"""Synthetic datasets with the geometry of the paper's benchmarks
+(DESIGN.md §3 substitutions: the LHC datasets are not redistributable;
+class-separable synthetic data with the same shapes preserves the
+accuracy-vs-bitwidth and resource trends the tables measure).
+
+All generators are deterministic in the seed and return standardized
+float features (≈ zero mean, unit-ish variance, clipped to ±4).
+"""
+
+import numpy as np
+
+
+def jets_hlf(n: int, seed: int = 0, n_features: int = 16, n_classes: int = 5):
+    """High-level-feature jet tagging: Gaussian mixture, 5 classes.
+
+    Class prototypes are drawn from a *fixed* seed so every split samples
+    the same underlying population; `seed` only controls the sampling.
+    """
+    proto = np.random.default_rng(1234)
+    rng = np.random.default_rng(seed)
+    means = proto.normal(0.0, 1.1, (n_classes, n_features))
+    scales = 0.6 + proto.random((n_classes, n_features))
+    y = rng.integers(0, n_classes, n)
+    x = means[y] + rng.normal(0.0, 1.0, (n, n_features)) * scales[y]
+    return np.clip(x / 1.5, -4, 4).astype(np.float32), y.astype(np.int64)
+
+
+def muon_tracks(n: int, seed: int = 0, bins: int = 32, stations: int = 2):
+    """Muon stub hit-maps: binary occupancy of `stations`*`bins` strips;
+    target is the track slope (mrad-scale regression)."""
+    rng = np.random.default_rng(seed)
+    theta = rng.uniform(-0.2, 0.2, n)
+    x = np.zeros((n, stations * bins), dtype=np.float32)
+    levers = np.linspace(20.0, 60.0, stations)
+    for s, lever in enumerate(levers):
+        pos = bins / 2 + theta * lever + rng.normal(0, 0.4, n)
+        idx = np.clip(np.round(pos), 0, bins - 1).astype(int)
+        x[np.arange(n), s * bins + idx] = 1.0
+        # occasional noise hit
+        noise = rng.integers(0, bins, n)
+        mask = rng.random(n) < 0.15
+        x[np.arange(n)[mask], s * bins + noise[mask]] = 1.0
+    return x, theta.astype(np.float32)
+
+
+def particles(n: int, seed: int = 0, n_particles: int = 16, n_features: int = 8,
+              n_classes: int = 5):
+    """Particle-cloud jets for the MLP-Mixer: [n, P, F] float features."""
+    protos = np.random.default_rng(4321)
+    rng = np.random.default_rng(seed)
+    proto = protos.normal(0.0, 1.0, (n_classes, n_particles, n_features))
+    spread = 0.5 + 0.5 * protos.random((n_classes, 1, 1))
+    y = rng.integers(0, n_classes, n)
+    x = proto[y] + rng.normal(0.0, 1.0, (n, n_particles, n_features)) * spread[y]
+    return np.clip(x / 1.5, -4, 4).astype(np.float32), y.astype(np.int64)
+
+
+def svhn_like(n: int, seed: int = 0, hw: int = 14, channels: int = 3,
+              n_classes: int = 10):
+    """Digit-blob images: one noisy template per class, NHWC."""
+    protos = np.random.default_rng(777)
+    rng = np.random.default_rng(seed)
+    templates = protos.normal(0.0, 1.0, (n_classes, hw, hw, channels))
+    # Smooth the templates a little so conv filters have structure to find.
+    for _ in range(2):
+        templates = (
+            templates
+            + np.roll(templates, 1, axis=1)
+            + np.roll(templates, 1, axis=2)
+        ) / 3.0
+    y = rng.integers(0, n_classes, n)
+    x = templates[y] + rng.normal(0.0, 0.8, (n, hw, hw, channels))
+    return np.clip(x / 1.5, -4, 4).astype(np.float32), y.astype(np.int64)

@@ -1,0 +1,110 @@
+"""L1 — the Pallas CMVM kernel (the paper's compute hot-spot).
+
+The quantized dense layer `y = requant(x @ W + b)` is the CMVM the
+da4ml compiler unrolls into adder graphs on the FPGA side. Here the same
+computation is expressed as a Pallas kernel so the L2 JAX model lowers
+it into the AOT HLO artifact the rust runtime executes as the *golden
+model*.
+
+Hardware adaptation (DESIGN.md §3): the paper's target is a fully
+unrolled FPGA adder fabric. On TPU the analogous structure is an MXU
+tile: the kernel blocks the output dimension (`d_out`) so each grid step
+works on a VMEM-resident `(d_in, block_n)` weight tile with int32
+accumulation — the systolic-array counterpart of the paper's spatial
+unrolling. ``interpret=True`` everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and correctness (bit-exactness vs the rust DAIS
+simulation) is the deliverable on this testbed.
+
+Integer semantics (shared bit-exactly with rust `nn::sim` and the DAIS
+programs): int32 accumulation, optional ReLU, **arithmetic** right shift
+(floor), saturation to `[clip_min, clip_max]`.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _requant(z, relu: bool, shift: int, clip_min: int, clip_max: int):
+    """Shared requantization epilogue (ReLU -> floor-shift -> clip)."""
+    if relu:
+        z = jnp.maximum(z, 0)
+    if shift > 0:
+        z = jnp.right_shift(z, shift)  # arithmetic on signed ints
+    elif shift < 0:
+        z = jnp.left_shift(z, -shift)
+    return jnp.clip(z, clip_min, clip_max)
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu, shift, clip_min, clip_max):
+    """One grid step: full batch × one block of output columns."""
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    acc = jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    z = acc + b_ref[...][None, :]
+    o_ref[...] = _requant(z, relu, shift, clip_min, clip_max)
+
+
+def dense(
+    x,
+    w,
+    b,
+    *,
+    relu: bool,
+    shift: int,
+    clip_min: int,
+    clip_max: int,
+    block_n: int = 64,
+):
+    """Quantized dense layer as a Pallas kernel.
+
+    Args:
+      x: int32 `[batch, d_in]` activations.
+      w: int32 `[d_in, d_out]` weights.
+      b: int32 `[d_out]` bias (pre-shift scale).
+      relu: apply ReLU before the shift.
+      shift: arithmetic right-shift of the requantizer (may be <= 0).
+      clip_min / clip_max: saturation bounds.
+      block_n: output-column tile width (the VMEM/MXU tile knob).
+
+    Returns:
+      int32 `[batch, d_out]` requantized outputs.
+    """
+    batch, d_in = x.shape
+    d_in_w, d_out = w.shape
+    assert d_in == d_in_w and b.shape == (d_out,)
+    block_n = min(block_n, d_out)
+    # Pad d_out to a multiple of block_n so the grid tiles exactly.
+    pad = (-d_out) % block_n
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        b = jnp.pad(b, (0, pad))
+    n_padded = d_out + pad
+    grid = (n_padded // block_n,)
+
+    out = pl.pallas_call(
+        partial(
+            _dense_kernel,
+            relu=relu,
+            shift=shift,
+            clip_min=clip_min,
+            clip_max=clip_max,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, d_in), lambda i: (0, 0)),
+            pl.BlockSpec((d_in, block_n), lambda i: (0, i)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((batch, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_padded), jnp.int32),
+        interpret=True,  # CPU path; Mosaic lowering is TPU-only
+    )(x.astype(jnp.int32), w.astype(jnp.int32), b.astype(jnp.int32))
+    return out[:, :d_out]

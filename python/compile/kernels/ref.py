@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the Pallas CMVM kernel (the L1 correctness
+reference) plus a plain-numpy integer model mirroring rust `nn::sim`.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def requant(z, relu: bool, shift: int, clip_min: int, clip_max: int):
+    """Reference requantization: ReLU -> arithmetic shift -> clip."""
+    if relu:
+        z = jnp.maximum(z, 0)
+    if shift > 0:
+        z = jnp.right_shift(z, shift)
+    elif shift < 0:
+        z = jnp.left_shift(z, -shift)
+    return jnp.clip(z, clip_min, clip_max)
+
+
+def dense(x, w, b, *, relu: bool, shift: int, clip_min: int, clip_max: int):
+    """Reference quantized dense layer (same signature as kernels.cmvm)."""
+    z = (
+        jnp.matmul(
+            x.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32
+        )
+        + b.astype(jnp.int32)[None, :]
+    )
+    return requant(z, relu, shift, clip_min, clip_max)
+
+
+def dense_np(x, w, b, *, relu: bool, shift: int, clip_min: int, clip_max: int):
+    """Numpy int64 reference (overflow-free ground truth)."""
+    z = x.astype(np.int64) @ w.astype(np.int64) + b.astype(np.int64)[None, :]
+    if relu:
+        z = np.maximum(z, 0)
+    if shift > 0:
+        z = z >> shift
+    elif shift < 0:
+        z = z << -shift
+    return np.clip(z, clip_min, clip_max)

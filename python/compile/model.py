@@ -1,0 +1,223 @@
+"""L2 — integer network forward passes in JAX, calling the L1 Pallas
+kernel, plus the float training forward used by train.py.
+
+The integer path consumes the same layer-spec dictionaries the rust NN
+frontend reads from `artifacts/<name>.weights.json`, guaranteeing the
+three implementations (JAX/Pallas golden model via PJRT, rust DAIS adder
+graphs, rust host simulator) are bit-exact by construction:
+
+* dense / einsum_dense / conv2d -> `kernels.cmvm.dense` (int32 matmul,
+  ReLU, arithmetic shift, clip);
+* conv2d is applied as an im2col CMVM over patches, in (dy, dx, cin)
+  row-major patch order — identical to rust `nn::sim`;
+* pooling: 2x2 stride-2 max, or average as sum >> 2.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import cmvm
+
+
+def _as_i32(a):
+    return jnp.asarray(a, dtype=jnp.int32)
+
+
+def _dense_spec(layer, x, wb=None):
+    w, b = wb if wb is not None else (
+        _as_i32(np.array(layer["w"])),
+        _as_i32(np.array(layer["b"])),
+    )
+    return cmvm.dense(
+        x,
+        w,
+        b,
+        relu=layer["relu"],
+        shift=layer["shift"],
+        clip_min=layer["clip_min"],
+        clip_max=layer["clip_max"],
+    )
+
+
+COMPUTE_LAYERS = ("dense", "einsum_dense", "conv2d")
+
+
+def weight_args(spec):
+    """The (w, b) pairs of the compute layers, in layer order — the
+    parameter convention of the AOT artifact (weights are *runtime
+    parameters* of the golden model, not closed-over constants: the
+    legacy xla_extension mis-executes pallas while-loops with large
+    captured constants; parameters side-step it and let one executable
+    serve any weight set)."""
+    out = []
+    for layer in spec["layers"]:
+        if layer["type"] in COMPUTE_LAYERS:
+            out.append(
+                (
+                    np.array(layer["w"], dtype=np.int32),
+                    np.array(layer["b"], dtype=np.int32),
+                )
+            )
+    return out
+
+
+def _patches(x, kh, kw):
+    """im2col in (dy, dx, cin) order: [batch, oh*ow, kh*kw*c]."""
+    b, h, w, c = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(x[:, dy : dy + oh, dx : dx + ow, :])
+    # [b, oh, ow, kh*kw, c] -> [b, oh*ow, kh*kw*c]
+    stacked = jnp.stack(cols, axis=3)
+    return stacked.reshape(b, oh * ow, kh * kw * c), oh, ow
+
+
+def forward_int(spec, x, params=None):
+    """Run a whole network spec on an int32 batch.
+
+    Args:
+      spec: dict with `input_shape` and `layers` (see rust nn::spec).
+      x: int32 `[batch, prod(input_shape)]`.
+      params: optional list of (w, b) arrays (from `weight_args` order);
+        when given, the spec's embedded weights are ignored — this is the
+        AOT parameterized path.
+
+    Returns:
+      int32 `[batch, n_out]`.
+    """
+    batch = x.shape[0]
+    shape = tuple(spec["input_shape"])
+    state = x.reshape((batch,) + shape)
+    saved = {}
+    pi = 0
+
+    def next_wb(layer):
+        nonlocal pi
+        if params is None:
+            return None
+        wb = params[pi]
+        pi += 1
+        return wb
+
+    for layer in spec["layers"]:
+        ty = layer["type"]
+        if ty == "dense":
+            state = _dense_spec(layer, state.reshape(batch, -1), next_wb(layer))
+        elif ty == "einsum_dense":
+            wb = next_wb(layer)
+            b_, p, f = state.shape
+            if layer["axis"] == "feature":
+                out = _dense_spec(layer, state.reshape(b_ * p, f), wb)
+                state = out.reshape(b_, p, -1)
+            else:  # particle axis: transpose, mix, transpose back
+                xt = jnp.swapaxes(state, 1, 2).reshape(b_ * f, p)
+                out = _dense_spec(layer, xt, wb)
+                state = jnp.swapaxes(out.reshape(b_, f, -1), 1, 2)
+        elif ty == "conv2d":
+            wb = next_wb(layer)
+            kh, kw = layer["kh"], layer["kw"]
+            pat, oh, ow = _patches(state, kh, kw)
+            flat = pat.reshape(batch * oh * ow, -1)
+            out = _dense_spec(layer, flat, wb)
+            state = out.reshape(batch, oh, ow, -1)
+        elif ty in ("max_pool2d", "avg_pool2d"):
+            b_, h, w, c = state.shape
+            v = state[:, : h - h % 2, : w - w % 2, :]
+            v = v.reshape(b_, h // 2, 2, w // 2, 2, c)
+            if ty == "max_pool2d":
+                state = jnp.max(v, axis=(2, 4))
+            else:
+                state = jnp.right_shift(jnp.sum(v, axis=(2, 4)), 2)
+        elif ty == "flatten":
+            state = state.reshape(batch, -1)
+        elif ty == "save":
+            saved[layer["tag"]] = state
+        elif ty == "add_saved":
+            state = state + saved[layer["tag"]]
+        else:
+            raise ValueError(f"unknown layer type {ty}")
+    return state.reshape(batch, -1)
+
+
+def lower_hlo_text(spec, batch: int = 1) -> str:
+    """Lower the integer forward pass to HLO text for the rust runtime.
+
+    HLO *text* (not serialized protos) is the interchange format: jax
+    >= 0.5 emits 64-bit instruction ids which xla_extension 0.5.1
+    rejects; the text parser reassigns ids (see /opt/xla-example).
+    The lowered function takes a flat int32 input `[n]` (batch folded)
+    followed by the (w, b) pairs of every compute layer (`weight_args`
+    order) and returns a tuple with one int32 output `[n_out]`.
+    """
+    from jax._src.lib import xla_client as xc
+
+    n_in = int(np.prod(spec["input_shape"]))
+    wargs = weight_args(spec)
+
+    def fn(x, *flat):
+        params = [(flat[2 * i], flat[2 * i + 1]) for i in range(len(wargs))]
+        out = forward_int(spec, x.reshape(1, n_in), params)
+        return (out.reshape(-1),)
+
+    arg = [jax.ShapeDtypeStruct((n_in,), jnp.int32)]
+    for w, b in wargs:
+        arg.append(jax.ShapeDtypeStruct(w.shape, jnp.int32))
+        arg.append(jax.ShapeDtypeStruct(b.shape, jnp.int32))
+    lowered = jax.jit(fn).lower(*arg)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Float forward passes for training (same topology, float32).
+# ---------------------------------------------------------------------------
+
+
+def float_forward(params, arch, x):
+    """Float forward for training. `arch` is a list of float-layer tuples
+    mirroring the spec layers; params is a pytree of (w, b) pairs."""
+    saved = {}
+    state = x
+    pi = 0
+    for layer in arch:
+        ty = layer[0]
+        if ty == "dense":
+            w, b = params[pi]
+            pi += 1
+            state = state.reshape(state.shape[0], -1) @ w + b
+            if layer[1]:
+                state = jax.nn.relu(state)
+        elif ty == "einsum":
+            w, b = params[pi]
+            pi += 1
+            axis, relu = layer[1], layer[2]
+            if axis == "feature":
+                state = state @ w + b
+            else:
+                state = jnp.einsum("bpf,pq->bqf", state, w) + b[None, :, None]
+            if relu:
+                state = jax.nn.relu(state)
+        elif ty == "conv":
+            w, b = params[pi]
+            pi += 1
+            kh = layer[1]
+            pat, oh, ow = _patches(state, kh, kh)
+            out = pat @ w + b
+            state = jax.nn.relu(out).reshape(state.shape[0], oh, ow, -1)
+        elif ty == "maxpool":
+            b_, h, w_, c = state.shape
+            v = state[:, : h - h % 2, : w_ - w_ % 2, :]
+            state = v.reshape(b_, h // 2, 2, w_ // 2, 2, c).max(axis=(2, 4))
+        elif ty == "save":
+            saved[layer[1]] = state
+        elif ty == "add":
+            state = state + saved[layer[1]]
+        elif ty == "flatten":
+            state = state.reshape(state.shape[0], -1)
+    return state

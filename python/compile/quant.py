@@ -1,0 +1,63 @@
+"""HGQ-like post-training integerization (the quantization substrate).
+
+The paper's networks are trained with HGQ (per-weight bitwidths). Here
+we reproduce the *consumable artifact* of that flow — heavily quantized
+integer networks whose accuracy degrades as the bit budget shrinks — via
+power-of-two-scale post-training quantization:
+
+* activations: uniform scale ``s_a = 2^(a_bits-3)`` (float range ±4,
+  inputs standardized), signed clip to ``a_bits``;
+* weights: per-layer power-of-two scale ``2^k`` maximizing use of
+  ``w_bits``;
+* bias: integerized at the accumulator scale ``s_a * 2^k``;
+* requantizer: shift ``k`` (exact — all scales are powers of two), so
+  every layer's output returns to scale ``s_a``.
+
+Power-of-two scales make every rescaling an exact arithmetic shift,
+which is what allows the rust DAIS adder graphs, the JAX/Pallas golden
+model and the plain-integer simulators to agree **bit-exactly**.
+"""
+
+import numpy as np
+
+
+def act_scale(a_bits: int) -> int:
+    """Activation scale 2^(a_bits-3): float range [-4, 4)."""
+    return 1 << max(a_bits - 3, 0)
+
+
+def act_clip(a_bits: int):
+    """Signed clip bounds of an a_bits activation."""
+    return -(1 << (a_bits - 1)), (1 << (a_bits - 1)) - 1
+
+
+def weight_scale_pow2(w: np.ndarray, w_bits: int) -> int:
+    """Largest power-of-two exponent k with round(w * 2^k) within w_bits."""
+    wmax = float(np.max(np.abs(w))) if w.size else 1.0
+    if wmax == 0.0:
+        return 0
+    limit = (1 << (w_bits - 1)) - 1
+    k = int(np.floor(np.log2(limit / wmax)))
+    return max(k, 0)
+
+
+def quantize_dense(w: np.ndarray, b: np.ndarray, w_bits: int, a_bits: int):
+    """Integerize one dense layer; returns (w_int, b_int, shift)."""
+    k = weight_scale_pow2(w, w_bits)
+    limit = (1 << (w_bits - 1)) - 1
+    w_int = np.clip(np.round(w * (1 << k)), -limit - 1, limit).astype(np.int64)
+    s_a = act_scale(a_bits)
+    b_int = np.round(b * s_a * (1 << k)).astype(np.int64)
+    return w_int, b_int, k
+
+
+def quantize_input(x: np.ndarray, a_bits: int) -> np.ndarray:
+    """Standardized float inputs -> signed a_bits integers."""
+    s_a = act_scale(a_bits)
+    lo, hi = act_clip(a_bits)
+    return np.clip(np.round(x * s_a), lo, hi).astype(np.int64)
+
+
+def binary_input(x: np.ndarray) -> np.ndarray:
+    """1-bit inputs (muon hit maps): {0, 1} integers, no scaling."""
+    return (x > 0.5).astype(np.int64)

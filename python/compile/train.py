@@ -1,0 +1,275 @@
+"""Build-time training of the four benchmark networks (float), followed
+by post-training integerization at several quantization levels.
+
+Everything here runs exactly once per `make artifacts`; nothing from
+this module is on the rust request path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import quant
+from .model import float_forward
+
+# Quantization sweep: (weight_bits, act_bits), mirroring the paper's six
+# per-table quantization levels from finest to coarsest.
+LEVELS = [(8, 8), (7, 7), (6, 6), (5, 6), (4, 6), (4, 5)]
+
+
+def _init_dense(rng, d_in, d_out):
+    w = rng.normal(0.0, np.sqrt(2.0 / d_in), (d_in, d_out)).astype(np.float32)
+    b = np.zeros(d_out, dtype=np.float32)
+    return jnp.array(w), jnp.array(b)
+
+
+def _adam(params, grads, state, lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    m, v, t = state
+    t = t + 1
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mh = jax.tree.map(lambda a: a / (1 - b1**t), m)
+    vh = jax.tree.map(lambda a: a / (1 - b2**t), v)
+    params = jax.tree.map(lambda p, a, b_: p - lr * a / (jnp.sqrt(b_) + eps), params, mh, vh)
+    return params, (m, v, t)
+
+
+def _train(arch, params, x, y, *, steps, batch, loss_kind, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def loss_fn(p, xb, yb):
+        out = float_forward(p, arch, xb)
+        if loss_kind == "ce":
+            logp = jax.nn.log_softmax(out)
+            return -jnp.mean(logp[jnp.arange(xb.shape[0]), yb])
+        return jnp.mean((out.reshape(-1) - yb) ** 2)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    state = (
+        jax.tree.map(jnp.zeros_like, params),
+        jax.tree.map(jnp.zeros_like, params),
+        0,
+    )
+    for _ in range(steps):
+        idx = rng.integers(0, x.shape[0], batch)
+        _, grads = grad_fn(params, jnp.array(x[idx]), jnp.array(y[idx]))
+        params, state = _adam(params, grads, state)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Architectures: (float arch for training, spec-layer builder).
+# ---------------------------------------------------------------------------
+
+
+def _spec_dense(w, b, relu, shift, a_bits, wide=False):
+    lo, hi = quant.act_clip(16 if wide else a_bits)
+    return {
+        "type": "dense",
+        "w": w.tolist(),
+        "b": b.tolist(),
+        "relu": bool(relu),
+        "shift": int(shift),
+        "clip_min": int(lo),
+        "clip_max": int(hi),
+    }
+
+
+def _quantize_chain(params, relus, w_bits, a_bits, kinds=None, extra=None):
+    """Integerize a chain of dense-like layers into spec layer dicts."""
+    kinds = kinds or ["dense"] * len(params)
+    extra = extra or [{}] * len(params)
+    layers = []
+    for i, ((w, b), relu) in enumerate(zip(params, relus)):
+        w_np = np.asarray(w, dtype=np.float64)
+        b_np = np.asarray(b, dtype=np.float64)
+        w_int, b_int, k = quant.quantize_dense(w_np, b_np, w_bits, a_bits)
+        wide = i == len(params) - 1  # final layer keeps 16-bit outputs
+        lo, hi = quant.act_clip(16 if wide else a_bits)
+        layer = {
+            "type": kinds[i],
+            "w": w_int.tolist(),
+            "b": b_int.tolist(),
+            "relu": bool(relu),
+            "shift": int(k),
+            "clip_min": int(lo),
+            "clip_max": int(hi),
+        }
+        layer.update(extra[i])
+        layers.append(layer)
+    return layers
+
+
+def build_jet_mlp(seed=0):
+    """16 -> 64 -> 32 -> 16 -> 16 -> 5 dense chain (paper §6.2.1)."""
+    rng = np.random.default_rng(seed)
+    dims = [16, 64, 32, 16, 16, 5]
+    arch = [("dense", i < len(dims) - 2) for i in range(len(dims) - 1)]
+    params = [_init_dense(rng, dims[i], dims[i + 1]) for i in range(len(dims) - 1)]
+    x, y = data_mod.jets_hlf(20000, seed=1)
+    params = _train(arch, params, x, y, steps=400, batch=256, loss_kind="ce")
+    xt, yt = data_mod.jets_hlf(4000, seed=2)
+
+    def make_spec(w_bits, a_bits):
+        relus = [a[1] for a in arch]
+        layers = _quantize_chain(params, relus, w_bits, a_bits)
+        return {
+            "name": "jet_mlp",
+            "input_bits": a_bits,
+            "input_signed": True,
+            "input_shape": [16],
+            "layers": layers,
+        }
+
+    return params, arch, (x, y), (xt, yt), make_spec
+
+
+def build_muon(seed=0):
+    """Binary hit-map regression 64 -> 32 -> 32 -> 16 -> 1 (paper §6.2.3)."""
+    rng = np.random.default_rng(seed)
+    dims = [64, 32, 32, 16, 1]
+    arch = [("dense", i < len(dims) - 2) for i in range(len(dims) - 1)]
+    params = [_init_dense(rng, dims[i], dims[i + 1]) for i in range(len(dims) - 1)]
+    x, y = data_mod.muon_tracks(20000, seed=3)
+    # Scale the target so the regression output sits in the act range.
+    params = _train(arch, params, x, y * 10.0, steps=500, batch=256, loss_kind="mse")
+    xt, yt = data_mod.muon_tracks(4000, seed=4)
+
+    def make_spec(w_bits, a_bits):
+        relus = [a[1] for a in arch]
+        layers = _quantize_chain(params, relus, w_bits, a_bits)
+        return {
+            "name": "muon",
+            "input_bits": 1,
+            "input_signed": False,
+            "input_shape": [64],
+            "layers": layers,
+        }
+
+    return params, arch, (x, y), (xt, yt), make_spec
+
+
+def build_mixer(seed=0):
+    """MLP-Mixer jet tagger on [16 particles x 8 features] with one skip
+    connection (paper §6.2.4, scaled geometry)."""
+    rng = np.random.default_rng(seed)
+    P, F = 16, 8
+    arch = [
+        ("save", "skip"),
+        ("einsum", "feature", True),
+        ("einsum", "particle", True),
+        ("add", "skip"),
+        ("einsum", "feature", True),
+        ("einsum", "particle", True),
+        ("flatten",),
+        ("dense", True),
+        ("dense", False),
+    ]
+    params = [
+        _init_dense(rng, F, F),
+        _init_dense(rng, P, P),
+        _init_dense(rng, F, F),
+        _init_dense(rng, P, P),
+        _init_dense(rng, P * F, 32),
+        _init_dense(rng, 32, 5),
+    ]
+    x, y = data_mod.particles(20000, seed=5, n_particles=P, n_features=F)
+    params = _train(arch, params, x, y, steps=400, batch=128, loss_kind="ce")
+    xt, yt = data_mod.particles(4000, seed=6, n_particles=P, n_features=F)
+
+    def make_spec(w_bits, a_bits):
+        dense_params = params
+        relus = [True, True, True, True, True, False]
+        kinds = [
+            "einsum_dense",
+            "einsum_dense",
+            "einsum_dense",
+            "einsum_dense",
+            "dense",
+            "dense",
+        ]
+        extra = [
+            {"axis": "feature"},
+            {"axis": "particle"},
+            {"axis": "feature"},
+            {"axis": "particle"},
+            {},
+            {},
+        ]
+        qlayers = _quantize_chain(dense_params, relus, w_bits, a_bits, kinds, extra)
+        layers = [
+            {"type": "save", "tag": "skip"},
+            qlayers[0],
+            qlayers[1],
+            {"type": "add_saved", "tag": "skip"},
+            qlayers[2],
+            qlayers[3],
+            {"type": "flatten"},
+            qlayers[4],
+            qlayers[5],
+        ]
+        return {
+            "name": "mixer",
+            "input_bits": a_bits,
+            "input_signed": True,
+            "input_shape": [P, F],
+            "layers": layers,
+        }
+
+    return params, arch, (x, y), (xt, yt), make_spec
+
+
+def build_svhn(seed=0):
+    """LeNet-like conv net on 14x14x3 digit blobs (paper §6.2.2, scaled)."""
+    rng = np.random.default_rng(seed)
+    arch = [
+        ("conv", 3),  # 14 -> 12, 8 ch
+        ("maxpool",),  # 12 -> 6
+        ("conv", 3),  # 6 -> 4, 12 ch
+        ("maxpool",),  # 4 -> 2
+        ("flatten",),
+        ("dense", True),
+        ("dense", False),
+    ]
+    params = [
+        _init_dense(rng, 3 * 9, 8),
+        _init_dense(rng, 8 * 9, 12),
+        _init_dense(rng, 2 * 2 * 12, 32),
+        _init_dense(rng, 32, 10),
+    ]
+    x, y = data_mod.svhn_like(12000, seed=7)
+    params = _train(arch, params, x, y, steps=300, batch=128, loss_kind="ce")
+    xt, yt = data_mod.svhn_like(3000, seed=8)
+
+    def make_spec(w_bits, a_bits):
+        relus = [True, True, True, False]
+        kinds = ["conv2d", "conv2d", "dense", "dense"]
+        extra = [{"kh": 3, "kw": 3}, {"kh": 3, "kw": 3}, {}, {}]
+        qlayers = _quantize_chain(params, relus, w_bits, a_bits, kinds, extra)
+        layers = [
+            qlayers[0],
+            {"type": "max_pool2d"},
+            qlayers[1],
+            {"type": "max_pool2d"},
+            {"type": "flatten"},
+            qlayers[2],
+            qlayers[3],
+        ]
+        return {
+            "name": "svhn",
+            "input_bits": a_bits,
+            "input_signed": True,
+            "input_shape": [14, 14, 3],
+            "layers": layers,
+        }
+
+    return params, arch, (x, y), (xt, yt), make_spec
+
+
+BUILDERS = {
+    "jet_mlp": build_jet_mlp,
+    "muon": build_muon,
+    "mixer": build_mixer,
+    "svhn": build_svhn,
+}

@@ -1,0 +1,61 @@
+"""Synthetic-dataset substrate tests: determinism, shapes, population
+consistency across splits (the bug class that silently destroys the
+accuracy columns)."""
+
+import numpy as np
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from compile import data  # noqa: E402
+
+
+def test_jets_deterministic_and_split_consistent():
+    x1, y1 = data.jets_hlf(100, seed=5)
+    x2, y2 = data.jets_hlf(100, seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    # Different sampling seeds share the class population: a nearest-
+    # class-mean classifier fit on one split must beat chance on another.
+    xa, ya = data.jets_hlf(4000, seed=1)
+    xb, yb = data.jets_hlf(2000, seed=2)
+    means = np.stack([xa[ya == c].mean(0) for c in range(5)])
+    pred = np.argmin(((xb[:, None, :] - means[None]) ** 2).sum(-1), axis=1)
+    acc = np.mean(pred == yb)
+    assert acc > 0.6, f"cross-split accuracy {acc} — populations diverge"
+
+
+def test_jets_range_and_shape():
+    x, y = data.jets_hlf(500, seed=0)
+    assert x.shape == (500, 16) and y.shape == (500,)
+    assert np.all(np.abs(x) <= 4.0)
+    assert set(np.unique(y)) <= set(range(5))
+
+
+def test_muon_binary_and_informative():
+    x, theta = data.muon_tracks(2000, seed=0)
+    assert x.shape == (2000, 64)
+    assert set(np.unique(x)) <= {0.0, 1.0}
+    assert np.all(np.abs(theta) <= 0.2)
+    # Hit positions must correlate with the slope (a linear readout on
+    # the hit map beats predicting the mean).
+    w, *_ = np.linalg.lstsq(x, theta, rcond=None)
+    resid = theta - x @ w
+    assert resid.var() < 0.5 * theta.var()
+
+
+def test_particles_shapes():
+    x, y = data.particles(100, seed=0, n_particles=16, n_features=8)
+    assert x.shape == (100, 16, 8)
+    assert y.shape == (100,)
+
+
+def test_svhn_like_class_structure():
+    x, y = data.svhn_like(1000, seed=0)
+    assert x.shape == (1000, 14, 14, 3)
+    # Same-class images must be closer to their class template than to
+    # other templates on average.
+    t0 = x[y == 0].mean(0)
+    t1 = x[y == 1].mean(0)
+    d00 = np.mean((x[y == 0] - t0) ** 2)
+    d01 = np.mean((x[y == 0] - t1) ** 2)
+    assert d00 < d01

@@ -1,0 +1,39 @@
+"""Exporter integration: the spec dictionaries produced by train.py
+must decode in the rust frontend format and degrade gracefully with
+quantization level (accuracy monotonic-ish in bits)."""
+
+import json
+
+import numpy as np
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from compile import quant  # noqa: E402
+from compile.model import forward_int  # noqa: E402
+from compile.train import build_jet_mlp  # noqa: E402
+
+
+def test_jet_mlp_spec_schema_and_accuracy():
+    _, _, _, (xt, yt), make_spec = build_jet_mlp()
+    accs = {}
+    for (w_bits, a_bits) in [(8, 8), (4, 5)]:
+        spec = make_spec(w_bits, a_bits)
+        # Schema checks (must match rust nn::spec field names).
+        assert set(spec) == {"name", "input_bits", "input_signed",
+                             "input_shape", "layers"}
+        for layer in spec["layers"]:
+            assert layer["type"] == "dense"
+            assert set(layer) == {"type", "w", "b", "relu", "shift",
+                                  "clip_min", "clip_max"}
+        # JSON-serializable with exact ints.
+        text = json.dumps(spec)
+        assert json.loads(text) == spec
+
+        xi = quant.quantize_input(xt[:1000], a_bits).astype(np.int32)
+        out = np.array(forward_int(spec, xi))
+        accs[w_bits] = float(np.mean(np.argmax(out, 1) == yt[:1000]))
+
+    # The quantized model must actually classify (5 classes, chance 0.2),
+    # and the finer level must not be (much) worse than the coarser.
+    assert accs[8] > 0.5, accs
+    assert accs[8] >= accs[4] - 0.02, accs

@@ -1,0 +1,95 @@
+"""L1 correctness: the Pallas CMVM kernel vs the pure-jnp oracle vs the
+overflow-free numpy reference — the core correctness signal, swept over
+shapes, bitwidths, shifts and clip ranges with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from compile.kernels import cmvm, ref  # noqa: E402
+
+
+def _rand_case(rng, batch, d_in, d_out, x_bits, w_bits):
+    x = rng.integers(-(1 << (x_bits - 1)), 1 << (x_bits - 1), (batch, d_in))
+    w = rng.integers(-(1 << (w_bits - 1)), 1 << (w_bits - 1), (d_in, d_out))
+    b = rng.integers(-(1 << w_bits), 1 << w_bits, (d_out,))
+    return x.astype(np.int32), w.astype(np.int32), b.astype(np.int32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    batch=st.integers(1, 5),
+    d_in=st.integers(1, 24),
+    d_out=st.integers(1, 20),
+    x_bits=st.integers(2, 8),
+    w_bits=st.integers(2, 8),
+    shift=st.integers(-2, 8),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_vs_references(batch, d_in, d_out, x_bits, w_bits, shift, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand_case(rng, batch, d_in, d_out, x_bits, w_bits)
+    clip_min, clip_max = -(1 << 12), (1 << 12) - 1
+    kw = dict(relu=relu, shift=shift, clip_min=clip_min, clip_max=clip_max)
+    got = np.array(cmvm.dense(jnp.array(x), jnp.array(w), jnp.array(b), **kw))
+    oracle = np.array(ref.dense(jnp.array(x), jnp.array(w), jnp.array(b), **kw))
+    truth = ref.dense_np(x, w, b, **kw)
+    np.testing.assert_array_equal(got, truth)
+    np.testing.assert_array_equal(oracle, truth)
+
+
+@pytest.mark.parametrize("block_n", [1, 3, 8, 64, 128])
+def test_kernel_blocking_invariant(block_n):
+    """The VMEM tile width must not change the result."""
+    rng = np.random.default_rng(0)
+    x, w, b = _rand_case(rng, 4, 16, 20, 8, 6)
+    kw = dict(relu=True, shift=4, clip_min=-128, clip_max=127)
+    base = ref.dense_np(x, w, b, **kw)
+    got = np.array(
+        cmvm.dense(jnp.array(x), jnp.array(w), jnp.array(b), block_n=block_n, **kw)
+    )
+    np.testing.assert_array_equal(got, base)
+
+
+def test_negative_shift_is_left_shift():
+    x = np.array([[1, -2]], dtype=np.int32)
+    w = np.eye(2, dtype=np.int32)
+    b = np.zeros(2, dtype=np.int32)
+    out = np.array(
+        cmvm.dense(
+            jnp.array(x), jnp.array(w), jnp.array(b),
+            relu=False, shift=-3, clip_min=-100, clip_max=100,
+        )
+    )
+    np.testing.assert_array_equal(out, [[8, -16]])
+
+
+def test_arithmetic_shift_floors_negatives():
+    # -13 >> 2 must be -4 (floor), not -3 (truncation).
+    x = np.array([[-13]], dtype=np.int32)
+    w = np.array([[1]], dtype=np.int32)
+    b = np.zeros(1, dtype=np.int32)
+    out = np.array(
+        cmvm.dense(
+            jnp.array(x), jnp.array(w), jnp.array(b),
+            relu=False, shift=2, clip_min=-100, clip_max=100,
+        )
+    )
+    assert out[0, 0] == -4
+
+
+def test_saturation_bounds():
+    x = np.array([[127]], dtype=np.int32)
+    w = np.array([[127]], dtype=np.int32)
+    b = np.zeros(1, dtype=np.int32)
+    out = np.array(
+        cmvm.dense(
+            jnp.array(x), jnp.array(w), jnp.array(b),
+            relu=False, shift=0, clip_min=-128, clip_max=127,
+        )
+    )
+    assert out[0, 0] == 127

@@ -1,0 +1,51 @@
+"""Quantization-substrate tests: power-of-two scales, exactness of the
+integer pipeline, accuracy degradation with shrinking bit budgets."""
+
+import numpy as np
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from compile import quant  # noqa: E402
+
+
+def test_act_scale_and_clip():
+    assert quant.act_scale(8) == 32  # range [-4, 4)
+    assert quant.act_clip(8) == (-128, 127)
+    assert quant.act_clip(4) == (-8, 7)
+
+
+def test_weight_scale_uses_full_budget():
+    w = np.array([[0.7, -0.3], [0.1, 0.49]])
+    for bits in (3, 4, 6, 8):
+        k = quant.weight_scale_pow2(w, bits)
+        limit = (1 << (bits - 1)) - 1
+        wi = np.round(w * (1 << k))
+        assert np.max(np.abs(wi)) <= limit
+        # One more doubling would overflow the budget.
+        assert np.max(np.abs(np.round(w * (1 << (k + 1))))) > limit
+
+
+def test_quantize_dense_shift_consistency():
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.5, (8, 4))
+    b = rng.normal(0, 0.2, 4)
+    w_int, b_int, k = quant.quantize_dense(w, b, 6, 8)
+    # Dequantized product scale: x_int = x*32, z = x_int @ w_int + b_int
+    # ~ 32 * 2^k * (x @ w + b); shifting by k returns to scale 32.
+    x = rng.normal(0, 1, (16, 8))
+    x_int = quant.quantize_input(x, 8)
+    z = x_int @ w_int + b_int
+    approx = (z / (1 << k)) / 32.0
+    want = (x_int / 32.0) @ w + b
+    assert np.max(np.abs(approx - want)) < 0.15
+
+
+def test_binary_input():
+    x = np.array([0.0, 1.0, 0.4, 0.9])
+    np.testing.assert_array_equal(quant.binary_input(x), [0, 1, 0, 1])
+
+
+def test_zero_weights():
+    w_int, b_int, k = quant.quantize_dense(np.zeros((3, 2)), np.zeros(2), 4, 8)
+    assert k == 0
+    assert np.all(w_int == 0)

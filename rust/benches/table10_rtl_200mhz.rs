@@ -1,0 +1,11 @@
+//! Paper Table 10: jet-tagging MLP, hls4ml+DA vs standalone da4ml RTL,
+//! 200 MHz target (pipeline every 5 adders).
+
+fn main() {
+    da4ml::bench_tables_rtl::rtl_table(
+        "Table 10 — jet tagging, HLS flow vs RTL flow @ 200 MHz",
+        "jet_mlp",
+        5,
+    )
+    .expect("run `make artifacts` first");
+}

@@ -1,0 +1,11 @@
+//! Paper Table 11: jet-tagging MLP, hls4ml+DA vs standalone da4ml RTL,
+//! 1 GHz target (pipeline every adder).
+
+fn main() {
+    da4ml::bench_tables_rtl::rtl_table(
+        "Table 11 — jet tagging, HLS flow vs RTL flow @ 1 GHz",
+        "jet_mlp",
+        1,
+    )
+    .expect("run `make artifacts` first");
+}

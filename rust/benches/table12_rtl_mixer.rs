@@ -1,0 +1,11 @@
+//! Paper Table 12: MLP-Mixer, hls4ml+DA vs standalone da4ml RTL,
+//! 200 MHz target.
+
+fn main() {
+    da4ml::bench_tables_rtl::rtl_table(
+        "Table 12 — MLP-Mixer, HLS flow vs RTL flow @ 200 MHz",
+        "mixer",
+        5,
+    )
+    .expect("run `make artifacts` first");
+}

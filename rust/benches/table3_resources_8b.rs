@@ -1,0 +1,10 @@
+//! Paper Table 3: post-synthesis resources of random m×m **8-bit**
+//! matrices under the latency baseline and DA at dc ∈ {0, 2, -1}
+//! (Vivado is substituted by the calibrated analytic model,
+//! DESIGN.md §3).
+
+use da4ml::bench_tables::resource_table;
+
+fn main() {
+    resource_table("Table 3 — random matrices, 8-bit weights, 8-bit inputs", 8);
+}

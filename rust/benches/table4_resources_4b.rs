@@ -1,0 +1,8 @@
+//! Paper Table 4: same as Table 3 with **4-bit** weights (the all-LUT
+//! regime: no DSP inference, DA LUTs ≈ half of the baseline's).
+
+use da4ml::bench_tables::resource_table;
+
+fn main() {
+    resource_table("Table 4 — random matrices, 4-bit weights, 8-bit inputs", 4);
+}

@@ -1,0 +1,16 @@
+//! Paper Table 5: the jet-tagging MLP at a 200 MHz target (pipeline
+//! every 5 adders), latency strategy vs da4ml, six quantization levels.
+
+use da4ml::bench_tables::network_table;
+use da4ml::pipeline::PipelineConfig;
+
+fn main() {
+    network_table(
+        "Table 5 — jet-tagging MLP @ 200 MHz (register every 5 adders, dc = 2)",
+        "jet_mlp",
+        "accuracy",
+        "acc",
+        &PipelineConfig::every_n_adders(5),
+    )
+    .expect("run `make artifacts` first");
+}

@@ -1,0 +1,16 @@
+//! Paper Table 6: the jet-tagging MLP at a 1 GHz target (register every
+//! adder: deeper pipeline, more FFs, higher Fmax).
+
+use da4ml::bench_tables::network_table;
+use da4ml::pipeline::PipelineConfig;
+
+fn main() {
+    network_table(
+        "Table 6 — jet-tagging MLP @ 1 GHz (register every adder, dc = 2)",
+        "jet_mlp",
+        "accuracy",
+        "acc",
+        &PipelineConfig::every_n_adders(1),
+    )
+    .expect("run `make artifacts` first");
+}

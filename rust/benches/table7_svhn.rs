@@ -1,0 +1,59 @@
+//! Paper Table 7: the SVHN-like conv net (HLS-flow path: conv CMVM
+//! kernels are optimized once and time-multiplexed across positions, so
+//! II equals the position count of the widest layer).
+
+use da4ml::bench_tables::{metric, load_level, LEVELS};
+use da4ml::cmvm::Strategy;
+use da4ml::estimate::FpgaModel;
+use da4ml::nn::{self, LayerSpec};
+use da4ml::pipeline::PipelineConfig;
+use da4ml::report::Table;
+
+fn main() {
+    let model = FpgaModel::default();
+    let pipe = PipelineConfig::every_n_adders(5);
+    let mut table = Table::new(
+        "Table 7 — SVHN-like conv net @ 200 MHz (dc = 2)",
+        &["strategy", "acc", "II[cycles]", "latency[cycles]", "LUT", "DSP", "FF", "adders"],
+    );
+    for &(w, a) in LEVELS {
+        let spec = load_level("svhn", w, a).expect("run `make artifacts` first");
+        let acc = metric("svhn", w, a, "accuracy").unwrap();
+        // II = positions of the widest conv (time-multiplexed kernel).
+        let mut hw = (spec.input_shape[0], spec.input_shape[1]);
+        let mut ii = 1usize;
+        for l in &spec.layers {
+            match l {
+                LayerSpec::Conv2D { kh, kw, .. } => {
+                    hw = (hw.0 - kh + 1, hw.1 - kw + 1);
+                    ii = ii.max(hw.0 * hw.1);
+                }
+                LayerSpec::MaxPool2D | LayerSpec::AvgPool2D => {
+                    hw = (hw.0 / 2, hw.1 / 2);
+                }
+                _ => {}
+            }
+        }
+        for s in [Strategy::Latency, Strategy::Da { dc: 2 }] {
+            let reports = nn::compile::layer_reports(&spec, s, &model, &pipe).unwrap();
+            let agg = nn::compile::aggregate(&reports);
+            let latency = ii as u32 + agg.latency_cycles;
+            let adders = if matches!(s, Strategy::Latency) {
+                format!("({})", agg.adders)
+            } else {
+                agg.adders.to_string()
+            };
+            table.push(vec![
+                format!("{} w{w}a{a}", s.name()),
+                format!("{:.3}", acc),
+                ii.to_string(),
+                latency.to_string(),
+                agg.lut.to_string(),
+                agg.dsp.to_string(),
+                agg.ff.to_string(),
+                adders,
+            ]);
+        }
+    }
+    println!("{}", table.render());
+}

@@ -1,0 +1,16 @@
+//! Paper Table 8: the muon-tracking network @ 160 MHz; the metric is
+//! the truncated-MSE angular resolution (lower is better).
+
+use da4ml::bench_tables::network_table;
+use da4ml::pipeline::PipelineConfig;
+
+fn main() {
+    network_table(
+        "Table 8 — muon tracking @ 160 MHz (register every 5 adders, dc = 2)",
+        "muon",
+        "resolution_mrad",
+        "res[mrad]",
+        &PipelineConfig::every_n_adders(5),
+    )
+    .expect("run `make artifacts` first");
+}

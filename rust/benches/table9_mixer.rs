@@ -1,0 +1,18 @@
+//! Paper Table 9: the MLP-Mixer particle jet tagger @ 200 MHz. The
+//! paper's headline here: the baseline fails to reach II=1 while the DA
+//! designs hold II=1 — our latency rows correspondingly show the deeper
+//! naive-unrolled pipeline.
+
+use da4ml::bench_tables::network_table;
+use da4ml::pipeline::PipelineConfig;
+
+fn main() {
+    network_table(
+        "Table 9 — MLP-Mixer jet tagger @ 200 MHz (register every 5 adders, dc = 2)",
+        "mixer",
+        "accuracy",
+        "acc",
+        &PipelineConfig::every_n_adders(5),
+    )
+    .expect("run `make artifacts` first");
+}

@@ -1,0 +1,15 @@
+//! Baseline CMVM implementations the paper compares against.
+//!
+//! * [`mac`] — the hls4ml **latency strategy**: an unrolled
+//!   multiply-accumulate loop, with Vivado-style DSP inference. Modeled
+//!   analytically (its functional semantics are bit-exact to the naive
+//!   DA program, see [`crate::cse::naive_da`]).
+//! * [`lookahead`] — an `H_cmvm`-like O(N³) conflict-aware CSE with
+//!   one-step look-ahead, the slow-but-slightly-better comparator of
+//!   Table 2.
+
+pub mod lookahead;
+pub mod mac;
+
+pub use lookahead::optimize_lookahead;
+pub use mac::mac_report;

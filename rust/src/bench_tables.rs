@@ -1,0 +1,124 @@
+//! Shared generators for the paper-table benches.
+
+use crate::baseline::mac::{mac_report, DspPolicy};
+use crate::cmvm::{optimize, CmvmProblem, Strategy};
+use crate::estimate::{combinational, FpgaModel};
+use crate::nn::{self, NetworkSpec, TestVectors};
+use crate::pipeline::PipelineConfig;
+use crate::report::Table;
+use crate::runtime;
+use crate::Result;
+
+/// Tables 3/4: resource/latency rows for random matrices at one weight
+/// bitwidth, DA(dc ∈ {0,2,-1}) vs the latency baseline.
+pub fn resource_table(title: &str, bw: u32) {
+    let model = FpgaModel::default();
+    let mut table = Table::new(
+        title,
+        &["strategy", "DC", "size", "LUT", "DSP", "FF", "latency[ns]", "adders"],
+    );
+    for &m in &[8usize, 16, 32, 64] {
+        let p = CmvmProblem::random(9000 + m as u64 + bw as u64, m, m, bw);
+        let macr = mac_report(&p, &model, &DspPolicy::default());
+        table.push(vec![
+            "latency".into(),
+            "-".into(),
+            format!("{m}x{m}"),
+            macr.lut.to_string(),
+            macr.dsp.to_string(),
+            macr.ff.to_string(),
+            format!("{:.2}", macr.latency_ns),
+            format!("({})", macr.adders),
+        ]);
+        for dc in [0i32, 2, -1] {
+            let sol = optimize(&p, Strategy::Da { dc });
+            let rep = combinational(&sol.program, &model);
+            table.push(vec![
+                "DA".into(),
+                dc.to_string(),
+                format!("{m}x{m}"),
+                rep.lut.to_string(),
+                "0".into(),
+                rep.ff.to_string(),
+                format!("{:.2}", rep.latency_ns),
+                sol.adders.to_string(),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+}
+
+/// The six quantization levels exported by the Python build layer.
+pub const LEVELS: &[(u32, u32)] = &[(8, 8), (7, 7), (6, 6), (5, 6), (4, 6), (4, 5)];
+
+/// Load an artifact network spec at a quantization level.
+pub fn load_level(name: &str, w: u32, a: u32) -> Result<NetworkSpec> {
+    let dir = runtime::artifacts_dir();
+    NetworkSpec::from_json(&runtime::load_text(
+        dir.join(format!("{name}_w{w}a{a}.weights.json")),
+    )?)
+}
+
+/// Load the test vectors at a quantization level.
+pub fn load_vectors(name: &str, w: u32, a: u32) -> Result<TestVectors> {
+    let dir = runtime::artifacts_dir();
+    TestVectors::from_json(&runtime::load_text(
+        dir.join(format!("{name}_w{w}a{a}.testvec.json")),
+    )?)
+}
+
+/// Fetch a metric (accuracy / resolution) from metrics.json.
+pub fn metric(name: &str, w: u32, a: u32, key: &str) -> Result<f64> {
+    let dir = runtime::artifacts_dir();
+    let m = runtime::load_json_value(dir.join("metrics.json"))?;
+    m.get(name)?.get(&format!("w{w}a{a}"))?.get(key)?.as_f64()
+}
+
+/// Tables 5/6/8/9: a network sweep over quantization levels for
+/// latency vs DA, with the given pipeline config and metric column.
+pub fn network_table(
+    title: &str,
+    name: &str,
+    metric_key: &str,
+    metric_label: &str,
+    pipe: &PipelineConfig,
+) -> Result<()> {
+    let model = FpgaModel::default();
+    let mut table = Table::new(
+        title,
+        &[
+            "strategy",
+            metric_label,
+            "latency[cycles]",
+            "LUT",
+            "DSP",
+            "FF",
+            "Fmax[MHz]",
+            "adders",
+        ],
+    );
+    for &(w, a) in LEVELS {
+        let spec = load_level(name, w, a)?;
+        let mv = metric(name, w, a, metric_key)?;
+        for s in [Strategy::Latency, Strategy::Da { dc: 2 }] {
+            let rep = nn::compile::network_report(&spec, s, &model, pipe)?;
+            let adders = if matches!(s, Strategy::Latency) {
+                format!("({})", rep.adders)
+            } else {
+                rep.adders.to_string()
+            };
+            table.push(vec![
+                format!("{} w{w}a{a}", s.name()),
+                format!("{:.3}", mv),
+                rep.latency_cycles.to_string(),
+                rep.lut.to_string(),
+                rep.dsp.to_string(),
+                rep.ff.to_string(),
+                format!("{:.0}", rep.fmax_mhz),
+                adders,
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}

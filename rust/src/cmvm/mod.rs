@@ -1,0 +1,346 @@
+//! CMVM problem formulation (paper §3) and top-level optimization entry.
+//!
+//! A CMVM computes `y^T = x^T M` for a constant integer matrix `M` of
+//! shape `d_in × d_out` (entry `(j, i)` is the weight of input `j` on
+//! output `i`). The optimizer turns it into a multiplierless DAIS adder
+//! graph under a delay constraint `dc` (extra adder depth allowed beyond
+//! the minimal achievable depth; `dc = -1` disables the constraint).
+
+mod normalize;
+
+pub use normalize::{denormalize_check, normalize, Normalization};
+
+use crate::csd;
+use crate::cse::{self, CseConfig, InputTerm, OutTerm};
+use crate::dais::{DaisBuilder, DaisProgram};
+use crate::fixed::QInterval;
+use crate::graph;
+
+/// Which CMVM implementation strategy to use (mirrors the hls4ml
+/// `strategy` knob: `latency` vs `distributed_arithmetic`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// hls4ml's latency-optimized MAC loop (baseline; DSP/LUT multipliers,
+    /// modeled analytically by [`crate::baseline::mac`]).
+    Latency,
+    /// Plain distributed arithmetic: per-weight CSD shift-adds + balanced
+    /// accumulation trees, no CSE (the "no optimization" DA reference).
+    NaiveDa,
+    /// The full da4ml algorithm: graph decomposition + cost-aware CSE.
+    Da {
+        /// Delay constraint (`-1` = unconstrained).
+        dc: i32,
+    },
+    /// da4ml stage 2 only (CSE without the MST decomposition) — ablation.
+    CseOnly {
+        /// Delay constraint (`-1` = unconstrained).
+        dc: i32,
+    },
+    /// The `H_cmvm`-like O(N³) conflict-aware look-ahead CSE
+    /// (see [`crate::baseline::lookahead`]).
+    Lookahead {
+        /// Delay constraint (`-1` = unconstrained).
+        dc: i32,
+    },
+}
+
+impl Strategy {
+    /// Short name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Latency => "latency",
+            Strategy::NaiveDa => "naive-da",
+            Strategy::Da { .. } => "da",
+            Strategy::CseOnly { .. } => "cse-only",
+            Strategy::Lookahead { .. } => "lookahead",
+        }
+    }
+}
+
+/// A CMVM optimization problem.
+#[derive(Debug, Clone)]
+pub struct CmvmProblem {
+    /// Number of inputs (rows of `M`).
+    pub d_in: usize,
+    /// Number of outputs (columns of `M`).
+    pub d_out: usize,
+    /// Row-major constant matrix: `matrix[j * d_out + i]`.
+    pub matrix: Vec<i64>,
+    /// Quantized interval of each input (integer-unit convention).
+    pub input_qint: Vec<QInterval>,
+    /// Initial adder depth of each input (paper's `depth_int`; non-zero
+    /// when the CMVM consumes values produced by earlier adder trees).
+    pub input_depth: Vec<u32>,
+}
+
+impl CmvmProblem {
+    /// Build a problem with uniform signed `input_bits`-bit inputs at
+    /// depth 0.
+    pub fn new(d_in: usize, d_out: usize, matrix: Vec<i64>, input_bits: u32) -> Self {
+        assert_eq!(matrix.len(), d_in * d_out, "matrix shape mismatch");
+        let q = QInterval::new(-(1i64 << (input_bits - 1)), (1i64 << (input_bits - 1)) - 1, 0);
+        Self {
+            d_in,
+            d_out,
+            matrix,
+            input_qint: vec![q; d_in],
+            input_depth: vec![0; d_in],
+        }
+    }
+
+    /// Random problem in the paper's Table-2 convention: a `bw`-bit
+    /// matrix samples integers uniformly from `[2^(bw-1)+1, 2^bw - 1]`
+    /// (Aksoy et al.'s benchmark convention, §6.1).
+    pub fn random(seed: u64, d_in: usize, d_out: usize, bw: u32) -> Self {
+        let mut rng = crate::util::Rng::seed_from(seed);
+        let lo = (1i64 << (bw - 1)) + 1;
+        let hi = (1i64 << bw) - 1;
+        let m: Vec<i64> = (0..d_in * d_out).map(|_| rng.range_i64(lo, hi)).collect();
+        Self::new(d_in, d_out, m, 8)
+    }
+
+    /// Entry `(j, i)`.
+    pub fn at(&self, j: usize, i: usize) -> i64 {
+        self.matrix[j * self.d_out + i]
+    }
+
+    /// Column `i` as a vector.
+    pub fn column(&self, i: usize) -> Vec<i64> {
+        (0..self.d_in).map(|j| self.at(j, i)).collect()
+    }
+
+    /// Total number of non-zero CSD digits of the matrix — the paper's
+    /// problem-size parameter `N`.
+    pub fn csd_nnz(&self) -> u32 {
+        csd::nnz_vec(&self.matrix)
+    }
+
+    /// Reference computation `x^T M` in i128 (ground truth for tests).
+    pub fn reference(&self, x: &[i64]) -> Vec<i128> {
+        assert_eq!(x.len(), self.d_in);
+        (0..self.d_out)
+            .map(|i| (0..self.d_in).map(|j| x[j] as i128 * self.at(j, i) as i128).sum())
+            .collect()
+    }
+}
+
+/// The result of optimizing one CMVM.
+#[derive(Debug, Clone)]
+pub struct CmvmSolution {
+    /// The adder-graph program realizing the CMVM.
+    pub program: DaisProgram,
+    /// Adder/subtractor count (paper's "adders" column).
+    pub adders: usize,
+    /// Adder depth (paper's "depth" column).
+    pub depth: u32,
+    /// Optimizer wall-clock time.
+    pub opt_time: std::time::Duration,
+    /// Strategy that produced this solution.
+    pub strategy: Strategy,
+}
+
+/// Run a strategy into an existing builder with caller-provided input
+/// terms; returns the raw output terms (no output binding). This is the
+/// composition point used by the NN frontend to chain CMVMs.
+pub fn optimize_terms(
+    builder: &mut DaisBuilder,
+    inputs: &[InputTerm],
+    problem: &CmvmProblem,
+    strategy: Strategy,
+) -> Vec<OutTerm> {
+    match strategy {
+        Strategy::Latency | Strategy::NaiveDa => {
+            // The latency strategy's *functional* model is the naive DA
+            // graph (bit-exact); its *resource* model differs (see
+            // baseline::mac).
+            cse::naive_da(builder, inputs, &problem.matrix, problem.d_in, problem.d_out)
+        }
+        Strategy::CseOnly { dc } => cse::optimize_into(
+            builder,
+            inputs,
+            &problem.matrix,
+            problem.d_in,
+            problem.d_out,
+            &CseConfig { dc, ..CseConfig::default() },
+        ),
+        Strategy::Da { dc } => two_stage(builder, inputs, problem, dc),
+        Strategy::Lookahead { dc } => {
+            crate::baseline::lookahead::optimize_into(builder, inputs, problem, dc)
+        }
+    }
+}
+
+/// Optimize a CMVM problem with the given strategy, producing a
+/// self-contained DAIS program (inputs 0..d_in, outputs 0..d_out).
+pub fn optimize(problem: &CmvmProblem, strategy: Strategy) -> CmvmSolution {
+    let t0 = std::time::Instant::now();
+    let mut builder = DaisBuilder::new();
+    let inputs: Vec<InputTerm> = (0..problem.d_in)
+        .map(|j| {
+            let node = builder.input(j, problem.input_qint[j], problem.input_depth[j]);
+            InputTerm { node }
+        })
+        .collect();
+
+    let outs = optimize_terms(&mut builder, &inputs, problem, strategy);
+    bind_outputs(&mut builder, &outs);
+    let program = builder.finish();
+    CmvmSolution {
+        adders: program.adder_count(),
+        depth: program.adder_depth(),
+        program,
+        opt_time: t0.elapsed(),
+        strategy,
+    }
+}
+
+/// The full two-stage da4ml flow: MST decomposition `M = M1 · M2`
+/// (stage 1), then CSE on `M1` and on `M2` with the stage-1 outputs as
+/// stage-2 inputs (stage 2), concatenated into one program.
+fn two_stage(
+    builder: &mut DaisBuilder,
+    inputs: &[InputTerm],
+    problem: &CmvmProblem,
+    dc: i32,
+) -> Vec<OutTerm> {
+    let decomp = graph::decompose(&problem.matrix, problem.d_in, problem.d_out, dc);
+    let cfg = CseConfig { dc, ..CseConfig::default() };
+
+    if decomp.is_trivial() {
+        // No cross-column structure found: stage 1 degenerates to the
+        // identity and we run CSE on M directly.
+        return cse::optimize_into(
+            builder,
+            inputs,
+            &problem.matrix,
+            problem.d_in,
+            problem.d_out,
+            &cfg,
+        );
+    }
+
+    // Stage 2a: CSE over M1 (d_in × k).
+    let mids = cse::optimize_into(
+        builder,
+        inputs,
+        &decomp.m1,
+        problem.d_in,
+        decomp.k,
+        &cfg,
+    );
+
+    // Fold each intermediate's wiring shift/sign into the M2 entries so
+    // stage 2b consumes plain nodes.
+    let mut m2 = vec![0i64; decomp.k * problem.d_out];
+    let mut mid_inputs = Vec::with_capacity(decomp.k);
+    for (r, mid) in mids.iter().enumerate() {
+        match mid.node {
+            Some(node) => {
+                mid_inputs.push(InputTerm { node });
+                let scale = (if mid.neg { -1i64 } else { 1 }) << mid.shift.max(0);
+                debug_assert!(mid.shift >= 0, "stage-1 outputs use non-negative shifts");
+                for i in 0..problem.d_out {
+                    m2[r * problem.d_out + i] = decomp.m2[r * problem.d_out + i] * scale;
+                }
+            }
+            None => {
+                // Zero intermediate: contributes nothing. Bind a dummy
+                // zero row (all-zero M2 entries already).
+                let z = builder.constant(0);
+                mid_inputs.push(InputTerm { node: z });
+            }
+        }
+    }
+
+    cse::optimize_into(builder, &mid_inputs, &m2, decomp.k, problem.d_out, &cfg)
+}
+
+/// Materialize the CSE output terms as program outputs (inserting `Neg`
+/// ops for negative-signed terms and constants for zero columns).
+fn bind_outputs(builder: &mut DaisBuilder, outs: &[OutTerm]) {
+    for out in outs {
+        match out.node {
+            Some(node) => {
+                let n = if out.neg { builder.neg(node) } else { node };
+                builder.output(n, out.shift);
+            }
+            None => {
+                let z = builder.constant(0);
+                builder.output(z, 0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dais::interp;
+    use crate::dais::verify;
+
+    fn check_strategy(matrix: Vec<i64>, d_in: usize, d_out: usize, s: Strategy) {
+        let p = CmvmProblem::new(d_in, d_out, matrix, 8);
+        let sol = optimize(&p, s);
+        verify::check_well_formed(&sol.program).unwrap();
+        verify::check_cmvm_equivalence(&sol.program, &p.matrix, d_in, d_out).unwrap();
+        // Numeric spot check.
+        let x: Vec<i64> = (0..d_in as i64).map(|j| (j * 37 % 255) - 128).collect();
+        let want = p.reference(&x);
+        let got = interp::evaluate_checked(&sol.program, &x);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(*g as i128, *w);
+        }
+    }
+
+    #[test]
+    fn paper_eq2_matrix_all_strategies() {
+        let m = vec![0, 1, 3, 1, 2, 4, 2, 3, 5]; // paper Eq. (2), row-major d_in=3
+        for s in [
+            Strategy::NaiveDa,
+            Strategy::CseOnly { dc: -1 },
+            Strategy::CseOnly { dc: 0 },
+            Strategy::Da { dc: -1 },
+            Strategy::Da { dc: 0 },
+            Strategy::Da { dc: 2 },
+        ] {
+            check_strategy(m.clone(), 3, 3, s);
+        }
+    }
+
+    #[test]
+    fn negative_and_zero_entries() {
+        let m = vec![-7, 0, 5, 0, 0, -1, 3, 128, -128];
+        for s in [Strategy::NaiveDa, Strategy::Da { dc: -1 }, Strategy::Da { dc: 1 }] {
+            check_strategy(m.clone(), 3, 3, s);
+        }
+    }
+
+    #[test]
+    fn zero_column_outputs_zero() {
+        let m = vec![1, 0, 2, 0]; // d_in=2, d_out=2, second column all-zero
+        let p = CmvmProblem::new(2, 2, m, 8);
+        let sol = optimize(&p, Strategy::Da { dc: -1 });
+        let got = interp::evaluate(&sol.program, &[5, 9]);
+        assert_eq!(got, vec![5 + 18, 0]);
+    }
+
+    #[test]
+    fn da_never_worse_than_naive() {
+        use crate::util::Rng;
+        let mut rng = Rng::seed_from(7);
+        for _ in 0..5 {
+            let (d_in, d_out) = (8, 8);
+            let m: Vec<i64> =
+                (0..d_in * d_out).map(|_| rng.range_i64(-127, 127)).collect();
+            let p = CmvmProblem::new(d_in, d_out, m, 8);
+            let naive = optimize(&p, Strategy::NaiveDa);
+            let da = optimize(&p, Strategy::Da { dc: -1 });
+            assert!(
+                da.adders <= naive.adders,
+                "da {} > naive {}",
+                da.adders,
+                naive.adders
+            );
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Matrix normalization (paper §4.2): strip common power-of-two factors
+//! from rows and columns so that no row or column is entirely even
+//! (zeros excepted). The stripped shifts are recorded and re-applied to
+//! the inputs (row shifts: free input wiring) and outputs (column
+//! shifts: free output wiring).
+
+/// The result of normalizing a matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Normalization {
+    /// The normalized matrix (same shape, row-major).
+    pub matrix: Vec<i64>,
+    /// Left-shift to re-apply per input row `j`.
+    pub row_shift: Vec<u32>,
+    /// Left-shift to re-apply per output column `i`.
+    pub col_shift: Vec<u32>,
+}
+
+/// Normalize `matrix` (`d_in × d_out`, row-major).
+pub fn normalize(matrix: &[i64], d_in: usize, d_out: usize) -> Normalization {
+    assert_eq!(matrix.len(), d_in * d_out);
+    let mut m = matrix.to_vec();
+    let mut row_shift = vec![0u32; d_in];
+    let mut col_shift = vec![0u32; d_out];
+
+    let tz_slice = |vals: &mut dyn Iterator<Item = i64>| -> u32 {
+        let mut min_tz = u32::MAX;
+        let mut any = false;
+        for v in vals {
+            if v != 0 {
+                any = true;
+                min_tz = min_tz.min(v.trailing_zeros());
+            }
+        }
+        if any {
+            min_tz
+        } else {
+            0
+        }
+    };
+
+    // Rows first, then columns; a single pass each suffices because
+    // stripping a row factor can only *reduce* trailing zeros in columns.
+    for j in 0..d_in {
+        let s = tz_slice(&mut (0..d_out).map(|i| m[j * d_out + i]));
+        if s > 0 {
+            for i in 0..d_out {
+                m[j * d_out + i] >>= s;
+            }
+            row_shift[j] = s;
+        }
+    }
+    for i in 0..d_out {
+        let s = tz_slice(&mut (0..d_in).map(|j| m[j * d_out + i]));
+        if s > 0 {
+            for j in 0..d_in {
+                m[j * d_out + i] >>= s;
+            }
+            col_shift[i] = s;
+        }
+    }
+    Normalization { matrix: m, row_shift, col_shift }
+}
+
+/// Verify that a [`Normalization`] reconstructs the original matrix
+/// (round-trip invariant used by tests).
+pub fn denormalize_check(n: &Normalization, original: &[i64], d_in: usize, d_out: usize) -> bool {
+    if n.matrix.len() != original.len() {
+        return false;
+    }
+    for j in 0..d_in {
+        for i in 0..d_out {
+            let v = n.matrix[j * d_out + i] << (n.row_shift[j] + n.col_shift[i]);
+            if v != original[j * d_out + i] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_row_and_column_factors() {
+        // Row 0 has common factor 4; after row-stripping, column 1 has
+        // common factor 2.
+        let m = vec![
+            4, 8, //
+            1, 2, //
+        ];
+        let n = normalize(&m, 2, 2);
+        assert_eq!(n.row_shift, vec![2, 0]);
+        assert_eq!(n.col_shift, vec![0, 1]);
+        assert_eq!(n.matrix, vec![1, 1, 1, 1]);
+        assert!(denormalize_check(&n, &m, 2, 2));
+    }
+
+    #[test]
+    fn odd_matrix_untouched() {
+        let m = vec![3, 5, 7, 9];
+        let n = normalize(&m, 2, 2);
+        assert_eq!(n.matrix, m);
+        assert_eq!(n.row_shift, vec![0, 0]);
+        assert_eq!(n.col_shift, vec![0, 0]);
+    }
+
+    #[test]
+    fn zero_rows_and_columns() {
+        let m = vec![
+            0, 6, //
+            0, 2, //
+        ];
+        let n = normalize(&m, 2, 2);
+        // Column 0 is all zero: shift 0. Column 1 factor 2.
+        assert!(denormalize_check(&n, &m, 2, 2));
+        assert_eq!(n.matrix[1] % 2, 1);
+    }
+
+    #[test]
+    fn no_all_even_rows_or_cols_after() {
+        use crate::util::Rng;
+        let mut rng = Rng::seed_from(3);
+        for _ in 0..20 {
+            let (d_in, d_out) = ((rng.below(6 - 1) + 1), (rng.below(6 - 1) + 1));
+            let m: Vec<i64> =
+                (0..d_in * d_out).map(|_| rng.range_i64(-64, 64) * 2).collect();
+            let n = normalize(&m, d_in, d_out);
+            assert!(denormalize_check(&n, &m, d_in, d_out));
+            for j in 0..d_in {
+                let row: Vec<i64> =
+                    (0..d_out).map(|i| n.matrix[j * d_out + i]).filter(|&v| v != 0).collect();
+                if !row.is_empty() {
+                    assert!(row.iter().any(|v| v % 2 != 0), "row {j} all even: {row:?}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! The L3 compile-job coordinator.
+//!
+//! The paper's contribution is a compiler, so the coordinator here is a
+//! *compilation service*: it takes batches of CMVM jobs (one per network
+//! layer / template), deduplicates them through a solution cache (the
+//! same constant matrix frequently recurs — e.g. conv kernels shared
+//! across positions or re-synthesized quantization sweeps), executes
+//! them on a scoped worker pool, and aggregates solution statistics.
+//! The CLI (`rust/src/main.rs`) and the benches drive everything through
+//! this interface.
+
+use crate::cmvm::{optimize, CmvmProblem, CmvmSolution, Strategy};
+use crate::Result;
+use rustc_hash::FxHashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex};
+
+/// One compilation request.
+#[derive(Debug, Clone)]
+pub struct CompileJob {
+    /// Stable name for reporting.
+    pub name: String,
+    /// The CMVM to optimize.
+    pub problem: CmvmProblem,
+    /// Strategy to apply.
+    pub strategy: Strategy,
+}
+
+/// Aggregated coordinator statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CoordinatorStats {
+    /// Jobs submitted.
+    pub submitted: u64,
+    /// Jobs answered from cache.
+    pub cache_hits: u64,
+    /// Total optimizer time across executed jobs.
+    pub total_opt_time: std::time::Duration,
+}
+
+/// The compile coordinator (thread-safe; cheap to clone).
+#[derive(Clone, Default)]
+pub struct Coordinator {
+    inner: Arc<Mutex<Inner>>,
+}
+
+#[derive(Default)]
+struct Inner {
+    cache: FxHashMap<u64, Arc<CmvmSolution>>,
+    stats: CoordinatorStats,
+}
+
+fn job_key(problem: &CmvmProblem, strategy: Strategy) -> u64 {
+    let mut h = rustc_hash::FxHasher::default();
+    problem.d_in.hash(&mut h);
+    problem.d_out.hash(&mut h);
+    problem.matrix.hash(&mut h);
+    problem.input_depth.hash(&mut h);
+    for q in &problem.input_qint {
+        q.min.hash(&mut h);
+        q.max.hash(&mut h);
+        q.exp.hash(&mut h);
+    }
+    format!("{strategy:?}").hash(&mut h);
+    h.finish()
+}
+
+impl Coordinator {
+    /// Create an empty coordinator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Compile one job (synchronous; cache-aware).
+    pub fn compile(&self, job: &CompileJob) -> Arc<CmvmSolution> {
+        let key = job_key(&job.problem, job.strategy);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.stats.submitted += 1;
+            if let Some(sol) = inner.cache.get(&key).cloned() {
+                inner.stats.cache_hits += 1;
+                return sol;
+            }
+        }
+        let sol = Arc::new(optimize(&job.problem, job.strategy));
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats.total_opt_time += sol.opt_time;
+        inner.cache.entry(key).or_insert_with(|| sol.clone());
+        sol
+    }
+
+    /// Compile a batch concurrently on a scoped worker pool, preserving
+    /// job order in the result.
+    pub fn compile_many(&self, jobs: Vec<CompileJob>) -> Result<Vec<Arc<CmvmSolution>>> {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Ok(crate::util::parallel_map(jobs, threads, |job| self.compile(&job)))
+    }
+
+    /// Snapshot the statistics.
+    pub fn stats(&self) -> CoordinatorStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Number of distinct cached solutions.
+    pub fn cache_len(&self) -> usize {
+        self.inner.lock().unwrap().cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn job(seed: u64) -> CompileJob {
+        let mut rng = Rng::seed_from(seed);
+        let m: Vec<i64> = (0..16).map(|_| rng.range_i64(-127, 127)).collect();
+        CompileJob {
+            name: format!("job{seed}"),
+            problem: CmvmProblem::new(4, 4, m, 8),
+            strategy: Strategy::Da { dc: 2 },
+        }
+    }
+
+    #[test]
+    fn cache_dedups_identical_jobs() {
+        let c = Coordinator::new();
+        let j = job(1);
+        let a = c.compile(&j);
+        let b = c.compile(&j);
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = c.stats();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(c.cache_len(), 1);
+    }
+
+    #[test]
+    fn different_strategy_different_entry() {
+        let c = Coordinator::new();
+        let mut j = job(2);
+        c.compile(&j);
+        j.strategy = Strategy::Da { dc: 0 };
+        c.compile(&j);
+        assert_eq!(c.cache_len(), 2);
+        assert_eq!(c.stats().cache_hits, 0);
+    }
+
+    #[test]
+    fn batch_compile_order_preserved() {
+        let c = Coordinator::new();
+        let jobs: Vec<CompileJob> = (0..6).map(job).collect();
+        let adders_direct: Vec<usize> =
+            jobs.iter().map(|j| c.compile(j).adders).collect();
+        let sols = c.compile_many(jobs).unwrap();
+        let adders_batch: Vec<usize> = sols.iter().map(|s| s.adders).collect();
+        assert_eq!(adders_direct, adders_batch);
+        // Every batch job was a cache hit.
+        assert_eq!(c.stats().cache_hits as usize, 6);
+    }
+}

@@ -1,0 +1,182 @@
+//! Canonical Signed Digit (CSD) representation (Avizienis 1961).
+//!
+//! CSD writes an integer as a sum of signed powers of two with no two
+//! adjacent non-zero digits. The non-zero digit count is guaranteed
+//! minimal among signed-digit representations — on average ~1/3 of the
+//! bit positions — which is the discrete substrate both stages of the
+//! da4ml algorithm operate on (paper §4.2).
+
+/// One signed digit: `sign * 2^power`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Digit {
+    /// Power of two of this digit.
+    pub power: i32,
+    /// `+1` or `-1`.
+    pub sign: i8,
+}
+
+impl Digit {
+    /// Signed value of this digit as i128 (powers can reach 63+).
+    pub fn value(&self) -> i128 {
+        (self.sign as i128) << self.power
+    }
+}
+
+/// The CSD expansion of an integer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Csd {
+    digits: Vec<Digit>,
+}
+
+impl Csd {
+    /// Encode `x` into CSD. The result has no two adjacent non-zero
+    /// digits and minimal non-zero digit count.
+    pub fn encode(x: i64) -> Self {
+        let mut digits = Vec::new();
+        let mut v = x as i128;
+        let mut power = 0;
+        while v != 0 {
+            if v & 1 != 0 {
+                // d = 2 - (v mod 4) maps v≡1 (mod 4) -> +1, v≡3 -> -1.
+                let rem = (v & 3) as i8;
+                let d: i8 = if rem == 1 { 1 } else { -1 };
+                digits.push(Digit { power, sign: d });
+                v -= d as i128;
+            }
+            v >>= 1;
+            power += 1;
+        }
+        Self { digits }
+    }
+
+    /// Decode back to the integer value.
+    pub fn decode(&self) -> i64 {
+        let v: i128 = self.digits.iter().map(|d| d.value()).sum();
+        v as i64
+    }
+
+    /// The non-zero digits, in increasing power order.
+    pub fn digits(&self) -> &[Digit] {
+        &self.digits
+    }
+
+    /// Number of non-zero digits (the `N` of the paper's complexity
+    /// analysis is the sum of this over all matrix entries).
+    pub fn nnz(&self) -> usize {
+        self.digits.len()
+    }
+
+    /// Whether the expansion is empty (value == 0).
+    pub fn is_zero(&self) -> bool {
+        self.digits.is_empty()
+    }
+
+    /// Lowest non-zero power, if any.
+    pub fn min_power(&self) -> Option<i32> {
+        self.digits.first().map(|d| d.power)
+    }
+
+    /// Highest non-zero power, if any.
+    pub fn max_power(&self) -> Option<i32> {
+        self.digits.last().map(|d| d.power)
+    }
+}
+
+/// Number of non-zero CSD digits of `x` without materializing the digits.
+pub fn nnz(x: i64) -> u32 {
+    let mut v = x as i128;
+    let mut n = 0;
+    while v != 0 {
+        if v & 1 != 0 {
+            let d: i128 = if v & 3 == 1 { 1 } else { -1 };
+            v -= d;
+            n += 1;
+        }
+        v >>= 1;
+    }
+    n
+}
+
+/// Sum of non-zero CSD digit counts over a slice (vector distance helper
+/// for the stage-1 graph construction).
+pub fn nnz_vec(xs: &[i64]) -> u32 {
+    xs.iter().map(|&x| nnz(x)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_known_values() {
+        // 7 = 8 - 1 -> two digits, not three.
+        let c = Csd::encode(7);
+        assert_eq!(c.nnz(), 2);
+        assert_eq!(c.decode(), 7);
+        // 15 = 16 - 1.
+        assert_eq!(Csd::encode(15).nnz(), 2);
+        // 5 = 4 + 1.
+        assert_eq!(Csd::encode(5).nnz(), 2);
+        // 0 has no digits.
+        assert!(Csd::encode(0).is_zero());
+    }
+
+    #[test]
+    fn encode_negative() {
+        let c = Csd::encode(-7);
+        assert_eq!(c.decode(), -7);
+        assert_eq!(c.nnz(), 2); // -8 + 1
+    }
+
+    #[test]
+    fn no_adjacent_nonzeros() {
+        for x in -4096i64..=4096 {
+            let c = Csd::encode(x);
+            for w in c.digits().windows(2) {
+                assert!(
+                    w[1].power - w[0].power >= 2,
+                    "adjacent digits in CSD of {x}: {:?}",
+                    c.digits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_exhaustive_small() {
+        for x in -100_000i64..=100_000 {
+            assert_eq!(Csd::encode(x).decode(), x);
+        }
+    }
+
+    #[test]
+    fn roundtrip_extremes() {
+        for &x in &[i64::MAX, i64::MIN + 1, i64::MIN, 1 << 62, -(1 << 62)] {
+            assert_eq!(Csd::encode(x).decode(), x);
+        }
+    }
+
+    #[test]
+    fn nnz_matches_encode() {
+        for x in -5000i64..=5000 {
+            assert_eq!(nnz(x), Csd::encode(x).nnz() as u32);
+        }
+    }
+
+    #[test]
+    fn nnz_minimal_vs_binary() {
+        // CSD digit count never exceeds the binary popcount.
+        for x in 0i64..=10_000 {
+            assert!(nnz(x) <= (x as u64).count_ones());
+        }
+    }
+
+    #[test]
+    fn nnz_bound_floor_half_plus_one() {
+        // For an x-digit number, CSD has at most floor(x/2 + 1) non-zeros.
+        for x in 1i64..=65535 {
+            let bits = 64 - (x as u64).leading_zeros();
+            assert!(nnz(x) <= bits / 2 + 1);
+        }
+    }
+}

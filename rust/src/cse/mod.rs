@@ -1,0 +1,28 @@
+//! Stage 2 — cost-aware Common Subexpression Elimination (paper §4.4).
+//!
+//! The matrix is expanded into its CSD digit tensor
+//! `M_expr ∈ {-1,0,1}^{d_in × d_out × B}`. A *two-term subexpression*
+//! `a ± (b << s)` is a pair of digits in the same column; its canonical
+//! pattern is shift- and sign-invariant, so reuse is captured **across
+//! differently scaled terms and signed digits** (the capability SCMVM
+//! lacks, §2.1). The algorithm greedily implements the pattern with the
+//! highest *weighted* frequency — frequency × operand bit-overlap, the
+//! full-adder-only cost proxy of §4.4 — maintaining the digit tensor and
+//! a differential frequency table, until no pattern occurs twice. The
+//! remaining digits of each column are summed with a depth-minimal
+//! (Huffman-style) balanced tree.
+//!
+//! The delay constraint is enforced exactly with a Kraft-sum argument:
+//! a set of terms with adder depths `d_k` can be combined into a tree of
+//! depth `≤ D` iff `Σ 2^{d_k} ≤ 2^D`; every candidate implementation is
+//! admitted only if each affected column stays feasible for its depth
+//! budget.
+
+mod engine;
+pub mod tree;
+
+pub use engine::{optimize_into, optimize_into_stats, CseConfig, CseStats, InputTerm, OutTerm};
+pub use tree::naive_da;
+
+#[cfg(test)]
+mod tests;

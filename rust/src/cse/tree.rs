@@ -1,0 +1,177 @@
+//! Depth-minimal balanced summation trees.
+//!
+//! After CSE exhausts shared subexpressions, each output column is a sum
+//! of residual terms `± (node << shift)`. They are combined pairwise,
+//! always merging the two shallowest terms first (Huffman on the
+//! max-plus semiring), which provably achieves the minimal possible tree
+//! depth for the given term depths — exactly the depth the Kraft-sum
+//! feasibility check in the engine accounts for. Ties are broken towards
+//! the narrower operand to keep adder widths (and LUTs) small.
+//!
+//! The same combiner also implements the "naive DA" reference: the plain
+//! per-column CSD expansion summed without any subexpression sharing.
+
+use super::engine::{InputTerm, OutTerm};
+use crate::csd::Csd;
+use crate::dais::{DaisBuilder, NodeId};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One summand: `sign * (node << shift)`.
+#[derive(Debug, Clone, Copy)]
+pub struct Term {
+    /// Value-carrying node.
+    pub node: NodeId,
+    /// Left shift (digit power), `>= 0` for integer matrices.
+    pub shift: i32,
+    /// Negative sign?
+    pub neg: bool,
+}
+
+/// Combine terms into a single [`OutTerm`] with minimal adder depth.
+pub fn combine(builder: &mut DaisBuilder, terms: Vec<Term>) -> OutTerm {
+    // Min-heap keyed on (depth, width, node, shift) — deterministic.
+    let mut heap: BinaryHeap<Reverse<(u32, u32, NodeId, i32, bool)>> = terms
+        .into_iter()
+        .map(|t| {
+            let d = builder.depth(t.node);
+            let w = builder.qint(t.node).width();
+            Reverse((d, w, t.node, t.shift, t.neg))
+        })
+        .collect();
+
+    while heap.len() >= 2 {
+        let Reverse((_, _, n1, s1, g1)) = heap.pop().unwrap();
+        let Reverse((_, _, n2, s2, g2)) = heap.pop().unwrap();
+        // Orientation: on mixed signs put the *positive* term first so
+        // the merged value stays positively signed (outputs then only
+        // need a Neg when the whole column is negative); on equal signs
+        // order is free. Shifts are factored down by their minimum and
+        // realized with the two-sided AddShift (still one adder).
+        let ((na, sa, ga), (nb, sb, gb)) = if g1 != g2 {
+            if g1 { ((n2, s2, g2), (n1, s1, g1)) } else { ((n1, s1, g1), (n2, s2, g2)) }
+        } else if s1 <= s2 {
+            ((n1, s1, g1), (n2, s2, g2))
+        } else {
+            ((n2, s2, g2), (n1, s1, g1))
+        };
+        let g = sa.min(sb);
+        // a<<(sa-g) ± b<<(sb-g); sign of result = sign of a:
+        //   +a +b -> add, +   |   +a -b -> sub, +   |   -a -b -> add, -
+        let node =
+            builder.add_shift2(na, (sa - g) as u32, nb, (sb - g) as u32, ga != gb);
+        let d = builder.depth(node);
+        let w = builder.qint(node).width();
+        heap.push(Reverse((d, w, node, g, ga)));
+    }
+
+    match heap.pop() {
+        Some(Reverse((_, _, node, shift, neg))) => OutTerm { node: Some(node), shift, neg },
+        None => OutTerm { node: None, shift: 0, neg: false },
+    }
+}
+
+/// The naive distributed-arithmetic reference: expand every matrix entry
+/// to CSD digits and sum each column with a balanced tree — no CSE, no
+/// decomposition. This is also the *functional* model of the hls4ml
+/// latency strategy (bit-exact to the MAC loop).
+pub fn naive_da(
+    builder: &mut DaisBuilder,
+    inputs: &[InputTerm],
+    matrix: &[i64],
+    d_in: usize,
+    d_out: usize,
+) -> Vec<OutTerm> {
+    assert_eq!(matrix.len(), d_in * d_out);
+    assert_eq!(inputs.len(), d_in);
+    (0..d_out)
+        .map(|i| {
+            let mut terms = Vec::new();
+            for (j, input) in inputs.iter().enumerate() {
+                for digit in Csd::encode(matrix[j * d_out + i]).digits() {
+                    terms.push(Term {
+                        node: input.node,
+                        shift: digit.power,
+                        neg: digit.sign < 0,
+                    });
+                }
+            }
+            combine(builder, terms)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dais::interp;
+    use crate::fixed::QInterval;
+
+    #[test]
+    fn combine_is_depth_minimal() {
+        let mut b = DaisBuilder::new();
+        let q = QInterval::new(-8, 7, 0);
+        // Seven equal-depth terms -> depth ceil(log2 7) = 3.
+        let terms: Vec<Term> = (0..7)
+            .map(|j| Term { node: b.input(j, q, 0), shift: 0, neg: false })
+            .collect();
+        let out = combine(&mut b, terms);
+        let node = out.node.unwrap();
+        assert_eq!(b.depth(node), 3);
+    }
+
+    #[test]
+    fn combine_respects_initial_depths() {
+        let mut b = DaisBuilder::new();
+        let q = QInterval::new(-8, 7, 0);
+        // One deep term (depth 3) and two shallow: shallow pair first,
+        // final depth 4 (not 5).
+        let x = b.input(0, q, 0);
+        let mut deep = x;
+        for _ in 0..3 {
+            deep = b.add_shift(deep, x, 1, false);
+        }
+        let t = vec![
+            Term { node: deep, shift: 0, neg: false },
+            Term { node: b.input(1, q, 0), shift: 0, neg: false },
+            Term { node: b.input(2, q, 0), shift: 0, neg: false },
+        ];
+        let out = combine(&mut b, t);
+        assert_eq!(b.depth(out.node.unwrap()), 4);
+    }
+
+    #[test]
+    fn combine_sign_semantics() {
+        // -x0 - x1 should produce sum with neg flag, evaluating exactly.
+        let mut b = DaisBuilder::new();
+        let q = QInterval::new(-128, 127, 0);
+        let x0 = b.input(0, q, 0);
+        let x1 = b.input(1, q, 0);
+        let t = vec![
+            Term { node: x0, shift: 0, neg: true },
+            Term { node: x1, shift: 2, neg: true },
+        ];
+        let out = combine(&mut b, t);
+        assert!(out.neg);
+        let n = out.node.unwrap();
+        let m = b.neg(n);
+        b.output(m, out.shift);
+        let p = b.finish();
+        assert_eq!(interp::evaluate(&p, &[3, 5]), vec![-3 - 20]);
+    }
+
+    #[test]
+    fn naive_da_adder_count() {
+        // Column digits: nnz(3)=2, nnz(5)=2 -> 4 terms -> 3 adders.
+        let mut b = DaisBuilder::new();
+        let q = QInterval::new(-128, 127, 0);
+        let inputs: Vec<InputTerm> =
+            (0..2).map(|j| InputTerm { node: b.input(j, q, 0) }).collect();
+        let outs = naive_da(&mut b, &inputs, &[3, 5], 2, 1);
+        let n = outs[0].node.unwrap();
+        b.output(n, outs[0].shift);
+        let p = b.finish();
+        assert_eq!(p.adder_count(), 3);
+        assert_eq!(interp::evaluate(&p, &[10, 100]), vec![30 + 500]);
+    }
+}

@@ -1,0 +1,100 @@
+//! Graphviz export of adder graphs (the paper's Fig. 4 rendering):
+//! square nodes for adders/subtractors, circles for inputs, edge labels
+//! carrying the power-of-two coefficients.
+
+use super::{DaisOp, DaisProgram, RoundMode};
+use std::fmt::Write;
+
+/// Render the program as a Graphviz `digraph`.
+pub fn to_dot(program: &DaisProgram, name: &str) -> String {
+    let mut s = String::new();
+    writeln!(s, "digraph {name} {{").unwrap();
+    writeln!(s, "    rankdir=LR;").unwrap();
+    for (i, node) in program.nodes.iter().enumerate() {
+        match node.op {
+            DaisOp::Input { index } => {
+                writeln!(
+                    s,
+                    "    n{i} [shape=circle, label=\"x{index}\", style=filled, fillcolor=lightblue];"
+                )
+                .unwrap();
+            }
+            DaisOp::Const { value } => {
+                writeln!(s, "    n{i} [shape=circle, label=\"{value}\"];").unwrap();
+            }
+            DaisOp::AddShift { a, b, shift_a, shift_b, sub } => {
+                let op = if sub { "−" } else { "+" };
+                writeln!(
+                    s,
+                    "    n{i} [shape=box, label=\"{op}\\nd{}\"];",
+                    node.depth
+                )
+                .unwrap();
+                let lbl = |sh: u32| if sh == 0 { String::new() } else { format!("×2^{sh}") };
+                writeln!(s, "    n{a} -> n{i} [label=\"{}\"];", lbl(shift_a)).unwrap();
+                writeln!(
+                    s,
+                    "    n{b} -> n{i} [label=\"{}{}\", color={}];",
+                    if sub { "−" } else { "" },
+                    lbl(shift_b),
+                    if sub { "red" } else { "black" }
+                )
+                .unwrap();
+            }
+            DaisOp::Neg { a } => {
+                writeln!(s, "    n{i} [shape=box, label=\"neg\"];").unwrap();
+                writeln!(s, "    n{a} -> n{i} [color=red];").unwrap();
+            }
+            DaisOp::Relu { a } => {
+                writeln!(s, "    n{i} [shape=diamond, label=\"relu\"];").unwrap();
+                writeln!(s, "    n{a} -> n{i};").unwrap();
+            }
+            DaisOp::Quant { a, shift, round, .. } => {
+                let r = match round {
+                    RoundMode::Floor => "floor",
+                    RoundMode::HalfUp => "round",
+                };
+                writeln!(s, "    n{i} [shape=diamond, label=\"{r}>>{shift}\"];").unwrap();
+                writeln!(s, "    n{a} -> n{i};").unwrap();
+            }
+        }
+    }
+    for (k, o) in program.outputs.iter().enumerate() {
+        writeln!(
+            s,
+            "    y{k} [shape=doublecircle, label=\"y{k}\", style=filled, fillcolor=lightyellow];"
+        )
+        .unwrap();
+        let lbl = if o.shift != 0 { format!("×2^{}", o.shift) } else { String::new() };
+        writeln!(s, "    n{} -> y{k} [label=\"{lbl}\"];", o.node).unwrap();
+    }
+    writeln!(s, "}}").unwrap();
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dais::DaisBuilder;
+    use crate::fixed::QInterval;
+
+    #[test]
+    fn dot_structure() {
+        let mut b = DaisBuilder::new();
+        let q = QInterval::new(-8, 7, 0);
+        let x = b.input(0, q, 0);
+        let y = b.input(1, q, 0);
+        let t = b.add_shift(x, y, 2, true);
+        b.output(t, 1);
+        let p = b.finish();
+        let dot = to_dot(&p, "g");
+        assert!(dot.starts_with("digraph g {"));
+        assert!(dot.contains("shape=circle"));
+        assert!(dot.contains("shape=box"));
+        assert!(dot.contains("×2^2"));
+        assert!(dot.contains("doublecircle"));
+        assert!(dot.trim_end().ends_with('}'));
+        // One edge per operand + one per output.
+        assert_eq!(dot.matches("->").count(), 3);
+    }
+}

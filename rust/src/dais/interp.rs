@@ -1,0 +1,290 @@
+//! Bit-accurate (and cycle-accurate) DAIS interpretation — the
+//! Verilator/GHDL substitute of this reproduction.
+//!
+//! The combinational interpreter evaluates a program on one input vector
+//! with exact integer semantics and (in debug/checked mode) asserts every
+//! intermediate value stays inside its statically-tracked [`QInterval`] —
+//! i.e. the synthesized bitwidths are sufficient and no wrap can occur.
+//!
+//! The pipelined interpreter replays a *stream* of input vectors through
+//! a register-staged version of the program (one vector per cycle, II=1)
+//! and checks that outputs equal the combinational results delayed by the
+//! pipeline latency.
+
+use super::{DaisOp, DaisProgram, RoundMode};
+
+/// Apply a `Quant` op to a scalar (`shift < 0` is a left shift; rounding
+/// then never applies).
+pub fn quant_scalar(x: i64, shift: i32, round: RoundMode, clip_min: i64, clip_max: i64) -> i64 {
+    let shifted = if shift <= 0 {
+        x << -shift
+    } else {
+        match round {
+            RoundMode::Floor => x >> shift,
+            RoundMode::HalfUp => (x + (1 << (shift - 1))) >> shift,
+        }
+    };
+    shifted.clamp(clip_min, clip_max)
+}
+
+/// Evaluate one op given resolved operand values.
+#[inline]
+fn eval_op(op: &DaisOp, values: &[i64], inputs: &[i64]) -> i64 {
+    match *op {
+        DaisOp::Input { index } => inputs[index as usize],
+        DaisOp::Const { value } => value,
+        DaisOp::AddShift { a, b, shift_a, shift_b, sub } => {
+            let av = values[a as usize] << shift_a;
+            let bv = values[b as usize] << shift_b;
+            if sub {
+                av - bv
+            } else {
+                av + bv
+            }
+        }
+        DaisOp::Neg { a } => -values[a as usize],
+        DaisOp::Relu { a } => values[a as usize].max(0),
+        DaisOp::Quant { a, shift, round, clip_min, clip_max } => {
+            quant_scalar(values[a as usize], shift, round, clip_min, clip_max)
+        }
+    }
+}
+
+/// Evaluate the program combinationally on one input vector.
+///
+/// Returns the output values (with output wiring shifts applied).
+/// Panics if `inputs.len() != program.num_inputs`.
+pub fn evaluate(program: &DaisProgram, inputs: &[i64]) -> Vec<i64> {
+    assert_eq!(inputs.len(), program.num_inputs, "input arity mismatch");
+    let mut values = vec![0i64; program.nodes.len()];
+    for (i, node) in program.nodes.iter().enumerate() {
+        values[i] = eval_op(&node.op, &values, inputs);
+    }
+    read_outputs(program, &values)
+}
+
+/// Like [`evaluate`] but additionally asserts every node value stays
+/// inside its static [`QInterval`] — the "no wrap possible" soundness
+/// check (used by tests and the `simulate --checked` CLI path).
+pub fn evaluate_checked(program: &DaisProgram, inputs: &[i64]) -> Vec<i64> {
+    assert_eq!(inputs.len(), program.num_inputs, "input arity mismatch");
+    let mut values = vec![0i64; program.nodes.len()];
+    for (i, node) in program.nodes.iter().enumerate() {
+        let v = eval_op(&node.op, &values, inputs);
+        assert!(
+            node.qint.contains(v, 0),
+            "node {i} ({:?}) value {v} escapes tracked interval {:?}",
+            node.op,
+            node.qint
+        );
+        values[i] = v;
+    }
+    read_outputs(program, &values)
+}
+
+fn read_outputs(program: &DaisProgram, values: &[i64]) -> Vec<i64> {
+    program
+        .outputs
+        .iter()
+        .map(|o| {
+            let v = values[o.node as usize];
+            if o.shift >= 0 {
+                v << o.shift
+            } else {
+                debug_assert_eq!(
+                    v & ((1i64 << (-o.shift).min(63)) - 1),
+                    0,
+                    "negative output shift would drop set bits"
+                );
+                v >> -o.shift
+            }
+        })
+        .collect()
+}
+
+/// Evaluate a batch of input vectors (row-major `[n][num_inputs]`).
+pub fn evaluate_batch(program: &DaisProgram, batch: &[Vec<i64>]) -> Vec<Vec<i64>> {
+    batch.iter().map(|x| evaluate(program, x)).collect()
+}
+
+/// Cycle-accurate simulation of a pipelined program.
+///
+/// `stages[i]` is the pipeline stage assigned to node `i` (see
+/// [`crate::pipeline`]); an edge from `p` to `c` crosses
+/// `stages[c] - stages[p]` registers. One input vector is consumed per
+/// cycle (II = 1); the stream is flushed with zero vectors so every
+/// result drains. Returns one output vector per input vector, delayed by
+/// `latency` cycles internally but re-aligned before returning, so the
+/// result is directly comparable with [`evaluate_batch`].
+pub fn simulate_pipelined(
+    program: &DaisProgram,
+    stages: &[u32],
+    stream: &[Vec<i64>],
+) -> Vec<Vec<i64>> {
+    assert_eq!(stages.len(), program.nodes.len());
+    let latency = program
+        .outputs
+        .iter()
+        .map(|o| stages[o.node as usize])
+        .max()
+        .unwrap_or(0) as usize;
+
+    // Register file: for each node, a delay line long enough for its
+    // furthest consumer (+ output read-out at `latency`).
+    let mut line_len = vec![1usize; program.nodes.len()];
+    for (c, node) in program.nodes.iter().enumerate() {
+        for p in node.op.operands() {
+            let d = (stages[c] - stages[p as usize]) as usize;
+            line_len[p as usize] = line_len[p as usize].max(d + 1);
+        }
+    }
+    for o in &program.outputs {
+        let d = latency - stages[o.node as usize] as usize;
+        line_len[o.node as usize] = line_len[o.node as usize].max(d + 1);
+    }
+
+    // delay_line[i][k] = value of node i computed k cycles ago.
+    let mut delay: Vec<Vec<i64>> = line_len.iter().map(|&l| vec![0; l]).collect();
+    let zero = vec![0i64; program.num_inputs];
+    let total_cycles = stream.len() + latency;
+    let mut outputs = Vec::with_capacity(stream.len());
+
+    for cycle in 0..total_cycles {
+        let inputs = stream.get(cycle).unwrap_or(&zero);
+        // Shift every delay line by one cycle (registers clock in).
+        for line in delay.iter_mut() {
+            for k in (1..line.len()).rev() {
+                line[k] = line[k - 1];
+            }
+        }
+        // Combinational evaluation of the new front values, reading each
+        // operand through the register count its edge crosses.
+        for (i, node) in program.nodes.iter().enumerate() {
+            let v = match node.op {
+                DaisOp::Input { index } => inputs[index as usize],
+                DaisOp::Const { value } => value,
+                DaisOp::AddShift { a, b, shift_a, shift_b, sub } => {
+                    let da = (stages[i] - stages[a as usize]) as usize;
+                    let db = (stages[i] - stages[b as usize]) as usize;
+                    let av = delay[a as usize][da] << shift_a;
+                    let bv = delay[b as usize][db] << shift_b;
+                    if sub {
+                        av - bv
+                    } else {
+                        av + bv
+                    }
+                }
+                DaisOp::Neg { a } => {
+                    let da = (stages[i] - stages[a as usize]) as usize;
+                    -delay[a as usize][da]
+                }
+                DaisOp::Relu { a } => {
+                    let da = (stages[i] - stages[a as usize]) as usize;
+                    delay[a as usize][da].max(0)
+                }
+                DaisOp::Quant { a, shift, round, clip_min, clip_max } => {
+                    let da = (stages[i] - stages[a as usize]) as usize;
+                    quant_scalar(delay[a as usize][da], shift, round, clip_min, clip_max)
+                }
+            };
+            delay[i][0] = v;
+        }
+        // Read outputs for the input injected `latency` cycles ago.
+        if cycle >= latency {
+            let vals: Vec<i64> = program
+                .outputs
+                .iter()
+                .map(|o| {
+                    let d = latency - stages[o.node as usize] as usize;
+                    let v = delay[o.node as usize][d];
+                    if o.shift >= 0 {
+                        v << o.shift
+                    } else {
+                        v >> -o.shift
+                    }
+                })
+                .collect();
+            outputs.push(vals);
+        }
+    }
+    outputs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dais::DaisBuilder;
+    use crate::fixed::QInterval;
+
+    fn toy_program() -> DaisProgram {
+        // y0 = (x0 + 2*x1) - x2 ; y1 = 4*(x0 + 2*x1)
+        let mut b = DaisBuilder::new();
+        let q = QInterval::new(-128, 127, 0);
+        let x0 = b.input(0, q, 0);
+        let x1 = b.input(1, q, 0);
+        let x2 = b.input(2, q, 0);
+        let t = b.add_shift(x0, x1, 1, false);
+        let y0 = b.add_shift(t, x2, 0, true);
+        b.output(y0, 0);
+        b.output(t, 2);
+        b.finish()
+    }
+
+    #[test]
+    fn evaluate_toy() {
+        let p = toy_program();
+        let out = evaluate(&p, &[3, 5, 7]);
+        assert_eq!(out, vec![3 + 10 - 7, 4 * 13]);
+    }
+
+    #[test]
+    fn checked_matches_unchecked() {
+        let p = toy_program();
+        for x in [-127i64, -1, 0, 1, 127] {
+            let inputs = [x, -x, x / 2];
+            assert_eq!(evaluate(&p, &inputs), evaluate_checked(&p, &inputs));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "escapes tracked interval")]
+    fn checked_catches_out_of_range_inputs() {
+        let p = toy_program();
+        // 1000 is outside the declared input interval [-128, 127].
+        evaluate_checked(&p, &[1000, 0, 0]);
+    }
+
+    #[test]
+    fn quant_scalar_floor_and_halfup() {
+        assert_eq!(quant_scalar(13, 2, RoundMode::Floor, -100, 100), 3);
+        assert_eq!(quant_scalar(-13, 2, RoundMode::Floor, -100, 100), -4);
+        assert_eq!(quant_scalar(13, 2, RoundMode::HalfUp, -100, 100), 3); // 3.25 -> 3
+        assert_eq!(quant_scalar(14, 2, RoundMode::HalfUp, -100, 100), 4);
+        assert_eq!(quant_scalar(200, 0, RoundMode::Floor, -100, 100), 100);
+        assert_eq!(quant_scalar(-200, 0, RoundMode::HalfUp, -100, 100), -100);
+    }
+
+    #[test]
+    fn pipelined_matches_combinational() {
+        let p = toy_program();
+        // Stage assignment: inputs 0, t 1, y0 2 (one register per level).
+        let stages: Vec<u32> =
+            p.nodes.iter().map(|n| n.depth).collect();
+        let stream: Vec<Vec<i64>> = (0..20)
+            .map(|i| vec![(i * 7 % 255) - 128, (i * 13 % 255) - 128, (i * 29 % 255) - 128])
+            .collect();
+        let expect = evaluate_batch(&p, &stream);
+        let got = simulate_pipelined(&p, &stages, &stream);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn pipelined_with_coarser_stages() {
+        // Register only every other level: stages = depth / 2.
+        let p = toy_program();
+        let stages: Vec<u32> = p.nodes.iter().map(|n| n.depth / 2).collect();
+        let stream: Vec<Vec<i64>> =
+            (0..8).map(|i| vec![i, -i, 2 * i]).collect();
+        assert_eq!(simulate_pipelined(&p, &stages, &stream), evaluate_batch(&p, &stream));
+    }
+}

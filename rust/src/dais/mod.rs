@@ -1,0 +1,326 @@
+//! DAIS — the Distributed Arithmetic Instruction Set (paper §5.2).
+//!
+//! DAIS is a low-level, SSA-form IR in which every operation directly
+//! describes a piece of combinational hardware: shift-add/subtract nodes
+//! (the adders of the adder graph), negations, constants, and the few
+//! auxiliary ops the NN frontend needs (ReLU, requantization). Emitting
+//! RTL from DAIS is a 1:1 mapping of ops to modules; interpreting DAIS
+//! bit-accurately (see [`interp`]) is the Verilator substitute used for
+//! verification throughout this reproduction.
+//!
+//! Value convention: every node's runtime value is a plain integer in the
+//! *global LSB unit* of the enclosing computation. The per-node
+//! [`QInterval`] metadata records the exact reachable range and the
+//! guaranteed trailing-zero count (`exp`), which feed the cost model
+//! (paper Eq. 1) without affecting the integer semantics.
+
+pub mod dot;
+pub mod interp;
+pub mod verify;
+
+use crate::fixed::QInterval;
+use rustc_hash::FxHashMap;
+
+/// Index of a node inside a [`DaisProgram`].
+pub type NodeId = u32;
+
+/// Rounding behaviour of a [`DaisOp::Quant`] right-shift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RoundMode {
+    /// Truncate towards negative infinity (free in hardware: wiring).
+    Floor,
+    /// Round half-up: `(x + (1 << (s-1))) >> s` (costs one adder).
+    HalfUp,
+}
+
+/// One DAIS operation. Operands always refer to earlier nodes (SSA).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DaisOp {
+    /// External input number `index`.
+    Input { index: u32 },
+    /// Compile-time constant.
+    Const { value: i64 },
+    /// `(a << shift_a) + (b << shift_b)` or `(a << shift_a) - (b << shift_b)`.
+    /// This is the paper's two-term subexpression `a ± (b << s)` (shifts
+    /// are free wiring) and maps to one LUT-implemented adder/subtractor
+    /// on the FPGA. CSE always emits `shift_a == 0`; the generalized form
+    /// lets the final summation trees keep results positively signed.
+    AddShift { a: NodeId, b: NodeId, shift_a: u32, shift_b: u32, sub: bool },
+    /// `-a` (a hardware subtractor from zero).
+    Neg { a: NodeId },
+    /// `max(a, 0)` — ReLU for the NN frontend (a mux, no carry chain).
+    Relu { a: NodeId },
+    /// Arithmetic right shift by `shift` (negative = left shift, pure
+    /// wiring) with the given rounding, then saturation to
+    /// `[clip_min, clip_max]` — the NN requantization node.
+    Quant { a: NodeId, shift: i32, round: RoundMode, clip_min: i64, clip_max: i64 },
+}
+
+impl DaisOp {
+    /// Operand node ids of this op (0, 1 or 2 of them).
+    pub fn operands(&self) -> impl Iterator<Item = NodeId> {
+        let (a, b) = match *self {
+            DaisOp::Input { .. } | DaisOp::Const { .. } => (None, None),
+            DaisOp::AddShift { a, b, .. } => (Some(a), Some(b)),
+            DaisOp::Neg { a } | DaisOp::Relu { a } | DaisOp::Quant { a, .. } => (Some(a), None),
+        };
+        debug_assert!(a.is_some() || b.is_none());
+        a.into_iter().chain(b)
+    }
+
+    /// Whether this op consumes a carry chain (counts as an "adder" in
+    /// the paper's adder-count metric).
+    pub fn is_adder(&self) -> bool {
+        match self {
+            DaisOp::AddShift { .. } | DaisOp::Neg { .. } => true,
+            DaisOp::Quant { round: RoundMode::HalfUp, shift, .. } => *shift > 0,
+            _ => false,
+        }
+    }
+}
+
+/// A node: the op plus its statically-tracked interval and adder depth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DaisNode {
+    /// The operation.
+    pub op: DaisOp,
+    /// Exact reachable value range and trailing-zero count.
+    pub qint: QInterval,
+    /// Adder depth: longest chain of adder ops from any input.
+    pub depth: u32,
+}
+
+/// An output of the program: a node, a free left-shift (wiring), applied
+/// on read-out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutputSpec {
+    /// Node whose value is exposed.
+    pub node: NodeId,
+    /// Free output wiring shift (may be negative: output consumes only
+    /// the upper bits; semantics are exact — callers arrange shifts so no
+    /// set bit is discarded).
+    pub shift: i32,
+}
+
+/// A DAIS program: a topologically ordered op list plus output bindings.
+#[derive(Debug, Clone, Default)]
+pub struct DaisProgram {
+    /// Nodes in SSA order (operands strictly before users).
+    pub nodes: Vec<DaisNode>,
+    /// Output bindings, in output order.
+    pub outputs: Vec<OutputSpec>,
+    /// Number of external inputs.
+    pub num_inputs: usize,
+}
+
+impl DaisProgram {
+    /// Total adder/subtractor count (the paper's "adders" column).
+    pub fn adder_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.op.is_adder()).count()
+    }
+
+    /// Maximum adder depth over the outputs (the paper's "depth" column).
+    pub fn adder_depth(&self) -> u32 {
+        self.outputs
+            .iter()
+            .map(|o| self.nodes[o.node as usize].depth)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Node metadata accessor.
+    pub fn node(&self, id: NodeId) -> &DaisNode {
+        &self.nodes[id as usize]
+    }
+
+    /// Iterate over (id, node).
+    pub fn iter(&self) -> impl Iterator<Item = (NodeId, &DaisNode)> {
+        self.nodes.iter().enumerate().map(|(i, n)| (i as NodeId, n))
+    }
+}
+
+/// Incremental builder for [`DaisProgram`] with structural hash-consing:
+/// emitting the same op twice returns the same node.
+#[derive(Debug, Default)]
+pub struct DaisBuilder {
+    nodes: Vec<DaisNode>,
+    cache: FxHashMap<DaisOp, NodeId>,
+    outputs: Vec<OutputSpec>,
+    num_inputs: usize,
+}
+
+impl DaisBuilder {
+    /// New empty builder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(&mut self, op: DaisOp, qint: QInterval, depth: u32) -> NodeId {
+        if let Some(&id) = self.cache.get(&op) {
+            return id;
+        }
+        let id = self.nodes.len() as NodeId;
+        self.nodes.push(DaisNode { op, qint, depth });
+        self.cache.insert(op, id);
+        id
+    }
+
+    /// Declare input `index` with its quantized interval and initial
+    /// depth (paper's `depth_int`, default 0).
+    pub fn input(&mut self, index: usize, qint: QInterval, depth: u32) -> NodeId {
+        self.num_inputs = self.num_inputs.max(index + 1);
+        self.push(DaisOp::Input { index: index as u32 }, qint, depth)
+    }
+
+    /// Emit a constant.
+    pub fn constant(&mut self, value: i64) -> NodeId {
+        let tz = if value == 0 { 0 } else { value.trailing_zeros() as i32 };
+        let q = QInterval::constant(value >> tz, tz);
+        self.push(DaisOp::Const { value }, q, 0)
+    }
+
+    /// Emit `a ± (b << shift)` (the canonical CSE two-term form).
+    pub fn add_shift(&mut self, a: NodeId, b: NodeId, shift: u32, sub: bool) -> NodeId {
+        self.add_shift2(a, 0, b, shift, sub)
+    }
+
+    /// Emit `(a << shift_a) ± (b << shift_b)`.
+    pub fn add_shift2(
+        &mut self,
+        a: NodeId,
+        shift_a: u32,
+        b: NodeId,
+        shift_b: u32,
+        sub: bool,
+    ) -> NodeId {
+        let qa = self.nodes[a as usize].qint.shl(shift_a as i32);
+        let qb = self.nodes[b as usize].qint.shl(shift_b as i32);
+        let q = if sub { qa.sub(&qb) } else { qa.add(&qb) };
+        let depth = self.nodes[a as usize].depth.max(self.nodes[b as usize].depth) + 1;
+        self.push(DaisOp::AddShift { a, b, shift_a, shift_b, sub }, q, depth)
+    }
+
+    /// Emit `-a`.
+    pub fn neg(&mut self, a: NodeId) -> NodeId {
+        let q = self.nodes[a as usize].qint.neg();
+        let depth = self.nodes[a as usize].depth + 1;
+        self.push(DaisOp::Neg { a }, q, depth)
+    }
+
+    /// Emit `relu(a)`.
+    pub fn relu(&mut self, a: NodeId) -> NodeId {
+        let qa = self.nodes[a as usize].qint;
+        let q = QInterval::new(qa.min.max(0), qa.max.max(0), qa.exp);
+        let depth = self.nodes[a as usize].depth;
+        self.push(DaisOp::Relu { a }, q, depth)
+    }
+
+    /// Emit a requantization (shift-right + round + clip).
+    pub fn quant(
+        &mut self,
+        a: NodeId,
+        shift: i32,
+        round: RoundMode,
+        clip_min: i64,
+        clip_max: i64,
+    ) -> NodeId {
+        let qa = self.nodes[a as usize].qint;
+        // quant is monotone, so mapping the interval endpoints suffices.
+        // In the integer-unit convention exp >= 0 (trailing zeros).
+        debug_assert!(qa.exp >= 0, "DAIS nodes carry integer-unit intervals");
+        let lo = interp::quant_scalar(qa.min << qa.exp, shift, round, clip_min, clip_max);
+        let hi = interp::quant_scalar(qa.max << qa.exp, shift, round, clip_min, clip_max);
+        let q = QInterval::new(lo, hi, 0);
+        let depth = self.nodes[a as usize].depth
+            + (round == RoundMode::HalfUp && shift > 0) as u32;
+        self.push(DaisOp::Quant { a, shift, round, clip_min, clip_max }, q, depth)
+    }
+
+    /// Bind an output.
+    pub fn output(&mut self, node: NodeId, shift: i32) {
+        self.outputs.push(OutputSpec { node, shift });
+    }
+
+    /// Interval metadata of an already-built node.
+    pub fn qint(&self, id: NodeId) -> QInterval {
+        self.nodes[id as usize].qint
+    }
+
+    /// Depth metadata of an already-built node.
+    pub fn depth(&self, id: NodeId) -> u32 {
+        self.nodes[id as usize].depth
+    }
+
+    /// Finish building.
+    pub fn finish(self) -> DaisProgram {
+        DaisProgram { nodes: self.nodes, outputs: self.outputs, num_inputs: self.num_inputs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q8() -> QInterval {
+        QInterval::new(-128, 127, 0)
+    }
+
+    #[test]
+    fn builder_hash_consing() {
+        let mut b = DaisBuilder::new();
+        let x = b.input(0, q8(), 0);
+        let y = b.input(1, q8(), 0);
+        let s1 = b.add_shift(x, y, 0, false);
+        let s2 = b.add_shift(x, y, 0, false);
+        assert_eq!(s1, s2);
+        let s3 = b.add_shift(x, y, 0, true);
+        assert_ne!(s1, s3);
+        let p = b.finish();
+        assert_eq!(p.nodes.len(), 4);
+        assert_eq!(p.adder_count(), 2);
+    }
+
+    #[test]
+    fn depth_tracking() {
+        let mut b = DaisBuilder::new();
+        let x = b.input(0, q8(), 0);
+        let y = b.input(1, q8(), 0);
+        let s = b.add_shift(x, y, 0, false);
+        let t = b.add_shift(s, y, 2, true);
+        b.output(t, 0);
+        let p = b.finish();
+        assert_eq!(p.adder_depth(), 2);
+        assert_eq!(p.node(s).depth, 1);
+    }
+
+    #[test]
+    fn interval_propagation_addshift() {
+        let mut b = DaisBuilder::new();
+        let x = b.input(0, QInterval::new(0, 15, 0), 0);
+        let y = b.input(1, QInterval::new(0, 15, 0), 0);
+        let s = b.add_shift(x, y, 2, false); // x + 4y in [0, 75]
+        assert_eq!(b.qint(s).min, 0);
+        assert_eq!(b.qint(s).max, 75);
+        let d = b.add_shift(x, y, 0, true); // x - y in [-15, 15]
+        assert_eq!((b.qint(d).min, b.qint(d).max), (-15, 15));
+    }
+
+    #[test]
+    fn relu_interval() {
+        let mut b = DaisBuilder::new();
+        let x = b.input(0, QInterval::new(-10, 5, 0), 0);
+        let r = b.relu(x);
+        assert_eq!((b.qint(r).min, b.qint(r).max), (0, 5));
+        // ReLU adds no adder depth.
+        assert_eq!(b.depth(r), 0);
+    }
+
+    #[test]
+    fn input_counting() {
+        let mut b = DaisBuilder::new();
+        b.input(2, q8(), 0);
+        b.input(0, q8(), 0);
+        let p = b.finish();
+        assert_eq!(p.num_inputs, 3);
+    }
+}

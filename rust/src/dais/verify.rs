@@ -1,0 +1,226 @@
+//! Static verification of DAIS programs.
+//!
+//! Three checks, used pervasively by the test suite and callable from the
+//! CLI:
+//!
+//! 1. **Well-formedness** — SSA operand ordering, shift bounds, interval
+//!    consistency (re-derive every node's interval from its operands and
+//!    compare), depth consistency.
+//! 2. **Linearity extraction** — for programs built from the linear op
+//!    subset (input/const/add-shift/neg), compute each node's exact
+//!    symbolic form `c0 + Σ_j c_j · x_j` with i128 coefficients.
+//! 3. **CMVM equivalence** — the program's outputs realize `x^T M`
+//!    exactly, verified symbolically via (2).
+
+use super::{DaisOp, DaisProgram};
+use anyhow::{bail, ensure, Result};
+
+/// Check structural well-formedness; returns an error describing the
+/// first violation found.
+pub fn check_well_formed(program: &DaisProgram) -> Result<()> {
+    for (i, node) in program.nodes.iter().enumerate() {
+        for op in node.op.operands() {
+            ensure!(
+                (op as usize) < i,
+                "node {i}: operand {op} does not precede it (SSA violation)"
+            );
+        }
+        match node.op {
+            DaisOp::AddShift { a, b, shift_a, shift_b, sub } => {
+                ensure!(shift_a <= 62 && shift_b <= 62, "node {i}: shift out of range");
+                let qa = program.nodes[a as usize].qint.shl(shift_a as i32);
+                let qb = program.nodes[b as usize].qint.shl(shift_b as i32);
+                let expect = if sub { qa.sub(&qb) } else { qa.add(&qb) };
+                ensure!(
+                    node.qint == expect,
+                    "node {i}: interval {:?} != derived {:?}",
+                    node.qint,
+                    expect
+                );
+                let d = program.nodes[a as usize]
+                    .depth
+                    .max(program.nodes[b as usize].depth)
+                    + 1;
+                ensure!(node.depth == d, "node {i}: depth {} != derived {d}", node.depth);
+            }
+            DaisOp::Neg { a } => {
+                let expect = program.nodes[a as usize].qint.neg();
+                ensure!(node.qint == expect, "node {i}: neg interval mismatch");
+            }
+            DaisOp::Input { .. } | DaisOp::Const { .. } => {}
+            DaisOp::Relu { a } => {
+                let qa = program.nodes[a as usize].qint;
+                ensure!(
+                    node.qint.min >= 0 && node.qint.max >= qa.max.max(0),
+                    "node {i}: relu interval unsound"
+                );
+            }
+            DaisOp::Quant { clip_min, clip_max, .. } => {
+                ensure!(clip_min <= clip_max, "node {i}: empty clip range");
+            }
+        }
+    }
+    for (k, o) in program.outputs.iter().enumerate() {
+        ensure!(
+            (o.node as usize) < program.nodes.len(),
+            "output {k}: node {} out of range",
+            o.node
+        );
+    }
+    Ok(())
+}
+
+/// Symbolic affine form of a value: `c0 + Σ_j coeffs[j] * x_j`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Affine {
+    /// Constant term.
+    pub c0: i128,
+    /// One coefficient per program input.
+    pub coeffs: Vec<i128>,
+}
+
+impl Affine {
+    fn zero(n: usize) -> Self {
+        Self { c0: 0, coeffs: vec![0; n] }
+    }
+}
+
+/// Extract the exact affine form of every output. Fails if the program
+/// uses non-linear ops (ReLU/Quant).
+pub fn output_affine_forms(program: &DaisProgram) -> Result<Vec<Affine>> {
+    let n = program.num_inputs;
+    let mut forms: Vec<Affine> = Vec::with_capacity(program.nodes.len());
+    for (i, node) in program.nodes.iter().enumerate() {
+        let f = match node.op {
+            DaisOp::Input { index } => {
+                let mut f = Affine::zero(n);
+                f.coeffs[index as usize] = 1;
+                f
+            }
+            DaisOp::Const { value } => {
+                let mut f = Affine::zero(n);
+                f.c0 = value as i128;
+                f
+            }
+            DaisOp::AddShift { a, b, shift_a, shift_b, sub } => {
+                let fa = &forms[a as usize];
+                let fb = &forms[b as usize];
+                let ma = 1i128 << shift_a;
+                let mb = (if sub { -1i128 } else { 1 }) << shift_b;
+                Affine {
+                    c0: ma * fa.c0 + mb * fb.c0,
+                    coeffs: fa
+                        .coeffs
+                        .iter()
+                        .zip(&fb.coeffs)
+                        .map(|(&x, &y)| ma * x + mb * y)
+                        .collect(),
+                }
+            }
+            DaisOp::Neg { a } => {
+                let fa = &forms[a as usize];
+                Affine { c0: -fa.c0, coeffs: fa.coeffs.iter().map(|&x| -x).collect() }
+            }
+            DaisOp::Relu { .. } | DaisOp::Quant { .. } => {
+                bail!("node {i}: program is not linear ({:?})", node.op)
+            }
+        };
+        forms.push(f);
+    }
+    Ok(program
+        .outputs
+        .iter()
+        .map(|o| {
+            let f = &forms[o.node as usize];
+            let m = if o.shift >= 0 { 1i128 << o.shift } else { 0 };
+            if o.shift >= 0 {
+                Affine {
+                    c0: f.c0 * m,
+                    coeffs: f.coeffs.iter().map(|&c| c * m).collect(),
+                }
+            } else {
+                // Negative wiring shift: exact division (checked by interp
+                // in debug); symbolically divide.
+                let d = 1i128 << -o.shift;
+                Affine {
+                    c0: f.c0 / d,
+                    coeffs: f.coeffs.iter().map(|&c| c / d).collect(),
+                }
+            }
+        })
+        .collect())
+}
+
+/// Verify the program computes `y_i = Σ_j x_j * matrix[j][i]` exactly
+/// (matrix is `d_in × d_out`, row-major).
+pub fn check_cmvm_equivalence(
+    program: &DaisProgram,
+    matrix: &[i64],
+    d_in: usize,
+    d_out: usize,
+) -> Result<()> {
+    ensure!(matrix.len() == d_in * d_out, "matrix shape mismatch");
+    ensure!(program.num_inputs == d_in, "program arity {} != d_in {d_in}", program.num_inputs);
+    ensure!(program.outputs.len() == d_out, "program outputs != d_out");
+    let forms = output_affine_forms(program)?;
+    for (i, f) in forms.iter().enumerate() {
+        ensure!(f.c0 == 0, "output {i}: non-zero constant term {}", f.c0);
+        for j in 0..d_in {
+            let want = matrix[j * d_out + i] as i128;
+            ensure!(
+                f.coeffs[j] == want,
+                "output {i}, input {j}: coefficient {} != matrix {want}",
+                f.coeffs[j]
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dais::DaisBuilder;
+    use crate::fixed::QInterval;
+
+    #[test]
+    fn affine_extraction() {
+        let mut b = DaisBuilder::new();
+        let q = QInterval::new(-8, 7, 0);
+        let x0 = b.input(0, q, 0);
+        let x1 = b.input(1, q, 0);
+        let t = b.add_shift(x0, x1, 2, true); // x0 - 4 x1
+        let u = b.neg(t); // -x0 + 4 x1
+        b.output(u, 1); // -2 x0 + 8 x1
+        let p = b.finish();
+        check_well_formed(&p).unwrap();
+        let forms = output_affine_forms(&p).unwrap();
+        assert_eq!(forms[0].coeffs, vec![-2, 8]);
+        assert_eq!(forms[0].c0, 0);
+    }
+
+    #[test]
+    fn cmvm_equivalence_detects_mismatch() {
+        let mut b = DaisBuilder::new();
+        let q = QInterval::new(-8, 7, 0);
+        let x0 = b.input(0, q, 0);
+        let x1 = b.input(1, q, 0);
+        let t = b.add_shift(x0, x1, 0, false); // x0 + x1
+        b.output(t, 0);
+        let p = b.finish();
+        // matrix column (1, 1): ok.
+        check_cmvm_equivalence(&p, &[1, 1], 2, 1).unwrap();
+        // matrix column (1, 2): mismatch.
+        assert!(check_cmvm_equivalence(&p, &[1, 2], 2, 1).is_err());
+    }
+
+    #[test]
+    fn nonlinear_rejected() {
+        let mut b = DaisBuilder::new();
+        let x = b.input(0, QInterval::new(-8, 7, 0), 0);
+        let r = b.relu(x);
+        b.output(r, 0);
+        let p = b.finish();
+        assert!(output_affine_forms(&p).is_err());
+    }
+}

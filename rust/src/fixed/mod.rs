@@ -1,0 +1,116 @@
+//! Fixed-point number representation and quantized-interval arithmetic.
+//!
+//! The da4ml algorithm tracks every intermediate value of the adder graph
+//! as a *quantized interval* `[l, h, δ]` (paper §4.1): the value is an
+//! integer multiple of the step `δ = 2^exp` lying in `[l, h]`. Tracking
+//! intervals (instead of plain bitwidths) avoids the pessimistic
+//! carry-bit-per-addition growth when accumulating many terms and gives
+//! exact cost-model inputs for Eq. (1).
+//!
+//! Internally we keep the integer mantissa range `[min, max]` and the
+//! binary exponent `exp`, i.e. the represented values are
+//! `{ m * 2^exp : m ∈ [min, max] }`.
+
+mod qinterval;
+
+pub use qinterval::QInterval;
+
+/// A fixed-point format `fixed<S, W, I>` (paper §4.1): `S` sign bit,
+/// `W` total bits, `I` integer bits (including the sign bit when present).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FixedFormat {
+    /// Whether the format has a sign bit.
+    pub signed: bool,
+    /// Total bitwidth `W` (must be ≥ 1).
+    pub width: u32,
+    /// Integer bits `I`, including the sign bit if present. May be
+    /// negative (purely fractional formats) or exceed `W` (trailing
+    /// implied zeros).
+    pub integer: i32,
+}
+
+impl FixedFormat {
+    /// Create a new fixed-point format.
+    pub fn new(signed: bool, width: u32, integer: i32) -> Self {
+        assert!(width >= 1, "fixed-point width must be >= 1");
+        Self { signed, width, integer }
+    }
+
+    /// Number of fractional bits `F = W - I`.
+    pub fn frac(&self) -> i32 {
+        self.width as i32 - self.integer
+    }
+
+    /// The quantized interval covered by this format:
+    /// `l = -S * 2^(I-S)`, `h = 2^(I-S) - 2^(I-W)`, `δ = 2^(I-W)`.
+    pub fn qinterval(&self) -> QInterval {
+        let exp = -self.frac();
+        let s = self.signed as u32;
+        // Mantissa range: signed -> [-2^(W-1), 2^(W-1)-1]; unsigned -> [0, 2^W - 1].
+        let (min, max) = if self.signed {
+            (-(1i64 << (self.width - s)), (1i64 << (self.width - s)) - 1)
+        } else {
+            (0, (1i64 << self.width) - 1)
+        };
+        QInterval::new(min, max, exp)
+    }
+
+    /// Number of distinct representable values.
+    pub fn cardinality(&self) -> i64 {
+        1i64 << self.width
+    }
+}
+
+impl std::fmt::Display for FixedFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fixed<{}, {}, {}>",
+            if self.signed { 1 } else { 0 },
+            self.width,
+            self.integer
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_qinterval_int8() {
+        // fixed<1, 8, 8>: classic signed 8-bit integer.
+        let f = FixedFormat::new(true, 8, 8);
+        let q = f.qinterval();
+        assert_eq!(q.min_value(), -128.0);
+        assert_eq!(q.max_value(), 127.0);
+        assert_eq!(q.step(), 1.0);
+        assert_eq!(q.width(), 8);
+        assert!(q.signed());
+    }
+
+    #[test]
+    fn format_qinterval_unsigned() {
+        let f = FixedFormat::new(false, 4, 4);
+        let q = f.qinterval();
+        assert_eq!(q.min_value(), 0.0);
+        assert_eq!(q.max_value(), 15.0);
+        assert_eq!(q.width(), 4);
+        assert!(!q.signed());
+    }
+
+    #[test]
+    fn format_qinterval_fractional() {
+        // fixed<1, 8, 2>: 6 fractional bits, range [-2, 2).
+        let f = FixedFormat::new(true, 8, 2);
+        let q = f.qinterval();
+        assert_eq!(q.min_value(), -2.0);
+        assert_eq!(q.step(), 1.0 / 64.0);
+        assert_eq!(q.max_value(), 2.0 - 1.0 / 64.0);
+    }
+
+    #[test]
+    fn format_display() {
+        assert_eq!(FixedFormat::new(true, 8, 3).to_string(), "fixed<1, 8, 3>");
+    }
+}

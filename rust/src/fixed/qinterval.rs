@@ -1,0 +1,227 @@
+//! Quantized interval `[l, h, δ]` arithmetic (paper §4.1, Table 1).
+
+/// A quantized interval: the set `{ m * 2^exp : m ∈ [min, max] }`.
+///
+/// All adder-graph values are tracked with this type; it determines the
+/// exact bitwidths fed to the cost model (Eq. 1) and the wrap-free
+/// semantics the DAIS interpreter enforces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QInterval {
+    /// Smallest integer mantissa.
+    pub min: i64,
+    /// Largest integer mantissa.
+    pub max: i64,
+    /// Binary exponent of the step size: `δ = 2^exp`.
+    pub exp: i32,
+}
+
+impl QInterval {
+    /// Create a new interval; panics if `min > max`.
+    pub fn new(min: i64, max: i64, exp: i32) -> Self {
+        assert!(min <= max, "QInterval min {min} > max {max}");
+        Self { min, max, exp }
+    }
+
+    /// The degenerate interval containing only zero.
+    pub fn zero() -> Self {
+        Self { min: 0, max: 0, exp: 0 }
+    }
+
+    /// Interval of a single constant mantissa value at `exp`.
+    pub fn constant(value: i64, exp: i32) -> Self {
+        Self { min: value, max: value, exp }
+    }
+
+    /// Whether this interval only contains zero.
+    pub fn is_zero(&self) -> bool {
+        self.min == 0 && self.max == 0
+    }
+
+    /// Whether negative values are representable (a sign bit is needed).
+    pub fn signed(&self) -> bool {
+        self.min < 0
+    }
+
+    /// Step size `δ` as a float (may underflow for very negative `exp`).
+    pub fn step(&self) -> f64 {
+        (self.exp as f64).exp2()
+    }
+
+    /// Lowest representable value as a float.
+    pub fn min_value(&self) -> f64 {
+        self.min as f64 * self.step()
+    }
+
+    /// Highest representable value as a float.
+    pub fn max_value(&self) -> f64 {
+        self.max as f64 * self.step()
+    }
+
+    /// Total bitwidth `W` required: mantissa magnitude bits plus a sign
+    /// bit when the interval extends below zero.
+    pub fn width(&self) -> u32 {
+        if self.is_zero() {
+            return 0;
+        }
+        let mag_bits = |v: i64| -> u32 {
+            if v >= 0 {
+                64 - (v as u64).leading_zeros()
+            } else {
+                // Two's complement: -2^k needs k+1 bits total (handled via
+                // sign below); magnitude bits for value v<0 is bits of
+                // (-v - 1) i.e. ceil(log2(-v)) for non-power-of-two.
+                64 - ((-v - 1) as u64).leading_zeros()
+            }
+        };
+        let body = mag_bits(self.min).max(mag_bits(self.max));
+        body + self.signed() as u32
+    }
+
+    /// Position of the most significant bit relative to `exp == 0`
+    /// (i.e. `exp + width`). Used for operand-overlap computation.
+    pub fn msb(&self) -> i32 {
+        self.exp + self.width() as i32
+    }
+
+    /// Position of the least significant bit (== `exp`).
+    pub fn lsb(&self) -> i32 {
+        self.exp
+    }
+
+    /// Shift the interval left by `s` bits (`s` may be negative; a right
+    /// shift only re-scales `exp`, it never discards mantissa bits).
+    pub fn shl(&self, s: i32) -> Self {
+        Self { min: self.min, max: self.max, exp: self.exp + s }
+    }
+
+    /// Negated interval.
+    pub fn neg(&self) -> Self {
+        Self { min: -self.max, max: -self.min, exp: self.exp }
+    }
+
+    /// Exact interval of `self + other`.
+    pub fn add(&self, other: &Self) -> Self {
+        let (a, b, exp) = Self::align(self, other);
+        Self { min: a.0 + b.0, max: a.1 + b.1, exp }
+    }
+
+    /// Exact interval of `self - other`.
+    pub fn sub(&self, other: &Self) -> Self {
+        let (a, b, exp) = Self::align(self, other);
+        Self { min: a.0 - b.1, max: a.1 - b.0, exp }
+    }
+
+    /// Exact interval of multiplication by a constant mantissa `c * 2^cexp`.
+    pub fn mul_const(&self, c: i64, cexp: i32) -> Self {
+        let (a, b) = (self.min * c, self.max * c);
+        Self { min: a.min(b), max: a.max(b), exp: self.exp + cexp }
+    }
+
+    /// Union (convex hull) of two intervals.
+    pub fn union(&self, other: &Self) -> Self {
+        if self.is_zero() {
+            return *other;
+        }
+        if other.is_zero() {
+            return *self;
+        }
+        let (a, b, exp) = Self::align(self, other);
+        Self { min: a.0.min(b.0), max: a.1.max(b.1), exp }
+    }
+
+    /// Whether the scalar mantissa-aligned value `v * 2^vexp` lies inside.
+    pub fn contains(&self, v: i64, vexp: i32) -> bool {
+        if vexp >= self.exp {
+            let shifted = v.checked_shl((vexp - self.exp) as u32);
+            match shifted {
+                Some(m) => m >= self.min && m <= self.max,
+                None => false,
+            }
+        } else {
+            // Finer step than representable -> must be a multiple.
+            let d = (self.exp - vexp) as u32;
+            if d >= 64 || v & ((1i64 << d) - 1) != 0 {
+                return false;
+            }
+            let m = v >> d;
+            m >= self.min && m <= self.max
+        }
+    }
+
+    /// Align mantissas of two intervals to a common exponent.
+    fn align(a: &Self, b: &Self) -> ((i64, i64), (i64, i64), i32) {
+        let exp = a.exp.min(b.exp);
+        let sa = (a.exp - exp) as u32;
+        let sb = (b.exp - exp) as u32;
+        ((a.min << sa, a.max << sa), (b.min << sb, b.max << sb), exp)
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths() {
+        assert_eq!(QInterval::new(0, 255, 0).width(), 8);
+        assert_eq!(QInterval::new(-128, 127, 0).width(), 8);
+        assert_eq!(QInterval::new(-1, 0, 0).width(), 1);
+        assert_eq!(QInterval::new(0, 1, 0).width(), 1);
+        assert_eq!(QInterval::new(0, 0, 0).width(), 0);
+        assert_eq!(QInterval::new(-129, 127, 0).width(), 9);
+        assert_eq!(QInterval::new(-128, 128, 0).width(), 9);
+    }
+
+    #[test]
+    fn add_tracks_exact_range() {
+        // Accumulating 4 values in [0, 255] needs exactly 10 bits, not 12.
+        let q = QInterval::new(0, 255, 0);
+        let sum = q.add(&q).add(&q).add(&q);
+        assert_eq!(sum.max, 1020);
+        assert_eq!(sum.width(), 10);
+    }
+
+    #[test]
+    fn sub_and_neg() {
+        let a = QInterval::new(0, 10, 0);
+        let b = QInterval::new(-3, 5, 0);
+        let d = a.sub(&b);
+        assert_eq!((d.min, d.max), (-5, 13));
+        let n = b.neg();
+        assert_eq!((n.min, n.max), (-5, 3));
+    }
+
+    #[test]
+    fn align_mixed_exponents() {
+        let a = QInterval::new(0, 3, 2); // {0,4,8,12}
+        let b = QInterval::new(0, 1, 0); // {0,1}
+        let s = a.add(&b);
+        assert_eq!(s.exp, 0);
+        assert_eq!(s.max, 13);
+    }
+
+    #[test]
+    fn mul_const_negative() {
+        let a = QInterval::new(-2, 5, 1);
+        let m = a.mul_const(-3, 2);
+        assert_eq!((m.min, m.max, m.exp), (-15, 6, 3));
+    }
+
+    #[test]
+    fn contains_respects_step() {
+        let a = QInterval::new(0, 4, 2); // multiples of 4 up to 16
+        assert!(a.contains(8, 0));
+        assert!(!a.contains(6, 0));
+        assert!(a.contains(2, 2)); // 2*4 = 8
+        assert!(!a.contains(5, 2)); // 20 > 16
+    }
+
+    #[test]
+    fn union_hull() {
+        let a = QInterval::new(0, 3, 0);
+        let b = QInterval::new(-2, 1, 1);
+        let u = a.union(&b);
+        assert!(u.contains(3, 0) && u.contains(-4, 0) && u.contains(2, 0));
+    }
+}

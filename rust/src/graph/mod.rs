@@ -1,0 +1,261 @@
+//! Stage 1 — graph-based matrix decomposition (paper §4.3).
+//!
+//! Every column `v_i` of the constant matrix becomes a vertex; a root
+//! vertex carries the zero vector. The distance between two vertices is
+//! `min(nnz_csd(v_i - v_j), nnz_csd(v_i + v_j))` — the cost, in signed
+//! digits, of deriving one output from the other. A depth-bounded Prim
+//! MST then rewrites `M = M1 · M2`: each tree edge becomes a column of
+//! `M1` (the vector that must actually be summed from the inputs), and
+//! `M2` records each original column as the ±1 combination of the edges
+//! on its root path. `M2` is typically much sparser than `M`, and stage 2
+//! CSE runs on both factors.
+//!
+//! With a delay constraint `dc ≥ 0` the tree depth is capped at `2^dc`
+//! edges (paper §4.3), so `dc = 0` forces the trivial decomposition.
+
+use crate::csd;
+
+/// The stage-1 result: `M (d_in×d_out) = M1 (d_in×k) · M2 (k×d_out)`.
+#[derive(Debug, Clone)]
+pub struct Decomposition {
+    /// Edge-vector matrix, row-major `d_in × k`.
+    pub m1: Vec<i64>,
+    /// Path-coefficient matrix, row-major `k × d_out`, entries in
+    /// `{-1, 0, 1}`.
+    pub m2: Vec<i64>,
+    /// Number of tree edges (== `d_out`; one edge per non-root vertex).
+    pub k: usize,
+    /// Parent vertex per column (0 = root, `c` = column `c-1`).
+    pub parent: Vec<usize>,
+    /// Whether the edge to the parent used the `v_c + v_p` form (the
+    /// parent path contributes negated).
+    pub flip: Vec<bool>,
+}
+
+impl Decomposition {
+    /// True when every vertex hangs directly off the root with positive
+    /// sign — `M1` is `M` and `M2` the identity, so stage 1 found no
+    /// exploitable cross-column structure.
+    pub fn is_trivial(&self) -> bool {
+        self.parent.iter().all(|&p| p == 0) && self.flip.iter().all(|&f| !f)
+    }
+
+    /// Verify `M1 · M2 == M` exactly (i128 accumulation).
+    pub fn check(&self, matrix: &[i64], d_in: usize, d_out: usize) -> bool {
+        for j in 0..d_in {
+            for i in 0..d_out {
+                let mut acc: i128 = 0;
+                for r in 0..self.k {
+                    acc += self.m1[j * self.k + r] as i128 * self.m2[r * d_out + i] as i128;
+                }
+                if acc != matrix[j * d_out + i] as i128 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Distance between two column vectors: fewest CSD digits to derive one
+/// from (±) the other. Returns (distance, use_sum_form).
+fn distance(a: &[i64], b: &[i64]) -> (u32, bool) {
+    let mut diff = 0u32;
+    let mut sum = 0u32;
+    for (&x, &y) in a.iter().zip(b) {
+        diff += csd::nnz(x - y);
+        sum += csd::nnz(x + y);
+    }
+    if diff <= sum {
+        (diff, false)
+    } else {
+        (sum, true)
+    }
+}
+
+/// Run the depth-bounded Prim decomposition.
+///
+/// `dc < 0` leaves the tree depth unconstrained; otherwise the root path
+/// of every vertex is at most `2^dc` edges.
+pub fn decompose(matrix: &[i64], d_in: usize, d_out: usize, dc: i32) -> Decomposition {
+    assert_eq!(matrix.len(), d_in * d_out);
+    let max_depth: u64 = if dc < 0 { u64::MAX } else { 1u64 << dc.min(62) };
+
+    // Column views (vertex v_{c+1} = column c); vertex 0 is the root.
+    let col = |c: usize| -> Vec<i64> { (0..d_in).map(|j| matrix[j * d_out + c]).collect() };
+    let columns: Vec<Vec<i64>> = (0..d_out).map(col).collect();
+    let zero = vec![0i64; d_in];
+    let vertex = |v: usize| -> &[i64] { if v == 0 { &zero } else { &columns[v - 1] } };
+
+    let n = d_out + 1;
+    let mut in_tree = vec![false; n];
+    let mut depth = vec![0u64; n];
+    let mut parent = vec![0usize; d_out];
+    let mut flip = vec![false; d_out];
+    // best[v] = (dist, parent, use_sum) among *eligible* tree vertices.
+    let mut best: Vec<(u32, usize, bool)> = (0..n)
+        .map(|v| {
+            if v == 0 {
+                (0, 0, false)
+            } else {
+                let (d, s) = distance(vertex(v), &zero);
+                (d, 0usize, s)
+            }
+        })
+        .collect();
+    in_tree[0] = true;
+
+    for _ in 0..d_out {
+        // Pick the closest out-of-tree vertex (deterministic tie-break
+        // by vertex index).
+        let mut pick = usize::MAX;
+        for v in 1..n {
+            if !in_tree[v] && (pick == usize::MAX || best[v].0 < best[pick].0) {
+                pick = v;
+            }
+        }
+        let (_, p, s) = best[pick];
+        in_tree[pick] = true;
+        depth[pick] = depth[p] + 1;
+        parent[pick - 1] = p;
+        flip[pick - 1] = s;
+
+        // Relax: the new vertex may be a better (and eligible) parent.
+        if depth[pick] < max_depth {
+            for v in 1..n {
+                if !in_tree[v] {
+                    let (d, s) = distance(vertex(v), vertex(pick));
+                    if d < best[v].0 {
+                        best[v] = (d, pick, s);
+                    }
+                }
+            }
+        }
+    }
+
+    // Edge vectors: w_c = v_c - v_p (diff form) or v_c + v_p (sum form).
+    let k = d_out;
+    let mut m1 = vec![0i64; d_in * k];
+    for c in 0..d_out {
+        let p = parent[c];
+        let pv = vertex(p);
+        for j in 0..d_in {
+            let w = if flip[c] {
+                columns[c][j] + pv[j]
+            } else {
+                columns[c][j] - pv[j]
+            };
+            m1[j * k + c] = w;
+        }
+    }
+
+    // Path coefficients: v_c = w_c + (flip ? -1 : +1) * v_parent.
+    let mut m2 = vec![0i64; k * d_out];
+    for i in 0..d_out {
+        // Walk up from v_{i+1}, accumulating the sign.
+        let mut v = i + 1;
+        let mut sign = 1i64;
+        loop {
+            let c = v - 1;
+            m2[c * d_out + i] = sign;
+            if flip[c] {
+                sign = -sign;
+            }
+            v = parent[c];
+            if v == 0 {
+                break;
+            }
+        }
+    }
+
+    Decomposition { m1, m2, k, parent, flip }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Fig. 2 / Eq. (2): the MST must be the chain
+    /// root -> v1 -> v2 -> v3.
+    #[test]
+    fn paper_fig2_chain() {
+        // M columns: v1=(0,1,2), v2=(1,2,3), v3=(3,4,5); row-major d_in=3.
+        let m = vec![
+            0, 1, 3, //
+            1, 2, 4, //
+            2, 3, 5, //
+        ];
+        let d = decompose(&m, 3, 3, -1);
+        assert_eq!(d.parent, vec![0, 1, 2]);
+        assert!(!d.is_trivial());
+        assert!(d.check(&m, 3, 3));
+        // Edge vectors: v1, v2-v1=(1,1,1), v3-v2=(2,2,2).
+        assert_eq!((0..3).map(|j| d.m1[j * 3 + 1]).collect::<Vec<_>>(), vec![1, 1, 1]);
+        assert_eq!((0..3).map(|j| d.m1[j * 3 + 2]).collect::<Vec<_>>(), vec![2, 2, 2]);
+        // M2 columns: v1 = e1; v2 = e1+e2; v3 = e1+e2+e3.
+        assert_eq!(d.m2, vec![1, 1, 1, 0, 1, 1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn dc_zero_forces_trivial_star() {
+        let m = vec![
+            0, 1, 3, //
+            1, 2, 4, //
+            2, 3, 5, //
+        ];
+        let d = decompose(&m, 3, 3, 0);
+        // Depth cap 2^0 = 1: every vertex hangs off the root.
+        assert_eq!(d.parent, vec![0, 0, 0]);
+        assert!(d.check(&m, 3, 3));
+    }
+
+    #[test]
+    fn negated_duplicate_columns_use_sum_form() {
+        // v2 = -v1: the sum form gives a zero edge vector.
+        let m = vec![
+            3, -3, //
+            5, -5, //
+        ];
+        let d = decompose(&m, 2, 2, -1);
+        assert!(d.check(&m, 2, 2));
+        let total_digits: u32 = d.m1.iter().map(|&x| csd::nnz(x)).sum();
+        // Only one copy of (3,5) should remain in M1: nnz(3)+nnz(5) = 4.
+        assert_eq!(total_digits, 4);
+    }
+
+    #[test]
+    fn depth_cap_respected() {
+        use crate::util::Rng;
+        let mut rng = Rng::seed_from(11);
+        let (d_in, d_out) = (6, 12);
+        let m: Vec<i64> = (0..d_in * d_out).map(|_| rng.range_i64(1, 255)).collect();
+        for dc in [0, 1, 2] {
+            let d = decompose(&m, d_in, d_out, dc);
+            assert!(d.check(&m, d_in, d_out));
+            // Re-derive depths and check the cap.
+            for c in 0..d_out {
+                let mut depth = 0;
+                let mut v = c + 1;
+                while v != 0 {
+                    depth += 1;
+                    v = d.parent[v - 1];
+                }
+                assert!(depth <= 1u64 << dc, "dc={dc}: vertex {c} depth {depth}");
+            }
+        }
+    }
+
+    #[test]
+    fn random_decomposition_always_exact() {
+        use crate::util::Rng;
+        let mut rng = Rng::seed_from(5);
+        for _ in 0..10 {
+            let d_in = rng.below(7) + 1;
+            let d_out = rng.below(7) + 1;
+            let m: Vec<i64> =
+                (0..d_in * d_out).map(|_| rng.range_i64(-128, 127)).collect();
+            let d = decompose(&m, d_in, d_out, -1);
+            assert!(d.check(&m, d_in, d_out));
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! # da4ml — Distributed Arithmetic for Real-time Neural Networks on FPGAs
+//!
+//! A reproduction of *da4ml: Distributed Arithmetic for Real-time Neural
+//! Networks on FPGAs* (Sun, Que, Loncar, Luk, Spiropulu — ACM TRETS 2026)
+//! as a three-layer rust + JAX + Pallas stack.
+//!
+//! The library optimizes constant matrix–vector multiplication (CMVM,
+//! `y^T = x^T M`) into multiplierless shift-add adder graphs for
+//! fully-unrolled, II=1 FPGA designs:
+//!
+//! 1. **Stage 1** ([`graph`]) — a depth-bounded Prim MST over matrix
+//!    columns decomposes `M = M1 · M2`, capturing shared structure across
+//!    outputs.
+//! 2. **Stage 2** ([`cse`]) — cost-aware two-term common subexpression
+//!    elimination over the canonical-signed-digit ([`csd`]) expansion,
+//!    weighted by operand bit-overlap, under a delay constraint.
+//!
+//! The result is a [`dais`] program (Distributed Arithmetic Instruction
+//! Set — an SSA adder-graph IR) which can be:
+//!
+//! * interpreted bit-accurately ([`dais::interp`], the Verilator
+//!   substitute),
+//! * pipelined ([`pipeline`]) and emitted as Verilog/VHDL ([`rtl`]),
+//! * costed by the analytic FPGA resource/timing model ([`estimate`],
+//!   the Vivado substitute),
+//! * or embedded in a full neural-network design through the hls4ml-like
+//!   frontend ([`nn`]) driven by the [`coordinator`].
+//!
+//! The [`runtime`] module wraps the PJRT CPU client (via the `xla` crate)
+//! to execute the JAX-lowered golden model from `artifacts/*.hlo.txt`,
+//! which the end-to-end examples cross-check bit-exactly against the DAIS
+//! simulation.
+
+pub mod baseline;
+pub mod cmvm;
+pub mod coordinator;
+pub mod csd;
+pub mod cse;
+pub mod dais;
+pub mod estimate;
+pub mod fixed;
+pub mod graph;
+pub mod json;
+pub mod nn;
+pub mod pipeline;
+pub mod report;
+pub mod rtl;
+pub mod runtime;
+pub mod util;
+
+/// Library-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Convenience prelude re-exporting the most common public items.
+pub mod prelude {
+    pub use crate::cmvm::{CmvmProblem, CmvmSolution, Strategy};
+    pub use crate::csd::Csd;
+    pub use crate::cse::{optimize_into, CseConfig};
+    pub use crate::dais::{DaisOp, DaisProgram};
+    pub use crate::estimate::{FpgaModel, ResourceReport};
+    pub use crate::fixed::QInterval;
+    pub use crate::pipeline::PipelineConfig;
+}
+
+/// Shared report generators used by the `cargo bench` table targets
+/// (kept in the library so every bench prints identical conventions).
+pub mod bench_tables;
+
+/// Shared generator for the RTL-flow benches (Tables 10–12).
+pub mod bench_tables_rtl;

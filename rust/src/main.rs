@@ -1,0 +1,247 @@
+//! da4ml CLI — the L3 leader entrypoint.
+//!
+//! Subcommands mirror the library's main flows (hand-rolled arg parsing;
+//! the offline build has no clap):
+//!
+//! * `compile`  — optimize a CMVM (random) and print the solution summary;
+//! * `net`      — compile a network artifact with a strategy and print
+//!   the resource report;
+//! * `rtl`      — emit Verilog/VHDL for a network;
+//! * `simulate` — run a network on test vectors, report accuracy;
+//! * `golden`   — execute an HLO artifact through PJRT and cross-check
+//!   the bit-exact integer simulation against it.
+
+use anyhow::{bail, Result};
+use da4ml::cmvm::{optimize, CmvmProblem, Strategy};
+use da4ml::estimate::{self, FpgaModel};
+use da4ml::nn::{self, NetworkSpec, TestVectors};
+use da4ml::pipeline::{self, PipelineConfig};
+use da4ml::runtime;
+use da4ml::util::Rng;
+
+/// Minimal flag parser: `--key value` pairs after positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = argv.iter();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it.next().cloned().unwrap_or_else(|| "true".into());
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Self { positional, flags }
+    }
+
+    fn flag<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn pos(&self, i: usize, what: &str) -> Result<&str> {
+        self.positional
+            .get(i)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("missing argument: {what}"))
+    }
+}
+
+fn parse_strategy(s: &str, dc: i32) -> Strategy {
+    match s {
+        "latency" => Strategy::Latency,
+        "naive-da" => Strategy::NaiveDa,
+        "cse-only" => Strategy::CseOnly { dc },
+        "lookahead" => Strategy::Lookahead { dc },
+        _ => Strategy::Da { dc },
+    }
+}
+
+fn load_spec(path: &str) -> Result<NetworkSpec> {
+    NetworkSpec::from_json(&runtime::load_text(path)?)
+}
+
+fn load_vectors(path: &str) -> Result<TestVectors> {
+    TestVectors::from_json(&runtime::load_text(path)?)
+}
+
+const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot> [args]
+  compile [--d-in N] [--d-out N] [--bits B] [--dc D] [--seed S]
+  net <spec.weights.json> [--strategy da|latency|naive-da] [--dc D] [--pipe N]
+  rtl <spec.weights.json> <out.v|out.vhd> [--pipe N] [--dc D]
+  simulate <spec.weights.json> <spec.testvec.json>
+  golden <spec.weights.json> <spec.hlo.txt> <spec.testvec.json>
+  verify <spec.weights.json> [--dc D]      (well-formedness + bit-exactness)
+  dot <spec.weights.json> <out.dot> [--dc D]  (Graphviz adder graph)";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "compile" => {
+            let d_in: usize = args.flag("d-in", 16);
+            let d_out: usize = args.flag("d-out", 16);
+            let bits: u32 = args.flag("bits", 8);
+            let dc: i32 = args.flag("dc", -1);
+            let seed: u64 = args.flag("seed", 0);
+            let mut rng = Rng::seed_from(seed);
+            let lo = (1i64 << (bits - 1)) + 1;
+            let hi = (1i64 << bits) - 1;
+            let m: Vec<i64> = (0..d_in * d_out).map(|_| rng.range_i64(lo, hi)).collect();
+            let p = CmvmProblem::new(d_in, d_out, m, 8);
+            let sol = optimize(&p, Strategy::Da { dc });
+            let rep = estimate::combinational(&sol.program, &FpgaModel::default());
+            println!(
+                "CMVM {d_in}x{d_out} {bits}-bit dc={dc}: adders={} depth={} lut={} \
+                 latency={:.2}ns opt_time={:?}",
+                sol.adders, sol.depth, rep.lut, rep.latency_ns, sol.opt_time
+            );
+        }
+        "net" => {
+            let spec = load_spec(args.pos(0, "spec path")?)?;
+            let dc: i32 = args.flag("dc", 2);
+            let s = parse_strategy(&args.flag::<String>("strategy", "da".into()), dc);
+            let pipe: u32 = args.flag("pipe", 5);
+            let model = FpgaModel::default();
+            let cfg = PipelineConfig::every_n_adders(pipe.max(1));
+            let reports = nn::compile::layer_reports(&spec, s, &model, &cfg)?;
+            let mut table = da4ml::report::Table::new(
+                &format!("{} ({})", spec.name, s.name()),
+                &["layer", "inst", "LUT", "DSP", "FF", "adders"],
+            );
+            for r in &reports {
+                table.push(vec![
+                    r.name.clone(),
+                    r.instances.to_string(),
+                    r.total.lut.to_string(),
+                    r.total.dsp.to_string(),
+                    r.total.ff.to_string(),
+                    r.total.adders.to_string(),
+                ]);
+            }
+            let agg = nn::compile::aggregate(&reports);
+            table.push(vec![
+                "TOTAL".into(),
+                "-".into(),
+                agg.lut.to_string(),
+                agg.dsp.to_string(),
+                agg.ff.to_string(),
+                agg.adders.to_string(),
+            ]);
+            println!("{}", table.render());
+        }
+        "rtl" => {
+            let spec = load_spec(args.pos(0, "spec path")?)?;
+            let out = args.pos(1, "output path")?;
+            let pipe: u32 = args.flag("pipe", 5);
+            let dc: i32 = args.flag("dc", 2);
+            let prog = nn::compile::fuse(&spec, Strategy::Da { dc })?;
+            let text = if pipe == 0 {
+                if out.ends_with(".vhd") {
+                    da4ml::rtl::emit_vhdl(&prog, &spec.name)
+                } else {
+                    da4ml::rtl::emit_verilog(&prog, &spec.name, None)
+                }
+            } else {
+                let stages =
+                    pipeline::assign_stages(&prog, &PipelineConfig::every_n_adders(pipe));
+                da4ml::rtl::emit_verilog(&prog, &spec.name, Some(&stages))
+            };
+            std::fs::write(out, text)?;
+            println!(
+                "wrote {out}: {} nodes, {} adders, depth {}",
+                prog.nodes.len(),
+                prog.adder_count(),
+                prog.adder_depth()
+            );
+        }
+        "simulate" => {
+            let spec = load_spec(args.pos(0, "spec path")?)?;
+            let vecs = load_vectors(args.pos(1, "testvec path")?)?;
+            let outs = nn::sim::forward_batch(&spec, &vecs.inputs);
+            let exact = outs.iter().zip(&vecs.outputs).filter(|(a, b)| a == b).count();
+            println!(
+                "{}: {}/{} outputs bit-exact vs exported golden",
+                spec.name,
+                exact,
+                outs.len()
+            );
+            if !vecs.labels.is_empty() {
+                println!("accuracy: {:.4}", nn::sim::accuracy(&outs, &vecs.labels));
+            }
+        }
+        "golden" => {
+            let spec = load_spec(args.pos(0, "spec path")?)?;
+            let hlo = args.pos(1, "hlo path")?;
+            let vecs = load_vectors(args.pos(2, "testvec path")?)?;
+            let rt = runtime::Runtime::cpu()?;
+            let model = rt.load_hlo_text(hlo)?;
+            let n = vecs.inputs.len().min(32);
+            let weights = nn::weight_tensors(&spec);
+            let mut mismatches = 0;
+            for x in &vecs.inputs[..n] {
+                let mut args = vec![runtime::TensorI32::new(
+                    x.iter().map(|&v| v as i32).collect(),
+                    vec![x.len() as i64],
+                )];
+                args.extend(weights.iter().cloned());
+                let golden = model.run_i32(&args)?;
+                let sim = nn::sim::forward(&spec, x);
+                let g: Vec<i64> = golden[0].data.iter().map(|&v| v as i64).collect();
+                if g != sim {
+                    mismatches += 1;
+                }
+            }
+            println!(
+                "golden cross-check ({} on {}): {}/{} match",
+                spec.name,
+                rt.platform(),
+                n - mismatches,
+                n
+            );
+        }
+        "verify" => {
+            let spec = load_spec(args.pos(0, "spec path")?)?;
+            let dc: i32 = args.flag("dc", 2);
+            let prog = nn::compile::fuse(&spec, Strategy::Da { dc })?;
+            da4ml::dais::verify::check_well_formed(&prog)?;
+            // Cross-check DAIS vs the bit-exact host simulator on random
+            // in-range inputs.
+            let mut rng = Rng::seed_from(7);
+            let q = spec.input_qint();
+            for _ in 0..64 {
+                let x: Vec<i64> =
+                    (0..spec.input_len()).map(|_| rng.range_i64(q.min, q.max)).collect();
+                let dais = da4ml::dais::interp::evaluate_checked(&prog, &x);
+                let host = nn::sim::forward(&spec, &x);
+                anyhow::ensure!(dais == host, "DAIS != host sim on {x:?}");
+            }
+            println!(
+                "{}: well-formed, {} adders, depth {}, 64/64 random vectors bit-exact",
+                spec.name,
+                prog.adder_count(),
+                prog.adder_depth()
+            );
+        }
+        "dot" => {
+            let spec = load_spec(args.pos(0, "spec path")?)?;
+            let out = args.pos(1, "output path")?;
+            let dc: i32 = args.flag("dc", 2);
+            let prog = nn::compile::fuse(&spec, Strategy::Da { dc })?;
+            std::fs::write(out, da4ml::dais::dot::to_dot(&prog, &spec.name))?;
+            println!("wrote {out} ({} nodes)", prog.nodes.len());
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+    Ok(())
+}

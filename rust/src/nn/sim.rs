@@ -1,0 +1,209 @@
+//! Bit-exact host simulation of a quantized network spec.
+//!
+//! This is the integer reference semantics shared with the JAX golden
+//! model; the DAIS-compiled programs are verified against it (and it
+//! against PJRT) in tests and the end-to-end examples. i64 arithmetic
+//! everywhere — overflow-free for the bitwidths in play.
+
+use super::spec::{LayerSpec, NetworkSpec};
+use crate::dais::interp::quant_scalar;
+use crate::dais::RoundMode;
+use rustc_hash::FxHashMap;
+
+/// The flowing activation state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum State {
+    /// Flat vector.
+    Flat(Vec<i64>),
+    /// Image `[h][w][c]`, row-major.
+    Image { data: Vec<i64>, h: usize, w: usize, c: usize },
+    /// Set `[particles][features]`, row-major.
+    Grid { data: Vec<i64>, p: usize, f: usize },
+}
+
+impl State {
+    /// Flatten (row-major) — the terminal representation.
+    pub fn flatten(self) -> Vec<i64> {
+        match self {
+            State::Flat(v) => v,
+            State::Image { data, .. } => data,
+            State::Grid { data, .. } => data,
+        }
+    }
+
+    fn from_shape(data: Vec<i64>, shape: &[usize]) -> Self {
+        match shape.len() {
+            1 => State::Flat(data),
+            2 => State::Grid { data, p: shape[0], f: shape[1] },
+            3 => State::Image { data, h: shape[0], w: shape[1], c: shape[2] },
+            _ => panic!("unsupported input rank {}", shape.len()),
+        }
+    }
+}
+
+fn requant(z: i64, relu: bool, shift: i32, lo: i64, hi: i64) -> i64 {
+    let z = if relu { z.max(0) } else { z };
+    quant_scalar(z, shift, RoundMode::Floor, lo, hi)
+}
+
+fn dense(x: &[i64], w: &[Vec<i64>], b: &[i64]) -> Vec<i64> {
+    let d_out = b.len();
+    let mut z = b.to_vec();
+    for (j, xj) in x.iter().enumerate() {
+        let row = &w[j];
+        for i in 0..d_out {
+            z[i] += xj * row[i];
+        }
+    }
+    z
+}
+
+/// Run one input vector through the network; returns the flat output.
+pub fn forward(spec: &NetworkSpec, input: &[i64]) -> Vec<i64> {
+    assert_eq!(input.len(), spec.input_len(), "input length mismatch");
+    let mut state = State::from_shape(input.to_vec(), &spec.input_shape);
+    let mut saved: FxHashMap<&str, State> = FxHashMap::default();
+
+    for layer in &spec.layers {
+        state = match layer {
+            LayerSpec::Dense { w, b, relu, shift, clip_min, clip_max } => {
+                let x = state.flatten();
+                let z = dense(&x, w, b);
+                State::Flat(
+                    z.into_iter().map(|v| requant(v, *relu, *shift, *clip_min, *clip_max)).collect(),
+                )
+            }
+            LayerSpec::EinsumDense { w, b, axis, relu, shift, clip_min, clip_max } => {
+                let State::Grid { data, p, f } = state else {
+                    panic!("einsum_dense needs a grid state")
+                };
+                match axis.as_str() {
+                    "feature" => {
+                        // Each particle row is a CMVM instance.
+                        let d_out = b.len();
+                        let mut out = Vec::with_capacity(p * d_out);
+                        for row in 0..p {
+                            let x = &data[row * f..(row + 1) * f];
+                            let z = dense(x, w, b);
+                            out.extend(
+                                z.into_iter()
+                                    .map(|v| requant(v, *relu, *shift, *clip_min, *clip_max)),
+                            );
+                        }
+                        State::Grid { data: out, p, f: d_out }
+                    }
+                    "particle" => {
+                        // Each feature column is a CMVM instance.
+                        let d_out = b.len();
+                        let mut out = vec![0i64; d_out * f];
+                        for col in 0..f {
+                            let x: Vec<i64> = (0..p).map(|r| data[r * f + col]).collect();
+                            let z = dense(&x, w, b);
+                            for (r, v) in z.into_iter().enumerate() {
+                                out[r * f + col] =
+                                    requant(v, *relu, *shift, *clip_min, *clip_max);
+                            }
+                        }
+                        State::Grid { data: out, p: d_out, f }
+                    }
+                    other => panic!("unknown einsum axis {other}"),
+                }
+            }
+            LayerSpec::Conv2D { w, b, kh, kw, relu, shift, clip_min, clip_max } => {
+                let State::Image { data, h, w: iw, c } = state else {
+                    panic!("conv2d needs an image state")
+                };
+                let (oh, ow) = (h - kh + 1, iw - kw + 1);
+                let cout = b.len();
+                let mut out = Vec::with_capacity(oh * ow * cout);
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        // im2col patch in (dy, dx, cin) order.
+                        let mut patch = Vec::with_capacity(kh * kw * c);
+                        for dy in 0..*kh {
+                            for dx in 0..*kw {
+                                let base = ((oy + dy) * iw + (ox + dx)) * c;
+                                patch.extend_from_slice(&data[base..base + c]);
+                            }
+                        }
+                        let z = dense(&patch, w, b);
+                        out.extend(
+                            z.into_iter()
+                                .map(|v| requant(v, *relu, *shift, *clip_min, *clip_max)),
+                        );
+                    }
+                }
+                State::Image { data: out, h: oh, w: ow, c: cout }
+            }
+            LayerSpec::MaxPool2D | LayerSpec::AvgPool2D => {
+                let State::Image { data, h, w, c } = state else {
+                    panic!("pooling needs an image state")
+                };
+                let (oh, ow) = (h / 2, w / 2);
+                let mut out = Vec::with_capacity(oh * ow * c);
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        for ch in 0..c {
+                            let at = |dy: usize, dx: usize| {
+                                data[((2 * oy + dy) * w + (2 * ox + dx)) * c + ch]
+                            };
+                            let v = match layer {
+                                LayerSpec::MaxPool2D => {
+                                    at(0, 0).max(at(0, 1)).max(at(1, 0)).max(at(1, 1))
+                                }
+                                _ => (at(0, 0) + at(0, 1) + at(1, 0) + at(1, 1)) >> 2,
+                            };
+                            out.push(v);
+                        }
+                    }
+                }
+                State::Image { data: out, h: oh, w: ow, c }
+            }
+            LayerSpec::Flatten => State::Flat(state.flatten()),
+            LayerSpec::Save { tag } => {
+                saved.insert(tag.as_str(), state.clone());
+                state
+            }
+            LayerSpec::AddSaved { tag } => {
+                let other = saved
+                    .get(tag.as_str())
+                    .unwrap_or_else(|| panic!("no saved state '{tag}'"))
+                    .clone();
+                let a = state.flatten();
+                let b = other.clone().flatten();
+                assert_eq!(a.len(), b.len(), "residual shape mismatch");
+                let sum: Vec<i64> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+                match other {
+                    State::Grid { p, f, .. } => State::Grid { data: sum, p, f },
+                    State::Image { h, w, c, .. } => State::Image { data: sum, h, w, c },
+                    State::Flat(_) => State::Flat(sum),
+                }
+            }
+        };
+    }
+    state.flatten()
+}
+
+/// Run a batch; returns flat outputs per input.
+pub fn forward_batch(spec: &NetworkSpec, inputs: &[Vec<i64>]) -> Vec<Vec<i64>> {
+    inputs.iter().map(|x| forward(spec, x)).collect()
+}
+
+/// Top-1 accuracy of argmax(outputs) against labels.
+pub fn accuracy(outputs: &[Vec<i64>], labels: &[u32]) -> f64 {
+    assert_eq!(outputs.len(), labels.len());
+    let correct = outputs
+        .iter()
+        .zip(labels)
+        .filter(|(o, &l)| {
+            let arg = o
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &v)| v)
+                .map(|(i, _)| i as u32)
+                .unwrap_or(0);
+            arg == l
+        })
+        .count();
+    correct as f64 / outputs.len().max(1) as f64
+}

@@ -1,0 +1,361 @@
+//! JSON interchange types shared with the Python build layer.
+//!
+//! Conventions (identical on both sides — this is what makes the DAIS
+//! simulation bit-exact to the PJRT golden model):
+//!
+//! * all tensors are integers (weights, biases, activations);
+//! * dense: `z[i] = Σ_j x[j] * w[j][i] + b[i]` (w is `d_in × d_out`);
+//! * requantization: `y = clip(z >> shift, clip_min, clip_max)` with
+//!   **floor** rounding (arithmetic shift), applied after the optional
+//!   ReLU;
+//! * conv2d is `valid`-padded NHWC with kernel `kh·kw·cin × cout`
+//!   (im2col patch order: (dy, dx, cin) row-major);
+//! * pooling is 2×2 stride-2; `avg` divides by 4 with floor shift.
+
+use crate::fixed::QInterval;
+use crate::json::{self, Value};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// One layer of a quantized network.
+#[derive(Debug, Clone)]
+pub enum LayerSpec {
+    /// Fully connected layer on the flattened state.
+    Dense {
+        /// Weights, `d_in` rows × `d_out` cols.
+        w: Vec<Vec<i64>>,
+        /// Bias per output (post-matmul, pre-shift).
+        b: Vec<i64>,
+        /// Apply ReLU before requantization.
+        relu: bool,
+        /// Right-shift of the requantizer.
+        shift: i32,
+        /// Clip bounds of the requantizer.
+        clip_min: i64,
+        /// Upper clip bound.
+        clip_max: i64,
+    },
+    /// Dense applied along one axis of a 2D state `[particles][features]`
+    /// (the paper's EinsumDense in the MLP-Mixer).
+    EinsumDense {
+        /// Weights (`d_in × d_out` along the chosen axis).
+        w: Vec<Vec<i64>>,
+        /// Bias per output element of the transformed axis.
+        b: Vec<i64>,
+        /// `"feature"` (axis 1) or `"particle"` (axis 0).
+        axis: String,
+        /// Apply ReLU before requantization.
+        relu: bool,
+        /// Right-shift of the requantizer.
+        shift: i32,
+        /// Clip bounds.
+        clip_min: i64,
+        /// Upper clip bound.
+        clip_max: i64,
+    },
+    /// 2D convolution (NHWC, valid padding, stride 1).
+    Conv2D {
+        /// Kernel as im2col matrix: `(kh*kw*cin) × cout`.
+        w: Vec<Vec<i64>>,
+        /// Bias per output channel.
+        b: Vec<i64>,
+        /// Kernel height.
+        kh: usize,
+        /// Kernel width.
+        kw: usize,
+        /// Apply ReLU before requantization.
+        relu: bool,
+        /// Right-shift of the requantizer.
+        shift: i32,
+        /// Clip bounds.
+        clip_min: i64,
+        /// Upper clip bound.
+        clip_max: i64,
+    },
+    /// 2×2 stride-2 max pooling.
+    MaxPool2D,
+    /// 2×2 stride-2 average pooling (floor >> 2).
+    AvgPool2D,
+    /// Flatten the spatial state into a vector (row-major HWC).
+    Flatten,
+    /// Save the current state under a tag (residual source).
+    Save {
+        /// Tag name.
+        tag: String,
+    },
+    /// Element-wise add the saved state (residual connection; scales
+    /// must already match — the exporter guarantees it).
+    AddSaved {
+        /// Tag to add.
+        tag: String,
+    },
+}
+
+/// A whole network.
+#[derive(Debug, Clone)]
+pub struct NetworkSpec {
+    /// Model name (e.g. "jet_mlp").
+    pub name: String,
+    /// Input element bitwidth.
+    pub input_bits: u32,
+    /// Whether inputs are signed.
+    pub input_signed: bool,
+    /// Input shape: `[n]` for flat, `[h, w, c]` for images,
+    /// `[particles, features]` for sets.
+    pub input_shape: Vec<usize>,
+    /// The layers, in order.
+    pub layers: Vec<LayerSpec>,
+}
+
+impl NetworkSpec {
+    /// Quantized interval of one input element.
+    pub fn input_qint(&self) -> QInterval {
+        if self.input_signed {
+            QInterval::new(
+                -(1i64 << (self.input_bits - 1)),
+                (1i64 << (self.input_bits - 1)) - 1,
+                0,
+            )
+        } else {
+            QInterval::new(0, (1i64 << self.input_bits) - 1, 0)
+        }
+    }
+
+    /// Total flat input size.
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Load from JSON text (tagged layer objects, see the Python
+    /// exporter `python/compile/aot.py`).
+    pub fn from_json(text: &str) -> Result<Self> {
+        Self::from_value(&json::parse(text)?)
+    }
+
+    /// Decode from a parsed JSON value.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            input_bits: v.get("input_bits")?.as_i64()? as u32,
+            input_signed: v.get("input_signed")?.as_bool()?,
+            input_shape: v
+                .get("input_shape")?
+                .to_i64_vec()?
+                .into_iter()
+                .map(|x| x as usize)
+                .collect(),
+            layers: v
+                .get("layers")?
+                .as_array()?
+                .iter()
+                .map(LayerSpec::from_value)
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Encode to JSON (for tests and spec fixtures).
+    pub fn to_json(&self) -> String {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Value::Str(self.name.clone()));
+        o.insert("input_bits".into(), Value::Int(self.input_bits as i64));
+        o.insert("input_signed".into(), Value::Bool(self.input_signed));
+        o.insert(
+            "input_shape".into(),
+            Value::Array(self.input_shape.iter().map(|&x| Value::Int(x as i64)).collect()),
+        );
+        o.insert(
+            "layers".into(),
+            Value::Array(self.layers.iter().map(LayerSpec::to_value).collect()),
+        );
+        json::to_string(&Value::Object(o))
+    }
+}
+
+fn mat_value(w: &[Vec<i64>]) -> Value {
+    Value::Array(
+        w.iter()
+            .map(|r| Value::Array(r.iter().map(|&x| Value::Int(x)).collect()))
+            .collect(),
+    )
+}
+
+fn vec_value(b: &[i64]) -> Value {
+    Value::Array(b.iter().map(|&x| Value::Int(x)).collect())
+}
+
+impl LayerSpec {
+    /// Decode one tagged layer object.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let ty = v.get("type")?.as_str()?;
+        let quant = |v: &Value| -> Result<(bool, i32, i64, i64)> {
+            Ok((
+                v.get("relu")?.as_bool()?,
+                v.get("shift")?.as_i64()? as i32,
+                v.get("clip_min")?.as_i64()?,
+                v.get("clip_max")?.as_i64()?,
+            ))
+        };
+        Ok(match ty {
+            "dense" => {
+                let (relu, shift, clip_min, clip_max) = quant(v)?;
+                LayerSpec::Dense {
+                    w: v.get("w")?.to_i64_mat()?,
+                    b: v.get("b")?.to_i64_vec()?,
+                    relu,
+                    shift,
+                    clip_min,
+                    clip_max,
+                }
+            }
+            "einsum_dense" => {
+                let (relu, shift, clip_min, clip_max) = quant(v)?;
+                LayerSpec::EinsumDense {
+                    w: v.get("w")?.to_i64_mat()?,
+                    b: v.get("b")?.to_i64_vec()?,
+                    axis: v.get("axis")?.as_str()?.to_string(),
+                    relu,
+                    shift,
+                    clip_min,
+                    clip_max,
+                }
+            }
+            "conv2d" => {
+                let (relu, shift, clip_min, clip_max) = quant(v)?;
+                LayerSpec::Conv2D {
+                    w: v.get("w")?.to_i64_mat()?,
+                    b: v.get("b")?.to_i64_vec()?,
+                    kh: v.get("kh")?.as_i64()? as usize,
+                    kw: v.get("kw")?.as_i64()? as usize,
+                    relu,
+                    shift,
+                    clip_min,
+                    clip_max,
+                }
+            }
+            // Conv1D is Conv2D with a unit-height kernel on a [1, w, c]
+            // image (the hls4ml Conv1D support of paper §5.1).
+            "conv1d" => {
+                let (relu, shift, clip_min, clip_max) = quant(v)?;
+                LayerSpec::Conv2D {
+                    w: v.get("w")?.to_i64_mat()?,
+                    b: v.get("b")?.to_i64_vec()?,
+                    kh: 1,
+                    kw: v.get("k")?.as_i64()? as usize,
+                    relu,
+                    shift,
+                    clip_min,
+                    clip_max,
+                }
+            }
+            "max_pool2d" => LayerSpec::MaxPool2D,
+            "avg_pool2d" => LayerSpec::AvgPool2D,
+            "flatten" => LayerSpec::Flatten,
+            "save" => LayerSpec::Save { tag: v.get("tag")?.as_str()?.to_string() },
+            "add_saved" => LayerSpec::AddSaved { tag: v.get("tag")?.as_str()?.to_string() },
+            other => bail!("unknown layer type '{other}'"),
+        })
+    }
+
+    /// Encode to a tagged JSON object.
+    pub fn to_value(&self) -> Value {
+        let mut o = BTreeMap::new();
+        let put_quant =
+            |o: &mut BTreeMap<String, Value>, relu: bool, shift: i32, lo: i64, hi: i64| {
+                o.insert("relu".into(), Value::Bool(relu));
+                o.insert("shift".into(), Value::Int(shift as i64));
+                o.insert("clip_min".into(), Value::Int(lo));
+                o.insert("clip_max".into(), Value::Int(hi));
+            };
+        match self {
+            LayerSpec::Dense { w, b, relu, shift, clip_min, clip_max } => {
+                o.insert("type".into(), Value::Str("dense".into()));
+                o.insert("w".into(), mat_value(w));
+                o.insert("b".into(), vec_value(b));
+                put_quant(&mut o, *relu, *shift, *clip_min, *clip_max);
+            }
+            LayerSpec::EinsumDense { w, b, axis, relu, shift, clip_min, clip_max } => {
+                o.insert("type".into(), Value::Str("einsum_dense".into()));
+                o.insert("w".into(), mat_value(w));
+                o.insert("b".into(), vec_value(b));
+                o.insert("axis".into(), Value::Str(axis.clone()));
+                put_quant(&mut o, *relu, *shift, *clip_min, *clip_max);
+            }
+            LayerSpec::Conv2D { w, b, kh, kw, relu, shift, clip_min, clip_max } => {
+                o.insert("type".into(), Value::Str("conv2d".into()));
+                o.insert("w".into(), mat_value(w));
+                o.insert("b".into(), vec_value(b));
+                o.insert("kh".into(), Value::Int(*kh as i64));
+                o.insert("kw".into(), Value::Int(*kw as i64));
+                put_quant(&mut o, *relu, *shift, *clip_min, *clip_max);
+            }
+            LayerSpec::MaxPool2D => {
+                o.insert("type".into(), Value::Str("max_pool2d".into()));
+            }
+            LayerSpec::AvgPool2D => {
+                o.insert("type".into(), Value::Str("avg_pool2d".into()));
+            }
+            LayerSpec::Flatten => {
+                o.insert("type".into(), Value::Str("flatten".into()));
+            }
+            LayerSpec::Save { tag } => {
+                o.insert("type".into(), Value::Str("save".into()));
+                o.insert("tag".into(), Value::Str(tag.clone()));
+            }
+            LayerSpec::AddSaved { tag } => {
+                o.insert("type".into(), Value::Str("add_saved".into()));
+                o.insert("tag".into(), Value::Str(tag.clone()));
+            }
+        }
+        Value::Object(o)
+    }
+}
+
+/// The (w, b) tensors of every compute layer in layer order — the
+/// runtime-parameter convention of the HLO golden model (weights are
+/// PJRT execute-time arguments, see python `compile.model.weight_args`).
+pub fn weight_tensors(spec: &NetworkSpec) -> Vec<crate::runtime::TensorI32> {
+    let mut out = Vec::new();
+    for layer in &spec.layers {
+        let (w, b) = match layer {
+            LayerSpec::Dense { w, b, .. }
+            | LayerSpec::EinsumDense { w, b, .. }
+            | LayerSpec::Conv2D { w, b, .. } => (w, b),
+            _ => continue,
+        };
+        let d_in = w.len() as i64;
+        let d_out = b.len() as i64;
+        let wdata: Vec<i32> = w.iter().flatten().map(|&v| v as i32).collect();
+        out.push(crate::runtime::TensorI32::new(wdata, vec![d_in, d_out]));
+        out.push(crate::runtime::TensorI32::new(
+            b.iter().map(|&v| v as i32).collect(),
+            vec![d_out],
+        ));
+    }
+    out
+}
+
+/// Exported test vectors for golden cross-checking.
+#[derive(Debug, Clone)]
+pub struct TestVectors {
+    /// Input vectors (flat, row-major).
+    pub inputs: Vec<Vec<i64>>,
+    /// Expected outputs from the JAX model (flat).
+    pub outputs: Vec<Vec<i64>>,
+    /// Class labels (for accuracy), if applicable.
+    pub labels: Vec<u32>,
+}
+
+impl TestVectors {
+    /// Load from JSON text.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        Ok(Self {
+            inputs: v.get("inputs")?.to_i64_mat()?,
+            outputs: v.get("outputs")?.to_i64_mat()?,
+            labels: match v.get_opt("labels") {
+                Some(l) => l.to_i64_vec()?.into_iter().map(|x| x as u32).collect(),
+                None => Vec::new(),
+            },
+        })
+    }
+}

@@ -1,0 +1,238 @@
+//! NN frontend tests: host simulation vs fused DAIS programs, layer
+//! shapes, accuracy metric.
+
+use super::compile::{fuse, layer_reports, aggregate};
+use super::sim;
+use super::spec::{LayerSpec, NetworkSpec};
+use crate::cmvm::Strategy;
+use crate::dais::interp;
+use crate::estimate::FpgaModel;
+use crate::pipeline::PipelineConfig;
+use crate::util::Rng;
+
+fn dense_layer(rng: &mut Rng, d_in: usize, d_out: usize, relu: bool) -> LayerSpec {
+    LayerSpec::Dense {
+        w: (0..d_in)
+            .map(|_| (0..d_out).map(|_| rng.range_i64(-31, 31)).collect())
+            .collect(),
+        b: (0..d_out).map(|_| rng.range_i64(-64, 64)).collect(),
+        relu,
+        shift: 5,
+        clip_min: -128,
+        clip_max: 127,
+    }
+}
+
+fn mlp(seed: u64) -> NetworkSpec {
+    let mut rng = Rng::seed_from(seed);
+    NetworkSpec {
+        name: "test_mlp".into(),
+        input_bits: 8,
+        input_signed: true,
+        input_shape: vec![6],
+        layers: vec![
+            dense_layer(&mut rng, 6, 10, true),
+            dense_layer(&mut rng, 10, 8, true),
+            dense_layer(&mut rng, 8, 3, false),
+        ],
+    }
+}
+
+#[test]
+fn fused_dais_matches_host_sim_all_strategies() {
+    let spec = mlp(3);
+    let mut rng = Rng::seed_from(99);
+    let inputs: Vec<Vec<i64>> = (0..16)
+        .map(|_| (0..6).map(|_| rng.range_i64(-128, 127)).collect())
+        .collect();
+    let want = sim::forward_batch(&spec, &inputs);
+    for s in [Strategy::NaiveDa, Strategy::Da { dc: 2 }, Strategy::Da { dc: -1 }] {
+        let prog = fuse(&spec, s).unwrap();
+        for (x, w) in inputs.iter().zip(&want) {
+            let got = interp::evaluate_checked(&prog, x);
+            assert_eq!(&got, w, "strategy {s:?}");
+        }
+    }
+}
+
+#[test]
+fn fused_da_uses_fewer_adders_than_naive() {
+    let spec = mlp(7);
+    let naive = fuse(&spec, Strategy::NaiveDa).unwrap();
+    let da = fuse(&spec, Strategy::Da { dc: 2 }).unwrap();
+    assert!(
+        da.adder_count() < naive.adder_count(),
+        "da {} >= naive {}",
+        da.adder_count(),
+        naive.adder_count()
+    );
+}
+
+#[test]
+fn mixer_grid_fuse_matches_sim() {
+    // Tiny MLP-Mixer-like: feature mix, particle mix, residual.
+    let mut rng = Rng::seed_from(11);
+    let mk_w = |i: usize, o: usize, rng: &mut Rng| -> Vec<Vec<i64>> {
+        (0..i).map(|_| (0..o).map(|_| rng.range_i64(-15, 15)).collect()).collect()
+    };
+    let spec = NetworkSpec {
+        name: "test_mixer".into(),
+        input_bits: 6,
+        input_signed: true,
+        input_shape: vec![4, 3], // 4 particles, 3 features
+        layers: vec![
+            LayerSpec::Save { tag: "skip".into() },
+            LayerSpec::EinsumDense {
+                w: mk_w(3, 3, &mut rng),
+                b: vec![1, -2, 3],
+                axis: "feature".into(),
+                relu: true,
+                shift: 4,
+                clip_min: -32,
+                clip_max: 31,
+            },
+            LayerSpec::EinsumDense {
+                w: mk_w(4, 4, &mut rng),
+                b: vec![0, 0, 1, -1],
+                axis: "particle".into(),
+                relu: false,
+                shift: 4,
+                clip_min: -32,
+                clip_max: 31,
+            },
+            LayerSpec::AddSaved { tag: "skip".into() },
+            LayerSpec::Flatten,
+            dense_layer(&mut rng, 12, 2, false),
+        ],
+    };
+    let inputs: Vec<Vec<i64>> = (0..8)
+        .map(|_| (0..12).map(|_| rng.range_i64(-32, 31)).collect())
+        .collect();
+    let want = sim::forward_batch(&spec, &inputs);
+    let prog = fuse(&spec, Strategy::Da { dc: 2 }).unwrap();
+    for (x, w) in inputs.iter().zip(&want) {
+        assert_eq!(&interp::evaluate_checked(&prog, x), w);
+    }
+}
+
+#[test]
+fn conv_sim_hand_checked() {
+    // 3x3x1 input, 2x2 kernel, one channel: valid conv positions 2x2.
+    let spec = NetworkSpec {
+        name: "conv".into(),
+        input_bits: 4,
+        input_signed: false,
+        input_shape: vec![3, 3, 1],
+        layers: vec![
+            LayerSpec::Conv2D {
+                w: vec![vec![1], vec![2], vec![3], vec![4]], // (dy,dx,cin) order
+                b: vec![0],
+                kh: 2,
+                kw: 2,
+                relu: false,
+                shift: 0,
+                clip_min: -512,
+                clip_max: 511,
+            },
+            LayerSpec::Flatten,
+        ],
+    };
+    // Input image 1..9 row-major.
+    let x: Vec<i64> = (1..=9).collect();
+    let y = sim::forward(&spec, &x);
+    // Position (0,0): 1*1+2*2+3*4+4*5 = 37; (0,1): 2+6+15+24=47... check:
+    // patch(0,1) = [2,3,5,6] -> 2+6+15+24 = 47.
+    assert_eq!(y, vec![37, 47, 67, 77]);
+}
+
+#[test]
+fn pool_and_conv_reports() {
+    let spec = NetworkSpec {
+        name: "convnet".into(),
+        input_bits: 8,
+        input_signed: false,
+        input_shape: vec![6, 6, 1],
+        layers: vec![
+            LayerSpec::Conv2D {
+                w: (0..9).map(|k| vec![k as i64 - 4, 2 * k as i64 - 7]).collect(),
+                b: vec![3, -3],
+                kh: 3,
+                kw: 3,
+                relu: true,
+                shift: 4,
+                clip_min: 0,
+                clip_max: 255,
+            },
+            LayerSpec::MaxPool2D,
+            LayerSpec::Flatten,
+            LayerSpec::Dense {
+                w: (0..8).map(|_| vec![5, -9]).collect(),
+                b: vec![0, 0],
+                relu: false,
+                shift: 2,
+                clip_min: -128,
+                clip_max: 127,
+            },
+        ],
+    };
+    // Host sim runs.
+    let x: Vec<i64> = (0..36).map(|i| i % 13).collect();
+    let y = sim::forward(&spec, &x);
+    assert_eq!(y.len(), 2);
+    // Reports exist for both compute layers under both strategies.
+    for s in [Strategy::Latency, Strategy::Da { dc: 2 }] {
+        let r = layer_reports(&spec, s, &FpgaModel::default(), &PipelineConfig::default())
+            .unwrap();
+        assert_eq!(r.len(), 2);
+        let agg = aggregate(&r);
+        assert!(agg.lut > 0);
+        if matches!(s, Strategy::Da { .. }) {
+            assert_eq!(agg.dsp, 0);
+        }
+    }
+}
+
+#[test]
+fn einsum_instance_counting() {
+    let spec = NetworkSpec {
+        name: "grid".into(),
+        input_bits: 6,
+        input_signed: true,
+        input_shape: vec![5, 3],
+        layers: vec![LayerSpec::EinsumDense {
+            w: vec![vec![1, 2], vec![3, 4], vec![5, 6]],
+            b: vec![0, 0],
+            axis: "feature".into(),
+            relu: false,
+            shift: 0,
+            clip_min: -1024,
+            clip_max: 1023,
+        }],
+    };
+    let r = layer_reports(
+        &spec,
+        Strategy::Da { dc: -1 },
+        &FpgaModel::default(),
+        &PipelineConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(r[0].instances, 5); // one CMVM per particle
+    assert_eq!(r[0].total.lut, 5 * r[0].per_instance.lut);
+}
+
+#[test]
+fn accuracy_metric() {
+    let outputs = vec![vec![1, 5, 2], vec![9, 0, 0], vec![0, 0, 7]];
+    let labels = vec![1, 0, 1];
+    let acc = sim::accuracy(&outputs, &labels);
+    assert!((acc - 2.0 / 3.0).abs() < 1e-9);
+}
+
+#[test]
+fn spec_json_roundtrip() {
+    let spec = mlp(1);
+    let text = spec.to_json();
+    let back = NetworkSpec::from_json(&text).unwrap();
+    let x: Vec<i64> = (0..6).collect();
+    assert_eq!(sim::forward(&spec, &x), sim::forward(&back, &x));
+}

@@ -1,0 +1,163 @@
+//! Greedy register insertion (paper §5.2).
+//!
+//! Pipelining a DAIS program assigns each node a *stage*; an edge
+//! crossing `k` stages passes through `k` registers. Following the
+//! paper, the insertion is greedy and local: each op accrues an
+//! estimated delay (1.0 unit per adder by default, configurable), and
+//! when the accumulated combinational delay since the last register
+//! exceeds the threshold, a stage boundary is inserted. "Pipeline every
+//! 5 adders" (the paper's 200 MHz setting) is `threshold = 5.0`;
+//! "every adder" (the 1 GHz setting) is `threshold = 1.0`.
+
+use crate::dais::{DaisOp, DaisProgram, RoundMode};
+
+/// Pipelining configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    /// Maximum accumulated delay (in adder-delay units) allowed within
+    /// one pipeline stage.
+    pub threshold: f64,
+    /// Delay of one adder/subtractor (unit by default, per the paper).
+    pub adder_delay: f64,
+    /// Delay of a ReLU mux.
+    pub relu_delay: f64,
+}
+
+impl PipelineConfig {
+    /// The paper's 200 MHz setting: a register every 5 adders.
+    pub fn every_n_adders(n: u32) -> Self {
+        Self { threshold: n as f64, adder_delay: 1.0, relu_delay: 0.5 }
+    }
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self::every_n_adders(5)
+    }
+}
+
+fn op_delay(op: &DaisOp, cfg: &PipelineConfig) -> f64 {
+    match op {
+        DaisOp::Input { .. } | DaisOp::Const { .. } => 0.0,
+        DaisOp::AddShift { .. } | DaisOp::Neg { .. } => cfg.adder_delay,
+        DaisOp::Relu { .. } => cfg.relu_delay,
+        DaisOp::Quant { round, .. } => match round {
+            RoundMode::Floor => 0.0,
+            RoundMode::HalfUp => cfg.adder_delay,
+        },
+    }
+}
+
+/// Assign a pipeline stage to every node. Stage 0 holds the inputs.
+///
+/// Guarantees `stage[consumer] >= stage[producer]` for every edge, so
+/// the assignment is directly usable by
+/// [`crate::dais::interp::simulate_pipelined`] and
+/// [`crate::estimate::pipelined`].
+pub fn assign_stages(program: &DaisProgram, cfg: &PipelineConfig) -> Vec<u32> {
+    let mut stage = vec![0u32; program.nodes.len()];
+    let mut slack = vec![0f64; program.nodes.len()];
+    for (i, node) in program.nodes.iter().enumerate() {
+        let d = op_delay(&node.op, cfg);
+        let mut s = 0u32;
+        let mut acc: f64 = 0.0;
+        for p in node.op.operands() {
+            let (ps, pk) = (stage[p as usize], slack[p as usize]);
+            if ps > s {
+                s = ps;
+                acc = pk;
+            } else if ps == s {
+                acc = acc.max(pk);
+            }
+        }
+        // Operands on earlier stages arrive registered (slack 0).
+        let total = acc + d;
+        if total > cfg.threshold && acc > 0.0 {
+            stage[i] = s + 1;
+            slack[i] = d;
+        } else {
+            stage[i] = s;
+            slack[i] = total;
+        }
+    }
+    stage
+}
+
+/// Pipeline latency in cycles for a stage assignment (max output stage).
+pub fn latency(program: &DaisProgram, stages: &[u32]) -> u32 {
+    program
+        .outputs
+        .iter()
+        .map(|o| stages[o.node as usize])
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dais::{interp, DaisBuilder};
+    use crate::fixed::QInterval;
+
+    /// A chain of n adders.
+    fn chain(n: usize) -> DaisProgram {
+        let mut b = DaisBuilder::new();
+        let q = QInterval::new(-128, 127, 0);
+        let x = b.input(0, q, 0);
+        let y = b.input(1, q, 0);
+        let mut acc = x;
+        for _ in 0..n {
+            acc = b.add_shift(acc, y, 0, false);
+        }
+        b.output(acc, 0);
+        b.finish()
+    }
+
+    #[test]
+    fn every_adder_registers_each_level() {
+        let p = chain(6);
+        let stages = assign_stages(&p, &PipelineConfig::every_n_adders(1));
+        // First adder shares stage 0 with the inputs; 5 boundaries follow.
+        assert_eq!(latency(&p, &stages), 5);
+    }
+
+    #[test]
+    fn every_five_adders() {
+        let p = chain(10);
+        let stages = assign_stages(&p, &PipelineConfig::every_n_adders(5));
+        assert_eq!(latency(&p, &stages), 1);
+    }
+
+    #[test]
+    fn monotone_stages() {
+        let p = chain(13);
+        let stages = assign_stages(&p, &PipelineConfig::default());
+        for (i, node) in p.nodes.iter().enumerate() {
+            for op in node.op.operands() {
+                assert!(stages[op as usize] <= stages[i]);
+            }
+        }
+    }
+
+    /// Pipelined streaming simulation == combinational evaluation,
+    /// for random CMVM programs and thresholds.
+    #[test]
+    fn prop_pipelined_equals_combinational() {
+        crate::util::property("pipelined_equals_combinational", 16, |rng| {
+            let n = (rng.below(5) + 1) as u32;
+            let (d_in, d_out) = (rng.below(4) + 2, rng.below(4) + 2);
+            let m: Vec<i64> = (0..d_in * d_out)
+                .map(|_| rng.range_i64(-127, 127))
+                .collect();
+            let prob = crate::cmvm::CmvmProblem::new(d_in, d_out, m, 8);
+            let sol = crate::cmvm::optimize(&prob, crate::cmvm::Strategy::Da { dc: -1 });
+            let stages = assign_stages(&sol.program, &PipelineConfig::every_n_adders(n));
+            let stream: Vec<Vec<i64>> = (0..12)
+                .map(|_| (0..d_in).map(|_| rng.range_i64(-128, 127)).collect())
+                .collect();
+            let want = interp::evaluate_batch(&sol.program, &stream);
+            let got = interp::simulate_pipelined(&sol.program, &stages, &stream);
+            assert_eq!(got, want);
+        });
+    }
+}

@@ -1,0 +1,109 @@
+//! Small in-tree substrates: deterministic PRNG, property-test harness,
+//! scoped thread helpers, and a bench timer.
+//!
+//! The build environment is offline, so the usual crates (`rand`,
+//! `proptest`, `criterion`, `tokio`) are unavailable; these utilities
+//! provide the subset the system needs, built from scratch.
+
+mod rng;
+
+pub use rng::Rng;
+
+/// Run a property over `cases` deterministic seeds; panics with the
+/// failing seed on the first violation (an in-tree stand-in for
+//  proptest's runner — rerun with the printed seed to reproduce).
+pub fn property<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut f: F) {
+    for case in 0..cases {
+        let seed = 0x9E3779B97F4A7C15u64
+            .wrapping_mul(case + 1)
+            .wrapping_add(0xD1B54A32D192ED03);
+        let mut rng = Rng::seed_from(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Median-of-runs wall-clock timer for the report benches.
+///
+/// Runs `f` once for warm-up, then `runs` times, returning the median
+/// duration. Deterministic workloads only (no randomness inside `f`).
+pub fn time_median<T, F: FnMut() -> T>(runs: usize, mut f: F) -> (std::time::Duration, T) {
+    let mut out = f(); // warm-up
+    let mut samples = Vec::with_capacity(runs.max(1));
+    for _ in 0..runs.max(1) {
+        let t0 = std::time::Instant::now();
+        out = f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    (samples[samples.len() / 2], out)
+}
+
+/// Run jobs on a scoped thread pool, preserving order (std-only
+/// replacement for the tokio blocking pool on this single-core box).
+pub fn parallel_map<T, U, F>(items: Vec<T>, threads: usize, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = std::sync::Mutex::new(work);
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    let slots = std::sync::Mutex::new(&mut out);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let item = queue.lock().unwrap().pop();
+                let Some((i, t)) = item else { break };
+                let u = f(t);
+                slots.lock().unwrap()[i] = Some(u);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker dropped a job")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut n = 0;
+        property("count", 10, |_| n += 1);
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn property_propagates_failure() {
+        property("fail", 5, |rng| {
+            assert!(rng.range_i64(0, 10) < 100); // always true
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..37).collect();
+        let got = parallel_map(items.clone(), 4, |x| x * x);
+        let want: Vec<u64> = items.iter().map(|x| x * x).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn time_median_returns_value() {
+        let (d, v) = time_median(3, || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() < 1_000_000);
+    }
+}

@@ -1,0 +1,132 @@
+//! Failure-injection tests: the static verifier must reject every class
+//! of corrupted DAIS program, and the JSON/spec decoders must reject
+//! malformed artifacts with useful errors (never panic).
+
+use da4ml::dais::{verify, DaisBuilder, DaisNode, DaisOp, DaisProgram, OutputSpec};
+use da4ml::fixed::QInterval;
+use da4ml::json;
+use da4ml::nn::{NetworkSpec, TestVectors};
+
+fn valid_program() -> DaisProgram {
+    let mut b = DaisBuilder::new();
+    let q = QInterval::new(-128, 127, 0);
+    let x = b.input(0, q, 0);
+    let y = b.input(1, q, 0);
+    let t = b.add_shift(x, y, 1, false);
+    b.output(t, 0);
+    b.finish()
+}
+
+#[test]
+fn verifier_accepts_valid() {
+    verify::check_well_formed(&valid_program()).unwrap();
+}
+
+#[test]
+fn verifier_rejects_ssa_violation() {
+    let mut p = valid_program();
+    // Make the adder reference a later node.
+    p.nodes[2].op = DaisOp::AddShift { a: 2, b: 1, shift_a: 0, shift_b: 0, sub: false };
+    assert!(verify::check_well_formed(&p).is_err());
+}
+
+#[test]
+fn verifier_rejects_corrupted_interval() {
+    let mut p = valid_program();
+    p.nodes[2].qint = QInterval::new(0, 1, 0); // too narrow for the sum
+    let err = verify::check_well_formed(&p).unwrap_err();
+    assert!(format!("{err}").contains("interval"));
+}
+
+#[test]
+fn verifier_rejects_corrupted_depth() {
+    let mut p = valid_program();
+    p.nodes[2].depth = 7;
+    assert!(verify::check_well_formed(&p).is_err());
+}
+
+#[test]
+fn verifier_rejects_dangling_output() {
+    let mut p = valid_program();
+    p.outputs.push(OutputSpec { node: 99, shift: 0 });
+    assert!(verify::check_well_formed(&p).is_err());
+}
+
+#[test]
+fn verifier_rejects_oversized_shift() {
+    let mut p = valid_program();
+    p.nodes.push(DaisNode {
+        op: DaisOp::AddShift { a: 0, b: 1, shift_a: 0, shift_b: 63, sub: false },
+        qint: QInterval::new(-1, 1, 0),
+        depth: 1,
+    });
+    assert!(verify::check_well_formed(&p).is_err());
+}
+
+#[test]
+fn equivalence_rejects_wrong_matrix() {
+    let p = valid_program();
+    // Program computes [x + 2y]; claim it computes [x + 3y].
+    assert!(verify::check_cmvm_equivalence(&p, &[1, 3], 2, 1).is_err());
+    verify::check_cmvm_equivalence(&p, &[1, 2], 2, 1).unwrap();
+}
+
+#[test]
+fn spec_decoder_rejects_malformed() {
+    for bad in [
+        "{}",
+        r#"{"name":"x"}"#,
+        r#"{"name":"x","input_bits":8,"input_signed":true,"input_shape":[2],"layers":[{"type":"nope"}]}"#,
+        r#"{"name":"x","input_bits":8,"input_signed":true,"input_shape":[2],"layers":[{"type":"dense","w":[[1,"a"]],"b":[0],"relu":false,"shift":0,"clip_min":0,"clip_max":1}]}"#,
+    ] {
+        assert!(NetworkSpec::from_json(bad).is_err(), "accepted: {bad}");
+    }
+}
+
+#[test]
+fn testvec_decoder_rejects_malformed() {
+    assert!(TestVectors::from_json("{}").is_err());
+    assert!(TestVectors::from_json(r#"{"inputs":[[1]],"outputs":"x"}"#).is_err());
+    let ok = TestVectors::from_json(r#"{"inputs":[[1,2]],"outputs":[[3]]}"#).unwrap();
+    assert!(ok.labels.is_empty());
+}
+
+#[test]
+fn json_parser_never_panics_on_garbage() {
+    let cases = [
+        "", "{", "}", "[[[", "\"", "\u{0}", "nul", "-", "1e", "{\"a\":}", "[1 2]",
+        "\"\\u12\"", "\"\\q\"", "123abc", "{\"k\": \"v\",}",
+    ];
+    for c in cases {
+        let _ = json::parse(c); // must return Err, not panic
+    }
+}
+
+#[test]
+fn interp_checked_catches_spec_input_violation() {
+    // Feeding an out-of-range input into a checked evaluation panics
+    // with the interval diagnostic (wrap-impossible guarantee).
+    let p = valid_program();
+    let result = std::panic::catch_unwind(|| {
+        da4ml::dais::interp::evaluate_checked(&p, &[4096, 0])
+    });
+    assert!(result.is_err());
+}
+
+#[test]
+fn conv1d_alias_decodes_and_runs() {
+    // Paper §5.1 lists Conv1D among the supported layers; the frontend
+    // decodes it as a unit-height Conv2D on a [1, w, c] state.
+    let spec = NetworkSpec::from_json(
+        r#"{"name":"c1","input_bits":4,"input_signed":false,
+            "input_shape":[1,5,1],
+            "layers":[{"type":"conv1d","w":[[1],[2],[3]],"b":[0],"k":3,
+                       "relu":false,"shift":0,"clip_min":-512,"clip_max":511},
+                      {"type":"flatten"}]}"#,
+    )
+    .unwrap();
+    let x: Vec<i64> = vec![1, 2, 3, 4, 5];
+    let y = da4ml::nn::sim::forward(&spec, &x);
+    // Valid conv positions: [1+4+9, 2+6+12, 3+8+15] = [14, 20, 26].
+    assert_eq!(y, vec![14, 20, 26]);
+}

@@ -1,0 +1,194 @@
+//! Integration tests over the built artifacts: the full L3 stack
+//! (frontend -> optimizer -> DAIS -> estimate/RTL -> runtime) against
+//! the Python-exported networks. Requires `make artifacts`; every test
+//! skips cleanly when the artifacts are absent (e.g. bare `cargo test`
+//! before the first build).
+
+use da4ml::cmvm::Strategy;
+use da4ml::coordinator::{CompileJob, Coordinator};
+use da4ml::dais::{interp, verify};
+use da4ml::estimate::FpgaModel;
+use da4ml::nn::{self, LayerSpec, NetworkSpec, TestVectors};
+use da4ml::pipeline::{assign_stages, PipelineConfig};
+use da4ml::runtime;
+
+fn load(name: &str) -> Option<(NetworkSpec, TestVectors)> {
+    let dir = runtime::artifacts_dir();
+    let spec = runtime::load_text(dir.join(format!("{name}.weights.json"))).ok()?;
+    let vecs = runtime::load_text(dir.join(format!("{name}.testvec.json"))).ok()?;
+    Some((
+        NetworkSpec::from_json(&spec).expect("spec decodes"),
+        TestVectors::from_json(&vecs).expect("vectors decode"),
+    ))
+}
+
+macro_rules! needs_artifacts {
+    ($name:expr) => {
+        match load($name) {
+            Some(x) => x,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+/// Host integer simulation must reproduce the JAX/Pallas-exported golden
+/// outputs bit-exactly for every network and every test vector.
+#[test]
+fn host_sim_matches_python_export_all_networks() {
+    for name in ["jet_mlp", "muon", "mixer", "svhn"] {
+        let (spec, vecs) = needs_artifacts!(name);
+        let outs = nn::sim::forward_batch(&spec, &vecs.inputs);
+        for (i, (got, want)) in outs.iter().zip(&vecs.outputs).enumerate() {
+            assert_eq!(got, want, "{name}: vector {i} diverges");
+        }
+    }
+}
+
+/// The fused DAIS adder graph (both strategies) is bit-exact to the
+/// host simulation on the fusible networks.
+#[test]
+fn fused_dais_matches_export() {
+    for name in ["jet_mlp", "muon", "mixer"] {
+        let (spec, vecs) = needs_artifacts!(name);
+        for s in [Strategy::NaiveDa, Strategy::Da { dc: 2 }] {
+            let prog = nn::compile::fuse(&spec, s).expect("fuse");
+            verify::check_well_formed(&prog).expect("well-formed");
+            for (x, want) in vecs.inputs.iter().zip(&vecs.outputs).take(64) {
+                let got = interp::evaluate_checked(&prog, x);
+                assert_eq!(&got, want, "{name} {s:?}");
+            }
+        }
+    }
+}
+
+/// Pipelined streaming at II=1 equals combinational on real networks.
+#[test]
+fn pipelined_network_streams_at_ii1() {
+    let (spec, vecs) = needs_artifacts!("jet_mlp");
+    let prog = nn::compile::fuse(&spec, Strategy::Da { dc: 2 }).unwrap();
+    for every in [1, 5] {
+        let stages = assign_stages(&prog, &PipelineConfig::every_n_adders(every));
+        let stream: Vec<Vec<i64>> = vecs.inputs.iter().take(48).cloned().collect();
+        assert_eq!(
+            interp::simulate_pipelined(&prog, &stages, &stream),
+            interp::evaluate_batch(&prog, &stream)
+        );
+    }
+}
+
+/// The coordinator compiles every layer of every artifact network; DA
+/// never uses more adders than naive DA on any layer.
+#[test]
+fn coordinator_compiles_all_artifact_layers() {
+    let coord = Coordinator::new();
+    let mut jobs = Vec::new();
+    for name in ["jet_mlp", "muon", "mixer", "svhn"] {
+        let (spec, _) = needs_artifacts!(name);
+        let mut qint = spec.input_qint();
+        for (li, layer) in spec.layers.iter().enumerate() {
+            if let LayerSpec::Dense { w, b, clip_min, clip_max, .. }
+            | LayerSpec::EinsumDense { w, b, clip_min, clip_max, .. }
+            | LayerSpec::Conv2D { w, b, clip_min, clip_max, .. } = layer
+            {
+                let matrix: Vec<i64> = w.iter().flatten().copied().collect();
+                let mut problem =
+                    da4ml::cmvm::CmvmProblem::new(w.len(), b.len(), matrix, 8);
+                problem.input_qint = vec![qint; w.len()];
+                for strategy in [Strategy::NaiveDa, Strategy::Da { dc: 2 }] {
+                    jobs.push(CompileJob {
+                        name: format!("{name}/l{li}/{}", strategy.name()),
+                        problem: problem.clone(),
+                        strategy,
+                    });
+                }
+                qint = da4ml::fixed::QInterval::new(*clip_min, *clip_max, 0);
+            }
+        }
+    }
+    if jobs.is_empty() {
+        return;
+    }
+    let n = jobs.len();
+    let sols = coord.compile_many(jobs).unwrap();
+    assert_eq!(sols.len(), n);
+    for pair in sols.chunks(2) {
+        let (naive, da) = (&pair[0], &pair[1]);
+        assert!(da.adders <= naive.adders, "DA must not exceed naive adders");
+    }
+    assert!(coord.stats().submitted as usize >= n);
+}
+
+/// RTL emission of a real network parses structurally: module/endmodule
+/// balance, one assignment per node, registers only when pipelined.
+#[test]
+fn rtl_emission_structural_checks() {
+    let (spec, _) = needs_artifacts!("jet_mlp");
+    let prog = nn::compile::fuse(&spec, Strategy::Da { dc: 2 }).unwrap();
+    let comb = da4ml::rtl::emit_verilog(&prog, "jet", None);
+    assert_eq!(comb.matches("module ").count(), 1);
+    assert!(comb.contains("endmodule"));
+    assert!(!comb.contains("posedge"));
+    assert_eq!(comb.matches("assign n").count(), prog.nodes.len());
+
+    let stages = assign_stages(&prog, &PipelineConfig::every_n_adders(5));
+    let piped = da4ml::rtl::emit_verilog(&prog, "jet_p", Some(&stages));
+    assert!(piped.contains("posedge clk"));
+    let vhdl = da4ml::rtl::emit_vhdl(&prog, "jet_v");
+    assert!(vhdl.contains("end architecture;"));
+}
+
+/// The PJRT golden model agrees with the DAIS graph end-to-end (the
+/// three-layer composition proof, also exercised by the jet example).
+#[test]
+fn pjrt_golden_cross_check_jet() {
+    let (spec, vecs) = needs_artifacts!("jet_mlp");
+    let dir = runtime::artifacts_dir();
+    let hlo = dir.join("jet_mlp.hlo.txt");
+    if !hlo.exists() {
+        eprintln!("skipping: no HLO artifact");
+        return;
+    }
+    let rt = runtime::Runtime::cpu().expect("PJRT cpu client");
+    let golden = rt.load_hlo_text(&hlo).expect("compile HLO");
+    let weights = nn::weight_tensors(&spec);
+    for x in vecs.inputs.iter().take(16) {
+        let mut args = vec![runtime::TensorI32::new(
+            x.iter().map(|&v| v as i32).collect(),
+            vec![x.len() as i64],
+        )];
+        args.extend(weights.iter().cloned());
+        let out = golden.run_i32(&args).expect("execute");
+        let got: Vec<i64> = out[0].data.iter().map(|&v| v as i64).collect();
+        assert_eq!(got, nn::sim::forward(&spec, x));
+    }
+}
+
+/// Resource reports behave sanely across quantization levels: LUTs and
+/// adders shrink as bits shrink; DA always beats latency on LUTs for
+/// the 4-bit level (the all-LUT regime).
+#[test]
+fn resource_trends_across_levels() {
+    let dir = runtime::artifacts_dir();
+    let model = FpgaModel::default();
+    let cfg = PipelineConfig::every_n_adders(5);
+    let mut luts = Vec::new();
+    for (w, a) in [(8, 8), (6, 6), (4, 5)] {
+        let path = dir.join(format!("jet_mlp_w{w}a{a}.weights.json"));
+        let Ok(text) = runtime::load_text(path) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let spec = NetworkSpec::from_json(&text).unwrap();
+        let da = nn::compile::network_report(&spec, Strategy::Da { dc: 2 }, &model, &cfg)
+            .unwrap();
+        let lat =
+            nn::compile::network_report(&spec, Strategy::Latency, &model, &cfg).unwrap();
+        assert_eq!(da.dsp, 0);
+        assert!(da.lut < lat.lut, "w{w}a{a}: DA {} !< latency {}", da.lut, lat.lut);
+        luts.push(da.lut);
+    }
+    assert!(luts[0] > luts[1] && luts[1] > luts[2], "LUTs shrink with bits: {luts:?}");
+}
