@@ -21,8 +21,8 @@ fn main() {
     ];
     let problem = CmvmProblem::new(4, 4, m.clone(), 8);
 
-    let naive = optimize(&problem, Strategy::NaiveDa);
-    let da = optimize(&problem, Strategy::Da { dc: -1 });
+    let naive = optimize(&problem, Strategy::NaiveDa).expect("optimize");
+    let da = optimize(&problem, Strategy::Da { dc: -1 }).expect("optimize");
     verify::check_cmvm_equivalence(&da.program, &m, 4, 4).unwrap();
 
     println!("H.264 integer transform (paper Fig. 3/4):");

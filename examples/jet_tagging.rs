@@ -8,12 +8,13 @@
 //! Proves all layers compose:
 //!  1. loads the build-time artifacts (weights + test vectors + the
 //!     JAX/Pallas-lowered HLO golden model);
-//!  2. executes the golden model through PJRT (rust `runtime`, no
-//!     Python anywhere);
+//!  2. executes the golden model (PJRT with `--features pjrt`, the
+//!     pure-Rust `runtime::golden` backend by default — no Python
+//!     anywhere on either path);
 //!  3. compiles the network to a fully-unrolled DAIS adder graph with
-//!     the da4ml strategy via the coordinator;
-//!  4. checks PJRT output == DAIS simulation == host integer simulation
-//!     **bit-exactly** on every test vector;
+//!     the da4ml strategy;
+//!  4. checks golden output == DAIS simulation == host integer
+//!     simulation **bit-exactly** on every test vector;
 //!  5. sweeps all six quantization levels and reports the paper-style
 //!     accuracy/resource table for latency vs DA strategies.
 
@@ -24,17 +25,61 @@ use da4ml::estimate::FpgaModel;
 use da4ml::nn::{self, NetworkSpec, TestVectors};
 use da4ml::pipeline::{assign_stages, PipelineConfig};
 use da4ml::report::Table;
-use da4ml::runtime::{self, Runtime, TensorI32};
+use da4ml::runtime::{self, TensorI32};
+use std::path::Path;
+
+/// Golden outputs for every input vector: PJRT-executed HLO when built
+/// with `--features pjrt`, otherwise the pure-Rust golden backend.
+fn golden_outputs(
+    spec: &NetworkSpec,
+    dir: &Path,
+    inputs: &[Vec<i64>],
+) -> Result<Vec<Vec<i64>>> {
+    #[cfg(feature = "pjrt")]
+    {
+        let rt = runtime::Runtime::cpu()?;
+        let golden = rt.load_hlo_text(dir.join("jet_mlp.hlo.txt"))?;
+        println!("golden backend: PJRT ({})", rt.platform());
+        let weights = nn::weight_tensors(spec);
+        inputs
+            .iter()
+            .map(|x| {
+                let mut args = vec![TensorI32::new(
+                    x.iter().map(|&v| v as i32).collect(),
+                    vec![x.len() as i64],
+                )];
+                args.extend(weights.iter().cloned());
+                let out = golden.run_i32(&args)?;
+                Ok(out[0].data.iter().map(|&v| v as i64).collect())
+            })
+            .collect()
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = dir;
+        let golden = runtime::golden::GoldenModel::from_spec(spec.clone());
+        println!("golden backend: pure-Rust (rebuild with --features pjrt for PJRT)");
+        inputs
+            .iter()
+            .map(|x| {
+                let args = [TensorI32::new(
+                    x.iter().map(|&v| v as i32).collect(),
+                    vec![x.len() as i64],
+                )];
+                let out = golden.run_i32(&args)?;
+                Ok(out[0].data.iter().map(|&v| v as i64).collect())
+            })
+            .collect()
+    }
+}
 
 fn main() -> Result<()> {
     let dir = runtime::artifacts_dir();
     let spec = NetworkSpec::from_json(&runtime::load_text(dir.join("jet_mlp.weights.json"))?)?;
     let vecs = TestVectors::from_json(&runtime::load_text(dir.join("jet_mlp.testvec.json"))?)?;
 
-    // --- Golden model through PJRT -------------------------------------
-    let rt = Runtime::cpu()?;
-    let golden = rt.load_hlo_text(dir.join("jet_mlp.hlo.txt"))?;
-    println!("PJRT platform: {}", rt.platform());
+    // --- Golden model (PJRT or pure-Rust fallback) -----------------------
+    let golden = golden_outputs(&spec, &dir, &vecs.inputs)?;
 
     // --- da4ml compilation ----------------------------------------------
     let program = nn::compile::fuse(&spec, Strategy::Da { dc: 2 })?;
@@ -45,26 +90,28 @@ fn main() -> Result<()> {
         program.adder_depth()
     );
 
-    // --- Three-way bit-exact cross-check --------------------------------
+    // --- Bit-exact cross-check against the *exported* outputs -----------
+    // The JAX-side export (vecs.outputs) is the independent reference:
+    // golden backend, DAIS graph, and host simulation must all reproduce
+    // it exactly. (Without the pjrt feature the golden backend shares
+    // nn::sim with the host leg, so the exported vectors are what keeps
+    // this check non-circular.)
     let n = vecs.inputs.len();
-    let weights = nn::weight_tensors(&spec);
+    assert_eq!(vecs.outputs.len(), n, "testvec outputs/inputs arity");
     let mut all_match = true;
-    for x in &vecs.inputs {
-        let mut args = vec![TensorI32::new(
-            x.iter().map(|&v| v as i32).collect(),
-            vec![x.len() as i64],
-        )];
-        args.extend(weights.iter().cloned());
-        let pjrt: Vec<i64> = golden.run_i32(&args)?[0].data.iter().map(|&v| v as i64).collect();
+    for ((x, want), gold) in vecs.inputs.iter().zip(&vecs.outputs).zip(&golden) {
         let dais = interp::evaluate_checked(&program, x);
         let host = nn::sim::forward(&spec, x);
-        if pjrt != dais || dais != host {
+        if gold != want || &dais != want || &host != want {
             all_match = false;
-            eprintln!("MISMATCH on input {x:?}:\n pjrt={pjrt:?}\n dais={dais:?}\n host={host:?}");
+            eprintln!(
+                "MISMATCH on input {x:?}:\n want={want:?}\n gold={gold:?}\n \
+                 dais={dais:?}\n host={host:?}"
+            );
             break;
         }
     }
-    println!("PJRT == DAIS == host-sim on {n}/{n} test vectors: {all_match}");
+    println!("export == golden == DAIS == host-sim on {n}/{n} test vectors: {all_match}");
     assert!(all_match, "golden cross-check failed");
 
     // --- Streaming II=1 check (cycle-accurate pipeline) ------------------

@@ -55,7 +55,7 @@ fn main() {
         (Strategy::Da { dc: 2 }, "2"),
         (Strategy::Da { dc: -1 }, "-1"),
     ] {
-        let sol = optimize(&problem, strategy);
+        let sol = optimize(&problem, strategy).expect("optimize");
         // Exactness: the whole point of non-approximate DA.
         verify::check_well_formed(&sol.program).expect("well-formed");
         verify::check_cmvm_equivalence(&sol.program, &problem.matrix, d_in, d_out)

@@ -59,10 +59,10 @@ fn main() {
         let mut sums = [0f64; 4];
         for t in 0..trials {
             let p = if gen { correlated(50 + t, 16) } else { CmvmProblem::random(50 + t, 16, 16, 8) };
-            sums[0] += optimize(&p, Strategy::NaiveDa).adders as f64;
+            sums[0] += optimize(&p, Strategy::NaiveDa).expect("optimize").adders as f64;
             sums[1] += cse_only(&p, false) as f64;
             sums[2] += cse_only(&p, true) as f64;
-            sums[3] += optimize(&p, Strategy::Da { dc: -1 }).adders as f64;
+            sums[3] += optimize(&p, Strategy::Da { dc: -1 }).expect("optimize").adders as f64;
         }
         let naive = sums[0] / trials as f64;
         for (name, s) in [
@@ -86,5 +86,5 @@ fn main() {
     let mut b = DaisBuilder::new();
     let inputs: Vec<InputTerm> =
         (0..4).map(|j| InputTerm { node: b.input(j, p.input_qint[j], 0) }).collect();
-    let _ = optimize_terms(&mut b, &inputs, &p, Strategy::Da { dc: 2 });
+    let _ = optimize_terms(&mut b, &inputs, &p, Strategy::Da { dc: 2 }).expect("optimize");
 }

@@ -21,7 +21,7 @@ fn main() {
         let mut ms = 0f64;
         for t in 0..trials {
             let p = CmvmProblem::random(77 * m as u64 + t as u64, m, m, 8);
-            let sol = optimize(&p, Strategy::Da { dc: -1 });
+            let sol = optimize(&p, Strategy::Da { dc: -1 }).expect("optimize");
             ms += sol.opt_time.as_secs_f64() * 1e3;
         }
         ms /= trials as f64;

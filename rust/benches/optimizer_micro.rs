@@ -14,7 +14,7 @@ fn main() {
     for &(m, bw, dc) in &[(16usize, 8u32, -1i32), (16, 8, 0), (32, 8, -1), (64, 8, 2), (64, 4, 2)] {
         let p = CmvmProblem::random(5 + m as u64, m, m, bw);
         let runs = if m <= 16 { 9 } else { 3 };
-        let (d, sol) = time_median(runs, || optimize(&p, Strategy::Da { dc }));
+        let (d, sol) = time_median(runs, || optimize(&p, Strategy::Da { dc }).expect("optimize"));
         table.push(vec![
             format!("da {m}x{m} {bw}b dc={dc}"),
             sci(d.as_secs_f64() * 1e3),
@@ -23,7 +23,7 @@ fn main() {
     }
     // Interpreter throughput (e2e accuracy sweeps depend on it).
     let p = CmvmProblem::random(99, 32, 32, 8);
-    let sol = optimize(&p, Strategy::Da { dc: 2 });
+    let sol = optimize(&p, Strategy::Da { dc: 2 }).expect("optimize");
     let xs: Vec<Vec<i64>> = (0..256)
         .map(|i| (0..32).map(|j| ((i * 31 + j * 17) % 255 - 128) as i64).collect())
         .collect();

@@ -60,12 +60,12 @@ fn main() {
             let mut la_runs = 0usize;
             for t in 0..trials {
                 let p = CmvmProblem::random(1000 * m as u64 + t as u64, m, m, 8);
-                let sol = optimize(&p, Strategy::Da { dc });
+                let sol = optimize(&p, Strategy::Da { dc }).expect("optimize");
                 da.0 += sol.depth as f64;
                 da.1 += sol.adders as f64;
                 da.2 += sol.opt_time.as_secs_f64() * 1e3;
                 if m <= lookahead_max_m {
-                    let sol = optimize(&p, Strategy::Lookahead { dc });
+                    let sol = optimize(&p, Strategy::Lookahead { dc }).expect("optimize");
                     la.0 += sol.depth as f64;
                     la.1 += sol.adders as f64;
                     la.2 += sol.opt_time.as_secs_f64() * 1e3;

@@ -19,7 +19,7 @@ use crate::csd::Csd;
 use crate::cse::{naive_da, InputTerm, OutTerm};
 use crate::cse::{self as cse_mod};
 use crate::dais::{DaisBuilder, NodeId};
-use rustc_hash::FxHashMap;
+use crate::util::fxhash::FxHashMap;
 
 #[derive(Debug, Clone, Copy)]
 struct Digit {
@@ -260,7 +260,7 @@ pub fn optimize_into(
 }
 
 /// Standalone entry matching [`crate::cmvm::optimize`]'s output shape.
-pub fn optimize_lookahead(problem: &CmvmProblem, dc: i32) -> CmvmSolution {
+pub fn optimize_lookahead(problem: &CmvmProblem, dc: i32) -> crate::Result<CmvmSolution> {
     crate::cmvm::optimize(problem, Strategy::Lookahead { dc })
 }
 
@@ -285,9 +285,9 @@ mod tests {
         for _ in 0..3 {
             let m: Vec<i64> = (0..36).map(|_| rng.range_i64(-255, 255)).collect();
             let p = CmvmProblem::new(6, 6, m.clone(), 8);
-            let la = optimize(&p, Strategy::Lookahead { dc: -1 });
+            let la = optimize(&p, Strategy::Lookahead { dc: -1 }).unwrap();
             verify::check_cmvm_equivalence(&la.program, &m, 6, 6).unwrap();
-            let da = optimize(&p, Strategy::Da { dc: -1 });
+            let da = optimize(&p, Strategy::Da { dc: -1 }).unwrap();
             // Comparable quality: within ±20% of each other.
             let (a, b) = (la.adders as f64, da.adders as f64);
             assert!((a - b).abs() / b.max(1.0) < 0.25, "lookahead {a} vs da {b}");
@@ -299,8 +299,8 @@ mod tests {
         let mut rng = Rng::seed_from(8);
         let m: Vec<i64> = (0..36).map(|_| rng.range_i64(129, 255)).collect();
         let p = CmvmProblem::new(6, 6, m.clone(), 8);
-        let s0 = optimize(&p, Strategy::Lookahead { dc: 0 });
-        let sf = optimize(&p, Strategy::Lookahead { dc: -1 });
+        let s0 = optimize(&p, Strategy::Lookahead { dc: 0 }).unwrap();
+        let sf = optimize(&p, Strategy::Lookahead { dc: -1 }).unwrap();
         verify::check_cmvm_equivalence(&s0.program, &m, 6, 6).unwrap();
         assert!(s0.depth <= sf.depth.max(5));
     }
@@ -312,8 +312,8 @@ mod tests {
         let mut rng = Rng::seed_from(30);
         let m: Vec<i64> = (0..100).map(|_| rng.range_i64(129, 255)).collect();
         let p = CmvmProblem::new(10, 10, m, 8);
-        let la = optimize(&p, Strategy::Lookahead { dc: -1 });
-        let da = optimize(&p, Strategy::Da { dc: -1 });
+        let la = optimize(&p, Strategy::Lookahead { dc: -1 }).unwrap();
+        let da = optimize(&p, Strategy::Da { dc: -1 }).unwrap();
         assert!(la.opt_time > da.opt_time, "{:?} <= {:?}", la.opt_time, da.opt_time);
     }
 }

@@ -31,7 +31,7 @@ pub fn resource_table(title: &str, bw: u32) {
             format!("({})", macr.adders),
         ]);
         for dc in [0i32, 2, -1] {
-            let sol = optimize(&p, Strategy::Da { dc });
+            let sol = optimize(&p, Strategy::Da { dc }).expect("optimize");
             let rep = combinational(&sol.program, &model);
             table.push(vec![
                 "DA".into(),

@@ -15,10 +15,12 @@ use crate::cse::{self, CseConfig, InputTerm, OutTerm};
 use crate::dais::{DaisBuilder, DaisProgram};
 use crate::fixed::QInterval;
 use crate::graph;
+use crate::Result;
+use anyhow::bail;
 
 /// Which CMVM implementation strategy to use (mirrors the hls4ml
 /// `strategy` knob: `latency` vs `distributed_arithmetic`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Strategy {
     /// hls4ml's latency-optimized MAC loop (baseline; DSP/LUT multipliers,
     /// modeled analytically by [`crate::baseline::mac`]).
@@ -75,9 +77,14 @@ pub struct CmvmProblem {
 
 impl CmvmProblem {
     /// Build a problem with uniform signed `input_bits`-bit inputs at
-    /// depth 0.
+    /// depth 0. `input_bits` must be in `[1, 63]`: 0 would underflow the
+    /// `input_bits - 1` sign-bit split below, 64+ the i64 shifts.
     pub fn new(d_in: usize, d_out: usize, matrix: Vec<i64>, input_bits: u32) -> Self {
         assert_eq!(matrix.len(), d_in * d_out, "matrix shape mismatch");
+        assert!(
+            (1..=63).contains(&input_bits),
+            "input_bits must be in [1, 63], got {input_bits}"
+        );
         let q = QInterval::new(-(1i64 << (input_bits - 1)), (1i64 << (input_bits - 1)) - 1, 0);
         Self {
             d_in,
@@ -142,13 +149,17 @@ pub struct CmvmSolution {
 /// Run a strategy into an existing builder with caller-provided input
 /// terms; returns the raw output terms (no output binding). This is the
 /// composition point used by the NN frontend to chain CMVMs.
+///
+/// Errors when an optimizer invariant is violated (e.g. a stage-1
+/// decomposition output with a negative shift) instead of silently
+/// producing a wrong graph.
 pub fn optimize_terms(
     builder: &mut DaisBuilder,
     inputs: &[InputTerm],
     problem: &CmvmProblem,
     strategy: Strategy,
-) -> Vec<OutTerm> {
-    match strategy {
+) -> Result<Vec<OutTerm>> {
+    Ok(match strategy {
         Strategy::Latency | Strategy::NaiveDa => {
             // The latency strategy's *functional* model is the naive DA
             // graph (bit-exact); its *resource* model differs (see
@@ -163,16 +174,16 @@ pub fn optimize_terms(
             problem.d_out,
             &CseConfig { dc, ..CseConfig::default() },
         ),
-        Strategy::Da { dc } => two_stage(builder, inputs, problem, dc),
+        Strategy::Da { dc } => two_stage(builder, inputs, problem, dc)?,
         Strategy::Lookahead { dc } => {
             crate::baseline::lookahead::optimize_into(builder, inputs, problem, dc)
         }
-    }
+    })
 }
 
 /// Optimize a CMVM problem with the given strategy, producing a
 /// self-contained DAIS program (inputs 0..d_in, outputs 0..d_out).
-pub fn optimize(problem: &CmvmProblem, strategy: Strategy) -> CmvmSolution {
+pub fn optimize(problem: &CmvmProblem, strategy: Strategy) -> Result<CmvmSolution> {
     let t0 = std::time::Instant::now();
     let mut builder = DaisBuilder::new();
     let inputs: Vec<InputTerm> = (0..problem.d_in)
@@ -182,16 +193,16 @@ pub fn optimize(problem: &CmvmProblem, strategy: Strategy) -> CmvmSolution {
         })
         .collect();
 
-    let outs = optimize_terms(&mut builder, &inputs, problem, strategy);
+    let outs = optimize_terms(&mut builder, &inputs, problem, strategy)?;
     bind_outputs(&mut builder, &outs);
     let program = builder.finish();
-    CmvmSolution {
+    Ok(CmvmSolution {
         adders: program.adder_count(),
         depth: program.adder_depth(),
         program,
         opt_time: t0.elapsed(),
         strategy,
-    }
+    })
 }
 
 /// The full two-stage da4ml flow: MST decomposition `M = M1 · M2`
@@ -202,21 +213,21 @@ fn two_stage(
     inputs: &[InputTerm],
     problem: &CmvmProblem,
     dc: i32,
-) -> Vec<OutTerm> {
+) -> Result<Vec<OutTerm>> {
     let decomp = graph::decompose(&problem.matrix, problem.d_in, problem.d_out, dc);
     let cfg = CseConfig { dc, ..CseConfig::default() };
 
     if decomp.is_trivial() {
         // No cross-column structure found: stage 1 degenerates to the
         // identity and we run CSE on M directly.
-        return cse::optimize_into(
+        return Ok(cse::optimize_into(
             builder,
             inputs,
             &problem.matrix,
             problem.d_in,
             problem.d_out,
             &cfg,
-        );
+        ));
     }
 
     // Stage 2a: CSE over M1 (d_in × k).
@@ -230,15 +241,25 @@ fn two_stage(
     );
 
     // Fold each intermediate's wiring shift/sign into the M2 entries so
-    // stage 2b consumes plain nodes.
+    // stage 2b consumes plain nodes. A negative stage-1 shift cannot be
+    // folded into an integer M2 scale — previously this was silently
+    // clamped (`shift.max(0)`) in release builds, folding a *wrong* M2.
+    // Integer M1 columns always yield non-negative shifts, so any
+    // violation is an internal invariant break: fail loudly.
     let mut m2 = vec![0i64; decomp.k * problem.d_out];
     let mut mid_inputs = Vec::with_capacity(decomp.k);
     for (r, mid) in mids.iter().enumerate() {
         match mid.node {
             Some(node) => {
+                if mid.shift < 0 {
+                    bail!(
+                        "two_stage: stage-1 intermediate {r} carries negative shift {} \
+                         (cannot fold into M2; optimizer invariant violated)",
+                        mid.shift
+                    );
+                }
                 mid_inputs.push(InputTerm { node });
-                let scale = (if mid.neg { -1i64 } else { 1 }) << mid.shift.max(0);
-                debug_assert!(mid.shift >= 0, "stage-1 outputs use non-negative shifts");
+                let scale = (if mid.neg { -1i64 } else { 1 }) << mid.shift;
                 for i in 0..problem.d_out {
                     m2[r * problem.d_out + i] = decomp.m2[r * problem.d_out + i] * scale;
                 }
@@ -252,7 +273,7 @@ fn two_stage(
         }
     }
 
-    cse::optimize_into(builder, &mid_inputs, &m2, decomp.k, problem.d_out, &cfg)
+    Ok(cse::optimize_into(builder, &mid_inputs, &m2, decomp.k, problem.d_out, &cfg))
 }
 
 /// Materialize the CSE output terms as program outputs (inserting `Neg`
@@ -277,10 +298,22 @@ mod tests {
     use super::*;
     use crate::dais::interp;
     use crate::dais::verify;
+    use crate::util::{property, Rng};
+
+    /// The five strategy variants under one delay constraint.
+    fn all_strategies(dc: i32) -> [Strategy; 5] {
+        [
+            Strategy::Latency,
+            Strategy::NaiveDa,
+            Strategy::CseOnly { dc },
+            Strategy::Da { dc },
+            Strategy::Lookahead { dc },
+        ]
+    }
 
     fn check_strategy(matrix: Vec<i64>, d_in: usize, d_out: usize, s: Strategy) {
         let p = CmvmProblem::new(d_in, d_out, matrix, 8);
-        let sol = optimize(&p, s);
+        let sol = optimize(&p, s).unwrap();
         verify::check_well_formed(&sol.program).unwrap();
         verify::check_cmvm_equivalence(&sol.program, &p.matrix, d_in, d_out).unwrap();
         // Numeric spot check.
@@ -290,6 +323,25 @@ mod tests {
         for (g, w) in got.iter().zip(&want) {
             assert_eq!(*g as i128, *w);
         }
+    }
+
+    /// Seeded property sweep: every strategy variant must produce a
+    /// well-formed, exactly equivalent adder graph on random matrices of
+    /// random shapes under random delay constraints — not just the
+    /// hand-picked fixtures below. (Sizes stay small because the
+    /// Lookahead comparator is deliberately O(N³).)
+    #[test]
+    fn prop_all_strategies_exact_on_random_matrices() {
+        property("cmvm_all_strategies_exact", 12, |rng: &mut Rng| {
+            let d_in = rng.below(5) + 1;
+            let d_out = rng.below(5) + 1;
+            let dc = rng.range_i64(-1, 2) as i32;
+            let m: Vec<i64> =
+                (0..d_in * d_out).map(|_| rng.range_i64(-255, 255)).collect();
+            for s in all_strategies(dc) {
+                check_strategy(m.clone(), d_in, d_out, s);
+            }
+        });
     }
 
     #[test]
@@ -319,22 +371,21 @@ mod tests {
     fn zero_column_outputs_zero() {
         let m = vec![1, 0, 2, 0]; // d_in=2, d_out=2, second column all-zero
         let p = CmvmProblem::new(2, 2, m, 8);
-        let sol = optimize(&p, Strategy::Da { dc: -1 });
+        let sol = optimize(&p, Strategy::Da { dc: -1 }).unwrap();
         let got = interp::evaluate(&sol.program, &[5, 9]);
         assert_eq!(got, vec![5 + 18, 0]);
     }
 
     #[test]
     fn da_never_worse_than_naive() {
-        use crate::util::Rng;
         let mut rng = Rng::seed_from(7);
         for _ in 0..5 {
             let (d_in, d_out) = (8, 8);
             let m: Vec<i64> =
                 (0..d_in * d_out).map(|_| rng.range_i64(-127, 127)).collect();
             let p = CmvmProblem::new(d_in, d_out, m, 8);
-            let naive = optimize(&p, Strategy::NaiveDa);
-            let da = optimize(&p, Strategy::Da { dc: -1 });
+            let naive = optimize(&p, Strategy::NaiveDa).unwrap();
+            let da = optimize(&p, Strategy::Da { dc: -1 }).unwrap();
             assert!(
                 da.adders <= naive.adders,
                 "da {} > naive {}",
@@ -342,5 +393,13 @@ mod tests {
                 naive.adders
             );
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "input_bits")]
+    fn zero_input_bits_rejected() {
+        // Used to underflow `input_bits - 1` and panic with a shift
+        // overflow deep inside QInterval; now rejected up front.
+        let _ = CmvmProblem::new(1, 1, vec![3], 0);
     }
 }

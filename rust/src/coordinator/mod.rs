@@ -8,11 +8,20 @@
 //! them on a scoped worker pool, and aggregates solution statistics.
 //! The CLI (`rust/src/main.rs`) and the benches drive everything through
 //! this interface.
+//!
+//! The cache is keyed on the **full job identity** — matrix, dims,
+//! input intervals, input depths and strategy — not on a bare 64-bit
+//! hash, so hash collisions can never alias one layer's adder graph to
+//! another's (cache poisoning). The hasher is pluggable (FxHash by
+//! default) which lets the tests force total collisions and prove the
+//! full-key equality path.
 
 use crate::cmvm::{optimize, CmvmProblem, CmvmSolution, Strategy};
+use crate::fixed::QInterval;
+use crate::util::fxhash::FxBuildHasher;
 use crate::Result;
-use rustc_hash::FxHashMap;
-use std::hash::{Hash, Hasher};
+use std::collections::HashMap;
+use std::hash::BuildHasher;
 use std::sync::{Arc, Mutex};
 
 /// One compilation request.
@@ -37,62 +46,94 @@ pub struct CoordinatorStats {
     pub total_opt_time: std::time::Duration,
 }
 
-/// The compile coordinator (thread-safe; cheap to clone).
-#[derive(Clone, Default)]
-pub struct Coordinator {
-    inner: Arc<Mutex<Inner>>,
+/// The full identity of a compile job — everything that affects the
+/// produced adder graph. Used as the cache key so equal hashes of
+/// *different* jobs can never return the wrong solution.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct JobKey {
+    d_in: usize,
+    d_out: usize,
+    matrix: Vec<i64>,
+    input_qint: Vec<QInterval>,
+    input_depth: Vec<u32>,
+    strategy: Strategy,
 }
 
-#[derive(Default)]
-struct Inner {
-    cache: FxHashMap<u64, Arc<CmvmSolution>>,
+fn job_key(problem: &CmvmProblem, strategy: Strategy) -> JobKey {
+    JobKey {
+        d_in: problem.d_in,
+        d_out: problem.d_out,
+        matrix: problem.matrix.clone(),
+        input_qint: problem.input_qint.clone(),
+        input_depth: problem.input_depth.clone(),
+        strategy,
+    }
+}
+
+/// The compile coordinator (thread-safe; cheap to clone). Generic over
+/// the cache hasher — production code uses the FxHash default.
+pub struct Coordinator<S = FxBuildHasher> {
+    inner: Arc<Mutex<Inner<S>>>,
+}
+
+struct Inner<S> {
+    cache: HashMap<JobKey, Arc<CmvmSolution>, S>,
     stats: CoordinatorStats,
 }
 
-fn job_key(problem: &CmvmProblem, strategy: Strategy) -> u64 {
-    let mut h = rustc_hash::FxHasher::default();
-    problem.d_in.hash(&mut h);
-    problem.d_out.hash(&mut h);
-    problem.matrix.hash(&mut h);
-    problem.input_depth.hash(&mut h);
-    for q in &problem.input_qint {
-        q.min.hash(&mut h);
-        q.max.hash(&mut h);
-        q.exp.hash(&mut h);
+impl<S> Clone for Coordinator<S> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
     }
-    format!("{strategy:?}").hash(&mut h);
-    h.finish()
 }
 
-impl Coordinator {
-    /// Create an empty coordinator.
+impl<S: BuildHasher + Default> Default for Coordinator<S> {
+    fn default() -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(Inner {
+                cache: HashMap::with_hasher(S::default()),
+                stats: CoordinatorStats::default(),
+            })),
+        }
+    }
+}
+
+impl Coordinator<FxBuildHasher> {
+    /// Create an empty coordinator with the default (FxHash) cache.
     pub fn new() -> Self {
         Self::default()
     }
+}
 
+impl<S: BuildHasher + Default> Coordinator<S> {
     /// Compile one job (synchronous; cache-aware).
-    pub fn compile(&self, job: &CompileJob) -> Arc<CmvmSolution> {
+    pub fn compile(&self, job: &CompileJob) -> Result<Arc<CmvmSolution>> {
         let key = job_key(&job.problem, job.strategy);
         {
             let mut inner = self.inner.lock().unwrap();
             inner.stats.submitted += 1;
             if let Some(sol) = inner.cache.get(&key).cloned() {
                 inner.stats.cache_hits += 1;
-                return sol;
+                return Ok(sol);
             }
         }
-        let sol = Arc::new(optimize(&job.problem, job.strategy));
+        let sol = Arc::new(optimize(&job.problem, job.strategy)?);
         let mut inner = self.inner.lock().unwrap();
         inner.stats.total_opt_time += sol.opt_time;
         inner.cache.entry(key).or_insert_with(|| sol.clone());
-        sol
+        Ok(sol)
     }
 
     /// Compile a batch concurrently on a scoped worker pool, preserving
     /// job order in the result.
-    pub fn compile_many(&self, jobs: Vec<CompileJob>) -> Result<Vec<Arc<CmvmSolution>>> {
+    pub fn compile_many(&self, jobs: Vec<CompileJob>) -> Result<Vec<Arc<CmvmSolution>>>
+    where
+        S: Send,
+    {
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        Ok(crate::util::parallel_map(jobs, threads, |job| self.compile(&job)))
+        crate::util::parallel_map(jobs, threads, |job| self.compile(&job))
+            .into_iter()
+            .collect()
     }
 
     /// Snapshot the statistics.
@@ -109,7 +150,9 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dais::verify;
     use crate::util::Rng;
+    use std::hash::Hasher;
 
     fn job(seed: u64) -> CompileJob {
         let mut rng = Rng::seed_from(seed);
@@ -125,8 +168,8 @@ mod tests {
     fn cache_dedups_identical_jobs() {
         let c = Coordinator::new();
         let j = job(1);
-        let a = c.compile(&j);
-        let b = c.compile(&j);
+        let a = c.compile(&j).unwrap();
+        let b = c.compile(&j).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         let s = c.stats();
         assert_eq!(s.submitted, 2);
@@ -138,10 +181,25 @@ mod tests {
     fn different_strategy_different_entry() {
         let c = Coordinator::new();
         let mut j = job(2);
-        c.compile(&j);
+        c.compile(&j).unwrap();
         j.strategy = Strategy::Da { dc: 0 };
-        c.compile(&j);
+        c.compile(&j).unwrap();
         assert_eq!(c.cache_len(), 2);
+        assert_eq!(c.stats().cache_hits, 0);
+    }
+
+    #[test]
+    fn different_qint_or_depth_different_entry() {
+        let c = Coordinator::new();
+        let j = job(3);
+        c.compile(&j).unwrap();
+        let mut j2 = j.clone();
+        j2.problem.input_qint = vec![QInterval::new(0, 15, 0); 4];
+        c.compile(&j2).unwrap();
+        let mut j3 = j.clone();
+        j3.problem.input_depth = vec![1; 4];
+        c.compile(&j3).unwrap();
+        assert_eq!(c.cache_len(), 3);
         assert_eq!(c.stats().cache_hits, 0);
     }
 
@@ -150,11 +208,56 @@ mod tests {
         let c = Coordinator::new();
         let jobs: Vec<CompileJob> = (0..6).map(job).collect();
         let adders_direct: Vec<usize> =
-            jobs.iter().map(|j| c.compile(j).adders).collect();
+            jobs.iter().map(|j| c.compile(j).unwrap().adders).collect();
         let sols = c.compile_many(jobs).unwrap();
         let adders_batch: Vec<usize> = sols.iter().map(|s| s.adders).collect();
         assert_eq!(adders_direct, adders_batch);
         // Every batch job was a cache hit.
         assert_eq!(c.stats().cache_hits as usize, 6);
+    }
+
+    /// A hasher that maps *every* key to the same bucket, simulating
+    /// worst-case hash collisions.
+    struct CollidingHasher;
+
+    impl Hasher for CollidingHasher {
+        fn finish(&self) -> u64 {
+            0
+        }
+        fn write(&mut self, _bytes: &[u8]) {}
+    }
+
+    #[derive(Default)]
+    struct CollidingBuildHasher;
+
+    impl std::hash::BuildHasher for CollidingBuildHasher {
+        type Hasher = CollidingHasher;
+        fn build_hasher(&self) -> CollidingHasher {
+            CollidingHasher
+        }
+    }
+
+    /// Regression for the cache-poisoning bug: with the old bare-u64
+    /// cache key, two jobs whose hashes collide returned the *first*
+    /// job's adder graph for the second job. Full-key equality must
+    /// disambiguate even when every hash collides.
+    #[test]
+    fn hash_collisions_never_alias_solutions() {
+        let c: Coordinator<CollidingBuildHasher> = Coordinator::default();
+        let j1 = job(10);
+        let j2 = job(11);
+        assert_ne!(j1.problem.matrix, j2.problem.matrix, "test needs distinct jobs");
+        let s1 = c.compile(&j1).unwrap();
+        let s2 = c.compile(&j2).unwrap();
+        // Both cached under colliding hashes, as distinct entries.
+        assert_eq!(c.cache_len(), 2);
+        assert_eq!(c.stats().cache_hits, 0);
+        // Each solution is exactly equivalent to its *own* matrix.
+        verify::check_cmvm_equivalence(&s1.program, &j1.problem.matrix, 4, 4).unwrap();
+        verify::check_cmvm_equivalence(&s2.program, &j2.problem.matrix, 4, 4).unwrap();
+        // Re-compiling hits the correct entries.
+        assert!(Arc::ptr_eq(&c.compile(&j1).unwrap(), &s1));
+        assert!(Arc::ptr_eq(&c.compile(&j2).unwrap(), &s2));
+        assert_eq!(c.stats().cache_hits, 2);
     }
 }

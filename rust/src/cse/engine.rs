@@ -5,7 +5,7 @@ use super::tree;
 use crate::csd::Csd;
 use crate::dais::{DaisBuilder, NodeId};
 use crate::fixed::QInterval;
-use rustc_hash::FxHashMap;
+use crate::util::fxhash::FxHashMap;
 use std::collections::BinaryHeap;
 
 /// An input to the CSE stage: a node already present in the builder.

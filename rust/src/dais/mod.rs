@@ -19,7 +19,7 @@ pub mod interp;
 pub mod verify;
 
 use crate::fixed::QInterval;
-use rustc_hash::FxHashMap;
+use crate::util::fxhash::FxHashMap;
 
 /// Index of a node inside a [`DaisProgram`].
 pub type NodeId = u32;

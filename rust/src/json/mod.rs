@@ -106,9 +106,19 @@ impl Value {
     }
 }
 
-/// Parse a JSON document.
+/// Default nesting limit of [`parse`] (picojson-rs convention: decoders
+/// never panic, so recursion must be bounded well below stack exhaustion).
+pub const DEFAULT_MAX_DEPTH: usize = 128;
+
+/// Parse a JSON document with the [`DEFAULT_MAX_DEPTH`] nesting limit.
 pub fn parse(text: &str) -> Result<Value> {
-    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    parse_with_depth(text, DEFAULT_MAX_DEPTH)
+}
+
+/// Parse a JSON document, rejecting arrays/objects nested deeper than
+/// `max_depth` with an error (never a stack overflow).
+pub fn parse_with_depth(text: &str, max_depth: usize) -> Result<Value> {
+    let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0, max_depth };
     p.ws();
     let v = p.value()?;
     p.ws();
@@ -121,9 +131,19 @@ pub fn parse(text: &str) -> Result<Value> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
+    max_depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > self.max_depth {
+            bail!("nesting depth exceeds {} at byte {}", self.max_depth, self.i);
+        }
+        Ok(())
+    }
+
     fn ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
@@ -165,6 +185,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Value> {
+        self.enter()?;
+        let v = self.array_body();
+        self.depth -= 1;
+        v
+    }
+
+    fn array_body(&mut self) -> Result<Value> {
         self.eat(b'[')?;
         let mut out = Vec::new();
         self.ws();
@@ -188,6 +215,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Value> {
+        self.enter()?;
+        let v = self.object_body();
+        self.depth -= 1;
+        v
+    }
+
+    fn object_body(&mut self) -> Result<Value> {
         self.eat(b'{')?;
         let mut out = BTreeMap::new();
         self.ws();
@@ -454,5 +488,25 @@ mod tests {
     fn whitespace_tolerant() {
         let v = parse(" {\n\t\"a\" : [ 1 , 2 ] }\r\n").unwrap();
         assert_eq!(v.get("a").unwrap().to_i64_vec().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn depth_limit_is_configurable() {
+        assert!(parse_with_depth("[[[0]]]", 3).is_ok());
+        let err = parse_with_depth("[[[0]]]", 2).unwrap_err();
+        assert!(format!("{err}").contains("nesting depth"));
+        assert!(parse_with_depth(r#"{"a":{"b":1}}"#, 2).is_ok());
+        assert!(parse_with_depth(r#"{"a":{"b":{"c":1}}}"#, 2).is_err());
+    }
+
+    #[test]
+    fn default_depth_accepts_realistic_artifacts() {
+        // Weight matrices are 2-3 levels deep; leave ample headroom.
+        let mut doc = String::from("1");
+        for _ in 0..DEFAULT_MAX_DEPTH {
+            doc = format!("[{doc}]");
+        }
+        assert!(parse(&doc).is_ok(), "depth == limit must pass");
+        assert!(parse(&format!("[{doc}]")).is_err(), "limit + 1 must fail");
     }
 }

@@ -26,10 +26,12 @@
 //! * or embedded in a full neural-network design through the hls4ml-like
 //!   frontend ([`nn`]) driven by the [`coordinator`].
 //!
-//! The [`runtime`] module wraps the PJRT CPU client (via the `xla` crate)
-//! to execute the JAX-lowered golden model from `artifacts/*.hlo.txt`,
-//! which the end-to-end examples cross-check bit-exactly against the DAIS
-//! simulation.
+//! The [`runtime`] module serves the golden model the end-to-end
+//! examples cross-check bit-exactly against the DAIS simulation: by
+//! default through the pure-Rust [`runtime::golden`] backend (the JSON
+//! weight artifacts replayed via [`nn::sim`]), or — behind the
+//! off-by-default `pjrt` feature — through the PJRT CPU client
+//! executing the JAX-lowered `artifacts/*.hlo.txt`.
 
 pub mod baseline;
 pub mod cmvm;

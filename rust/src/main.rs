@@ -8,8 +8,9 @@
 //!   the resource report;
 //! * `rtl`      — emit Verilog/VHDL for a network;
 //! * `simulate` — run a network on test vectors, report accuracy;
-//! * `golden`   — execute an HLO artifact through PJRT and cross-check
-//!   the bit-exact integer simulation against it.
+//! * `golden`   — cross-check the bit-exact integer simulation against
+//!   the golden model (PJRT-executed HLO with `--features pjrt`; the
+//!   pure-Rust golden backend plus exported vectors by default).
 
 use anyhow::{bail, Result};
 use da4ml::cmvm::{optimize, CmvmProblem, Strategy};
@@ -99,7 +100,7 @@ fn main() -> Result<()> {
             let hi = (1i64 << bits) - 1;
             let m: Vec<i64> = (0..d_in * d_out).map(|_| rng.range_i64(lo, hi)).collect();
             let p = CmvmProblem::new(d_in, d_out, m, 8);
-            let sol = optimize(&p, Strategy::Da { dc });
+            let sol = optimize(&p, Strategy::Da { dc })?;
             let rep = estimate::combinational(&sol.program, &FpgaModel::default());
             println!(
                 "CMVM {d_in}x{d_out} {bits}-bit dc={dc}: adders={} depth={} lut={} \
@@ -184,31 +185,72 @@ fn main() -> Result<()> {
             let spec = load_spec(args.pos(0, "spec path")?)?;
             let hlo = args.pos(1, "hlo path")?;
             let vecs = load_vectors(args.pos(2, "testvec path")?)?;
-            let rt = runtime::Runtime::cpu()?;
-            let model = rt.load_hlo_text(hlo)?;
-            let n = vecs.inputs.len().min(32);
-            let weights = nn::weight_tensors(&spec);
-            let mut mismatches = 0;
-            for x in &vecs.inputs[..n] {
-                let mut args = vec![runtime::TensorI32::new(
-                    x.iter().map(|&v| v as i32).collect(),
-                    vec![x.len() as i64],
-                )];
-                args.extend(weights.iter().cloned());
-                let golden = model.run_i32(&args)?;
-                let sim = nn::sim::forward(&spec, x);
-                let g: Vec<i64> = golden[0].data.iter().map(|&v| v as i64).collect();
-                if g != sim {
-                    mismatches += 1;
-                }
-            }
-            println!(
-                "golden cross-check ({} on {}): {}/{} match",
-                spec.name,
-                rt.platform(),
-                n - mismatches,
-                n
+            // Validate the vectors up front: a malformed file must fail
+            // loudly, not truncate the comparison into a false pass or
+            // panic inside the simulator.
+            anyhow::ensure!(
+                vecs.outputs.len() == vecs.inputs.len(),
+                "testvec: {} outputs for {} inputs",
+                vecs.outputs.len(),
+                vecs.inputs.len()
             );
+            for (i, x) in vecs.inputs.iter().enumerate() {
+                anyhow::ensure!(
+                    x.len() == spec.input_len(),
+                    "testvec input {i}: length {} != spec input length {}",
+                    x.len(),
+                    spec.input_len()
+                );
+            }
+            let n = vecs.inputs.len().min(32);
+            #[cfg(feature = "pjrt")]
+            {
+                let rt = runtime::Runtime::cpu()?;
+                let model = rt.load_hlo_text(hlo)?;
+                let weights = nn::weight_tensors(&spec);
+                let mut mismatches = 0;
+                for x in &vecs.inputs[..n] {
+                    let mut args = vec![runtime::TensorI32::new(
+                        x.iter().map(|&v| v as i32).collect(),
+                        vec![x.len() as i64],
+                    )];
+                    args.extend(weights.iter().cloned());
+                    let golden = model.run_i32(&args)?;
+                    let sim = nn::sim::forward(&spec, x);
+                    let g: Vec<i64> = golden[0].data.iter().map(|&v| v as i64).collect();
+                    if g != sim {
+                        mismatches += 1;
+                    }
+                }
+                println!(
+                    "golden cross-check ({} on {}): {}/{} match",
+                    spec.name,
+                    rt.platform(),
+                    n - mismatches,
+                    n
+                );
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                // Default build: the pure-Rust golden backend replays the
+                // spec; cross-check it against the *exported* vectors
+                // (the JAX-side golden data), ignoring the HLO path.
+                let _ = hlo;
+                let golden = runtime::golden::GoldenModel::from_spec(spec.clone());
+                let mut mismatches = 0;
+                for (x, want) in vecs.inputs[..n].iter().zip(&vecs.outputs) {
+                    if &golden.run(x) != want {
+                        mismatches += 1;
+                    }
+                }
+                println!(
+                    "golden cross-check ({} on golden-sim; rebuild with --features pjrt \
+                     for PJRT): {}/{} match exported vectors",
+                    spec.name,
+                    n - mismatches,
+                    n
+                );
+            }
         }
         "verify" => {
             let spec = load_spec(args.pos(0, "spec path")?)?;

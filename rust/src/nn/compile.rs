@@ -19,7 +19,7 @@ use crate::fixed::QInterval;
 use crate::pipeline::{self, PipelineConfig};
 use crate::Result;
 use anyhow::{anyhow, bail};
-use rustc_hash::FxHashMap;
+use crate::util::fxhash::FxHashMap;
 
 /// Node-level network state (mirrors [`super::sim::State`]).
 #[derive(Debug, Clone)]
@@ -109,14 +109,14 @@ fn template_for(
     w: &[Vec<i64>],
     in_qint: QInterval,
     strategy: Strategy,
-) -> (CmvmProblem, DaisProgram) {
+) -> Result<(CmvmProblem, DaisProgram)> {
     let d_in = w.len();
     let d_out = w.first().map(|r| r.len()).unwrap_or(0);
     let matrix: Vec<i64> = w.iter().flat_map(|r| r.iter().copied()).collect();
     let mut problem = CmvmProblem::new(d_in, d_out, matrix, 8);
     problem.input_qint = vec![in_qint; d_in];
-    let sol = optimize(&problem, strategy);
-    (problem, sol.program)
+    let sol = optimize(&problem, strategy)?;
+    Ok((problem, sol.program))
 }
 
 /// Fuse a dense / einsum / residual network into one DAIS program
@@ -146,7 +146,7 @@ pub fn fuse(spec: &NetworkSpec, strategy: Strategy) -> Result<DaisProgram> {
                 problem.input_qint = vec![qint; d_in];
                 let inputs: Vec<InputTerm> =
                     x.iter().map(|&node| InputTerm { node }).collect();
-                let outs = optimize_terms(&mut b, &inputs, &problem, strategy);
+                let outs = optimize_terms(&mut b, &inputs, &problem, strategy)?;
                 let ys: Vec<NodeId> = outs
                     .iter()
                     .enumerate()
@@ -164,7 +164,7 @@ pub fn fuse(spec: &NetworkSpec, strategy: Strategy) -> Result<DaisProgram> {
                 let NodeState::Grid { nodes, p, f } = state else {
                     bail!("layer {li}: einsum_dense needs grid state")
                 };
-                let (_, template) = template_for(w, qint, strategy);
+                let (_, template) = template_for(w, qint, strategy)?;
                 let d_out = bias.len();
                 let apply = |b: &mut DaisBuilder, xs: &[NodeId]| -> Vec<NodeId> {
                     inline(b, &template, xs)
@@ -292,7 +292,7 @@ pub fn layer_reports(
                         let inputs: Vec<InputTerm> = (0..d_in)
                             .map(|j| InputTerm { node: bb.input(j, qint, 0) })
                             .collect();
-                        let outs = optimize_terms(&mut bb, &inputs, &problem, s);
+                        let outs = optimize_terms(&mut bb, &inputs, &problem, s)?;
                         for (i, o) in outs.iter().enumerate() {
                             let n = epilogue(
                                 &mut bb, o.node, o.shift, o.neg, b[i], *relu, *shift,

@@ -8,7 +8,7 @@
 use super::spec::{LayerSpec, NetworkSpec};
 use crate::dais::interp::quant_scalar;
 use crate::dais::RoundMode;
-use rustc_hash::FxHashMap;
+use crate::util::fxhash::FxHashMap;
 
 /// The flowing activation state.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -1,0 +1,129 @@
+//! Pure-Rust golden-model backend (the default, hermetic runtime).
+//!
+//! Serves the exported JSON weight/test-vector artifacts through the
+//! bit-exact [`crate::nn::sim`] interpreter — the same integer semantics
+//! the JAX export was generated with — so the end-to-end flows keep a
+//! golden reference (and their skip-when-absent behavior) without
+//! linking PJRT. The [`GoldenModel::run_i32`] entry point mirrors the
+//! PJRT `LoadedModel::run_i32` call shape (see `runtime::pjrt`, feature
+//! `pjrt`) so callers can swap backends mechanically.
+
+use super::{artifacts_dir, load_text, TensorI32};
+use crate::nn::{self, NetworkSpec, TestVectors};
+use crate::Result;
+use anyhow::ensure;
+use std::path::Path;
+
+/// A golden model backed by an exported network spec.
+pub struct GoldenModel {
+    spec: NetworkSpec,
+    /// Human-readable provenance (artifact name or "inline").
+    pub name: String,
+}
+
+impl GoldenModel {
+    /// Wrap an already-decoded spec.
+    pub fn from_spec(spec: NetworkSpec) -> Self {
+        let name = spec.name.clone();
+        Self { spec, name }
+    }
+
+    /// Load `<dir>/<name>.weights.json`.
+    pub fn load_from<P: AsRef<Path>>(dir: P, name: &str) -> Result<Self> {
+        let path = dir.as_ref().join(format!("{name}.weights.json"));
+        let spec = NetworkSpec::from_json(&load_text(&path)?)?;
+        Ok(Self { spec, name: path.display().to_string() })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load(name: &str) -> Result<Self> {
+        Self::load_from(artifacts_dir(), name)
+    }
+
+    /// The wrapped network spec.
+    pub fn spec(&self) -> &NetworkSpec {
+        &self.spec
+    }
+
+    /// Run one flat input vector; returns the flat output.
+    pub fn run(&self, x: &[i64]) -> Vec<i64> {
+        nn::sim::forward(&self.spec, x)
+    }
+
+    /// Run a batch of input vectors.
+    pub fn run_batch(&self, xs: &[Vec<i64>]) -> Vec<Vec<i64>> {
+        nn::sim::forward_batch(&self.spec, xs)
+    }
+
+    /// PJRT-shaped entry point: the first tensor is the network input;
+    /// any further tensors (the weight arguments of the HLO convention)
+    /// are ignored because the spec already embeds the weights. Returns
+    /// a single output tensor.
+    pub fn run_i32(&self, inputs: &[TensorI32]) -> Result<Vec<TensorI32>> {
+        ensure!(!inputs.is_empty(), "golden run_i32: no input tensor");
+        let x: Vec<i64> = inputs[0].data.iter().map(|&v| v as i64).collect();
+        ensure!(
+            x.len() == self.spec.input_len(),
+            "golden run_i32: input length {} != spec input length {}",
+            x.len(),
+            self.spec.input_len()
+        );
+        let y = self.run(&x);
+        let dims = vec![y.len() as i64];
+        Ok(vec![TensorI32::new(y.into_iter().map(|v| v as i32).collect(), dims)])
+    }
+}
+
+/// Load `<artifacts>/<name>.testvec.json` (the exported golden vectors).
+pub fn load_test_vectors(name: &str) -> Result<TestVectors> {
+    let path = artifacts_dir().join(format!("{name}.testvec.json"));
+    TestVectors::from_json(&load_text(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> NetworkSpec {
+        NetworkSpec::from_json(
+            r#"{"name":"tiny","input_bits":4,"input_signed":true,"input_shape":[2],
+                "layers":[{"type":"dense","w":[[1,2],[3,4]],"b":[0,-1],"relu":false,
+                           "shift":0,"clip_min":-512,"clip_max":511}]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn runs_spec_through_sim() {
+        let g = GoldenModel::from_spec(tiny_spec());
+        // y = [x0 + 3 x1, 2 x0 + 4 x1 - 1]
+        assert_eq!(g.run(&[1, 2]), vec![7, 9]);
+        assert_eq!(g.name, "tiny");
+    }
+
+    #[test]
+    fn run_i32_matches_pjrt_call_shape() {
+        let g = GoldenModel::from_spec(tiny_spec());
+        let input = TensorI32::new(vec![1, 2], vec![2]);
+        // Extra (weight) tensors are tolerated and ignored.
+        let extra = TensorI32::new(vec![0; 4], vec![2, 2]);
+        let out = g.run_i32(&[input, extra]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].data, vec![7, 9]);
+        assert_eq!(out[0].dims, vec![2]);
+    }
+
+    #[test]
+    fn run_i32_rejects_bad_arity() {
+        let g = GoldenModel::from_spec(tiny_spec());
+        assert!(g.run_i32(&[]).is_err());
+        let bad = TensorI32::new(vec![1, 2, 3], vec![3]);
+        assert!(g.run_i32(&[bad]).is_err());
+    }
+
+    #[test]
+    fn load_missing_artifact_is_clean_error() {
+        assert!(GoldenModel::load_from("/nonexistent-dir", "jet_mlp").is_err());
+        assert!(load_test_vectors("definitely_missing").is_err());
+    }
+}

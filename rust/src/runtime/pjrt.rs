@@ -1,0 +1,108 @@
+//! PJRT backend (feature `pjrt`) — loads the JAX-lowered HLO artifacts
+//! and executes them on the PJRT CPU client via the `xla` crate. This is
+//! the *hardware* golden model the DAIS simulation is cross-checked
+//! against in the end-to-end examples; Python is never on this path.
+//!
+//! In hermetic builds the `xla` dependency resolves to the vendored API
+//! stub (`vendor/xla`), which compiles everywhere but errors at runtime;
+//! point it at the real crate to execute HLO.
+
+use super::TensorI32;
+use crate::Result;
+use anyhow::anyhow;
+use std::path::Path;
+
+/// A PJRT CPU runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled HLO module ready for execution.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Human-readable provenance (artifact path).
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    /// Platform name reported by PJRT (e.g. "cpu" / "Host").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO **text** artifact.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<LoadedModel> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(LoadedModel { exe, name: path.display().to_string() })
+    }
+}
+
+fn to_literal(t: &TensorI32) -> Result<xla::Literal> {
+    xla::Literal::vec1(&t.data)
+        .reshape(&t.dims)
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+impl LoadedModel {
+    /// Execute on i32 tensors; the module must return a tuple (jax
+    /// lowering with `return_tuple=True`), and each element must be i32.
+    pub fn run_i32(&self, inputs: &[TensorI32]) -> Result<Vec<TensorI32>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+                let dims = match &shape {
+                    xla::Shape::Array(a) => a.dims().to_vec(),
+                    _ => return Err(anyhow!("non-array output")),
+                };
+                let data = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                Ok(TensorI32::new(data, dims))
+            })
+            .collect()
+    }
+
+    /// Execute on f32 tensors (for float-graph artifacts).
+    pub fn run_f32(&self, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(d, dims)| {
+                xla::Literal::vec1(d).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}

@@ -5,13 +5,14 @@
 //! `proptest`, `criterion`, `tokio`) are unavailable; these utilities
 //! provide the subset the system needs, built from scratch.
 
+pub mod fxhash;
 mod rng;
 
 pub use rng::Rng;
 
 /// Run a property over `cases` deterministic seeds; panics with the
 /// failing seed on the first violation (an in-tree stand-in for
-//  proptest's runner — rerun with the printed seed to reproduce).
+/// proptest's runner — rerun with the printed seed to reproduce).
 pub fn property<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut f: F) {
     for case in 0..cases {
         let seed = 0x9E3779B97F4A7C15u64

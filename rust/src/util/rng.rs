@@ -52,8 +52,14 @@ impl Rng {
         if span == 1 {
             return lo;
         }
+        if span == 1u128 << 64 {
+            // Full i64 range (lo == i64::MIN, hi == i64::MAX): every u64
+            // bit pattern maps to a distinct in-range value, and the
+            // truncation `span as u64 == 0` below would divide by zero.
+            return self.next_u64() as i64;
+        }
         // Rejection sampling on the top multiple of span.
-        let span64 = span as u64; // span <= 2^64 when lo/hi are i64
+        let span64 = span as u64; // span < 2^64 here
         let zone = u64::MAX - (u64::MAX % span64);
         loop {
             let v = self.next_u64();
@@ -164,5 +170,35 @@ mod tests {
     fn single_point_range() {
         let mut rng = Rng::seed_from(5);
         assert_eq!(rng.range_i64(4, 4), 4);
+    }
+
+    /// Regression: the full-span and near-full-span ranges used to hit a
+    /// `u64::MAX % 0` division-by-zero (`span as u64 == 0` truncation).
+    #[test]
+    fn prop_extreme_ranges_never_panic() {
+        crate::util::property("rng_extreme_ranges", 16, |rng| {
+            // Full span: any i64 is valid; must not panic.
+            let _ = rng.range_i64(i64::MIN, i64::MAX);
+            // Near-full spans exercise the rejection path at span ~ 2^64.
+            let v = rng.range_i64(i64::MIN + 1, i64::MAX);
+            assert!(v >= i64::MIN + 1);
+            let w = rng.range_i64(i64::MIN, i64::MAX - 1);
+            assert!(w <= i64::MAX - 1);
+            // Extreme single-sided bounds.
+            assert_eq!(rng.range_i64(i64::MAX, i64::MAX), i64::MAX);
+            assert_eq!(rng.range_i64(i64::MIN, i64::MIN), i64::MIN);
+        });
+    }
+
+    #[test]
+    fn full_span_hits_both_signs() {
+        let mut rng = Rng::seed_from(12);
+        let (mut neg, mut pos) = (false, false);
+        for _ in 0..64 {
+            let v = rng.range_i64(i64::MIN, i64::MAX);
+            neg |= v < 0;
+            pos |= v >= 0;
+        }
+        assert!(neg && pos, "full-span sampling is degenerate");
     }
 }

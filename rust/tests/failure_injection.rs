@@ -91,6 +91,29 @@ fn testvec_decoder_rejects_malformed() {
     assert!(ok.labels.is_empty());
 }
 
+/// Regression for unbounded recursion: a deeply nested artifact used to
+/// blow the stack inside `json::parse` (decoders must return errors,
+/// never panic or crash). The depth limit converts it into a clean error
+/// long before stack exhaustion, and is configurable per call.
+#[test]
+fn json_depth_bomb_returns_error_not_stack_overflow() {
+    // 200k unclosed arrays: without a depth limit this recursion level
+    // overflows an 8 MiB stack; with the limit it must error cleanly.
+    let bomb = "[".repeat(200_000);
+    assert!(json::parse(&bomb).is_err());
+    // Alternating array/object nesting hits both recursion sites.
+    let mixed = "[{\"k\":".repeat(50_000);
+    assert!(json::parse(&mixed).is_err());
+    // A closed-but-too-deep document is also rejected, with a
+    // depth-specific message.
+    let deep = format!("{}1{}", "[".repeat(300), "]".repeat(300));
+    let err = json::parse(&deep).unwrap_err();
+    assert!(format!("{err}").contains("nesting depth"), "got: {err}");
+    // The limit is configurable (picojson-rs convention).
+    assert!(json::parse_with_depth(&deep, 512).is_ok());
+    assert!(json::parse_with_depth("[[1]]", 1).is_err());
+}
+
 #[test]
 fn json_parser_never_panics_on_garbage() {
     let cases = [

@@ -140,8 +140,31 @@ fn rtl_emission_structural_checks() {
     assert!(vhdl.contains("end architecture;"));
 }
 
+/// The default (pure-Rust) golden backend serves the exported artifacts
+/// through the PJRT-shaped `run_i32` entry point and reproduces the
+/// JAX-exported outputs bit-exactly. Skips cleanly without artifacts.
+#[test]
+fn golden_fallback_cross_check_jet() {
+    let (spec, vecs) = needs_artifacts!("jet_mlp");
+    let golden = runtime::golden::GoldenModel::from_spec(spec.clone());
+    let weights = nn::weight_tensors(&spec);
+    for (x, want) in vecs.inputs.iter().zip(&vecs.outputs).take(16) {
+        let mut args = vec![runtime::TensorI32::new(
+            x.iter().map(|&v| v as i32).collect(),
+            vec![x.len() as i64],
+        )];
+        args.extend(weights.iter().cloned());
+        let out = golden.run_i32(&args).expect("golden run");
+        let got: Vec<i64> = out[0].data.iter().map(|&v| v as i64).collect();
+        assert_eq!(&got, want, "golden backend diverges from exported vectors");
+    }
+}
+
 /// The PJRT golden model agrees with the DAIS graph end-to-end (the
 /// three-layer composition proof, also exercised by the jet example).
+/// Requires the real `xla` crate; with the vendored stub the client
+/// constructor fails, so the test skips rather than asserts.
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_golden_cross_check_jet() {
     let (spec, vecs) = needs_artifacts!("jet_mlp");
@@ -151,7 +174,10 @@ fn pjrt_golden_cross_check_jet() {
         eprintln!("skipping: no HLO artifact");
         return;
     }
-    let rt = runtime::Runtime::cpu().expect("PJRT cpu client");
+    let Ok(rt) = runtime::Runtime::cpu() else {
+        eprintln!("skipping: PJRT unavailable (xla stub build)");
+        return;
+    };
     let golden = rt.load_hlo_text(&hlo).expect("compile HLO");
     let weights = nn::weight_tensors(&spec);
     for x in vecs.inputs.iter().take(16) {

@@ -1,0 +1,181 @@
+//! A minimal, offline-compatible subset of the `anyhow` error-handling
+//! crate, vendored so the workspace builds hermetically (no network, no
+//! registry). Only the surface the da4ml crate actually uses is
+//! implemented:
+//!
+//! * [`Error`] — an opaque, context-carrying error value;
+//! * [`Result<T>`] — `Result<T, Error>` with a defaulted error type;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — message/guard macros;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on results.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`; that keeps the blanket `From<E: std::error::Error>`
+//! conversion coherent with the reflexive `From<Error> for Error`, so `?`
+//! works both on foreign errors and on already-`anyhow` results.
+
+use std::fmt;
+
+/// An opaque error: a chain of human-readable context frames, outermost
+/// first, ending in the root-cause message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate over the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Flatten the source chain into the message so nothing is lost.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(cause) = src {
+            msg.push_str(": ");
+            msg.push_str(&cause.to_string());
+            src = cause.source();
+        }
+        Self { chain: vec![msg] }
+    }
+}
+
+/// `Result` with a defaulted [`Error`] type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error arm of a result.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_display() {
+        assert_eq!(fails(true).unwrap(), 7);
+        let e = fails(false).unwrap_err();
+        assert_eq!(format!("{e}"), "flag was false");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e:?}"), "x = 3");
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: Result<()> = Err(anyhow!("root"));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn question_mark_on_foreign_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! Offline API stub of the `xla` crate's PJRT surface.
+//!
+//! The real `xla` crate links `xla_extension` (PJRT CPU client) and is
+//! not available in the hermetic build environment. This stub exposes
+//! the exact API subset `da4ml::runtime::pjrt` compiles against so the
+//! `pjrt` feature can be *built* anywhere; every runtime entry point
+//! returns an explanatory error. To execute real HLO artifacts, replace
+//! this path dependency with the actual `xla` crate (same API) and
+//! rebuild with `--features pjrt`.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real crate's opaque error.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// Stub-local result type.
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn stub_err() -> XlaError {
+    XlaError(
+        "xla stub: the PJRT runtime is not linked in this offline build; \
+         swap vendor/xla for the real xla crate to execute HLO artifacts"
+            .to_string(),
+    )
+}
+
+/// Marker trait for element types a [`Literal`] can carry.
+pub trait NativeType: Copy {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client — always errors in the stub.
+    pub fn cpu() -> Result<Self> {
+        Err(stub_err())
+    }
+
+    /// Platform name reported by PJRT.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation — always errors in the stub.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err())
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO **text** file — always errors in the stub.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        Err(stub_err())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// A compiled executable (stub: unreachable, the client never compiles).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on device — always errors in the stub.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err())
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy back to a host literal — always errors in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err())
+    }
+}
+
+/// Array shape: element dims (the real crate also carries a dtype).
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension sizes.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// An XLA shape.
+pub enum Shape {
+    /// A dense array shape.
+    Array(ArrayShape),
+    /// A tuple of shapes.
+    Tuple(Vec<Shape>),
+}
+
+/// A host-side literal value.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _private: () })
+    }
+
+    /// Split a tuple literal into its elements — stub: always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(stub_err())
+    }
+
+    /// The literal's shape — stub: always errors.
+    pub fn shape(&self) -> Result<Shape> {
+        Err(stub_err())
+    }
+
+    /// Copy the elements out — stub: always errors.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(stub_err())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surfaces_errors_not_panics() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1i32, 2, 3]).reshape(&[3]).unwrap();
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(lit.shape().is_err());
+        assert!(lit.to_tuple().is_err());
+    }
+}
