@@ -1,0 +1,165 @@
+//! Ingestion micro-benchmark: the zero-copy streaming artifact loader
+//! vs the legacy DOM path on the jet-tagging weight artifact.
+//!
+//! Loads `artifacts/jet_mlp.weights.json` when the exported artifacts
+//! exist, otherwise synthesizes a jet-MLP-shaped spec (16-64-32-32-5,
+//! 8-bit weights) of the same JSON form. A counting global allocator
+//! makes the headline claim measurable: the pull-parser path
+//! (`NetworkSpec::from_json`) allocates **no `Value` tree** — only the
+//! final spec storage — while the DOM path pays for every matrix
+//! element boxed as a `Value`.
+
+use da4ml::json;
+use da4ml::nn::{LayerSpec, NetworkSpec, TestVectors};
+use da4ml::report::{sci, Table};
+use da4ml::runtime;
+use da4ml::util::{time_median, Rng};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Pass-through allocator that counts allocations and bytes requested.
+struct Counting;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: Counting = Counting;
+
+/// Run `f`, returning its result plus (allocations, bytes) it made.
+fn count_allocs<T>(f: impl FnOnce() -> T) -> (T, u64, u64) {
+    let (a0, b0) = (ALLOCS.load(Ordering::Relaxed), BYTES.load(Ordering::Relaxed));
+    let out = f();
+    let (a1, b1) = (ALLOCS.load(Ordering::Relaxed), BYTES.load(Ordering::Relaxed));
+    (out, a1 - a0, b1 - b0)
+}
+
+fn dense(rng: &mut Rng, d_in: usize, d_out: usize, relu: bool) -> LayerSpec {
+    LayerSpec::Dense {
+        w: (0..d_in)
+            .map(|_| (0..d_out).map(|_| rng.range_i64(-127, 127)).collect())
+            .collect(),
+        b: (0..d_out).map(|_| rng.range_i64(-512, 511)).collect(),
+        relu,
+        shift: 6,
+        clip_min: -128,
+        clip_max: 127,
+    }
+}
+
+/// The paper's jet-tagging MLP shape (§6.2: 16-64-32-32-5).
+fn synthetic_jet_spec() -> NetworkSpec {
+    let mut rng = Rng::seed_from(42);
+    NetworkSpec {
+        name: "jet_mlp_synthetic".into(),
+        input_bits: 8,
+        input_signed: true,
+        input_shape: vec![16],
+        layers: vec![
+            dense(&mut rng, 16, 64, true),
+            dense(&mut rng, 64, 32, true),
+            dense(&mut rng, 32, 32, true),
+            dense(&mut rng, 32, 5, false),
+        ],
+    }
+}
+
+fn main() {
+    let artifact = runtime::artifacts_dir().join("jet_mlp.weights.json");
+    let (source, text) = match runtime::load_text(&artifact) {
+        Ok(t) => (artifact.display().to_string(), t),
+        Err(_) => ("synthetic jet_mlp (16-64-32-32-5)".into(), synthetic_jet_spec().to_json()),
+    };
+    println!("artifact: {source} ({} KiB)\n", text.len() / 1024);
+
+    let mut table = Table::new(
+        "Artifact ingestion: DOM vs streaming pull parser",
+        &["path", "median[ms]", "allocs", "alloc KiB"],
+    );
+
+    // DOM path: parse to a Value tree, then decode the tree.
+    let (dur_dom, _) = time_median(15, || {
+        let v = json::parse(&text).expect("parse");
+        NetworkSpec::from_value(&v).expect("decode")
+    });
+    let (_, allocs_tree, bytes_tree) = count_allocs(|| json::parse(&text).expect("parse"));
+    let (_, allocs_dom, bytes_dom) = count_allocs(|| {
+        let v = json::parse(&text).expect("parse");
+        NetworkSpec::from_value(&v).expect("decode")
+    });
+    table.push(vec![
+        "DOM (parse + from_value)".into(),
+        sci(dur_dom.as_secs_f64() * 1e3),
+        allocs_dom.to_string(),
+        (bytes_dom / 1024).to_string(),
+    ]);
+    table.push(vec![
+        "  of which Value tree".into(),
+        "-".into(),
+        allocs_tree.to_string(),
+        (bytes_tree / 1024).to_string(),
+    ]);
+
+    // Streaming path: events straight into the spec, no tree.
+    let (dur_stream, _) = time_median(15, || NetworkSpec::from_json(&text).expect("decode"));
+    let (_, allocs_stream, bytes_stream) =
+        count_allocs(|| NetworkSpec::from_json(&text).expect("decode"));
+    table.push(vec![
+        "streaming (from_json)".into(),
+        sci(dur_stream.as_secs_f64() * 1e3),
+        allocs_stream.to_string(),
+        (bytes_stream / 1024).to_string(),
+    ]);
+    println!("{}", table.render());
+
+    // Test vectors ride the same fast path.
+    let vec_artifact = runtime::artifacts_dir().join("jet_mlp.testvec.json");
+    if let Ok(vtext) = runtime::load_text(&vec_artifact) {
+        let (dur_v, _) = time_median(9, || TestVectors::from_json(&vtext).expect("decode"));
+        println!(
+            "testvec streaming decode: {} ms ({} KiB)",
+            sci(dur_v.as_secs_f64() * 1e3),
+            vtext.len() / 1024
+        );
+    }
+
+    // The decoded specs agree, and the headline claims hold.
+    let dom_spec = NetworkSpec::from_value(&json::parse(&text).expect("parse")).expect("decode");
+    let stream_spec = NetworkSpec::from_json(&text).expect("decode");
+    assert_eq!(dom_spec.to_json(), stream_spec.to_json(), "paths decode identically");
+    assert!(
+        allocs_stream < allocs_tree,
+        "streaming ({allocs_stream} allocs) must allocate less than the \
+         Value tree alone ({allocs_tree} allocs)"
+    );
+    assert!(
+        bytes_stream < bytes_dom,
+        "streaming ({bytes_stream} B) must allocate fewer bytes than the DOM \
+         path ({bytes_dom} B)"
+    );
+    println!(
+        "\nstreaming path: {:.1}x fewer allocations, {:.1}x less allocated memory, \
+         {:.2}x speedup vs DOM",
+        allocs_dom as f64 / allocs_stream.max(1) as f64,
+        bytes_dom as f64 / bytes_stream.max(1) as f64,
+        dur_dom.as_secs_f64() / dur_stream.as_secs_f64().max(1e-9)
+    );
+}

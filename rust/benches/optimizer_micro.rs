@@ -1,5 +1,5 @@
-//! Micro-benchmarks of the optimizer hot paths (tracked by the §Perf
-//! pass in EXPERIMENTS.md). Plain timing harness: median of N runs.
+//! Micro-benchmarks of the optimizer hot paths. Plain timing harness:
+//! median of N runs (see also `ingestion_micro` for the artifact-load path).
 
 use da4ml::cmvm::{optimize, CmvmProblem, Strategy};
 use da4ml::dais::interp;

@@ -15,6 +15,28 @@
 //! another's (cache poisoning). The hasher is pluggable (FxHash by
 //! default) which lets the tests force total collisions and prove the
 //! full-key equality path.
+//!
+//! The long-lived JSONL compile service ([`crate::serve`]) drives
+//! batches through [`Coordinator::compile_batch`], which reports the
+//! per-job cache-hit flag the streamed replies expose.
+//!
+//! ```
+//! use da4ml::cmvm::{CmvmProblem, Strategy};
+//! use da4ml::coordinator::{CompileJob, Coordinator};
+//!
+//! let coord = Coordinator::new();
+//! let job = CompileJob {
+//!     name: "layer0".into(),
+//!     problem: CmvmProblem::new(2, 2, vec![3, 5, -7, 9], 8),
+//!     strategy: Strategy::Da { dc: -1 },
+//! };
+//! let (first, hit) = coord.compile_cached(&job).unwrap();
+//! assert!(!hit);
+//! let (again, hit) = coord.compile_cached(&job).unwrap();
+//! assert!(hit);
+//! assert_eq!(first.adders, again.adders);
+//! assert_eq!(coord.stats().cache_hits, 1);
+//! ```
 
 use crate::cmvm::{optimize, CmvmProblem, CmvmSolution, Strategy};
 use crate::fixed::QInterval;
@@ -108,32 +130,62 @@ impl Coordinator<FxBuildHasher> {
 impl<S: BuildHasher + Default> Coordinator<S> {
     /// Compile one job (synchronous; cache-aware).
     pub fn compile(&self, job: &CompileJob) -> Result<Arc<CmvmSolution>> {
+        self.compile_cached(job).map(|(sol, _)| sol)
+    }
+
+    /// Compile one job, additionally reporting whether the solution was
+    /// served from the cache (`true` = no optimizer run for this call).
+    ///
+    /// Two identical jobs racing through a batch can both report a miss
+    /// (both saw the empty slot before either inserted); the cache still
+    /// ends up with a single entry.
+    pub fn compile_cached(&self, job: &CompileJob) -> Result<(Arc<CmvmSolution>, bool)> {
         let key = job_key(&job.problem, job.strategy);
         {
             let mut inner = self.inner.lock().unwrap();
             inner.stats.submitted += 1;
             if let Some(sol) = inner.cache.get(&key).cloned() {
                 inner.stats.cache_hits += 1;
-                return Ok(sol);
+                return Ok((sol, true));
             }
         }
         let sol = Arc::new(optimize(&job.problem, job.strategy)?);
         let mut inner = self.inner.lock().unwrap();
         inner.stats.total_opt_time += sol.opt_time;
         inner.cache.entry(key).or_insert_with(|| sol.clone());
-        Ok(sol)
+        Ok((sol, false))
     }
 
     /// Compile a batch concurrently on a scoped worker pool, preserving
-    /// job order in the result.
+    /// job order in the result; the first failing job aborts the batch.
     pub fn compile_many(&self, jobs: Vec<CompileJob>) -> Result<Vec<Arc<CmvmSolution>>>
     where
         S: Send,
     {
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        crate::util::parallel_map(jobs, threads, |job| self.compile(&job))
-            .into_iter()
-            .collect()
+        self.compile_batch(jobs, 0).into_iter().map(|r| r.map(|(sol, _)| sol)).collect()
+    }
+
+    /// Compile a batch concurrently, returning **per-job** results with
+    /// the cache-hit flag, in job order. Unlike
+    /// [`Coordinator::compile_many`], one failing job does not abort the
+    /// batch — the serve loop turns individual failures into JSONL error
+    /// replies while the rest of the batch proceeds.
+    ///
+    /// `threads == 0` selects the available hardware parallelism.
+    pub fn compile_batch(
+        &self,
+        jobs: Vec<CompileJob>,
+        threads: usize,
+    ) -> Vec<Result<(Arc<CmvmSolution>, bool)>>
+    where
+        S: Send,
+    {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        crate::util::parallel_map(jobs, threads, |job| self.compile_cached(&job))
     }
 
     /// Snapshot the statistics.
@@ -214,6 +266,28 @@ mod tests {
         assert_eq!(adders_direct, adders_batch);
         // Every batch job was a cache hit.
         assert_eq!(c.stats().cache_hits as usize, 6);
+    }
+
+    #[test]
+    fn compile_batch_reports_per_job_cache_hits() {
+        let c = Coordinator::new();
+        // Jobs 0 and 2 are identical; job 1 differs.
+        let jobs = vec![job(20), job(21), job(20)];
+        let first = c.compile_batch(jobs.clone(), 2);
+        assert_eq!(first.len(), 3);
+        let flags: Vec<bool> = first.iter().map(|r| r.as_ref().unwrap().1).collect();
+        // The duplicate pair may race (both miss) but never yields more
+        // than one cached entry per distinct key.
+        assert!(!flags[1], "distinct job can never be a hit in a cold cache");
+        assert_eq!(c.cache_len(), 2);
+        // A warm re-run is all hits, order preserved.
+        let again = c.compile_batch(jobs, 0);
+        for (a, b) in first.iter().zip(&again) {
+            let (sa, _) = a.as_ref().unwrap();
+            let (sb, hit) = b.as_ref().unwrap();
+            assert!(*hit);
+            assert!(Arc::ptr_eq(sa, sb) || sa.adders == sb.adders);
+        }
     }
 
     /// A hasher that maps *every* key to the same bucket, simulating

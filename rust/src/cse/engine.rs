@@ -81,7 +81,7 @@ impl Column {
     /// Drop dead digits and rebuild the index. Pattern counts are
     /// index-independent, so this is safe between update steps; it keeps
     /// the alive() scans O(live) instead of O(all-ever-created) — the
-    /// optimizer's dominant cost without it (see EXPERIMENTS.md §Perf).
+    /// optimizer's dominant cost without it (the `optimizer_micro` bench tracks this hot path).
     fn compact(&mut self) {
         if (self.dead as usize) * 2 < self.digits.len() {
             return;

@@ -3,7 +3,7 @@
 //!
 //! The combinational interpreter evaluates a program on one input vector
 //! with exact integer semantics and (in debug/checked mode) asserts every
-//! intermediate value stays inside its statically-tracked [`QInterval`] —
+//! intermediate value stays inside its statically-tracked [`crate::fixed::QInterval`] —
 //! i.e. the synthesized bitwidths are sufficient and no wrap can occur.
 //!
 //! The pipelined interpreter replays a *stream* of input vectors through
@@ -64,7 +64,7 @@ pub fn evaluate(program: &DaisProgram, inputs: &[i64]) -> Vec<i64> {
 }
 
 /// Like [`evaluate`] but additionally asserts every node value stays
-/// inside its static [`QInterval`] — the "no wrap possible" soundness
+/// inside its static [`crate::fixed::QInterval`] — the "no wrap possible" soundness
 /// check (used by tests and the `simulate --checked` CLI path).
 pub fn evaluate_checked(program: &DaisProgram, inputs: &[i64]) -> Vec<i64> {
     assert_eq!(inputs.len(), program.num_inputs, "input arity mismatch");

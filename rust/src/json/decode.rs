@@ -1,0 +1,290 @@
+//! Typed streaming decoders over the [`PullParser`] event stream.
+//!
+//! [`Decoder`] is the ingestion surface the artifact loaders
+//! ([`crate::nn::NetworkSpec`], [`crate::nn::TestVectors`], the `serve`
+//! JSONL jobs) are written against: field-by-field object walking,
+//! integer vectors/matrices decoded straight into their final `Vec`
+//! storage, and `skip_value` for unknown fields — no intermediate
+//! [`crate::json::Value`] tree is ever materialized.
+//!
+//! ```
+//! use da4ml::json::decode::Decoder;
+//!
+//! let mut d = Decoder::new(r#"{"name": "net", "w": [[1, -2], [3, 4]], "extra": null}"#);
+//! let mut name = String::new();
+//! let mut w = Vec::new();
+//! d.object_start().unwrap();
+//! while let Some(key) = d.next_key().unwrap() {
+//!     match key.as_ref() {
+//!         "name" => name = d.string().unwrap(),
+//!         "w" => w = d.i64_mat().unwrap(),
+//!         _ => d.skip_value().unwrap(),
+//!     }
+//! }
+//! d.end().unwrap();
+//! assert_eq!(name, "net");
+//! assert_eq!(w, vec![vec![1, -2], vec![3, 4]]);
+//! ```
+
+use super::pull::{Event, PullParser};
+use anyhow::{bail, Result};
+use std::borrow::Cow;
+
+/// Exact-integer view of a numeric event, accepting integral floats
+/// inside the f64-exact window (mirrors [`crate::json::Value::as_i64`]).
+fn int_like(ev: &Event<'_>) -> Option<i64> {
+    match ev {
+        Event::Int(v) => Some(*v),
+        Event::Float(f) if f.fract() == 0.0 && f.abs() < 9e15 => Some(*f as i64),
+        _ => None,
+    }
+}
+
+/// A typed pull decoder. Methods consume exactly the events of the
+/// construct they name and error (without panicking) on anything else.
+pub struct Decoder<'a> {
+    p: PullParser<'a>,
+}
+
+impl<'a> Decoder<'a> {
+    /// Decoder over `text` with the default depth limit.
+    pub fn new(text: &'a str) -> Self {
+        Self { p: PullParser::new(text) }
+    }
+
+    /// Decoder over `text` with an explicit depth limit.
+    pub fn with_max_depth(text: &'a str, max_depth: usize) -> Self {
+        Self { p: PullParser::with_max_depth(text, max_depth) }
+    }
+
+    /// Consume the opening `{` of an object.
+    pub fn object_start(&mut self) -> Result<()> {
+        match self.p.next()? {
+            Event::ObjectStart => Ok(()),
+            ev => bail!("expected object, got {ev:?}"),
+        }
+    }
+
+    /// Consume the opening `[` of an array.
+    pub fn array_start(&mut self) -> Result<()> {
+        match self.p.next()? {
+            Event::ArrayStart => Ok(()),
+            ev => bail!("expected array, got {ev:?}"),
+        }
+    }
+
+    /// Inside an object: the next key, or `None` at the closing `}`.
+    pub fn next_key(&mut self) -> Result<Option<Cow<'a, str>>> {
+        match self.p.next()? {
+            Event::Key(k) => Ok(Some(k)),
+            Event::ObjectEnd => Ok(None),
+            ev => bail!("expected object key, got {ev:?}"),
+        }
+    }
+
+    /// At an array-element position: consume an `{` and return `true`,
+    /// or the closing `]` and return `false`.
+    pub fn next_object_in_array(&mut self) -> Result<bool> {
+        match self.p.next()? {
+            Event::ObjectStart => Ok(true),
+            Event::ArrayEnd => Ok(false),
+            ev => bail!("expected object or end of array, got {ev:?}"),
+        }
+    }
+
+    /// Decode an exact integer value.
+    pub fn i64(&mut self) -> Result<i64> {
+        let ev = self.p.next()?;
+        int_like(&ev).ok_or_else(|| anyhow::anyhow!("expected integer, got {ev:?}"))
+    }
+
+    /// Decode a number as `f64`.
+    pub fn f64(&mut self) -> Result<f64> {
+        match self.p.next()? {
+            Event::Int(v) => Ok(v as f64),
+            Event::Float(f) => Ok(f),
+            ev => bail!("expected number, got {ev:?}"),
+        }
+    }
+
+    /// Decode a boolean value.
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.p.next()? {
+            Event::Bool(b) => Ok(b),
+            ev => bail!("expected bool, got {ev:?}"),
+        }
+    }
+
+    /// Decode a string value (owned).
+    pub fn string(&mut self) -> Result<String> {
+        match self.p.next()? {
+            Event::Str(s) => Ok(s.into_owned()),
+            ev => bail!("expected string, got {ev:?}"),
+        }
+    }
+
+    /// Decode `[int, ...]` straight into a `Vec<i64>`.
+    pub fn i64_vec(&mut self) -> Result<Vec<i64>> {
+        self.array_start()?;
+        let mut out = Vec::new();
+        loop {
+            let ev = self.p.next()?;
+            if ev == Event::ArrayEnd {
+                return Ok(out);
+            }
+            match int_like(&ev) {
+                Some(v) => out.push(v),
+                None => bail!("expected integer, got {ev:?}"),
+            }
+        }
+    }
+
+    /// Decode `[[int, ...], ...]` straight into a `Vec<Vec<i64>>` (the
+    /// weight-matrix hot path — no per-element `Value` boxing).
+    pub fn i64_mat(&mut self) -> Result<Vec<Vec<i64>>> {
+        self.array_start()?;
+        let mut out = Vec::new();
+        loop {
+            match self.p.next()? {
+                Event::ArrayEnd => return Ok(out),
+                Event::ArrayStart => {
+                    let mut row = Vec::new();
+                    loop {
+                        let ev = self.p.next()?;
+                        if ev == Event::ArrayEnd {
+                            break;
+                        }
+                        match int_like(&ev) {
+                            Some(v) => row.push(v),
+                            None => bail!("expected integer, got {ev:?}"),
+                        }
+                    }
+                    out.push(row);
+                }
+                ev => bail!("expected row array, got {ev:?}"),
+            }
+        }
+    }
+
+    /// Skip one complete value of any shape (scalar or container).
+    pub fn skip_value(&mut self) -> Result<()> {
+        let mut depth = 0usize;
+        loop {
+            match self.p.next()? {
+                Event::ObjectStart | Event::ArrayStart => depth += 1,
+                Event::ObjectEnd | Event::ArrayEnd => {
+                    // Guard against misuse at a container-end boundary:
+                    // error, don't underflow.
+                    if depth == 0 {
+                        bail!("expected a value to skip, got a container end");
+                    }
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                Event::Eof => bail!("unexpected end of input"),
+                _ => {
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Assert the document is complete (only whitespace remains).
+    pub fn end(&mut self) -> Result<()> {
+        match self.p.next()? {
+            Event::Eof => Ok(()),
+            ev => bail!("expected end of input, got {ev:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_walk_any_field_order() {
+        // The exporter sorts keys, but the decoder must not rely on it.
+        for text in [
+            r#"{"a": 1, "b": [2, 3]}"#,
+            r#"{"b": [2, 3], "a": 1}"#,
+        ] {
+            let mut d = Decoder::new(text);
+            let (mut a, mut b) = (None, None);
+            d.object_start().unwrap();
+            while let Some(key) = d.next_key().unwrap() {
+                match key.as_ref() {
+                    "a" => a = Some(d.i64().unwrap()),
+                    "b" => b = Some(d.i64_vec().unwrap()),
+                    _ => d.skip_value().unwrap(),
+                }
+            }
+            d.end().unwrap();
+            assert_eq!(a, Some(1));
+            assert_eq!(b, Some(vec![2, 3]));
+        }
+    }
+
+    #[test]
+    fn mat_decoding() {
+        let mut d = Decoder::new("[[1, 2], [], [-3]]");
+        assert_eq!(d.i64_mat().unwrap(), vec![vec![1, 2], vec![], vec![-3]]);
+        d.end().unwrap();
+
+        let mut d = Decoder::new(r#"[[1, "x"]]"#);
+        assert!(d.i64_mat().is_err());
+    }
+
+    #[test]
+    fn skip_value_consumes_whole_subtrees() {
+        let mut d = Decoder::new(r#"{"skip": {"x": [1, {"y": 2}]}, "keep": 7}"#);
+        d.object_start().unwrap();
+        let mut keep = None;
+        while let Some(key) = d.next_key().unwrap() {
+            match key.as_ref() {
+                "keep" => keep = Some(d.i64().unwrap()),
+                _ => d.skip_value().unwrap(),
+            }
+        }
+        d.end().unwrap();
+        assert_eq!(keep, Some(7));
+    }
+
+    /// Misusing skip_value at a container-end boundary must error, not
+    /// underflow the depth counter.
+    #[test]
+    fn skip_value_rejects_container_end_position() {
+        let mut d = Decoder::new("[1]");
+        d.array_start().unwrap();
+        d.skip_value().unwrap(); // consumes the 1
+        assert!(d.skip_value().is_err()); // positioned at the ']'
+    }
+
+    #[test]
+    fn integral_floats_accepted_as_ints() {
+        let mut d = Decoder::new("[1.0, 2]");
+        assert_eq!(d.i64_vec().unwrap(), vec![1, 2]);
+        let mut d = Decoder::new("[1.5]");
+        assert!(d.i64_vec().is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut d = Decoder::new("[1] x");
+        assert_eq!(d.i64_vec().unwrap(), vec![1]);
+        assert!(d.end().is_err());
+    }
+
+    #[test]
+    fn type_mismatches_are_errors() {
+        assert!(Decoder::new("[1]").object_start().is_err());
+        assert!(Decoder::new("{}").array_start().is_err());
+        assert!(Decoder::new("\"s\"").i64().is_err());
+        assert!(Decoder::new("1").bool().is_err());
+        assert!(Decoder::new("true").string().is_err());
+    }
+}

@@ -1,0 +1,271 @@
+//! The original recursive-descent DOM parser, kept **test-only** as the
+//! differential-testing reference for the iterative pull parser (the
+//! production [`crate::json::parse`] is now an adapter over
+//! [`crate::json::pull`]). Semantics are identical by construction —
+//! including the integer-overflow hard error — and the property test in
+//! `crate::json::tests` holds the two implementations equal on seeded
+//! random documents.
+
+use super::Value;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Recursive-descent parse with the default depth limit.
+#[allow(dead_code)]
+pub fn parse(text: &str) -> Result<Value> {
+    parse_with_depth(text, super::DEFAULT_MAX_DEPTH)
+}
+
+/// Recursive-descent parse with an explicit depth limit.
+pub fn parse_with_depth(text: &str, max_depth: usize) -> Result<Value> {
+    let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0, max_depth };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        bail!("trailing garbage at byte {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+    depth: usize,
+    max_depth: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > self.max_depth {
+            bail!("nesting depth exceeds {} at byte {}", self.max_depth, self.i);
+        }
+        Ok(())
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at byte {}, got '{}'", c as char, self.i, self.peek()? as char);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str, v: Value) -> Result<Value> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek()? {
+            b'n' => self.lit("null", Value::Null),
+            b't' => self.lit("true", Value::Bool(true)),
+            b'f' => self.lit("false", Value::Bool(false)),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b'[' => self.array(),
+            b'{' => self.object(),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected '{}' at byte {}", c as char, self.i),
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.enter()?;
+        let v = self.array_body();
+        self.depth -= 1;
+        v
+    }
+
+    fn array_body(&mut self) -> Result<Value> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Value::Array(out));
+        }
+        loop {
+            self.ws();
+            out.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Value::Array(out));
+                }
+                c => bail!("expected ',' or ']' at byte {}, got '{}'", self.i, c as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.enter()?;
+        let v = self.object_body();
+        self.depth -= 1;
+        v
+    }
+
+    fn object_body(&mut self) -> Result<Value> {
+        self.eat(b'{')?;
+        let mut out = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Value::Object(out));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let val = self.value()?;
+            out.insert(key, val);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Value::Object(out));
+                }
+                c => bail!("expected ',' or '}}' at byte {}, got '{}'", self.i, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or_else(|| anyhow!("truncated \\u escape"))?;
+                            let code = super::pull::hex4(hex)?;
+                            self.i += 4;
+                            // Surrogate pairs.
+                            let ch = if (0xD800..0xDC00).contains(&code) {
+                                if self.b.get(self.i) == Some(&b'\\')
+                                    && self.b.get(self.i + 1) == Some(&b'u')
+                                {
+                                    let hex2 = self
+                                        .b
+                                        .get(self.i + 2..self.i + 6)
+                                        .ok_or_else(|| anyhow!("truncated surrogate"))?;
+                                    let lo = super::pull::hex4(hex2)?;
+                                    if !(0xDC00..0xE000).contains(&lo) {
+                                        bail!("invalid low surrogate {lo:#x}");
+                                    }
+                                    self.i += 6;
+                                    0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00)
+                                } else {
+                                    bail!("lone high surrogate");
+                                }
+                            } else {
+                                code
+                            };
+                            out.push(
+                                char::from_u32(ch)
+                                    .ok_or_else(|| anyhow!("invalid codepoint {ch:#x}"))?,
+                            );
+                        }
+                        e => bail!("invalid escape '\\{}'", e as char),
+                    }
+                }
+                c if c < 0x20 => bail!("control character in string"),
+                c => {
+                    // Re-assemble UTF-8 multibyte sequences.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let len = match c {
+                            0xC0..=0xDF => 2,
+                            0xE0..=0xEF => 3,
+                            _ => 4,
+                        };
+                        let bytes = self
+                            .b
+                            .get(start..start + len)
+                            .ok_or_else(|| anyhow!("truncated UTF-8"))?;
+                        out.push_str(std::str::from_utf8(bytes)?);
+                        self.i = start + len;
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+            self.i += 1;
+        }
+        let mut is_float = false;
+        if self.i < self.b.len() && self.b[self.i] == b'.' {
+            is_float = true;
+            self.i += 1;
+            while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+                self.i += 1;
+            }
+        }
+        if self.i < self.b.len() && matches!(self.b[self.i], b'e' | b'E') {
+            is_float = true;
+            self.i += 1;
+            if self.i < self.b.len() && matches!(self.b[self.i], b'+' | b'-') {
+                self.i += 1;
+            }
+            while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+                self.i += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])?;
+        if !is_float {
+            if text == "-" {
+                bail!("invalid number at byte {start}");
+            }
+            return match text.parse::<i64>() {
+                Ok(v) => Ok(Value::Int(v)),
+                // Same overflow contract as the pull parser: exact or error.
+                Err(_) => bail!("integer literal '{text}' out of i64 range at byte {start}"),
+            };
+        }
+        Ok(Value::Float(text.parse::<f64>()?))
+    }
+}

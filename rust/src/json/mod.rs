@@ -1,16 +1,49 @@
 //! Minimal JSON codec (in-tree `serde_json` replacement for the offline
-//! build environment).
+//! build environment), built around a streaming core.
 //!
-//! Parses the full JSON grammar into a [`Value`] tree with exact i64
-//! integers (critical: network weights must round-trip bit-exactly),
-//! and serializes [`Value`] back to text. The interchange surface with
-//! the Python build layer is small and fully covered by tests.
+//! Two ingestion APIs share one iterative scanner:
+//!
+//! * **Pull API** ([`pull`], [`decode`]) — the zero-copy event stream
+//!   and the typed decoders on top of it. This is the artifact hot
+//!   path: weight matrices and test vectors stream straight into their
+//!   final `Vec` storage, unescaped strings are borrowed `&str` slices,
+//!   and no intermediate tree is allocated.
+//! * **DOM API** ([`parse`], [`Value`]) — a thin adapter that folds the
+//!   event stream into a [`Value`] tree, for callers that genuinely
+//!   need random access (e.g. free-form `metrics.json`).
+//!
+//! Both APIs parse the full JSON grammar with exact i64 integers
+//! (critical: network weights must round-trip bit-exactly — integer
+//! literals outside the i64 range are a parse error, never a silent
+//! f64 approximation), bound nesting by a plain depth counter (no
+//! recursion anywhere, so no stack overflow on hostile inputs), and
+//! serialize [`Value`] back to compact text.
+//!
+//! ```
+//! // DOM API: parse into a tree, navigate with typed accessors.
+//! let v = da4ml::json::parse(r#"{"name": "net", "w": [[1, -2], [3, 4]]}"#).unwrap();
+//! assert_eq!(v.get("name").unwrap().as_str().unwrap(), "net");
+//! assert_eq!(v.get("w").unwrap().to_i64_mat().unwrap(), vec![vec![1, -2], vec![3, 4]]);
+//!
+//! // Pull API: stream events, no tree.
+//! use da4ml::json::pull::{Event, PullParser};
+//! let mut p = PullParser::new("[1, 2]");
+//! assert_eq!(p.next().unwrap(), Event::ArrayStart);
+//! assert_eq!(p.next().unwrap(), Event::Int(1));
+//! ```
+
+pub mod decode;
+pub mod pull;
+
+#[cfg(test)]
+mod legacy;
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
 /// A JSON value. Integers are kept exact (`Int`) whenever the literal
-/// has no fraction/exponent and fits i64.
+/// has no fraction/exponent (out-of-range integer literals are a parse
+/// error).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
     /// `null`
@@ -107,7 +140,8 @@ impl Value {
 }
 
 /// Default nesting limit of [`parse`] (picojson-rs convention: decoders
-/// never panic, so recursion must be bounded well below stack exhaustion).
+/// never panic, so nesting must be bounded — here by a counter, not the
+/// call stack).
 pub const DEFAULT_MAX_DEPTH: usize = 128;
 
 /// Parse a JSON document with the [`DEFAULT_MAX_DEPTH`] nesting limit.
@@ -115,251 +149,71 @@ pub fn parse(text: &str) -> Result<Value> {
     parse_with_depth(text, DEFAULT_MAX_DEPTH)
 }
 
-/// Parse a JSON document, rejecting arrays/objects nested deeper than
-/// `max_depth` with an error (never a stack overflow).
+/// Parse a JSON document into a [`Value`] tree, rejecting
+/// arrays/objects nested deeper than `max_depth`.
+///
+/// This is an adapter over the iterative [`pull`] event stream: the
+/// tree is folded up with an explicit frame stack, so even documents at
+/// the depth limit never recurse.
 pub fn parse_with_depth(text: &str, max_depth: usize) -> Result<Value> {
-    let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0, max_depth };
-    p.ws();
-    let v = p.value()?;
-    p.ws();
-    if p.i != p.b.len() {
-        bail!("trailing garbage at byte {}", p.i);
-    }
-    Ok(v)
-}
+    use pull::Event;
 
-struct Parser<'a> {
-    b: &'a [u8],
-    i: usize,
-    depth: usize,
-    max_depth: usize,
-}
-
-impl<'a> Parser<'a> {
-    fn enter(&mut self) -> Result<()> {
-        self.depth += 1;
-        if self.depth > self.max_depth {
-            bail!("nesting depth exceeds {} at byte {}", self.max_depth, self.i);
-        }
-        Ok(())
+    enum Frame {
+        Array(Vec<Value>),
+        Object(BTreeMap<String, Value>, Option<String>),
     }
 
-    fn ws(&mut self) {
-        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
-            self.i += 1;
-        }
-    }
-
-    fn peek(&self) -> Result<u8> {
-        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of input"))
-    }
-
-    fn eat(&mut self, c: u8) -> Result<()> {
-        if self.peek()? != c {
-            bail!("expected '{}' at byte {}, got '{}'", c as char, self.i, self.peek()? as char);
-        }
-        self.i += 1;
-        Ok(())
-    }
-
-    fn lit(&mut self, s: &str, v: Value) -> Result<Value> {
-        if self.b[self.i..].starts_with(s.as_bytes()) {
-            self.i += s.len();
-            Ok(v)
-        } else {
-            bail!("invalid literal at byte {}", self.i)
-        }
-    }
-
-    fn value(&mut self) -> Result<Value> {
-        match self.peek()? {
-            b'n' => self.lit("null", Value::Null),
-            b't' => self.lit("true", Value::Bool(true)),
-            b'f' => self.lit("false", Value::Bool(false)),
-            b'"' => Ok(Value::Str(self.string()?)),
-            b'[' => self.array(),
-            b'{' => self.object(),
-            b'-' | b'0'..=b'9' => self.number(),
-            c => bail!("unexpected '{}' at byte {}", c as char, self.i),
-        }
-    }
-
-    fn array(&mut self) -> Result<Value> {
-        self.enter()?;
-        let v = self.array_body();
-        self.depth -= 1;
-        v
-    }
-
-    fn array_body(&mut self) -> Result<Value> {
-        self.eat(b'[')?;
-        let mut out = Vec::new();
-        self.ws();
-        if self.peek()? == b']' {
-            self.i += 1;
-            return Ok(Value::Array(out));
-        }
-        loop {
-            self.ws();
-            out.push(self.value()?);
-            self.ws();
-            match self.peek()? {
-                b',' => self.i += 1,
-                b']' => {
-                    self.i += 1;
-                    return Ok(Value::Array(out));
-                }
-                c => bail!("expected ',' or ']' at byte {}, got '{}'", self.i, c as char),
+    let mut p = pull::PullParser::with_max_depth(text, max_depth);
+    let mut stack: Vec<Frame> = Vec::new();
+    loop {
+        let completed: Option<Value> = match p.next()? {
+            Event::ObjectStart => {
+                stack.push(Frame::Object(BTreeMap::new(), None));
+                None
             }
-        }
-    }
-
-    fn object(&mut self) -> Result<Value> {
-        self.enter()?;
-        let v = self.object_body();
-        self.depth -= 1;
-        v
-    }
-
-    fn object_body(&mut self) -> Result<Value> {
-        self.eat(b'{')?;
-        let mut out = BTreeMap::new();
-        self.ws();
-        if self.peek()? == b'}' {
-            self.i += 1;
-            return Ok(Value::Object(out));
-        }
-        loop {
-            self.ws();
-            let key = self.string()?;
-            self.ws();
-            self.eat(b':')?;
-            self.ws();
-            let val = self.value()?;
-            out.insert(key, val);
-            self.ws();
-            match self.peek()? {
-                b',' => self.i += 1,
-                b'}' => {
-                    self.i += 1;
-                    return Ok(Value::Object(out));
-                }
-                c => bail!("expected ',' or '}}' at byte {}, got '{}'", self.i, c as char),
+            Event::ArrayStart => {
+                stack.push(Frame::Array(Vec::new()));
+                None
             }
-        }
-    }
-
-    fn string(&mut self) -> Result<String> {
-        self.eat(b'"')?;
-        let mut out = String::new();
-        loop {
-            let c = self.peek()?;
-            self.i += 1;
-            match c {
-                b'"' => return Ok(out),
-                b'\\' => {
-                    let e = self.peek()?;
-                    self.i += 1;
-                    match e {
-                        b'"' => out.push('"'),
-                        b'\\' => out.push('\\'),
-                        b'/' => out.push('/'),
-                        b'b' => out.push('\u{8}'),
-                        b'f' => out.push('\u{c}'),
-                        b'n' => out.push('\n'),
-                        b'r' => out.push('\r'),
-                        b't' => out.push('\t'),
-                        b'u' => {
-                            let hex = self
-                                .b
-                                .get(self.i..self.i + 4)
-                                .ok_or_else(|| anyhow!("truncated \\u escape"))?;
-                            let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
-                            self.i += 4;
-                            // Surrogate pairs.
-                            let ch = if (0xD800..0xDC00).contains(&code) {
-                                if self.b.get(self.i) == Some(&b'\\')
-                                    && self.b.get(self.i + 1) == Some(&b'u')
-                                {
-                                    let hex2 = self
-                                        .b
-                                        .get(self.i + 2..self.i + 6)
-                                        .ok_or_else(|| anyhow!("truncated surrogate"))?;
-                                    let lo =
-                                        u32::from_str_radix(std::str::from_utf8(hex2)?, 16)?;
-                                    self.i += 6;
-                                    0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00)
-                                } else {
-                                    bail!("lone high surrogate");
-                                }
-                            } else {
-                                code
-                            };
-                            out.push(
-                                char::from_u32(ch)
-                                    .ok_or_else(|| anyhow!("invalid codepoint {ch:#x}"))?,
-                            );
-                        }
-                        e => bail!("invalid escape '\\{}'", e as char),
-                    }
+            Event::Key(k) => {
+                match stack.last_mut() {
+                    Some(Frame::Object(_, pending)) => *pending = Some(k.into_owned()),
+                    _ => unreachable!("parser emits keys only inside objects"),
                 }
-                c if c < 0x20 => bail!("control character in string"),
-                c => {
-                    // Re-assemble UTF-8 multibyte sequences.
-                    if c < 0x80 {
-                        out.push(c as char);
-                    } else {
-                        let start = self.i - 1;
-                        let len = match c {
-                            0xC0..=0xDF => 2,
-                            0xE0..=0xEF => 3,
-                            _ => 4,
-                        };
-                        let bytes = self
-                            .b
-                            .get(start..start + len)
-                            .ok_or_else(|| anyhow!("truncated UTF-8"))?;
-                        out.push_str(std::str::from_utf8(bytes)?);
-                        self.i = start + len;
-                    }
+                None
+            }
+            Event::ObjectEnd => match stack.pop() {
+                Some(Frame::Object(m, _)) => Some(Value::Object(m)),
+                _ => unreachable!("parser matches container ends"),
+            },
+            Event::ArrayEnd => match stack.pop() {
+                Some(Frame::Array(a)) => Some(Value::Array(a)),
+                _ => unreachable!("parser matches container ends"),
+            },
+            Event::Str(s) => Some(Value::Str(s.into_owned())),
+            Event::Int(v) => Some(Value::Int(v)),
+            Event::Float(f) => Some(Value::Float(f)),
+            Event::Bool(b) => Some(Value::Bool(b)),
+            Event::Null => Some(Value::Null),
+            Event::Eof => bail!("unexpected end of input"),
+        };
+        if let Some(v) = completed {
+            match stack.last_mut() {
+                None => {
+                    // Top-level value complete; the parser enforces the
+                    // no-trailing-garbage rule on the final pull.
+                    return match p.next()? {
+                        Event::Eof => Ok(v),
+                        _ => unreachable!("parser ends after the top-level value"),
+                    };
+                }
+                Some(Frame::Array(a)) => a.push(v),
+                Some(Frame::Object(m, pending)) => {
+                    let key = pending.take().expect("parser emits a key before each value");
+                    m.insert(key, v);
                 }
             }
         }
-    }
-
-    fn number(&mut self) -> Result<Value> {
-        let start = self.i;
-        if self.peek()? == b'-' {
-            self.i += 1;
-        }
-        while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
-            self.i += 1;
-        }
-        let mut is_float = false;
-        if self.i < self.b.len() && self.b[self.i] == b'.' {
-            is_float = true;
-            self.i += 1;
-            while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
-                self.i += 1;
-            }
-        }
-        if self.i < self.b.len() && matches!(self.b[self.i], b'e' | b'E') {
-            is_float = true;
-            self.i += 1;
-            if self.i < self.b.len() && matches!(self.b[self.i], b'+' | b'-') {
-                self.i += 1;
-            }
-            while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
-                self.i += 1;
-            }
-        }
-        let text = std::str::from_utf8(&self.b[start..self.i])?;
-        if !is_float {
-            if let Ok(v) = text.parse::<i64>() {
-                return Ok(Value::Int(v));
-            }
-        }
-        Ok(Value::Float(text.parse::<f64>()?))
     }
 }
 
@@ -427,6 +281,7 @@ fn write_string(s: &str, out: &mut String) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     #[test]
     fn parse_scalars() {
@@ -443,6 +298,25 @@ mod tests {
         let v = parse("9007199254740993").unwrap(); // 2^53 + 1
         assert_eq!(v, Value::Int(9007199254740993));
         assert_eq!(v.as_i64().unwrap(), 9007199254740993);
+    }
+
+    /// Regression: integer literals beyond i64 used to silently degrade
+    /// to f64 (losing low bits of would-be weights); they are now a
+    /// parse error in both the pull parser and the legacy reference.
+    #[test]
+    fn integer_overflow_is_a_parse_error() {
+        assert_eq!(parse("9223372036854775807").unwrap(), Value::Int(i64::MAX));
+        assert_eq!(parse("-9223372036854775808").unwrap(), Value::Int(i64::MIN));
+        for bad in ["9223372036854775808", "-9223372036854775809", "[18446744073709551615]"] {
+            let err = parse(bad).unwrap_err();
+            assert!(format!("{err}").contains("out of i64 range"), "got: {err}");
+            assert!(legacy::parse(bad).is_err(), "legacy accepted: {bad}");
+        }
+        // A fraction or exponent keeps the f64 reading.
+        assert_eq!(
+            parse("9223372036854775808.0").unwrap(),
+            Value::Float(9223372036854775808.0)
+        );
     }
 
     #[test]
@@ -508,5 +382,144 @@ mod tests {
         }
         assert!(parse(&doc).is_ok(), "depth == limit must pass");
         assert!(parse(&format!("[{doc}]")).is_err(), "limit + 1 must fail");
+    }
+
+    // ---- differential: pull-parser adapter vs the legacy recursive DOM ----
+
+    fn gen_ws(rng: &mut Rng, out: &mut String) {
+        for _ in 0..rng.below(3) {
+            out.push([' ', '\n', '\t'][rng.below(3)]);
+        }
+    }
+
+    fn gen_string(rng: &mut Rng, out: &mut String) {
+        out.push('"');
+        for _ in 0..rng.below(8) {
+            match rng.below(9) {
+                0 => out.push_str("\\n"),
+                1 => out.push_str("\\\""),
+                2 => out.push_str("\\\\"),
+                3 => out.push_str("\\u0041"),
+                4 => out.push_str("\\ud83d\\ude00"), // surrogate pair
+                5 => out.push('é'),
+                6 => out.push('😀'),
+                7 => out.push_str("\\t"),
+                _ => out.push((b'a' + rng.below(26) as u8) as char),
+            }
+        }
+        out.push('"');
+    }
+
+    fn gen_value(rng: &mut Rng, depth: usize, out: &mut String) {
+        let choice = if depth == 0 { rng.below(5) } else { rng.below(7) };
+        match choice {
+            0 => out.push_str("null"),
+            1 => out.push_str(if rng.chance(0.5) { "true" } else { "false" }),
+            2 => {
+                let v: i64 = match rng.below(4) {
+                    0 => rng.range_i64(-10, 10),
+                    1 => i64::MAX,
+                    2 => i64::MIN,
+                    _ => rng.next_u64() as i64,
+                };
+                out.push_str(&v.to_string());
+            }
+            3 => {
+                // Float edge cases: -0, exponent overflow/underflow, exact halves.
+                let s = [
+                    "-0.0", "0.0", "-0e0", "3.25", "-1.5e3", "2e-3", "1e999", "-1e999",
+                    "1e-999", "123456789.125",
+                ][rng.below(10)];
+                out.push_str(s);
+            }
+            4 => gen_string(rng, out),
+            5 => {
+                out.push('[');
+                let n = rng.below(4);
+                for i in 0..n {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    gen_ws(rng, out);
+                    gen_value(rng, depth - 1, out);
+                    gen_ws(rng, out);
+                }
+                out.push(']');
+            }
+            _ => {
+                out.push('{');
+                let n = rng.below(4);
+                for i in 0..n {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    gen_ws(rng, out);
+                    gen_string(rng, out);
+                    gen_ws(rng, out);
+                    out.push(':');
+                    gen_ws(rng, out);
+                    gen_value(rng, depth - 1, out);
+                    gen_ws(rng, out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Property: on seeded random documents (escapes, unicode, integer
+    /// extremes, float edge cases, random whitespace) the iterative
+    /// pull-parser adapter and the legacy recursive parser produce
+    /// identical `Value` trees — or both reject.
+    #[test]
+    fn differential_pull_vs_legacy_dom() {
+        crate::util::property("json pull vs legacy DOM", 400, |rng| {
+            let mut text = String::new();
+            gen_ws(rng, &mut text);
+            gen_value(rng, 4, &mut text);
+            gen_ws(rng, &mut text);
+            match (parse(&text), legacy::parse(&text)) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "tree mismatch on: {text}"),
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("accept/reject divergence on {text:?}: new={a:?} legacy={b:?}"),
+            }
+        });
+    }
+
+    /// The same differential over a fixed corpus of grammar edge cases,
+    /// including documents at and beyond the depth limit.
+    #[test]
+    fn differential_edge_corpus() {
+        let at_limit =
+            format!("{}0{}", "[".repeat(DEFAULT_MAX_DEPTH), "]".repeat(DEFAULT_MAX_DEPTH));
+        let over_limit = format!(
+            "{}0{}",
+            "[".repeat(DEFAULT_MAX_DEPTH + 1),
+            "]".repeat(DEFAULT_MAX_DEPTH + 1)
+        );
+        let mixed_at_limit = {
+            // Alternate {"k": [ ... ]} nesting down to the limit.
+            let pairs = DEFAULT_MAX_DEPTH / 2;
+            format!("{}0{}", "{\"k\":[".repeat(pairs), "]}".repeat(pairs))
+        };
+        let cases: Vec<String> = [
+            "-0", "-0.0", "0e0", "0E-0", "1e999", "-1e999", "1e-999", "1.5e308",
+            "9223372036854775807", "-9223372036854775808", "9223372036854775808",
+            "-9223372036854775809", "0.0000000000000000000000001",
+            r#""😀""#, r#""\ud83d""#, r#""\udc00""#, r#""\ud800\u0041""#,
+            r#""\ud800\udbff""#, r#""\u+041""#, r#""\u004g""#, "\"\u{0}\"",
+            "[]", "{}", "[[],{}]", r#"{"a":1,"a":2}"#, "[1,]", "{\"a\":}", "", "-", "1e",
+            "nul", "[1 2]", "123abc", "{\"k\": \"v\",}",
+        ]
+        .into_iter()
+        .map(String::from)
+        .chain([at_limit, over_limit, mixed_at_limit])
+        .collect();
+        for text in &cases {
+            match (parse(text), legacy::parse(text)) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "tree mismatch on: {text}"),
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("accept/reject divergence on {text:?}: new={a:?} legacy={b:?}"),
+            }
+        }
     }
 }

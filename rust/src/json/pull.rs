@@ -1,0 +1,572 @@
+//! Iterative, zero-copy JSON **pull parser** (event stream over
+//! `&[u8]`).
+//!
+//! The parser walks the input with an explicit container-kind bit stack
+//! instead of recursion, so arbitrarily deep (malicious) documents can
+//! never exhaust the call stack — the depth limit is a plain counter
+//! check, the picojson-rs idiom. Strings that contain no escape
+//! sequences are returned as *borrowed* `&str` slices of the input
+//! ([`std::borrow::Cow::Borrowed`]); only escaped strings allocate.
+//! This is the ingestion fast path the typed artifact decoders
+//! ([`crate::json::decode`]) and the DOM adapter ([`crate::json::parse`])
+//! are built on.
+//!
+//! Integer literals that do not fit `i64` are a hard parse error (the
+//! artifact convention is exact `i64` weights; silently degrading to
+//! `f64` would corrupt them), while literals with a fraction or exponent
+//! parse as [`Event::Float`].
+//!
+//! ```
+//! use da4ml::json::pull::{Event, PullParser};
+//!
+//! let mut p = PullParser::new(r#"{"w": [1, -2]}"#);
+//! assert_eq!(p.next().unwrap(), Event::ObjectStart);
+//! assert!(matches!(p.next().unwrap(), Event::Key(k) if k == "w"));
+//! assert_eq!(p.next().unwrap(), Event::ArrayStart);
+//! assert_eq!(p.next().unwrap(), Event::Int(1));
+//! assert_eq!(p.next().unwrap(), Event::Int(-2));
+//! assert_eq!(p.next().unwrap(), Event::ArrayEnd);
+//! assert_eq!(p.next().unwrap(), Event::ObjectEnd);
+//! assert_eq!(p.next().unwrap(), Event::Eof);
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use std::borrow::Cow;
+
+/// Decode exactly four ASCII hex digits (the JSON `\uXXXX` payload).
+/// Stricter than `u32::from_str_radix`, which would accept a sign.
+pub(crate) fn hex4(bytes: &[u8]) -> Result<u32> {
+    debug_assert_eq!(bytes.len(), 4);
+    let mut code = 0u32;
+    for &b in bytes {
+        let digit = (b as char).to_digit(16).ok_or_else(|| {
+            anyhow!("invalid \\u escape digit '{}'", b as char)
+        })?;
+        code = code * 16 + digit;
+    }
+    Ok(code)
+}
+
+/// One parse event. String-carrying events borrow from the input
+/// whenever the literal contains no escapes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event<'a> {
+    /// `{`
+    ObjectStart,
+    /// `}`
+    ObjectEnd,
+    /// `[`
+    ArrayStart,
+    /// `]`
+    ArrayEnd,
+    /// An object key (always followed by the value's event(s)).
+    Key(Cow<'a, str>),
+    /// A string value.
+    Str(Cow<'a, str>),
+    /// An exact integer value.
+    Int(i64),
+    /// A floating-point value (literal had a fraction or exponent).
+    Float(f64),
+    /// `true` / `false`
+    Bool(bool),
+    /// `null`
+    Null,
+    /// End of a complete document; repeats on further calls.
+    Eof,
+}
+
+/// What the parser expects next.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    /// A value (document start, after `,` in an array, or after `:`).
+    Value,
+    /// A value or `]` (right after `[`).
+    ValueOrArrayEnd,
+    /// A key or `}` (right after `{`).
+    KeyOrObjectEnd,
+    /// A key (after `,` in an object).
+    Key,
+    /// `,` or the closing bracket of the enclosing container.
+    PostValue,
+    /// Document complete; only whitespace may remain.
+    End,
+}
+
+/// The pull parser. See the [module docs](self) for the event contract.
+pub struct PullParser<'a> {
+    b: &'a [u8],
+    i: usize,
+    /// Open-container count (the depth-limit counter).
+    depth: usize,
+    max_depth: usize,
+    /// Container kinds, bit-packed (bit set = object, clear = array).
+    kinds: Vec<u64>,
+    state: State,
+}
+
+impl<'a> PullParser<'a> {
+    /// Parser over `text` with the default depth limit
+    /// ([`crate::json::DEFAULT_MAX_DEPTH`]).
+    pub fn new(text: &'a str) -> Self {
+        Self::with_max_depth(text, crate::json::DEFAULT_MAX_DEPTH)
+    }
+
+    /// Parser over `text` rejecting containers nested deeper than
+    /// `max_depth`.
+    pub fn with_max_depth(text: &'a str, max_depth: usize) -> Self {
+        Self {
+            b: text.as_bytes(),
+            i: 0,
+            depth: 0,
+            max_depth,
+            kinds: Vec::new(),
+            state: State::Value,
+        }
+    }
+
+    /// Byte offset of the parse cursor (for error reporting by callers).
+    pub fn offset(&self) -> usize {
+        self.i
+    }
+
+    /// Pull the next event. After the document completes, returns
+    /// [`Event::Eof`] forever (or an error if non-whitespace trails).
+    pub fn next(&mut self) -> Result<Event<'a>> {
+        loop {
+            self.ws();
+            match self.state {
+                State::End => {
+                    if self.i != self.b.len() {
+                        bail!("trailing garbage at byte {}", self.i);
+                    }
+                    return Ok(Event::Eof);
+                }
+                State::Value => return self.value(),
+                State::ValueOrArrayEnd => {
+                    if self.peek()? == b']' {
+                        self.i += 1;
+                        return self.close();
+                    }
+                    return self.value();
+                }
+                State::KeyOrObjectEnd => {
+                    if self.peek()? == b'}' {
+                        self.i += 1;
+                        return self.close();
+                    }
+                    return self.key();
+                }
+                State::Key => return self.key(),
+                State::PostValue => {
+                    let in_object = self.top_is_object();
+                    match self.peek()? {
+                        b',' => {
+                            self.i += 1;
+                            self.state = if in_object { State::Key } else { State::Value };
+                            // Loop: emit the next key/value event directly.
+                        }
+                        b'}' if in_object => {
+                            self.i += 1;
+                            return self.close();
+                        }
+                        b']' if !in_object => {
+                            self.i += 1;
+                            return self.close();
+                        }
+                        c => bail!(
+                            "expected ',' or '{}' at byte {}, got '{}'",
+                            if in_object { '}' } else { ']' },
+                            self.i,
+                            c as char
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Parse one value-start token; containers push and emit their
+    /// start event, scalars emit directly.
+    fn value(&mut self) -> Result<Event<'a>> {
+        match self.peek()? {
+            b'{' => {
+                self.i += 1;
+                self.push(true)?;
+                self.state = State::KeyOrObjectEnd;
+                Ok(Event::ObjectStart)
+            }
+            b'[' => {
+                self.i += 1;
+                self.push(false)?;
+                self.state = State::ValueOrArrayEnd;
+                Ok(Event::ArrayStart)
+            }
+            b'"' => {
+                let s = self.string()?;
+                self.after_value();
+                Ok(Event::Str(s))
+            }
+            b'n' => self.lit("null", Event::Null),
+            b't' => self.lit("true", Event::Bool(true)),
+            b'f' => self.lit("false", Event::Bool(false)),
+            b'-' | b'0'..=b'9' => {
+                let ev = self.number()?;
+                self.after_value();
+                Ok(ev)
+            }
+            c => bail!("unexpected '{}' at byte {}", c as char, self.i),
+        }
+    }
+
+    fn key(&mut self) -> Result<Event<'a>> {
+        let k = self.string()?;
+        self.ws();
+        self.eat(b':')?;
+        self.state = State::Value;
+        Ok(Event::Key(k))
+    }
+
+    fn lit(&mut self, s: &str, ev: Event<'a>) -> Result<Event<'a>> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            self.after_value();
+            Ok(ev)
+        } else {
+            bail!("invalid literal at byte {}", self.i)
+        }
+    }
+
+    /// A scalar or container just completed: decide the next state.
+    fn after_value(&mut self) {
+        self.state = if self.depth == 0 { State::End } else { State::PostValue };
+    }
+
+    /// Close the innermost container, emitting its end event.
+    fn close(&mut self) -> Result<Event<'a>> {
+        let was_object = self.top_is_object();
+        self.depth -= 1;
+        self.after_value();
+        Ok(if was_object { Event::ObjectEnd } else { Event::ArrayEnd })
+    }
+
+    fn push(&mut self, is_object: bool) -> Result<()> {
+        if self.depth >= self.max_depth {
+            bail!("nesting depth exceeds {} at byte {}", self.max_depth, self.i);
+        }
+        let (word, bit) = (self.depth / 64, self.depth % 64);
+        if word == self.kinds.len() {
+            self.kinds.push(0);
+        }
+        if is_object {
+            self.kinds[word] |= 1 << bit;
+        } else {
+            self.kinds[word] &= !(1 << bit);
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
+    fn top_is_object(&self) -> bool {
+        debug_assert!(self.depth > 0);
+        let d = self.depth - 1;
+        (self.kinds[d / 64] >> (d % 64)) & 1 == 1
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at byte {}, got '{}'", c as char, self.i, self.peek()? as char);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    /// Parse a string literal. Fast path: no escapes — return a borrowed
+    /// slice of the input (validated UTF-8). Slow path: decode escapes
+    /// into an owned buffer.
+    fn string(&mut self) -> Result<Cow<'a, str>> {
+        self.eat(b'"')?;
+        let start = self.i;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'"' => {
+                    let s = std::str::from_utf8(&self.b[start..self.i])?;
+                    self.i += 1;
+                    return Ok(Cow::Borrowed(s));
+                }
+                b'\\' => return self.string_owned(start),
+                c if c < 0x20 => bail!("control character in string at byte {}", self.i),
+                _ => self.i += 1,
+            }
+        }
+        bail!("unexpected end of input in string")
+    }
+
+    /// Escape-decoding path; `start` is the first content byte and
+    /// `self.i` points at the first backslash (the escape-free prefix
+    /// `[start..i]` carries over verbatim).
+    fn string_owned(&mut self, start: usize) -> Result<Cow<'a, str>> {
+        let mut out = String::from(std::str::from_utf8(&self.b[start..self.i])?);
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(Cow::Owned(out)),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => out.push(self.unicode_escape()?),
+                        e => bail!("invalid escape '\\{}'", e as char),
+                    }
+                }
+                c if c < 0x20 => bail!("control character in string"),
+                c => {
+                    // Re-assemble UTF-8 multibyte sequences.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let seq_start = self.i - 1;
+                        let len = match c {
+                            0xC0..=0xDF => 2,
+                            0xE0..=0xEF => 3,
+                            _ => 4,
+                        };
+                        let bytes = self
+                            .b
+                            .get(seq_start..seq_start + len)
+                            .ok_or_else(|| anyhow!("truncated UTF-8"))?;
+                        out.push_str(std::str::from_utf8(bytes)?);
+                        self.i = seq_start + len;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Decode `XXXX` (and a following low surrogate if needed); the
+    /// cursor sits just past the `\u`.
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hex = self.b.get(self.i..self.i + 4).ok_or_else(|| anyhow!("truncated \\u escape"))?;
+        let code = hex4(hex)?;
+        self.i += 4;
+        let ch = if (0xD800..0xDC00).contains(&code) {
+            if self.b.get(self.i) == Some(&b'\\') && self.b.get(self.i + 1) == Some(&b'u') {
+                let hex2 = self
+                    .b
+                    .get(self.i + 2..self.i + 6)
+                    .ok_or_else(|| anyhow!("truncated surrogate"))?;
+                let lo = hex4(hex2)?;
+                if !(0xDC00..0xE000).contains(&lo) {
+                    bail!("invalid low surrogate {lo:#x}");
+                }
+                self.i += 6;
+                0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00)
+            } else {
+                bail!("lone high surrogate");
+            }
+        } else {
+            code
+        };
+        char::from_u32(ch).ok_or_else(|| anyhow!("invalid codepoint {ch:#x}"))
+    }
+
+    fn number(&mut self) -> Result<Event<'a>> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+            self.i += 1;
+        }
+        let mut is_float = false;
+        if self.i < self.b.len() && self.b[self.i] == b'.' {
+            is_float = true;
+            self.i += 1;
+            while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+                self.i += 1;
+            }
+        }
+        if self.i < self.b.len() && matches!(self.b[self.i], b'e' | b'E') {
+            is_float = true;
+            self.i += 1;
+            if self.i < self.b.len() && matches!(self.b[self.i], b'+' | b'-') {
+                self.i += 1;
+            }
+            while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+                self.i += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])?;
+        if !is_float {
+            if text == "-" {
+                bail!("invalid number at byte {start}");
+            }
+            return match text.parse::<i64>() {
+                Ok(v) => Ok(Event::Int(v)),
+                // The matrices are exact i64; falling back to f64 would
+                // silently round the weights.
+                Err(_) => bail!("integer literal '{text}' out of i64 range at byte {start}"),
+            };
+        }
+        Ok(Event::Float(text.parse::<f64>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn events(text: &str) -> Result<Vec<Event<'_>>> {
+        let mut p = PullParser::new(text);
+        let mut out = Vec::new();
+        loop {
+            let ev = p.next()?;
+            let done = ev == Event::Eof;
+            out.push(ev);
+            if done {
+                return Ok(out);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_documents() {
+        assert_eq!(events("42").unwrap(), vec![Event::Int(42), Event::Eof]);
+        assert_eq!(events("-3.5").unwrap(), vec![Event::Float(-3.5), Event::Eof]);
+        assert_eq!(events("null").unwrap(), vec![Event::Null, Event::Eof]);
+        assert_eq!(events("false").unwrap(), vec![Event::Bool(false), Event::Eof]);
+    }
+
+    #[test]
+    fn nested_stream_order() {
+        let evs = events(r#"{"a": [1, {"b": null}], "c": true}"#).unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                Event::ObjectStart,
+                Event::Key("a".into()),
+                Event::ArrayStart,
+                Event::Int(1),
+                Event::ObjectStart,
+                Event::Key("b".into()),
+                Event::Null,
+                Event::ObjectEnd,
+                Event::ArrayEnd,
+                Event::Key("c".into()),
+                Event::Bool(true),
+                Event::ObjectEnd,
+                Event::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn unescaped_strings_borrow() {
+        let text = r#"["plain", "esc\n"]"#;
+        let mut p = PullParser::new(text);
+        assert_eq!(p.next().unwrap(), Event::ArrayStart);
+        match p.next().unwrap() {
+            Event::Str(Cow::Borrowed(s)) => assert_eq!(s, "plain"),
+            other => panic!("expected borrowed string, got {other:?}"),
+        }
+        match p.next().unwrap() {
+            Event::Str(Cow::Owned(s)) => assert_eq!(s, "esc\n"),
+            other => panic!("expected owned string, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eof_repeats_after_completion() {
+        let mut p = PullParser::new("[]");
+        assert_eq!(p.next().unwrap(), Event::ArrayStart);
+        assert_eq!(p.next().unwrap(), Event::ArrayEnd);
+        assert_eq!(p.next().unwrap(), Event::Eof);
+        assert_eq!(p.next().unwrap(), Event::Eof);
+    }
+
+    #[test]
+    fn depth_limit_is_a_counter_not_a_stack() {
+        // 200k unclosed arrays: a recursive parser would blow the stack
+        // long before reporting the depth error.
+        let bomb = "[".repeat(200_000);
+        let mut p = PullParser::new(&bomb);
+        let err = loop {
+            match p.next() {
+                Ok(_) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert!(format!("{err}").contains("nesting depth"), "got: {err}");
+    }
+
+    #[test]
+    fn malformed_inputs_error() {
+        for bad in [
+            "", "{", "[1,]", "{\"a\":}", "[1 2]", "tru", "1 2", "{\"a\" 1}", "-", "\"\\q\"",
+            "{\"a\":1,}", "[,1]",
+        ] {
+            assert!(events(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn integer_overflow_is_an_error() {
+        assert_eq!(
+            events("9223372036854775807").unwrap()[0],
+            Event::Int(i64::MAX),
+        );
+        assert_eq!(
+            events("-9223372036854775808").unwrap()[0],
+            Event::Int(i64::MIN),
+        );
+        assert!(events("9223372036854775808").is_err());
+        assert!(events("-9223372036854775809").is_err());
+        // Fraction/exponent forms still parse as floats.
+        assert_eq!(
+            events("9223372036854775808.0").unwrap()[0],
+            Event::Float(9223372036854775808.0),
+        );
+    }
+
+    #[test]
+    fn surrogate_pairs_and_unicode() {
+        assert_eq!(events(r#""\ud83d\ude00""#).unwrap()[0], Event::Str("😀".into()));
+        assert_eq!(events("\"héllo😀\"").unwrap()[0], Event::Str("héllo😀".into()));
+        assert!(events(r#""\ud83d""#).is_err());
+        assert!(events(r#""\udc00""#).is_err());
+        // A high surrogate must be followed by a *low* surrogate: a
+        // non-surrogate or second high surrogate is an error, never a
+        // u32 underflow (debug panic) or a garbage codepoint.
+        assert!(events(r#""\ud800A""#).is_err());
+        assert!(events(r#""\ud800\u0041""#).is_err());
+        assert!(events(r#""\ud800\udbff""#).is_err());
+    }
+
+    /// `\u` escapes are exactly four hex digits — `from_str_radix`
+    /// leniency (signs, shorter payloads) must not leak in.
+    #[test]
+    fn unicode_escape_requires_four_hex_digits() {
+        assert_eq!(events(r#""\u0041""#).unwrap()[0], Event::Str("A".into()));
+        assert!(events(r#""\u+041""#).is_err());
+        assert!(events(r#""\u00 1""#).is_err());
+        assert!(events(r#""\u004g""#).is_err());
+    }
+}

@@ -32,6 +32,13 @@
 //! weight artifacts replayed via [`nn::sim`]), or — behind the
 //! off-by-default `pjrt` feature — through the PJRT CPU client
 //! executing the JAX-lowered `artifacts/*.hlo.txt`.
+//!
+//! Artifact ingestion is streaming end to end: the [`json`] module's
+//! zero-copy pull parser feeds typed decoders so weight matrices and
+//! test vectors never materialize a DOM tree, and the [`serve`] module
+//! turns the [`coordinator`] into a long-lived JSONL compile service
+//! (`da4ml serve`). `ARCHITECTURE.md` at the repository root maps every
+//! module to its paper section and walks both data flows.
 
 pub mod baseline;
 pub mod cmvm;
@@ -48,14 +55,27 @@ pub mod pipeline;
 pub mod report;
 pub mod rtl;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Library-wide result type.
 pub type Result<T> = anyhow::Result<T>;
 
 /// Convenience prelude re-exporting the most common public items.
+///
+/// ```
+/// use da4ml::prelude::*;
+///
+/// // Optimize one 2x2 CMVM into a multiplierless adder graph and cost
+/// // it on the analytic FPGA model.
+/// let problem = CmvmProblem::new(2, 2, vec![3, 5, -7, 9], 8);
+/// let sol = da4ml::cmvm::optimize(&problem, Strategy::Da { dc: -1 }).unwrap();
+/// let report = da4ml::estimate::combinational(&sol.program, &FpgaModel::default());
+/// assert!(sol.adders > 0 && report.lut > 0);
+/// ```
 pub mod prelude {
     pub use crate::cmvm::{CmvmProblem, CmvmSolution, Strategy};
+    pub use crate::coordinator::{CompileJob, Coordinator};
     pub use crate::csd::Csd;
     pub use crate::cse::{optimize_into, CseConfig};
     pub use crate::dais::{DaisOp, DaisProgram};

@@ -10,7 +10,11 @@
 //! * `simulate` — run a network on test vectors, report accuracy;
 //! * `golden`   — cross-check the bit-exact integer simulation against
 //!   the golden model (PJRT-executed HLO with `--features pjrt`; the
-//!   pure-Rust golden backend plus exported vectors by default).
+//!   pure-Rust golden backend plus exported vectors by default);
+//! * `serve`    — long-lived JSONL compile service: jobs in on stdin
+//!   (or `--input`), solution reports out on stdout, batched through
+//!   the coordinator's cache + worker pool (wire format:
+//!   `docs/serve.md`).
 
 use anyhow::{bail, Result};
 use da4ml::cmvm::{optimize, CmvmProblem, Strategy};
@@ -72,14 +76,17 @@ fn load_vectors(path: &str) -> Result<TestVectors> {
     TestVectors::from_json(&runtime::load_text(path)?)
 }
 
-const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot> [args]
+const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|serve> [args]
   compile [--d-in N] [--d-out N] [--bits B] [--dc D] [--seed S]
   net <spec.weights.json> [--strategy da|latency|naive-da] [--dc D] [--pipe N]
   rtl <spec.weights.json> <out.v|out.vhd> [--pipe N] [--dc D]
   simulate <spec.weights.json> <spec.testvec.json>
   golden <spec.weights.json> <spec.hlo.txt> <spec.testvec.json>
   verify <spec.weights.json> [--dc D]      (well-formedness + bit-exactness)
-  dot <spec.weights.json> <out.dot> [--dc D]  (Graphviz adder graph)";
+  dot <spec.weights.json> <out.dot> [--dc D]  (Graphviz adder graph)
+  serve [--input jobs.jsonl] [--batch N] [--dc D] [--threads T]
+        (JSONL compile service: jobs on stdin or --input, reports on
+         stdout, summary on stderr; wire format in docs/serve.md)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -282,6 +289,38 @@ fn main() -> Result<()> {
             let prog = nn::compile::fuse(&spec, Strategy::Da { dc })?;
             std::fs::write(out, da4ml::dais::dot::to_dot(&prog, &spec.name))?;
             println!("wrote {out} ({} nodes)", prog.nodes.len());
+        }
+        "serve" => {
+            let cfg = da4ml::serve::ServeConfig {
+                batch_size: args.flag("batch", 16usize),
+                threads: args.flag("threads", 0usize),
+                default_dc: args.flag("dc", -1i32),
+                ..da4ml::serve::ServeConfig::default()
+            };
+            let stdout = std::io::stdout();
+            let mut out = std::io::BufWriter::new(stdout.lock());
+            let summary = match args.flags.get("input") {
+                Some(path) => {
+                    let file = std::fs::File::open(path)
+                        .map_err(|e| anyhow::anyhow!("opening {path}: {e}"))?;
+                    da4ml::serve::serve(std::io::BufReader::new(file), &mut out, &cfg)?
+                }
+                None => {
+                    let stdin = std::io::stdin();
+                    da4ml::serve::serve(stdin.lock(), &mut out, &cfg)?
+                }
+            };
+            drop(out);
+            eprintln!(
+                "serve: {} jobs ({} errors) in {} batches; {} submitted, {} cache hits, \
+                 {:.1} ms optimizer time",
+                summary.jobs,
+                summary.errors,
+                summary.batches,
+                summary.stats.submitted,
+                summary.stats.cache_hits,
+                summary.stats.total_opt_time.as_secs_f64() * 1e3
+            );
         }
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }

@@ -13,9 +13,15 @@
 //! * pooling is 2×2 stride-2; `avg` divides by 4 with floor shift.
 
 use crate::fixed::QInterval;
+use crate::json::decode::Decoder;
 use crate::json::{self, Value};
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
+
+/// Unwrap a streamed field slot with the classic missing-field error.
+fn req<T>(v: Option<T>, field: &str) -> Result<T> {
+    v.ok_or_else(|| anyhow!("missing field '{field}'"))
+}
 
 /// One layer of a quantized network.
 #[derive(Debug, Clone)]
@@ -128,8 +134,56 @@ impl NetworkSpec {
 
     /// Load from JSON text (tagged layer objects, see the Python
     /// exporter `python/compile/aot.py`).
+    ///
+    /// Streams the document through the pull parser
+    /// ([`crate::json::decode::Decoder`]): weight matrices land
+    /// directly in their `Vec<Vec<i64>>` storage without an
+    /// intermediate [`Value`] tree (see the `ingestion_micro` bench for
+    /// the allocation/time delta on the jet-tagging artifact).
     pub fn from_json(text: &str) -> Result<Self> {
-        Self::from_value(&json::parse(text)?)
+        let mut d = Decoder::new(text);
+        let spec = Self::decode(&mut d)?;
+        d.end()?;
+        Ok(spec)
+    }
+
+    /// Streaming decode of one network-spec object (field order
+    /// independent; unknown fields are skipped).
+    fn decode(d: &mut Decoder<'_>) -> Result<Self> {
+        let mut name = None;
+        let mut input_bits = None;
+        let mut input_signed = None;
+        let mut input_shape: Option<Vec<usize>> = None;
+        let mut layers = None;
+        d.object_start()?;
+        while let Some(key) = d.next_key()? {
+            match key.as_ref() {
+                "name" => name = Some(d.string()?),
+                "input_bits" => input_bits = Some(d.i64()? as u32),
+                "input_signed" => input_signed = Some(d.bool()?),
+                "input_shape" => {
+                    input_shape = Some(d.i64_vec()?.into_iter().map(|x| x as usize).collect())
+                }
+                "layers" => layers = Some(Self::decode_layers(d)?),
+                _ => d.skip_value()?,
+            }
+        }
+        Ok(Self {
+            name: req(name, "name")?,
+            input_bits: req(input_bits, "input_bits")?,
+            input_signed: req(input_signed, "input_signed")?,
+            input_shape: req(input_shape, "input_shape")?,
+            layers: req(layers, "layers")?,
+        })
+    }
+
+    fn decode_layers(d: &mut Decoder<'_>) -> Result<Vec<LayerSpec>> {
+        d.array_start()?;
+        let mut out = Vec::new();
+        while d.next_object_in_array()? {
+            out.push(LayerSpec::decode_object(d)?);
+        }
+        Ok(out)
     }
 
     /// Decode from a parsed JSON value.
@@ -184,6 +238,95 @@ fn vec_value(b: &[i64]) -> Value {
 }
 
 impl LayerSpec {
+    /// Streaming decode of one tagged layer object whose `{` has
+    /// already been consumed. Fields arrive in any order (the exporter
+    /// sorts keys, so `"type"` is typically *last*): every known field
+    /// is parked in a slot, then the tag dispatches at the closing `}`.
+    ///
+    /// Intentionally stricter than the DOM path ([`LayerSpec::from_value`]):
+    /// a known field with the wrong JSON type is rejected even when the
+    /// final tag would not read it — single-pass decoding cannot defer
+    /// the type check, and exporter artifacts never carry such fields.
+    fn decode_object(d: &mut Decoder<'_>) -> Result<Self> {
+        let mut ty: Option<String> = None;
+        let mut w: Option<Vec<Vec<i64>>> = None;
+        let mut b: Option<Vec<i64>> = None;
+        let mut relu: Option<bool> = None;
+        let mut shift: Option<i32> = None;
+        let mut clip_min: Option<i64> = None;
+        let mut clip_max: Option<i64> = None;
+        let mut axis: Option<String> = None;
+        let mut kh: Option<usize> = None;
+        let mut kw: Option<usize> = None;
+        let mut k: Option<usize> = None;
+        let mut tag: Option<String> = None;
+        while let Some(key) = d.next_key()? {
+            match key.as_ref() {
+                "type" => ty = Some(d.string()?),
+                "w" => w = Some(d.i64_mat()?),
+                "b" => b = Some(d.i64_vec()?),
+                "relu" => relu = Some(d.bool()?),
+                "shift" => shift = Some(d.i64()? as i32),
+                "clip_min" => clip_min = Some(d.i64()?),
+                "clip_max" => clip_max = Some(d.i64()?),
+                "axis" => axis = Some(d.string()?),
+                "kh" => kh = Some(d.i64()? as usize),
+                "kw" => kw = Some(d.i64()? as usize),
+                "k" => k = Some(d.i64()? as usize),
+                "tag" => tag = Some(d.string()?),
+                _ => d.skip_value()?,
+            }
+        }
+        let ty = req(ty, "type")?;
+        Ok(match ty.as_str() {
+            "dense" => LayerSpec::Dense {
+                w: req(w, "w")?,
+                b: req(b, "b")?,
+                relu: req(relu, "relu")?,
+                shift: req(shift, "shift")?,
+                clip_min: req(clip_min, "clip_min")?,
+                clip_max: req(clip_max, "clip_max")?,
+            },
+            "einsum_dense" => LayerSpec::EinsumDense {
+                w: req(w, "w")?,
+                b: req(b, "b")?,
+                axis: req(axis, "axis")?,
+                relu: req(relu, "relu")?,
+                shift: req(shift, "shift")?,
+                clip_min: req(clip_min, "clip_min")?,
+                clip_max: req(clip_max, "clip_max")?,
+            },
+            "conv2d" => LayerSpec::Conv2D {
+                w: req(w, "w")?,
+                b: req(b, "b")?,
+                kh: req(kh, "kh")?,
+                kw: req(kw, "kw")?,
+                relu: req(relu, "relu")?,
+                shift: req(shift, "shift")?,
+                clip_min: req(clip_min, "clip_min")?,
+                clip_max: req(clip_max, "clip_max")?,
+            },
+            // Conv1D is Conv2D with a unit-height kernel on a [1, w, c]
+            // image (the hls4ml Conv1D support of paper §5.1).
+            "conv1d" => LayerSpec::Conv2D {
+                w: req(w, "w")?,
+                b: req(b, "b")?,
+                kh: 1,
+                kw: req(k, "k")?,
+                relu: req(relu, "relu")?,
+                shift: req(shift, "shift")?,
+                clip_min: req(clip_min, "clip_min")?,
+                clip_max: req(clip_max, "clip_max")?,
+            },
+            "max_pool2d" => LayerSpec::MaxPool2D,
+            "avg_pool2d" => LayerSpec::AvgPool2D,
+            "flatten" => LayerSpec::Flatten,
+            "save" => LayerSpec::Save { tag: req(tag, "tag")? },
+            "add_saved" => LayerSpec::AddSaved { tag: req(tag, "tag")? },
+            other => bail!("unknown layer type '{other}'"),
+        })
+    }
+
     /// Decode one tagged layer object.
     pub fn from_value(v: &Value) -> Result<Self> {
         let ty = v.get("type")?.as_str()?;
@@ -346,16 +489,27 @@ pub struct TestVectors {
 }
 
 impl TestVectors {
-    /// Load from JSON text.
+    /// Load from JSON text (streamed — the input/output matrices decode
+    /// straight into their `Vec` storage, no [`Value`] tree).
     pub fn from_json(text: &str) -> Result<Self> {
-        let v = json::parse(text)?;
+        let mut d = Decoder::new(text);
+        let mut inputs = None;
+        let mut outputs = None;
+        let mut labels = Vec::new();
+        d.object_start()?;
+        while let Some(key) = d.next_key()? {
+            match key.as_ref() {
+                "inputs" => inputs = Some(d.i64_mat()?),
+                "outputs" => outputs = Some(d.i64_mat()?),
+                "labels" => labels = d.i64_vec()?.into_iter().map(|x| x as u32).collect(),
+                _ => d.skip_value()?,
+            }
+        }
+        d.end()?;
         Ok(Self {
-            inputs: v.get("inputs")?.to_i64_mat()?,
-            outputs: v.get("outputs")?.to_i64_mat()?,
-            labels: match v.get_opt("labels") {
-                Some(l) => l.to_i64_vec()?.into_iter().map(|x| x as u32).collect(),
-                None => Vec::new(),
-            },
+            inputs: req(inputs, "inputs")?,
+            outputs: req(outputs, "outputs")?,
+            labels,
         })
     }
 }

@@ -236,3 +236,72 @@ fn spec_json_roundtrip() {
     let x: Vec<i64> = (0..6).collect();
     assert_eq!(sim::forward(&spec, &x), sim::forward(&back, &x));
 }
+
+/// The streaming decoder must agree exactly with the DOM-based
+/// [`NetworkSpec::from_value`] path on the same document.
+#[test]
+fn streaming_decode_matches_dom_decode() {
+    let spec = mlp(7);
+    let text = spec.to_json();
+    let streamed = NetworkSpec::from_json(&text).unwrap();
+    let dom = NetworkSpec::from_value(&crate::json::parse(&text).unwrap()).unwrap();
+    // NetworkSpec has no PartialEq; compare via re-serialization and
+    // bit-exact behavior.
+    assert_eq!(streamed.to_json(), dom.to_json());
+    assert_eq!(streamed.to_json(), text);
+}
+
+/// Field order must not matter to the streaming decoder — in
+/// particular the layer `"type"` tag, which the sorted exporter places
+/// near the *end* of each layer object.
+#[test]
+fn streaming_decode_is_field_order_independent() {
+    let reordered = r#"{
+        "layers": [
+            {"w": [[1, 2], [3, 4]], "shift": 0, "relu": false,
+             "clip_min": -512, "clip_max": 511, "b": [0, -1],
+             "future_field": {"ignored": [1, 2]}, "type": "dense"}
+        ],
+        "input_shape": [2], "input_signed": true, "input_bits": 4,
+        "name": "reordered"
+    }"#;
+    let spec = NetworkSpec::from_json(reordered).unwrap();
+    assert_eq!(spec.name, "reordered");
+    assert_eq!(sim::forward(&spec, &[1, 2]), vec![7, 9]);
+}
+
+/// The streaming decoder is intentionally stricter than the DOM path:
+/// a known field of the wrong type is rejected even when the layer tag
+/// would not read it (single-pass decoding cannot defer the check).
+#[test]
+fn streaming_decode_rejects_mistyped_known_fields() {
+    let text = r#"{"name":"x","input_bits":4,"input_signed":true,"input_shape":[1],
+        "layers":[{"type":"flatten","shift":"none"}]}"#;
+    assert!(NetworkSpec::from_json(text).is_err());
+    // The DOM path ignores fields the tag does not use.
+    assert!(NetworkSpec::from_value(&crate::json::parse(text).unwrap()).is_ok());
+}
+
+#[test]
+fn streaming_decode_conv1d_and_tags() {
+    let text = r#"{
+        "name": "c1", "input_bits": 4, "input_signed": false, "input_shape": [1, 4, 1],
+        "layers": [
+            {"type": "conv1d", "k": 2, "w": [[1], [1]], "b": [0],
+             "relu": false, "shift": 0, "clip_min": -512, "clip_max": 511},
+            {"type": "flatten"},
+            {"type": "save", "tag": "skip"},
+            {"type": "add_saved", "tag": "skip"}
+        ]
+    }"#;
+    let spec = NetworkSpec::from_json(text).unwrap();
+    assert_eq!(spec.layers.len(), 4);
+    match &spec.layers[0] {
+        LayerSpec::Conv2D { kh, kw, .. } => {
+            assert_eq!((*kh, *kw), (1, 2));
+        }
+        other => panic!("expected Conv2D from conv1d, got {other:?}"),
+    }
+    // y[i] = x[i] + x[i+1], then the residual add doubles it.
+    assert_eq!(sim::forward(&spec, &[1, 2, 3, 4]), vec![6, 10, 14]);
+}

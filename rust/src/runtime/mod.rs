@@ -7,7 +7,8 @@
 //! * [`golden`] — the **default**, pure-Rust backend: loads the exported
 //!   JSON weight specs and replays them through the bit-exact
 //!   [`crate::nn::sim`] interpreter. Hermetic; always available.
-//! * [`pjrt`] (feature `pjrt`, off by default) — executes the
+//! * `pjrt` (feature `pjrt`, off by default; not linkable here because
+//!   the module is compiled out of default builds) — executes the
 //!   JAX-lowered HLO artifacts on the PJRT CPU client via the `xla`
 //!   crate. The workspace vendors an API *stub* for `xla` so the feature
 //!   compiles offline; swap in the real crate to actually run HLO.

@@ -1,0 +1,489 @@
+//! The long-lived JSONL compile service (`da4ml serve`).
+//!
+//! The paper's pitch is a CMVM compiler fast enough to sit inside a
+//! design loop; this module is the first multi-request serving surface
+//! on top of it. The loop reads one compile job per input line (JSON
+//! object), accumulates them into batches, drives the
+//! [`Coordinator`]'s cache + worker pool, and streams one JSON reply
+//! line per job (plus a stats line per batch) back out — wire format
+//! documented in `docs/serve.md`.
+//!
+//! Requests are decoded with the zero-copy pull parser
+//! ([`crate::json::decode::Decoder`]), so a hot serving loop never
+//! builds a [`crate::json::Value`] tree for job matrices. Malformed
+//! lines and failed jobs produce `"type": "error"` replies; they never
+//! tear down the service.
+//!
+//! ```
+//! use da4ml::serve::{serve, ServeConfig};
+//! use std::io::Cursor;
+//!
+//! // Two identical jobs: with one job per batch, the second is
+//! // deterministically answered from the cache.
+//! let jobs = "\
+//! {\"id\": \"a\", \"matrix\": [[3, 5], [-7, 9]]}\n\
+//! {\"id\": \"b\", \"matrix\": [[3, 5], [-7, 9]]}\n";
+//! let cfg = ServeConfig { batch_size: 1, ..ServeConfig::default() };
+//! let mut out = Vec::new();
+//! let summary = serve(Cursor::new(jobs), &mut out, &cfg).unwrap();
+//! assert_eq!(summary.jobs, 2);
+//! assert_eq!(summary.stats.cache_hits, 1);
+//! let text = String::from_utf8(out).unwrap();
+//! // One result + one stats line per single-job batch.
+//! assert_eq!(text.lines().count(), 4);
+//! assert!(text.contains("\"cached\":true"));
+//! ```
+
+use crate::cmvm::{CmvmProblem, Strategy};
+use crate::coordinator::{CompileJob, Coordinator, CoordinatorStats};
+use crate::estimate::{self, FpgaModel};
+use crate::json::decode::Decoder;
+use crate::json::{self, Value};
+use crate::Result;
+use anyhow::{bail, ensure};
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+
+/// Serving knobs (all have CLI flags, see `da4ml serve --help` text).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Jobs per coordinator batch (replies stream after each batch).
+    pub batch_size: usize,
+    /// Worker threads per batch (`0` = hardware parallelism).
+    pub threads: usize,
+    /// Delay constraint applied when a job omits `"dc"`.
+    pub default_dc: i32,
+    /// FPGA cost model used for the per-solution resource estimate.
+    pub model: FpgaModel,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { batch_size: 16, threads: 0, default_dc: -1, model: FpgaModel::default() }
+    }
+}
+
+/// End-of-stream accounting, returned by [`serve`] (the CLI prints it
+/// to stderr so stdout stays pure JSONL).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeSummary {
+    /// Well-formed jobs compiled (successfully or not).
+    pub jobs: u64,
+    /// Error replies emitted (malformed lines + failed jobs).
+    pub errors: u64,
+    /// Reply lines written (every input job/line yields exactly one).
+    pub replies: u64,
+    /// Batches flushed.
+    pub batches: u64,
+    /// Final coordinator statistics (submitted / cache hits / opt time).
+    pub stats: CoordinatorStats,
+}
+
+/// One decoded compile request (see `docs/serve.md` for field
+/// semantics and defaults).
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    /// Reply correlation id; defaults to `job-<line#>` when omitted.
+    pub id: Option<String>,
+    /// Constant matrix as `d_in` rows of `d_out` weights.
+    pub matrix: Vec<Vec<i64>>,
+    /// Input bitwidth (signed), `1..=63`. Default 8.
+    pub bits: i64,
+    /// Strategy name (`da`, `latency`, `naive-da`, `cse-only`,
+    /// `lookahead`). Default `da`.
+    pub strategy: Option<String>,
+    /// Delay constraint; falls back to [`ServeConfig::default_dc`].
+    pub dc: Option<i64>,
+}
+
+impl JobRequest {
+    /// Streaming-decode one request line (no `Value` tree).
+    pub fn from_json(line: &str) -> Result<Self> {
+        let mut d = Decoder::new(line);
+        let mut id = None;
+        let mut matrix = None;
+        let mut bits = 8i64;
+        let mut strategy = None;
+        let mut dc = None;
+        d.object_start()?;
+        while let Some(key) = d.next_key()? {
+            match key.as_ref() {
+                "id" => id = Some(d.string()?),
+                "matrix" => matrix = Some(d.i64_mat()?),
+                "bits" => bits = d.i64()?,
+                "strategy" => strategy = Some(d.string()?),
+                "dc" => dc = Some(d.i64()?),
+                _ => d.skip_value()?,
+            }
+        }
+        d.end()?;
+        let matrix = matrix.ok_or_else(|| anyhow::anyhow!("missing field 'matrix'"))?;
+        Ok(Self { id, matrix, bits, strategy, dc })
+    }
+
+    /// Validate and lower into a [`CompileJob`] (checked here — not in
+    /// `CmvmProblem::new`, whose assertions would panic the service).
+    pub fn to_compile_job(&self, name: String, default_dc: i32) -> Result<CompileJob> {
+        let d_in = self.matrix.len();
+        ensure!(d_in > 0, "matrix must have at least one row");
+        let d_out = self.matrix[0].len();
+        ensure!(d_out > 0, "matrix rows must be non-empty");
+        for (j, row) in self.matrix.iter().enumerate() {
+            ensure!(
+                row.len() == d_out,
+                "matrix is ragged: row {j} has {} entries, row 0 has {d_out}",
+                row.len()
+            );
+        }
+        ensure!(
+            (1..=63).contains(&self.bits),
+            "bits must be in [1, 63], got {}",
+            self.bits
+        );
+        let dc = self.dc.unwrap_or(default_dc as i64);
+        ensure!(
+            i32::try_from(dc).is_ok(),
+            "dc {dc} out of range (must fit a 32-bit signed integer; -1 = unconstrained)"
+        );
+        let dc = dc as i32;
+        let strategy = parse_strategy(self.strategy.as_deref().unwrap_or("da"), dc)?;
+        let flat: Vec<i64> = self.matrix.iter().flatten().copied().collect();
+        Ok(CompileJob {
+            name,
+            problem: CmvmProblem::new(d_in, d_out, flat, self.bits as u32),
+            strategy,
+        })
+    }
+}
+
+/// Strict strategy-name parser (the CLI's lenient fallback is wrong for
+/// a wire protocol: an unknown name must be an error reply, not
+/// silently `da`).
+pub fn parse_strategy(name: &str, dc: i32) -> Result<Strategy> {
+    Ok(match name {
+        "da" => Strategy::Da { dc },
+        "latency" => Strategy::Latency,
+        "naive-da" => Strategy::NaiveDa,
+        "cse-only" => Strategy::CseOnly { dc },
+        "lookahead" => Strategy::Lookahead { dc },
+        other => bail!(
+            "unknown strategy '{other}' (expected da|latency|naive-da|cse-only|lookahead)"
+        ),
+    })
+}
+
+/// One batch entry: a lowered job or an immediate error reply.
+enum Pending {
+    Job { id: String, job: CompileJob },
+    Bad { id: Option<String>, error: String },
+}
+
+/// Run the serve loop: read JSONL jobs from `input` until EOF, stream
+/// JSONL replies to `output`. Never returns early on malformed or
+/// failing jobs — only on I/O errors writing `output`.
+pub fn serve<R: BufRead, W: Write>(
+    input: R,
+    output: &mut W,
+    cfg: &ServeConfig,
+) -> Result<ServeSummary> {
+    let coord = Coordinator::new();
+    let mut summary = ServeSummary::default();
+    let mut batch: Vec<Pending> = Vec::new();
+    let batch_size = cfg.batch_size.max(1);
+    let mut line_no = 0u64;
+    for line in input.lines() {
+        // Count every input line (blank ones too) so the default
+        // `job-<line#>` id matches the caller's 1-based file line.
+        line_no += 1;
+        let entry = match line {
+            Ok(line) if line.trim().is_empty() => continue,
+            Ok(line) => match JobRequest::from_json(&line) {
+                Ok(req) => {
+                    let id = req.id.clone().unwrap_or_else(|| format!("job-{line_no}"));
+                    match req.to_compile_job(id.clone(), cfg.default_dc) {
+                        Ok(job) => Pending::Job { id, job },
+                        Err(e) => Pending::Bad { id: Some(id), error: format!("{e:#}") },
+                    }
+                }
+                Err(e) => Pending::Bad { id: None, error: format!("{e:#}") },
+            },
+            // A non-UTF-8 line is one more malformed request, not a
+            // reason to tear down the service and drop buffered jobs
+            // (`lines()` has already consumed the offending bytes).
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                Pending::Bad { id: None, error: format!("reading input line {line_no}: {e}") }
+            }
+            // A genuine I/O failure: answer what we have, then stop.
+            Err(e) => {
+                flush_batch(&coord, &mut batch, output, cfg, &mut summary)?;
+                summary.stats = coord.stats();
+                return Err(e.into());
+            }
+        };
+        batch.push(entry);
+        if batch.len() >= batch_size {
+            flush_batch(&coord, &mut batch, output, cfg, &mut summary)?;
+        }
+    }
+    flush_batch(&coord, &mut batch, output, cfg, &mut summary)?;
+    summary.stats = coord.stats();
+    Ok(summary)
+}
+
+/// One reply slot after the jobs have been moved out for compilation:
+/// correlation metadata only (the job itself is not cloned).
+enum Slot {
+    Job { id: String, idx: usize },
+    Bad { id: Option<String>, error: String },
+}
+
+/// Compile the batched jobs through the coordinator and stream one
+/// reply line per entry (input order), then the batch stats line.
+/// No-op on an empty batch.
+fn flush_batch<W: Write>(
+    coord: &Coordinator,
+    batch: &mut Vec<Pending>,
+    output: &mut W,
+    cfg: &ServeConfig,
+    summary: &mut ServeSummary,
+) -> Result<()> {
+    if batch.is_empty() {
+        return Ok(());
+    }
+    summary.batches += 1;
+    // Move the jobs out for the worker pool; keep only correlation
+    // metadata (id, original position) on this side.
+    let mut jobs = Vec::new();
+    let mut slots = Vec::with_capacity(batch.len());
+    for entry in std::mem::take(batch) {
+        match entry {
+            Pending::Job { id, job } => {
+                slots.push(Slot::Job { id, idx: jobs.len() });
+                jobs.push(job);
+            }
+            Pending::Bad { id, error } => slots.push(Slot::Bad { id, error }),
+        }
+    }
+    let mut results: Vec<Option<Result<(std::sync::Arc<crate::cmvm::CmvmSolution>, bool)>>> =
+        coord.compile_batch(jobs, cfg.threads).into_iter().map(Some).collect();
+    for slot in slots {
+        let reply = match slot {
+            Slot::Bad { id, error } => {
+                summary.errors += 1;
+                error_reply(id.as_deref(), &error)
+            }
+            Slot::Job { id, idx } => {
+                summary.jobs += 1;
+                match results[idx].take().expect("one result per job") {
+                    Ok((sol, cached)) => {
+                        let rep = estimate::combinational(&sol.program, &cfg.model);
+                        let mut o = BTreeMap::new();
+                        o.insert("type".into(), Value::Str("result".into()));
+                        o.insert("id".into(), Value::Str(id.clone()));
+                        o.insert("adders".into(), Value::Int(sol.adders as i64));
+                        o.insert("depth".into(), Value::Int(sol.depth as i64));
+                        o.insert("lut".into(), Value::Int(rep.lut as i64));
+                        o.insert("ff".into(), Value::Int(rep.ff as i64));
+                        o.insert("latency_ns".into(), Value::Float(rep.latency_ns));
+                        o.insert("cached".into(), Value::Bool(cached));
+                        o.insert(
+                            "opt_ms".into(),
+                            Value::Float(sol.opt_time.as_secs_f64() * 1e3),
+                        );
+                        Value::Object(o)
+                    }
+                    Err(e) => {
+                        summary.errors += 1;
+                        error_reply(Some(id.as_str()), &format!("{e:#}"))
+                    }
+                }
+            }
+        };
+        summary.replies += 1;
+        writeln!(output, "{}", json::to_string(&reply))?;
+    }
+    let stats = coord.stats();
+    let mut o = BTreeMap::new();
+    o.insert("type".into(), Value::Str("stats".into()));
+    o.insert("batch".into(), Value::Int(summary.batches as i64));
+    o.insert("jobs".into(), Value::Int(summary.replies as i64));
+    o.insert("submitted".into(), Value::Int(stats.submitted as i64));
+    o.insert("cache_hits".into(), Value::Int(stats.cache_hits as i64));
+    o.insert("cache_size".into(), Value::Int(coord.cache_len() as i64));
+    o.insert("total_opt_ms".into(), Value::Float(stats.total_opt_time.as_secs_f64() * 1e3));
+    writeln!(output, "{}", json::to_string(&Value::Object(o)))?;
+    output.flush()?;
+    Ok(())
+}
+
+fn error_reply(id: Option<&str>, error: &str) -> Value {
+    let mut o = BTreeMap::new();
+    o.insert("type".into(), Value::Str("error".into()));
+    o.insert(
+        "id".into(),
+        match id {
+            Some(id) => Value::Str(id.into()),
+            None => Value::Null,
+        },
+    );
+    o.insert("error".into(), Value::Str(error.into()));
+    Value::Object(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn run(input: &str, cfg: &ServeConfig) -> (ServeSummary, Vec<Value>) {
+        let mut out = Vec::new();
+        let summary = serve(Cursor::new(input.to_string()), &mut out, cfg).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines = text.lines().map(|l| json::parse(l).expect("reply is JSON")).collect();
+        (summary, lines)
+    }
+
+    #[test]
+    fn request_decoding_defaults_and_errors() {
+        let req = JobRequest::from_json(r#"{"matrix": [[1, 2], [3, 4]]}"#).unwrap();
+        assert_eq!(req.bits, 8);
+        assert!(req.id.is_none() && req.strategy.is_none() && req.dc.is_none());
+        let job = req.to_compile_job("j".into(), 2).unwrap();
+        assert_eq!(job.problem.d_in, 2);
+        assert_eq!(job.strategy, Strategy::Da { dc: 2 });
+
+        assert!(JobRequest::from_json("[1]").is_err());
+        assert!(JobRequest::from_json(r#"{"matrix": 5}"#).is_err());
+        assert!(JobRequest::from_json("{}").is_err());
+        let ragged = JobRequest::from_json(r#"{"matrix": [[1, 2], [3]]}"#).unwrap();
+        assert!(ragged.to_compile_job("j".into(), -1).is_err());
+        let bad_bits = JobRequest::from_json(r#"{"matrix": [[1]], "bits": 64}"#).unwrap();
+        assert!(bad_bits.to_compile_job("j".into(), -1).is_err());
+        let bad_strategy =
+            JobRequest::from_json(r#"{"matrix": [[1]], "strategy": "hls"}"#).unwrap();
+        assert!(bad_strategy.to_compile_job("j".into(), -1).is_err());
+        // dc must fit i32 — no silent wrap-around on the wire.
+        let bad_dc = JobRequest::from_json(r#"{"matrix": [[1]], "dc": 4294967296}"#).unwrap();
+        assert!(bad_dc.to_compile_job("j".into(), -1).is_err());
+    }
+
+    /// A non-UTF-8 input line becomes one more error reply; the jobs
+    /// around it still compile and stream back (no service teardown).
+    #[test]
+    fn non_utf8_line_is_an_error_reply_not_a_teardown() {
+        let mut input: Vec<u8> = Vec::new();
+        input.extend_from_slice(b"{\"id\": \"a\", \"matrix\": [[3, 5], [-7, 9]], \"dc\": -1}\n");
+        input.extend_from_slice(&[0xFF, 0xFE, b'\n']);
+        input.extend_from_slice(b"{\"id\": \"b\", \"matrix\": [[2, 3], [5, 7]], \"dc\": -1}\n");
+        let mut out = Vec::new();
+        let summary = serve(Cursor::new(input), &mut out, &ServeConfig::default()).unwrap();
+        assert_eq!(summary.jobs, 2);
+        assert_eq!(summary.errors, 1);
+        assert_eq!(summary.replies, 3);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<Value> = text.lines().map(|l| json::parse(l).unwrap()).collect();
+        assert_eq!(lines.len(), 4); // result, error, result, stats
+        assert_eq!(lines[0].get("id").unwrap().as_str().unwrap(), "a");
+        assert_eq!(lines[1].get("type").unwrap().as_str().unwrap(), "error");
+        assert!(lines[1].get("error").unwrap().as_str().unwrap().contains("line 2"));
+        assert_eq!(lines[2].get("id").unwrap().as_str().unwrap(), "b");
+    }
+
+    /// Default ids number *input lines* (1-based), blank lines included,
+    /// so `job-<line#>` correlates with the caller's file.
+    #[test]
+    fn default_ids_match_input_line_numbers() {
+        let input = "{\"matrix\": [[1]], \"dc\": -1}\n\n{\"matrix\": [[2]], \"dc\": -1}\n";
+        let (summary, lines) = run(input, &ServeConfig::default());
+        assert_eq!(summary.jobs, 2);
+        assert_eq!(summary.replies, 2);
+        let ids: Vec<String> = lines
+            .iter()
+            .filter(|l| l.get("type").unwrap().as_str().unwrap() == "result")
+            .map(|l| l.get("id").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(ids, vec!["job-1".to_string(), "job-3".to_string()]);
+    }
+
+    #[test]
+    fn serve_streams_results_errors_and_stats() {
+        // batch 1: [a, ragged]; batch 2: [not-json, a2]. Splitting the
+        // identical jobs across batches makes the cache hit
+        // deterministic (within one batch, duplicates may race).
+        let input = r#"
+{"id": "a", "matrix": [[3, 5], [-7, 9]], "dc": -1}
+{"id": "bad", "matrix": [[1], [2, 3]]}
+not even json
+{"id": "a2", "matrix": [[3, 5], [-7, 9]], "dc": -1}
+"#;
+        let cfg = ServeConfig { batch_size: 2, ..ServeConfig::default() };
+        let (summary, lines) = run(input, &cfg);
+        assert_eq!(summary.jobs, 2);
+        assert_eq!(summary.errors, 2);
+        assert_eq!(summary.batches, 2);
+        assert_eq!(summary.stats.cache_hits, 1);
+        // (result, error, stats) then (error, result, stats), input order.
+        assert_eq!(lines.len(), 6);
+        assert_eq!(lines[0].get("type").unwrap().as_str().unwrap(), "result");
+        assert_eq!(lines[0].get("id").unwrap().as_str().unwrap(), "a");
+        assert_eq!(lines[0].get("cached").unwrap().as_bool().unwrap(), false);
+        assert_eq!(lines[1].get("type").unwrap().as_str().unwrap(), "error");
+        assert_eq!(lines[1].get("id").unwrap().as_str().unwrap(), "bad");
+        assert!(lines[1].get("error").unwrap().as_str().unwrap().contains("ragged"));
+        assert_eq!(lines[2].get("type").unwrap().as_str().unwrap(), "stats");
+        assert_eq!(lines[3].get("type").unwrap().as_str().unwrap(), "error");
+        assert_eq!(lines[3].get("id").unwrap(), &Value::Null);
+        assert_eq!(lines[4].get("id").unwrap().as_str().unwrap(), "a2");
+        assert_eq!(lines[4].get("cached").unwrap().as_bool().unwrap(), true);
+        // Identical jobs report identical solutions.
+        assert_eq!(
+            lines[0].get("adders").unwrap().as_i64().unwrap(),
+            lines[4].get("adders").unwrap().as_i64().unwrap()
+        );
+        let stats = &lines[5];
+        assert_eq!(stats.get("type").unwrap().as_str().unwrap(), "stats");
+        assert_eq!(stats.get("submitted").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(stats.get("cache_hits").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(stats.get("cache_size").unwrap().as_i64().unwrap(), 1);
+    }
+
+    #[test]
+    fn batching_flushes_stats_per_batch() {
+        let mut input = String::new();
+        for i in 0..5 {
+            input.push_str(&format!(
+                "{{\"id\": \"j{i}\", \"matrix\": [[{}, 3], [5, {}]], \"dc\": -1}}\n",
+                i + 1,
+                i + 2
+            ));
+        }
+        let cfg = ServeConfig { batch_size: 2, ..ServeConfig::default() };
+        let (summary, lines) = run(&input, &cfg);
+        assert_eq!(summary.jobs, 5);
+        assert_eq!(summary.batches, 3); // 2 + 2 + 1
+        let stats_lines: Vec<_> = lines
+            .iter()
+            .filter(|l| l.get("type").unwrap().as_str().unwrap() == "stats")
+            .collect();
+        assert_eq!(stats_lines.len(), 3);
+        // Stats are cumulative; the last line covers all jobs.
+        assert_eq!(stats_lines[2].get("submitted").unwrap().as_i64().unwrap(), 5);
+    }
+
+    /// Within one batch, duplicate jobs may race to a miss; the
+    /// cache-hit accounting must still be visible across batches.
+    #[test]
+    fn cross_batch_cache_hits_are_deterministic() {
+        let one = "{\"id\": \"x\", \"matrix\": [[3, 5], [-7, 9]], \"dc\": -1}\n";
+        let input = format!("{one}{one}{one}");
+        let cfg = ServeConfig { batch_size: 1, ..ServeConfig::default() };
+        let (summary, lines) = run(&input, &cfg);
+        assert_eq!(summary.stats.cache_hits, 2);
+        let cached: Vec<bool> = lines
+            .iter()
+            .filter(|l| l.get("type").unwrap().as_str().unwrap() == "result")
+            .map(|l| l.get("cached").unwrap().as_bool().unwrap())
+            .collect();
+        assert_eq!(cached, vec![false, true, true]);
+    }
+}

@@ -1,0 +1,122 @@
+//! Integration test for the `serve` compile service: a multi-job JSONL
+//! batch — realistic layer-matrix jobs with recurring weights — round-
+//! trips through the [`da4ml::coordinator::Coordinator`] and streams
+//! back per-job reports plus batch stats with the cache hits visible.
+
+use da4ml::json::{self, Value};
+use da4ml::serve::{serve, ServeConfig};
+use da4ml::util::Rng;
+use std::io::Cursor;
+
+fn matrix_json(seed: u64, d_in: usize, d_out: usize) -> String {
+    let mut rng = Rng::seed_from(seed);
+    let rows: Vec<String> = (0..d_in)
+        .map(|_| {
+            let row: Vec<String> =
+                (0..d_out).map(|_| rng.range_i64(-127, 127).to_string()).collect();
+            format!("[{}]", row.join(","))
+        })
+        .collect();
+    format!("[{}]", rows.join(","))
+}
+
+#[test]
+fn serve_round_trips_multi_job_batch_with_cache_hits() {
+    // A quantization-sweep-like workload: 3 distinct layer matrices,
+    // each compiled twice (the recurring-matrix scenario the
+    // coordinator cache exists for), one job per batch so every
+    // duplicate is a deterministic cache hit.
+    let mut input = String::new();
+    for round in 0..2 {
+        for (i, seed) in [11u64, 22, 33].iter().enumerate() {
+            input.push_str(&format!(
+                "{{\"id\": \"r{round}-m{i}\", \"matrix\": {}, \"bits\": 8, \
+                 \"strategy\": \"da\", \"dc\": 2}}\n",
+                matrix_json(*seed, 8, 8)
+            ));
+        }
+    }
+    let cfg = ServeConfig { batch_size: 1, ..ServeConfig::default() };
+    let mut out = Vec::new();
+    let summary = serve(Cursor::new(input), &mut out, &cfg).unwrap();
+
+    assert_eq!(summary.jobs, 6);
+    assert_eq!(summary.errors, 0);
+    assert_eq!(summary.batches, 6);
+    assert_eq!(summary.stats.submitted, 6);
+    assert_eq!(summary.stats.cache_hits, 3);
+
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<Value> =
+        text.lines().map(|l| json::parse(l).expect("reply line is JSON")).collect();
+    // One result + one stats line per batch.
+    assert_eq!(lines.len(), 12);
+
+    let results: Vec<&Value> = lines
+        .iter()
+        .filter(|l| l.get("type").unwrap().as_str().unwrap() == "result")
+        .collect();
+    assert_eq!(results.len(), 6);
+    for (i, r) in results.iter().enumerate() {
+        // Replies arrive in job order with the caller's correlation ids.
+        let (round, m) = (i / 3, i % 3);
+        assert_eq!(r.get("id").unwrap().as_str().unwrap(), format!("r{round}-m{m}"));
+        // Round 1 is compiled, round 2 is served from cache.
+        assert_eq!(r.get("cached").unwrap().as_bool().unwrap(), round == 1);
+        assert!(r.get("adders").unwrap().as_i64().unwrap() > 0);
+        assert!(r.get("lut").unwrap().as_i64().unwrap() > 0);
+        assert!(r.get("latency_ns").unwrap().as_f64().unwrap() > 0.0);
+    }
+    // Cached replies report the same solution as the original compile.
+    for m in 0..3 {
+        assert_eq!(
+            results[m].get("adders").unwrap().as_i64().unwrap(),
+            results[m + 3].get("adders").unwrap().as_i64().unwrap(),
+            "cache returned a different solution for matrix {m}"
+        );
+    }
+
+    // The final stats line shows the whole cache story.
+    let stats = lines.last().unwrap();
+    assert_eq!(stats.get("type").unwrap().as_str().unwrap(), "stats");
+    assert_eq!(stats.get("submitted").unwrap().as_i64().unwrap(), 6);
+    assert_eq!(stats.get("cache_hits").unwrap().as_i64().unwrap(), 3);
+    assert_eq!(stats.get("cache_size").unwrap().as_i64().unwrap(), 3);
+}
+
+/// Larger batches still answer every job and keep reply order. Every
+/// repeat here is cross-batch (batches flush synchronously), so the
+/// hit totals are deterministic even with a racing worker pool.
+#[test]
+fn serve_batched_workload_accounts_every_job() {
+    let mut input = String::new();
+    for i in 0..10 {
+        // 5 distinct matrices, each appearing twice.
+        input.push_str(&format!(
+            "{{\"id\": \"j{i}\", \"matrix\": {}, \"dc\": -1}}\n",
+            matrix_json(100 + (i % 5) as u64, 4, 4)
+        ));
+    }
+    let cfg = ServeConfig { batch_size: 4, ..ServeConfig::default() };
+    let mut out = Vec::new();
+    let summary = serve(Cursor::new(input), &mut out, &cfg).unwrap();
+    assert_eq!(summary.jobs, 10);
+    assert_eq!(summary.errors, 0);
+    assert_eq!(summary.batches, 3);
+
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<Value> = text.lines().map(|l| json::parse(l).unwrap()).collect();
+    let ids: Vec<String> = lines
+        .iter()
+        .filter(|l| l.get("type").unwrap().as_str().unwrap() == "result")
+        .map(|l| l.get("id").unwrap().as_str().unwrap().to_string())
+        .collect();
+    let want: Vec<String> = (0..10).map(|i| format!("j{i}")).collect();
+    assert_eq!(ids, want, "replies must preserve job order across batches");
+    // 5 distinct matrices; every repeat lands in a later batch, so the
+    // cache absorbs exactly the 5 repeats.
+    assert_eq!(summary.stats.submitted, 10);
+    assert_eq!(summary.stats.cache_hits, 5);
+    let stats = lines.last().unwrap();
+    assert_eq!(stats.get("cache_size").unwrap().as_i64().unwrap(), 5);
+}
