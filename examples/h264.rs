@@ -50,7 +50,7 @@ fn main() {
     assert_eq!(y[0], 5 - 3 + 12 + 7);
     assert_eq!(y[1], 2 * 5 - 3 - 12 - 2 * 7);
 
-    let verilog = emit_verilog(&da.program, "h264_transform", None);
+    let verilog = emit_verilog(&da.program, "h264_transform", None).expect("emit verilog");
     println!("\nGenerated Verilog ({} lines):", verilog.lines().count());
     for line in verilog.lines().take(12) {
         println!("  {line}");

@@ -1,6 +1,8 @@
 //! Standalone RTL generation (paper §5.2 / §6.3): fuse the jet-tagging
-//! network, pipeline it, and emit synthesizable Verilog and VHDL —
-//! bypassing the HLS flow entirely.
+//! network, pipeline it, lower the stage-aware netlist, and emit
+//! synthesizable Verilog and VHDL — bypassing the HLS flow entirely.
+//! Both backends walk the same netlist, so the VHDL is pipelined with
+//! the identical register delay lines.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example rtl_flow
@@ -10,9 +12,10 @@ use anyhow::Result;
 use da4ml::cmvm::Strategy;
 use da4ml::dais::interp;
 use da4ml::estimate::{pipelined, FpgaModel};
+use da4ml::netlist::{sim, stats, testbench, Netlist};
 use da4ml::nn::{self, NetworkSpec, TestVectors};
 use da4ml::pipeline::{assign_stages, latency, PipelineConfig};
-use da4ml::rtl::{emit_verilog, emit_vhdl};
+use da4ml::rtl::{verilog_from_netlist, vhdl_from_netlist};
 use da4ml::runtime;
 
 fn main() -> Result<()> {
@@ -26,32 +29,45 @@ fn main() -> Result<()> {
     for (name, every) in [("200 MHz (every 5 adders)", 5u32), ("1 GHz (every adder)", 1u32)] {
         let stages = assign_stages(&prog, &PipelineConfig::every_n_adders(every));
         let rep = pipelined(&prog, &stages, &model);
+        let nl = Netlist::lower(&prog, Some(&stages))?;
         println!(
-            "{name}: latency {} cycles, LUT {}, FF {}, est Fmax {:.0} MHz",
+            "{name}: latency {} cycles, LUT {}, FF {}, est Fmax {:.0} MHz, \
+             {} register bits materialized",
             latency(&prog, &stages) + 1,
             rep.lut,
             rep.ff,
-            rep.fmax_mhz
+            rep.fmax_mhz,
+            nl.reg_bits()
         );
-        // Cycle-accurate verification of the registered design.
+        // Cycle-accurate verification of the registered design — through
+        // the netlist simulator, which also models every wire width.
         let stream: Vec<Vec<i64>> = vecs.inputs.iter().take(32).cloned().collect();
         assert_eq!(
-            interp::simulate_pipelined(&prog, &stages, &stream),
+            sim::simulate(&nl, &stream),
             interp::evaluate_batch(&prog, &stream),
-            "pipelined design must be bit-and-cycle exact"
+            "pipelined netlist must be bit-and-cycle exact"
         );
     }
 
+    // Lower the 200 MHz configuration once; table, both RTL backends
+    // and the testbench all walk the same netlist.
     let stages = assign_stages(&prog, &PipelineConfig::every_n_adders(5));
-    let v = emit_verilog(&prog, "jet_mlp", Some(&stages));
-    let vhdl = emit_vhdl(&prog, "jet_mlp");
+    let nl = Netlist::lower(&prog, Some(&stages))?;
+    println!("{}", stats::stage_table(&nl, &prog, &stages, &model).render());
+
+    let v = verilog_from_netlist(&nl, "jet_mlp");
+    let vhdl = vhdl_from_netlist(&nl, "jet_mlp");
+    let tb = testbench::emit_testbench(&nl, "jet_mlp", &vecs, 32)?;
     std::fs::create_dir_all("target/rtl")?;
     std::fs::write("target/rtl/jet_mlp.v", &v)?;
     std::fs::write("target/rtl/jet_mlp.vhd", &vhdl)?;
+    std::fs::write("target/rtl/jet_mlp_tb.v", &tb)?;
     println!(
-        "wrote target/rtl/jet_mlp.v ({} lines) and .vhd ({} lines)",
+        "wrote target/rtl/jet_mlp.v ({} lines), .vhd ({} lines, pipelined) and \
+         jet_mlp_tb.v ({} lines, self-checking)",
         v.lines().count(),
-        vhdl.lines().count()
+        vhdl.lines().count(),
+        tb.lines().count()
     );
     Ok(())
 }

@@ -9,11 +9,12 @@
 //! final spec storage — while the DOM path pays for every matrix
 //! element boxed as a `Value`.
 
+use da4ml::bench_tables::synthetic_jet_spec;
 use da4ml::json;
-use da4ml::nn::{LayerSpec, NetworkSpec, TestVectors};
+use da4ml::nn::{NetworkSpec, TestVectors};
 use da4ml::report::{sci, Table};
 use da4ml::runtime;
-use da4ml::util::{time_median, Rng};
+use da4ml::util::time_median;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -52,35 +53,8 @@ fn count_allocs<T>(f: impl FnOnce() -> T) -> (T, u64, u64) {
     (out, a1 - a0, b1 - b0)
 }
 
-fn dense(rng: &mut Rng, d_in: usize, d_out: usize, relu: bool) -> LayerSpec {
-    LayerSpec::Dense {
-        w: (0..d_in)
-            .map(|_| (0..d_out).map(|_| rng.range_i64(-127, 127)).collect())
-            .collect(),
-        b: (0..d_out).map(|_| rng.range_i64(-512, 511)).collect(),
-        relu,
-        shift: 6,
-        clip_min: -128,
-        clip_max: 127,
-    }
-}
-
-/// The paper's jet-tagging MLP shape (§6.2: 16-64-32-32-5).
-fn synthetic_jet_spec() -> NetworkSpec {
-    let mut rng = Rng::seed_from(42);
-    NetworkSpec {
-        name: "jet_mlp_synthetic".into(),
-        input_bits: 8,
-        input_signed: true,
-        input_shape: vec![16],
-        layers: vec![
-            dense(&mut rng, 16, 64, true),
-            dense(&mut rng, 64, 32, true),
-            dense(&mut rng, 32, 32, true),
-            dense(&mut rng, 32, 5, false),
-        ],
-    }
-}
+// The synthetic jet-MLP fallback spec is shared with `netlist_micro`
+// (see `bench_tables::synthetic_jet_spec`).
 
 fn main() {
     let artifact = runtime::artifacts_dir().join("jet_mlp.weights.json");

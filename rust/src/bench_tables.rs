@@ -3,11 +3,46 @@
 use crate::baseline::mac::{mac_report, DspPolicy};
 use crate::cmvm::{optimize, CmvmProblem, Strategy};
 use crate::estimate::{combinational, FpgaModel};
-use crate::nn::{self, NetworkSpec, TestVectors};
+use crate::nn::{self, LayerSpec, NetworkSpec, TestVectors};
 use crate::pipeline::PipelineConfig;
 use crate::report::Table;
 use crate::runtime;
+use crate::util::Rng;
 use crate::Result;
+
+/// A seeded random dense layer for the synthetic benchmark specs.
+fn synthetic_dense(rng: &mut Rng, d_in: usize, d_out: usize, relu: bool) -> LayerSpec {
+    LayerSpec::Dense {
+        w: (0..d_in)
+            .map(|_| (0..d_out).map(|_| rng.range_i64(-127, 127)).collect())
+            .collect(),
+        b: (0..d_out).map(|_| rng.range_i64(-512, 511)).collect(),
+        relu,
+        shift: 6,
+        clip_min: -128,
+        clip_max: 127,
+    }
+}
+
+/// The paper's jet-tagging MLP shape (§6.2: 16-64-32-32-5) with seeded
+/// 8-bit weights — the micro-benches (`ingestion_micro`,
+/// `netlist_micro`) fall back to this when the exported artifacts are
+/// absent, so `cargo bench` works on a bare checkout.
+pub fn synthetic_jet_spec() -> NetworkSpec {
+    let mut rng = Rng::seed_from(42);
+    NetworkSpec {
+        name: "jet_mlp_synthetic".into(),
+        input_bits: 8,
+        input_signed: true,
+        input_shape: vec![16],
+        layers: vec![
+            synthetic_dense(&mut rng, 16, 64, true),
+            synthetic_dense(&mut rng, 64, 32, true),
+            synthetic_dense(&mut rng, 32, 32, true),
+            synthetic_dense(&mut rng, 32, 5, false),
+        ],
+    }
+}
 
 /// Tables 3/4: resource/latency rows for random matrices at one weight
 /// bitwidth, DA(dc ∈ {0,2,-1}) vs the latency baseline.

@@ -44,7 +44,7 @@ pub fn rtl_table(title: &str, name: &str, every: u32) -> Result<()> {
         let t0 = std::time::Instant::now();
         let prog = nn::compile::fuse(&spec, Strategy::Da { dc: 2 })?;
         let stages = assign_stages(&prog, &pipe);
-        let verilog = emit_verilog(&prog, &spec.name, Some(&stages));
+        let verilog = emit_verilog(&prog, &spec.name, Some(&stages))?;
         let gen_ms = t0.elapsed().as_secs_f64() * 1e3;
         std::hint::black_box(verilog.len());
         let rep = pipelined(&prog, &stages, &model);

@@ -242,6 +242,53 @@ pub fn pipelined(program: &DaisProgram, stages: &[u32], model: &FpgaModel) -> Re
     }
 }
 
+/// Per-stage slice of a pipelined design: the combinational cells that
+/// compute on one stage. Produced by [`per_stage`]; the register bits
+/// between stages live in the netlist layer
+/// ([`crate::netlist::Netlist::reg_bits_per_stage`]), which reports the
+/// materialized delay lines of the emitted design.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageReport {
+    /// Stage number (0 holds the inputs).
+    pub stage: u32,
+    /// DAIS nodes assigned to this stage.
+    pub cells: u64,
+    /// Adder/subtractor count on this stage.
+    pub adders: u64,
+    /// LUT cost of this stage (Eq. 1 summed over its cells).
+    pub lut: u64,
+    /// Critical path of this stage in ns (including the routing
+    /// constant); the slowest stage sets the clock of the whole design.
+    pub crit_ns: f64,
+}
+
+/// Per-stage breakdown of a pipelined program — the stage-resolved view
+/// of [`pipelined`]. Returns one entry per stage `0..=max(stages)`; the
+/// LUT and adder columns sum to the totals [`pipelined`] reports, and
+/// the worst `crit_ns` is exactly its clock period.
+pub fn per_stage(program: &DaisProgram, stages: &[u32], model: &FpgaModel) -> Vec<StageReport> {
+    assert_eq!(stages.len(), program.nodes.len());
+    let n_stages = stages.iter().copied().max().unwrap_or(0) as usize + 1;
+    let mut out: Vec<StageReport> = (0..n_stages)
+        .map(|s| StageReport { stage: s as u32, ..Default::default() })
+        .collect();
+    let mut path = vec![0f64; program.nodes.len()];
+    for (i, node) in program.nodes.iter().enumerate() {
+        let base = node
+            .op
+            .operands()
+            .map(|p| if stages[p as usize] == stages[i] { path[p as usize] } else { 0.0 })
+            .fold(0.0, f64::max);
+        path[i] = base + op_delay(program, i as u32, model);
+        let r = &mut out[stages[i] as usize];
+        r.cells += 1;
+        r.adders += node.op.is_adder() as u64;
+        r.lut += op_lut(program, i as u32, model);
+        r.crit_ns = r.crit_ns.max(path[i] + model.t_route_ns);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,6 +339,28 @@ mod tests {
         assert!(pip.ff > 0);
         assert_eq!(pip.latency_cycles, 3);
         assert_eq!(pip.lut, comb.lut);
+    }
+
+    #[test]
+    fn per_stage_sums_to_pipelined_totals() {
+        let p = small_program();
+        let model = FpgaModel::default();
+        let stages: Vec<u32> = p.nodes.iter().map(|n| n.depth).collect();
+        let pip = pipelined(&p, &stages, &model);
+        let by_stage = per_stage(&p, &stages, &model);
+        assert_eq!(by_stage.len(), 3);
+        assert_eq!(by_stage.iter().map(|r| r.lut).sum::<u64>(), pip.lut);
+        assert_eq!(by_stage.iter().map(|r| r.adders).sum::<u64>(), pip.adders);
+        assert_eq!(
+            by_stage.iter().map(|r| r.cells).sum::<u64>(),
+            p.nodes.len() as u64
+        );
+        // The slowest stage sets the clock.
+        let worst = by_stage.iter().map(|r| r.crit_ns).fold(0.0, f64::max);
+        assert!((worst - 1000.0 / pip.fmax_mhz).abs() < 1e-9);
+        // Inputs live on stage 0; both adders are split across 1 and 2.
+        assert_eq!(by_stage[0].adders, 0);
+        assert_eq!(by_stage[1].adders + by_stage[2].adders, 2);
     }
 
     #[test]

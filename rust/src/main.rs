@@ -79,7 +79,9 @@ fn load_vectors(path: &str) -> Result<TestVectors> {
 const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|serve> [args]
   compile [--d-in N] [--d-out N] [--bits B] [--dc D] [--seed S]
   net <spec.weights.json> [--strategy da|latency|naive-da] [--dc D] [--pipe N]
-  rtl <spec.weights.json> <out.v|out.vhd> [--pipe N] [--dc D]
+  rtl <spec.weights.json> <out.v|out.vhd> [--pipe N] [--dc D] [--tb testvec.json]
+      (prints netlist stats + per-stage table; --tb also writes a
+       self-checking Verilog testbench next to the DUT)
   simulate <spec.weights.json> <spec.testvec.json>
   golden <spec.weights.json> <spec.hlo.txt> <spec.testvec.json>
   verify <spec.weights.json> [--dc D]      (well-formedness + bit-exactness)
@@ -154,24 +156,51 @@ fn main() -> Result<()> {
             let pipe: u32 = args.flag("pipe", 5);
             let dc: i32 = args.flag("dc", 2);
             let prog = nn::compile::fuse(&spec, Strategy::Da { dc })?;
-            let text = if pipe == 0 {
-                if out.ends_with(".vhd") {
-                    da4ml::rtl::emit_vhdl(&prog, &spec.name)
-                } else {
-                    da4ml::rtl::emit_verilog(&prog, &spec.name, None)
-                }
+            // Both backends are netlist walks now, so VHDL pipelines
+            // too; lower once and reuse for emission, stats and the
+            // testbench.
+            let stages = (pipe > 0)
+                .then(|| pipeline::assign_stages(&prog, &PipelineConfig::every_n_adders(pipe)));
+            let nl = da4ml::netlist::Netlist::lower(&prog, stages.as_deref())?;
+            let vhdl = out.ends_with(".vhd") || out.ends_with(".vhdl");
+            let text = if vhdl {
+                da4ml::rtl::vhdl_from_netlist(&nl, &spec.name)
             } else {
-                let stages =
-                    pipeline::assign_stages(&prog, &PipelineConfig::every_n_adders(pipe));
-                da4ml::rtl::emit_verilog(&prog, &spec.name, Some(&stages))
+                da4ml::rtl::verilog_from_netlist(&nl, &spec.name)
             };
             std::fs::write(out, text)?;
             println!(
-                "wrote {out}: {} nodes, {} adders, depth {}",
-                prog.nodes.len(),
-                prog.adder_count(),
-                prog.adder_depth()
+                "wrote {out}: {} cells ({} adders), {} wires, {} register bits, \
+                 latency {} cycles",
+                nl.cells.len(),
+                nl.adder_count(),
+                nl.wires.len(),
+                nl.reg_bits(),
+                nl.latency
             );
+            if let Some(st) = &stages {
+                let table =
+                    da4ml::netlist::stats::stage_table(&nl, &prog, st, &FpgaModel::default());
+                println!("{}", table.render());
+            }
+            if let Some(tb_path) = args.flags.get("tb") {
+                let vecs = load_vectors(tb_path)?;
+                let tb =
+                    da4ml::netlist::testbench::emit_testbench(&nl, &spec.name, &vecs, 64)?;
+                let tb_out = format!("{out}.tb.v");
+                std::fs::write(&tb_out, tb)?;
+                println!(
+                    "wrote {tb_out}: self-checking testbench ({} vectors)",
+                    vecs.inputs.len().min(64)
+                );
+                if vhdl {
+                    println!(
+                        "note: the testbench is Verilog; it instantiates the *Verilog* \
+                         emission of this netlist (re-run with a .v output, or use a \
+                         mixed-language simulator)"
+                    );
+                }
+            }
         }
         "simulate" => {
             let spec = load_spec(args.pos(0, "spec path")?)?;

@@ -1,0 +1,515 @@
+//! Netlist — the stage-aware structural hardware IR between [`crate::dais`]
+//! and the RTL emitters (paper §5.2).
+//!
+//! A [`Netlist`] is lowered once from `(DaisProgram, Option<&[u32]> stages)`
+//! and makes every hardware decision explicit that the emitters used to
+//! take inline while printing text:
+//!
+//! * **wires** with two's-complement widths derived from the exact
+//!   [`QInterval`] of each node — including the trailing-zero exponent
+//!   and the extra sign bit a non-negative range needs in a signed
+//!   representation (both were dropped by the old string emitters);
+//! * **cells** — typed combinational operations whose operands already
+//!   point at the correct register tap of their producer's delay line;
+//! * **registers** — the materialized pipeline delay lines, one
+//!   `q <= d` pair per register, each tagged with the stage it feeds.
+//!
+//! The stage assignment is validated once here (length, SSA order,
+//! monotonicity), so downstream consumers — the [`sim`] cycle-accurate
+//! simulator, both RTL emitters in [`crate::rtl`], the [`stats`]
+//! per-stage reporter and the [`testbench`] generator — never subtract
+//! stages that could underflow. Lowering a malformed program returns a
+//! proper error instead of a debug-mode panic.
+
+pub mod sim;
+pub mod stats;
+pub mod testbench;
+
+use crate::dais::{DaisOp, DaisProgram, RoundMode};
+use crate::fixed::QInterval;
+use crate::Result;
+use anyhow::ensure;
+
+/// Index of a wire inside a [`Netlist`].
+pub type WireId = u32;
+
+/// One signed wire (or register output) with an explicit bitwidth.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Wire {
+    /// RTL identifier (`n3` for a node value, `n3_r2` for its second
+    /// register tap).
+    pub name: String,
+    /// Two's-complement width in bits (always >= 1).
+    pub width: u32,
+    /// Driven by a pipeline register (declared `reg` in Verilog,
+    /// assigned inside the clocked process in VHDL).
+    pub registered: bool,
+}
+
+/// The combinational operation of a [`Cell`]. Operand wire ids already
+/// reference the correct delay-line tap, so emitters and the simulator
+/// need no stage arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellOp {
+    /// Drive the wire from input port `in{index}`.
+    Input {
+        /// External input number.
+        index: u32,
+    },
+    /// Compile-time constant (in the global LSB unit).
+    Const {
+        /// The constant value.
+        value: i64,
+    },
+    /// `(a << shift_a) ± (b << shift_b)` — one LUT adder/subtractor.
+    AddShift {
+        /// First operand wire.
+        a: WireId,
+        /// Second operand wire.
+        b: WireId,
+        /// Free wiring shift of `a`.
+        shift_a: u32,
+        /// Free wiring shift of `b`.
+        shift_b: u32,
+        /// Subtract instead of add.
+        sub: bool,
+    },
+    /// `-a`.
+    Neg {
+        /// Operand wire.
+        a: WireId,
+    },
+    /// `max(a, 0)` — a mux, no carry chain.
+    Relu {
+        /// Operand wire.
+        a: WireId,
+    },
+    /// Arithmetic shift right with rounding, then saturation — the NN
+    /// requantization node.
+    Quant {
+        /// Operand wire.
+        a: WireId,
+        /// Right shift (negative = free left shift).
+        shift: i32,
+        /// Rounding behaviour.
+        round: RoundMode,
+        /// Lower clip bound.
+        clip_min: i64,
+        /// Upper clip bound.
+        clip_max: i64,
+    },
+}
+
+impl CellOp {
+    /// Whether this cell consumes a carry chain (the paper's adder
+    /// count; mirrors [`DaisOp::is_adder`]).
+    pub fn is_adder(&self) -> bool {
+        match self {
+            CellOp::AddShift { .. } | CellOp::Neg { .. } => true,
+            CellOp::Quant { round: RoundMode::HalfUp, shift, .. } => *shift > 0,
+            _ => false,
+        }
+    }
+}
+
+/// One combinational cell driving `out`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cell {
+    /// The operation.
+    pub op: CellOp,
+    /// Output wire (always the node-value wire, never a register tap).
+    pub out: WireId,
+    /// Pipeline stage this cell computes on (0 when combinational).
+    pub stage: u32,
+}
+
+/// One pipeline register: `q <= d` at every clock edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Register {
+    /// Data input wire.
+    pub d: WireId,
+    /// Registered output wire.
+    pub q: WireId,
+    /// Stage whose consumers read `q` (registers form the boundary
+    /// *into* this stage).
+    pub stage: u32,
+}
+
+/// An input port `in{index}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InputPort {
+    /// External input number.
+    pub index: u32,
+    /// Port width in bits.
+    pub width: u32,
+}
+
+/// An output port `out{k}`: a wire read through a free wiring shift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutputPort {
+    /// Wire exposed (the correct delay-line tap at the pipeline
+    /// latency).
+    pub wire: WireId,
+    /// Free output wiring shift (negative = exact right shift).
+    pub shift: i32,
+    /// Port width in bits.
+    pub width: u32,
+}
+
+/// A lowered, stage-aware hardware netlist. See the module docs for the
+/// lowering rules.
+#[derive(Debug, Clone)]
+pub struct Netlist {
+    /// All wires: node values first (wire id == node id), then the
+    /// register taps in node order.
+    pub wires: Vec<Wire>,
+    /// Combinational cells in topological order.
+    pub cells: Vec<Cell>,
+    /// Pipeline registers (delay lines, flattened).
+    pub regs: Vec<Register>,
+    /// Input ports, one per external input index.
+    pub inputs: Vec<InputPort>,
+    /// Output ports in program output order.
+    pub outputs: Vec<OutputPort>,
+    /// Pipeline latency in cycles (max output stage; 0 when
+    /// combinational).
+    pub latency: u32,
+    /// Whether the design is clocked (a stage assignment was given).
+    pub pipelined: bool,
+}
+
+/// Signed two's-complement width needed to hold every value of `q` in
+/// the global LSB unit: the mantissa width, widened by the trailing-zero
+/// exponent (`value = mantissa << exp`) and by one sign bit when the
+/// interval never goes negative (a non-negative range `[0, 2^k - 1]`
+/// needs `k + 1` signed bits).
+fn rtl_width(q: &QInterval) -> u32 {
+    if q.is_zero() {
+        return 1;
+    }
+    let body = q.width() as i32 + q.exp;
+    body.max(1) as u32 + (!q.signed()) as u32
+}
+
+impl Netlist {
+    /// Lower a DAIS program (plus an optional stage assignment from
+    /// [`crate::pipeline::assign_stages`]) into a netlist.
+    ///
+    /// Validates once, up front: stage-vector length, SSA operand
+    /// order, input indices, non-negative interval exponents, and —
+    /// the hardening this pass exists for — stage monotonicity
+    /// (`stage[consumer] >= stage[producer]` on every edge). A bad
+    /// assignment is a proper error, never an underflow.
+    pub fn lower(program: &DaisProgram, stages: Option<&[u32]>) -> Result<Self> {
+        let n = program.nodes.len();
+        let pipelined = stages.is_some();
+        let st: Vec<u32> = match stages {
+            Some(st) => {
+                ensure!(
+                    st.len() == n,
+                    "stage assignment covers {} nodes, program has {n}",
+                    st.len()
+                );
+                st.to_vec()
+            }
+            None => vec![0; n],
+        };
+        for (i, node) in program.nodes.iter().enumerate() {
+            for p in node.op.operands() {
+                ensure!(
+                    (p as usize) < i,
+                    "node {i}: operand {p} does not precede it (SSA violation)"
+                );
+                ensure!(
+                    st[p as usize] <= st[i],
+                    "non-monotonic stage assignment: node {i} on stage {} reads \
+                     node {p} on stage {}",
+                    st[i],
+                    st[p as usize]
+                );
+            }
+            if let DaisOp::Input { index } = node.op {
+                ensure!(
+                    (index as usize) < program.num_inputs,
+                    "node {i}: input index {index} >= num_inputs {}",
+                    program.num_inputs
+                );
+            }
+            ensure!(
+                node.qint.exp >= 0,
+                "node {i}: negative interval exponent {} (not an integer unit)",
+                node.qint.exp
+            );
+        }
+        for (k, o) in program.outputs.iter().enumerate() {
+            ensure!(
+                (o.node as usize) < n,
+                "output {k}: node {} out of range",
+                o.node
+            );
+        }
+        let latency = program
+            .outputs
+            .iter()
+            .map(|o| st[o.node as usize])
+            .max()
+            .unwrap_or(0);
+
+        // Delay-line length per node: the furthest stage gap any
+        // consumer (or the output read-out at `latency`) observes. This
+        // is the register computation that used to live inline in
+        // `emit_verilog` and had no VHDL counterpart.
+        let mut regs_of = vec![0u32; n];
+        for (i, node) in program.nodes.iter().enumerate() {
+            for p in node.op.operands() {
+                let gap = st[i] - st[p as usize];
+                regs_of[p as usize] = regs_of[p as usize].max(gap);
+            }
+        }
+        for o in &program.outputs {
+            let gap = latency - st[o.node as usize];
+            regs_of[o.node as usize] = regs_of[o.node as usize].max(gap);
+        }
+
+        // Wires: one per node value (wire id == node id), then the
+        // delay-line taps.
+        let mut wires: Vec<Wire> = program
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, node)| Wire {
+                name: format!("n{i}"),
+                width: rtl_width(&node.qint),
+                registered: false,
+            })
+            .collect();
+        let mut tap: Vec<Vec<WireId>> = (0..n as u32).map(|i| vec![i]).collect();
+        let mut regs = Vec::new();
+        for i in 0..n {
+            let width = wires[i].width;
+            for k in 1..=regs_of[i] {
+                let q = wires.len() as WireId;
+                wires.push(Wire { name: format!("n{i}_r{k}"), width, registered: true });
+                regs.push(Register { d: tap[i][(k - 1) as usize], q, stage: st[i] + k });
+                tap[i].push(q);
+            }
+        }
+
+        // Operand reference: producer `p` seen from `consumer_stage` is
+        // the tap `consumer_stage - st[p]` registers deep.
+        let rd = |p: u32, consumer_stage: u32| -> WireId {
+            tap[p as usize][(consumer_stage - st[p as usize]) as usize]
+        };
+
+        let mut cells = Vec::with_capacity(n);
+        for (i, node) in program.nodes.iter().enumerate() {
+            let s = st[i];
+            let op = match node.op {
+                DaisOp::Input { index } => CellOp::Input { index },
+                DaisOp::Const { value } => CellOp::Const { value },
+                DaisOp::AddShift { a, b, shift_a, shift_b, sub } => CellOp::AddShift {
+                    a: rd(a, s),
+                    b: rd(b, s),
+                    shift_a,
+                    shift_b,
+                    sub,
+                },
+                DaisOp::Neg { a } => CellOp::Neg { a: rd(a, s) },
+                DaisOp::Relu { a } => CellOp::Relu { a: rd(a, s) },
+                DaisOp::Quant { a, shift, round, clip_min, clip_max } => CellOp::Quant {
+                    a: rd(a, s),
+                    shift,
+                    round,
+                    clip_min,
+                    clip_max,
+                },
+            };
+            cells.push(Cell { op, out: i as WireId, stage: s });
+        }
+
+        let mut inputs: Vec<InputPort> = (0..program.num_inputs)
+            .map(|i| InputPort { index: i as u32, width: 1 })
+            .collect();
+        for node in &program.nodes {
+            if let DaisOp::Input { index } = node.op {
+                let port = &mut inputs[index as usize];
+                port.width = port.width.max(rtl_width(&node.qint));
+            }
+        }
+        let outputs = program
+            .outputs
+            .iter()
+            .map(|o| OutputPort {
+                wire: rd(o.node, latency),
+                shift: o.shift,
+                width: rtl_width(&program.nodes[o.node as usize].qint.shl(o.shift)),
+            })
+            .collect();
+
+        Ok(Self { wires, cells, regs, inputs, outputs, latency, pipelined })
+    }
+
+    /// Wire metadata accessor.
+    pub fn wire(&self, id: WireId) -> &Wire {
+        &self.wires[id as usize]
+    }
+
+    /// Cells that consume a carry chain (the paper's adder count).
+    pub fn adder_count(&self) -> usize {
+        self.cells.iter().filter(|c| c.op.is_adder()).count()
+    }
+
+    /// Total pipeline register bits (the flip-flop count of the emitted
+    /// design; `estimate::pipelined` additionally charges one output
+    /// boundary layer, per the paper's reporting convention).
+    pub fn reg_bits(&self) -> u64 {
+        self.regs.iter().map(|r| self.wires[r.q as usize].width as u64).sum()
+    }
+
+    /// Register bits clocked into each stage boundary, indexed by stage
+    /// (`[0]` is always 0: stage 0 reads the raw inputs).
+    pub fn reg_bits_per_stage(&self) -> Vec<u64> {
+        let n_stages = self
+            .regs
+            .iter()
+            .map(|r| r.stage + 1)
+            .max()
+            .unwrap_or(0)
+            .max(self.latency + 1);
+        let mut out = vec![0u64; n_stages as usize];
+        for r in &self.regs {
+            out[r.stage as usize] += self.wires[r.q as usize].width as u64;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dais::DaisBuilder;
+    use crate::pipeline::{assign_stages, PipelineConfig};
+
+    fn q8() -> QInterval {
+        QInterval::new(-128, 127, 0)
+    }
+
+    /// x, y -> relu((x + 2y) - x), the emitter test program.
+    fn toy() -> DaisProgram {
+        let mut b = DaisBuilder::new();
+        let x = b.input(0, q8(), 0);
+        let y = b.input(1, q8(), 0);
+        let t = b.add_shift(x, y, 1, false);
+        let u = b.add_shift(t, x, 0, true);
+        let r = b.relu(u);
+        b.output(r, 0);
+        b.finish()
+    }
+
+    #[test]
+    fn combinational_lowering_has_no_registers() {
+        let p = toy();
+        let nl = Netlist::lower(&p, None).unwrap();
+        assert!(!nl.pipelined);
+        assert_eq!(nl.latency, 0);
+        assert!(nl.regs.is_empty());
+        assert_eq!(nl.cells.len(), p.nodes.len());
+        assert_eq!(nl.wires.len(), p.nodes.len());
+        assert_eq!(nl.adder_count(), p.adder_count());
+        assert_eq!(nl.inputs.len(), 2);
+        assert_eq!(nl.outputs.len(), 1);
+        assert_eq!(nl.reg_bits(), 0);
+    }
+
+    #[test]
+    fn pipelined_lowering_materializes_delay_lines() {
+        let p = toy();
+        // Manual stages = adder depths: n0,n1 on 0; n2 on 1; n3,n4 on 2.
+        let stages: Vec<u32> = p.nodes.iter().map(|n| n.depth).collect();
+        let nl = Netlist::lower(&p, Some(&stages)).unwrap();
+        assert!(nl.pipelined);
+        assert_eq!(nl.latency, 2);
+        // n0 is read at stage 2 (by n3): 2 regs; n1 at stage 1: 1 reg;
+        // n2 at stage 2: 1 reg. n3/n4 are consumed in-stage.
+        assert_eq!(nl.regs.len(), 4);
+        let names: Vec<&str> =
+            nl.regs.iter().map(|r| nl.wire(r.q).name.as_str()).collect();
+        assert_eq!(names, vec!["n0_r1", "n0_r2", "n1_r1", "n2_r1"]);
+        assert!(nl.regs.iter().all(|r| nl.wire(r.q).registered));
+        // Stage tags: n0_r1 feeds stage 1, n0_r2 stage 2, etc.
+        let tags: Vec<u32> = nl.regs.iter().map(|r| r.stage).collect();
+        assert_eq!(tags, vec![1, 2, 1, 2]);
+        // 8 + 8 + 8 + 10 register bits.
+        assert_eq!(nl.reg_bits(), 34);
+        assert_eq!(nl.reg_bits_per_stage(), vec![0, 16, 18]);
+    }
+
+    #[test]
+    fn operands_resolve_to_register_taps() {
+        let p = toy();
+        let stages: Vec<u32> = p.nodes.iter().map(|n| n.depth).collect();
+        let nl = Netlist::lower(&p, Some(&stages)).unwrap();
+        // n3 = (n2 via 1 reg) - (n0 via 2 regs).
+        let CellOp::AddShift { a, b, .. } = nl.cells[3].op else {
+            panic!("node 3 is an add")
+        };
+        assert_eq!(nl.wire(a).name, "n2_r1");
+        assert_eq!(nl.wire(b).name, "n0_r2");
+        // The output reads n4 directly (stage 2 == latency).
+        assert_eq!(nl.wire(nl.outputs[0].wire).name, "n4");
+    }
+
+    #[test]
+    fn non_monotonic_stages_are_an_error_not_a_panic() {
+        let p = toy();
+        // n2 (reads n0, n1) on an *earlier* stage than its operands.
+        let bad = vec![1, 1, 0, 1, 1];
+        let err = Netlist::lower(&p, Some(&bad)).unwrap_err();
+        assert!(err.to_string().contains("non-monotonic"), "got: {err}");
+    }
+
+    #[test]
+    fn wrong_stage_length_is_an_error() {
+        let p = toy();
+        let err = Netlist::lower(&p, Some(&[0, 0])).unwrap_err();
+        assert!(err.to_string().contains("covers 2 nodes"), "got: {err}");
+    }
+
+    #[test]
+    fn width_rule_unsigned_ranges_get_a_sign_bit() {
+        // [0, 255] needs 9 signed bits, not 8 (the old emitters dropped
+        // this bit and the sign of 255 flipped in simulation).
+        assert_eq!(rtl_width(&QInterval::new(0, 255, 0)), 9);
+        assert_eq!(rtl_width(&QInterval::new(-128, 127, 0)), 8);
+        assert_eq!(rtl_width(&QInterval::new(0, 0, 0)), 1);
+        // Trailing-zero exponents widen the wire: mantissa 1 at exp 2 is
+        // the value 4 -> 3 magnitude bits + sign.
+        assert_eq!(rtl_width(&QInterval::new(1, 1, 2)), 4);
+        assert_eq!(rtl_width(&QInterval::new(-3, -3, 1)), 4);
+    }
+
+    #[test]
+    fn relu_and_const_wires_are_wide_enough() {
+        let mut b = DaisBuilder::new();
+        let x = b.input(0, q8(), 0);
+        let r = b.relu(x); // [0, 127] -> 8 signed bits
+        let c = b.constant(4); // mantissa 1 @ exp 2 -> 4 bits
+        let t = b.add_shift(r, c, 0, false);
+        b.output(t, 0);
+        let p = b.finish();
+        let nl = Netlist::lower(&p, None).unwrap();
+        assert_eq!(nl.wire(1).width, 8);
+        assert_eq!(nl.wire(2).width, 4);
+        // [4, 131] -> 8 magnitude bits + sign.
+        assert_eq!(nl.wire(3).width, 9);
+    }
+
+    #[test]
+    fn assign_stages_output_always_lowers() {
+        let p = toy();
+        for every in [1, 2, 5] {
+            let stages = assign_stages(&p, &PipelineConfig::every_n_adders(every));
+            Netlist::lower(&p, Some(&stages)).expect("assign_stages is monotone");
+        }
+    }
+}

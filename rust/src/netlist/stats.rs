@@ -1,0 +1,83 @@
+//! Per-stage netlist reporting, rendered as a paper-style table.
+//!
+//! Combines the analytic per-stage resource model
+//! ([`crate::estimate::per_stage`]) with the lowered netlist's
+//! materialized register delay lines, giving the pipelining loop the
+//! data the greedy stage assigner never sees: where the LUTs sit, which
+//! stage sets the clock, and how many register bits each stage boundary
+//! really costs in the emitted design.
+
+use super::Netlist;
+use crate::dais::DaisProgram;
+use crate::estimate::{per_stage, FpgaModel};
+use crate::report::Table;
+
+/// Render the per-stage resource/register table for a pipelined
+/// program: one row per stage plus a TOTAL row. The `reg bits in`
+/// column counts the register bits clocked into each stage's boundary
+/// (stage 0 reads the raw inputs, so its row is always 0).
+///
+/// `nl` must be the lowering of `(program, Some(stages))` — callers
+/// that already emitted RTL or simulated have it in hand; lowering is
+/// not repeated here.
+pub fn stage_table(
+    nl: &Netlist,
+    program: &DaisProgram,
+    stages: &[u32],
+    model: &FpgaModel,
+) -> Table {
+    let est = per_stage(program, stages, model);
+    let reg_bits = nl.reg_bits_per_stage();
+    let mut t = Table::new(
+        "Per-stage netlist resources",
+        &["stage", "cells", "adders", "LUT", "crit[ns]", "reg bits in"],
+    );
+    for r in &est {
+        let bits = reg_bits.get(r.stage as usize).copied().unwrap_or(0);
+        t.push(vec![
+            r.stage.to_string(),
+            r.cells.to_string(),
+            r.adders.to_string(),
+            r.lut.to_string(),
+            format!("{:.2}", r.crit_ns),
+            bits.to_string(),
+        ]);
+    }
+    t.push(vec![
+        "TOTAL".into(),
+        est.iter().map(|r| r.cells).sum::<u64>().to_string(),
+        est.iter().map(|r| r.adders).sum::<u64>().to_string(),
+        est.iter().map(|r| r.lut).sum::<u64>().to_string(),
+        format!("{:.2}", est.iter().map(|r| r.crit_ns).fold(0.0, f64::max)),
+        nl.reg_bits().to_string(),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dais::DaisBuilder;
+    use crate::fixed::QInterval;
+
+    #[test]
+    fn stage_table_renders_all_stages() {
+        let mut b = DaisBuilder::new();
+        let q = QInterval::new(-128, 127, 0);
+        let x = b.input(0, q, 0);
+        let y = b.input(1, q, 0);
+        let t = b.add_shift(x, y, 1, false);
+        let u = b.add_shift(t, x, 0, true);
+        b.output(u, 0);
+        let p = b.finish();
+        let stages: Vec<u32> = p.nodes.iter().map(|n| n.depth).collect();
+        let nl = Netlist::lower(&p, Some(&stages)).unwrap();
+        let table = stage_table(&nl, &p, &stages, &FpgaModel::default());
+        let s = table.render();
+        assert!(s.contains("Per-stage netlist resources"));
+        assert!(s.contains("reg bits in"));
+        assert!(s.contains("TOTAL"));
+        // Three stages (0, 1, 2) plus header, separator and total.
+        assert_eq!(s.lines().filter(|l| l.starts_with('|')).count(), 6);
+    }
+}

@@ -1,28 +1,20 @@
-//! RTL emission (paper §5.2): each DAIS op maps 1:1 to a Verilog/VHDL
-//! statement; pipelining becomes register delay lines derived from a
-//! stage assignment. Generated designs are fully combinational or fully
-//! pipelined with II = 1, exactly as the paper's standalone flow.
+//! RTL emission (paper §5.2): both emitters are thin structural walks
+//! over the shared [`crate::netlist`] IR. Lowering — wire widths,
+//! register delay lines, stage validation — happens once in
+//! [`crate::netlist::Netlist::lower`]; Verilog and VHDL then print the
+//! same netlist, so the two backends are pipelined-feature-identical by
+//! construction (same registers, same widths, same latency).
 //!
-//! Bit-and-cycle-accurate verification is performed by the DAIS
-//! interpreter ([`crate::dais::interp`], the Verilator substitute); the
-//! emitters here are golden-tested for structure.
+//! Generated designs are fully combinational or fully pipelined with
+//! II = 1, exactly as the paper's standalone flow. Bit-and-cycle
+//! accurate verification is performed by the netlist simulator
+//! ([`crate::netlist::sim`], which also models wire-width truncation)
+//! and the DAIS interpreter ([`crate::dais::interp`]); the emitted text
+//! itself is pinned by golden-file snapshot tests
+//! (`rust/tests/rtl_golden.rs`).
 
 mod verilog;
 mod vhdl;
 
-pub use verilog::emit_verilog;
-pub use vhdl::emit_vhdl;
-
-use crate::dais::DaisProgram;
-
-/// Bitwidth used for a node's wire (at least 1 bit).
-pub(crate) fn wire_width(program: &DaisProgram, id: u32) -> u32 {
-    program.nodes[id as usize].qint.width().max(1)
-}
-
-/// Width of an output port including its wiring shift.
-pub(crate) fn output_width(program: &DaisProgram, k: usize) -> u32 {
-    let o = &program.outputs[k];
-    let q = program.nodes[o.node as usize].qint.shl(o.shift);
-    q.width().max(1)
-}
+pub use verilog::{emit_verilog, verilog_from_netlist};
+pub use vhdl::{emit_vhdl, vhdl_from_netlist};

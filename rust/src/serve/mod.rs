@@ -94,6 +94,19 @@ pub struct JobRequest {
     pub strategy: Option<String>,
     /// Delay constraint; falls back to [`ServeConfig::default_dc`].
     pub dc: Option<i64>,
+    /// Optional RTL emission: `"verilog"` or `"vhdl"`. The reply then
+    /// carries the combinational RTL text of the solution in an
+    /// `"rtl"` field.
+    pub emit: Option<String>,
+}
+
+/// RTL language requested by a job's `"emit"` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EmitLang {
+    /// Verilog-2001 (`rtl::emit_verilog`).
+    Verilog,
+    /// VHDL (`rtl::emit_vhdl`).
+    Vhdl,
 }
 
 impl JobRequest {
@@ -105,6 +118,7 @@ impl JobRequest {
         let mut bits = 8i64;
         let mut strategy = None;
         let mut dc = None;
+        let mut emit = None;
         d.object_start()?;
         while let Some(key) = d.next_key()? {
             match key.as_ref() {
@@ -113,12 +127,24 @@ impl JobRequest {
                 "bits" => bits = d.i64()?,
                 "strategy" => strategy = Some(d.string()?),
                 "dc" => dc = Some(d.i64()?),
+                "emit" => emit = Some(d.string()?),
                 _ => d.skip_value()?,
             }
         }
         d.end()?;
         let matrix = matrix.ok_or_else(|| anyhow::anyhow!("missing field 'matrix'"))?;
-        Ok(Self { id, matrix, bits, strategy, dc })
+        Ok(Self { id, matrix, bits, strategy, dc, emit })
+    }
+
+    /// Parse the optional `"emit"` field (strict, like the strategy
+    /// name: an unknown language is an error reply, never ignored).
+    pub fn emit_lang(&self) -> Result<Option<EmitLang>> {
+        match self.emit.as_deref() {
+            None => Ok(None),
+            Some("verilog") => Ok(Some(EmitLang::Verilog)),
+            Some("vhdl") => Ok(Some(EmitLang::Vhdl)),
+            Some(other) => bail!("unknown emit language '{other}' (expected verilog|vhdl)"),
+        }
     }
 
     /// Validate and lower into a [`CompileJob`] (checked here — not in
@@ -174,7 +200,7 @@ pub fn parse_strategy(name: &str, dc: i32) -> Result<Strategy> {
 
 /// One batch entry: a lowered job or an immediate error reply.
 enum Pending {
-    Job { id: String, job: CompileJob },
+    Job { id: String, job: CompileJob, emit: Option<EmitLang> },
     Bad { id: Option<String>, error: String },
 }
 
@@ -200,8 +226,11 @@ pub fn serve<R: BufRead, W: Write>(
             Ok(line) => match JobRequest::from_json(&line) {
                 Ok(req) => {
                     let id = req.id.clone().unwrap_or_else(|| format!("job-{line_no}"));
-                    match req.to_compile_job(id.clone(), cfg.default_dc) {
-                        Ok(job) => Pending::Job { id, job },
+                    let lowered = req
+                        .to_compile_job(id.clone(), cfg.default_dc)
+                        .and_then(|job| Ok((job, req.emit_lang()?)));
+                    match lowered {
+                        Ok((job, emit)) => Pending::Job { id, job, emit },
                         Err(e) => Pending::Bad { id: Some(id), error: format!("{e:#}") },
                     }
                 }
@@ -233,8 +262,53 @@ pub fn serve<R: BufRead, W: Write>(
 /// One reply slot after the jobs have been moved out for compilation:
 /// correlation metadata only (the job itself is not cloned).
 enum Slot {
-    Job { id: String, idx: usize },
+    Job { id: String, idx: usize, emit: Option<EmitLang> },
     Bad { id: Option<String>, error: String },
+}
+
+/// RTL module names come from job ids, which are arbitrary strings:
+/// sanitize to a legal Verilog/VHDL identifier.
+fn module_name(id: &str) -> String {
+    let mut s: String = id
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    match s.chars().next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => s.insert_str(0, "m_"),
+    }
+    s
+}
+
+/// Build one `"type": "result"` reply (including the optional RTL
+/// text). RTL emission failures bubble up and become an error reply.
+fn result_reply(
+    id: &str,
+    sol: &crate::cmvm::CmvmSolution,
+    cached: bool,
+    emit: Option<EmitLang>,
+    cfg: &ServeConfig,
+) -> Result<Value> {
+    let rep = estimate::combinational(&sol.program, &cfg.model);
+    let mut o = BTreeMap::new();
+    o.insert("type".into(), Value::Str("result".into()));
+    o.insert("id".into(), Value::Str(id.into()));
+    o.insert("adders".into(), Value::Int(sol.adders as i64));
+    o.insert("depth".into(), Value::Int(sol.depth as i64));
+    o.insert("lut".into(), Value::Int(rep.lut as i64));
+    o.insert("ff".into(), Value::Int(rep.ff as i64));
+    o.insert("latency_ns".into(), Value::Float(rep.latency_ns));
+    o.insert("cached".into(), Value::Bool(cached));
+    o.insert("opt_ms".into(), Value::Float(sol.opt_time.as_secs_f64() * 1e3));
+    if let Some(lang) = emit {
+        let module = module_name(id);
+        let text = match lang {
+            EmitLang::Verilog => crate::rtl::emit_verilog(&sol.program, &module, None)?,
+            EmitLang::Vhdl => crate::rtl::emit_vhdl(&sol.program, &module, None)?,
+        };
+        o.insert("rtl".into(), Value::Str(text));
+    }
+    Ok(Value::Object(o))
 }
 
 /// Compile the batched jobs through the coordinator and stream one
@@ -257,8 +331,8 @@ fn flush_batch<W: Write>(
     let mut slots = Vec::with_capacity(batch.len());
     for entry in std::mem::take(batch) {
         match entry {
-            Pending::Job { id, job } => {
-                slots.push(Slot::Job { id, idx: jobs.len() });
+            Pending::Job { id, job, emit } => {
+                slots.push(Slot::Job { id, idx: jobs.len(), emit });
                 jobs.push(job);
             }
             Pending::Bad { id, error } => slots.push(Slot::Bad { id, error }),
@@ -272,25 +346,17 @@ fn flush_batch<W: Write>(
                 summary.errors += 1;
                 error_reply(id.as_deref(), &error)
             }
-            Slot::Job { id, idx } => {
+            Slot::Job { id, idx, emit } => {
                 summary.jobs += 1;
                 match results[idx].take().expect("one result per job") {
                     Ok((sol, cached)) => {
-                        let rep = estimate::combinational(&sol.program, &cfg.model);
-                        let mut o = BTreeMap::new();
-                        o.insert("type".into(), Value::Str("result".into()));
-                        o.insert("id".into(), Value::Str(id.clone()));
-                        o.insert("adders".into(), Value::Int(sol.adders as i64));
-                        o.insert("depth".into(), Value::Int(sol.depth as i64));
-                        o.insert("lut".into(), Value::Int(rep.lut as i64));
-                        o.insert("ff".into(), Value::Int(rep.ff as i64));
-                        o.insert("latency_ns".into(), Value::Float(rep.latency_ns));
-                        o.insert("cached".into(), Value::Bool(cached));
-                        o.insert(
-                            "opt_ms".into(),
-                            Value::Float(sol.opt_time.as_secs_f64() * 1e3),
-                        );
-                        Value::Object(o)
+                        match result_reply(&id, &sol, cached, emit, cfg) {
+                            Ok(reply) => reply,
+                            Err(e) => {
+                                summary.errors += 1;
+                                error_reply(Some(id.as_str()), &format!("{e:#}"))
+                            }
+                        }
                     }
                     Err(e) => {
                         summary.errors += 1;
@@ -468,6 +534,48 @@ not even json
         assert_eq!(stats_lines.len(), 3);
         // Stats are cumulative; the last line covers all jobs.
         assert_eq!(stats_lines[2].get("submitted").unwrap().as_i64().unwrap(), 5);
+    }
+
+    /// The optional `"emit"` field returns combinational RTL text in
+    /// the reply; unknown languages are error replies, and ids are
+    /// sanitized into legal module names.
+    #[test]
+    fn emit_field_returns_rtl_text() {
+        let input = r#"
+{"id": "fc-1", "matrix": [[3, 5], [-7, 9]], "dc": -1, "emit": "verilog"}
+{"id": "fc-1v", "matrix": [[3, 5], [-7, 9]], "dc": -1, "emit": "vhdl"}
+{"id": "plain", "matrix": [[3, 5], [-7, 9]], "dc": -1}
+{"id": "bad", "matrix": [[3, 5], [-7, 9]], "dc": -1, "emit": "systemverilog"}
+"#;
+        let cfg = ServeConfig { batch_size: 1, ..ServeConfig::default() };
+        let (summary, lines) = run(input, &cfg);
+        assert_eq!(summary.jobs, 3);
+        assert_eq!(summary.errors, 1);
+        let verilog = lines[0].get("rtl").unwrap().as_str().unwrap();
+        assert!(verilog.contains("module fc_1 ("), "id sanitized into module name");
+        assert!(verilog.contains("endmodule"));
+        assert!(!verilog.contains("clk"), "serve emits combinational RTL");
+        let vhdl = lines[2].get("rtl").unwrap().as_str().unwrap();
+        assert!(vhdl.contains("entity fc_1v is"));
+        assert!(vhdl.contains("end architecture;"));
+        // No emit -> no rtl field.
+        assert!(lines[4].get("rtl").is_err());
+        assert_eq!(lines[6].get("type").unwrap().as_str().unwrap(), "error");
+        assert!(lines[6]
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("unknown emit language"));
+    }
+
+    #[test]
+    fn module_names_are_sanitized() {
+        assert_eq!(module_name("fc-1"), "fc_1");
+        assert_eq!(module_name("layer.0/dense"), "layer_0_dense");
+        assert_eq!(module_name("0abc"), "m_0abc");
+        assert_eq!(module_name(""), "m_");
+        assert_eq!(module_name("ok_name"), "ok_name");
     }
 
     /// Within one batch, duplicate jobs may race to a miss; the

@@ -84,6 +84,61 @@ fn serve_round_trips_multi_job_batch_with_cache_hits() {
     assert_eq!(stats.get("cache_size").unwrap().as_i64().unwrap(), 3);
 }
 
+/// Compile jobs can request RTL emission on the wire: the reply
+/// carries the Verilog/VHDL text of the optimized solution, cached
+/// replies re-emit identically, and the emitted Verilog simulates
+/// (via the netlist layer) to exactly `x^T M` for the job matrix.
+#[test]
+fn serve_emits_rtl_on_request() {
+    let input = "{\"id\": \"fc1\", \"matrix\": [[2, 3], [5, 7]], \"dc\": -1, \
+                 \"emit\": \"verilog\"}\n\
+                 {\"id\": \"fc1b\", \"matrix\": [[2, 3], [5, 7]], \"dc\": -1, \
+                 \"emit\": \"verilog\"}\n\
+                 {\"id\": \"fc1v\", \"matrix\": [[2, 3], [5, 7]], \"dc\": -1, \
+                 \"emit\": \"vhdl\"}\n";
+    let cfg = ServeConfig { batch_size: 1, ..ServeConfig::default() };
+    let mut out = Vec::new();
+    let summary = serve(Cursor::new(input.to_string()), &mut out, &cfg).unwrap();
+    assert_eq!(summary.jobs, 3);
+    assert_eq!(summary.errors, 0);
+    assert_eq!(summary.stats.cache_hits, 2);
+
+    let text = String::from_utf8(out).unwrap();
+    let results: Vec<Value> = text
+        .lines()
+        .map(|l| json::parse(l).unwrap())
+        .filter(|l| l.get("type").unwrap().as_str().unwrap() == "result")
+        .collect();
+    assert_eq!(results.len(), 3);
+    let v1 = results[0].get("rtl").unwrap().as_str().unwrap().to_string();
+    assert!(v1.contains("module fc1 ("));
+    assert!(v1.contains("endmodule"));
+    // The cached duplicate re-emits the same module body (only the
+    // name differs).
+    let v2 = results[1].get("rtl").unwrap().as_str().unwrap().to_string();
+    assert!(results[1].get("cached").unwrap().as_bool().unwrap());
+    assert_eq!(
+        v1.replace("fc1", "x"),
+        v2.replace("fc1b", "x"),
+        "cached reply must emit the identical design"
+    );
+    let vhdl = results[2].get("rtl").unwrap().as_str().unwrap();
+    assert!(vhdl.contains("entity fc1v is"));
+
+    // Close the loop: the served Verilog is the lowering of the same
+    // program the netlist simulator executes, so re-deriving the
+    // solution locally and simulating must realize y = x^T M.
+    let prob = da4ml::cmvm::CmvmProblem::new(2, 2, vec![2, 3, 5, 7], 8);
+    let sol = da4ml::cmvm::optimize(&prob, da4ml::cmvm::Strategy::Da { dc: -1 }).unwrap();
+    let local = da4ml::rtl::emit_verilog(&sol.program, "fc1", None).unwrap();
+    assert_eq!(local, v1, "served RTL matches a local emission of the same job");
+    let nl = da4ml::netlist::Netlist::lower(&sol.program, None).unwrap();
+    for x in [[1i64, 0], [0, 1], [3, -4], [-128, 127]] {
+        let y = da4ml::netlist::sim::evaluate(&nl, &x);
+        assert_eq!(y, vec![2 * x[0] + 5 * x[1], 3 * x[0] + 7 * x[1]]);
+    }
+}
+
 /// Larger batches still answer every job and keep reply order. Every
 /// repeat here is cross-batch (batches flush synchronously), so the
 /// hit totals are deterministic even with a racing worker pool.
