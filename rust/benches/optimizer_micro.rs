@@ -1,38 +1,23 @@
-//! Micro-benchmarks of the optimizer hot paths. Plain timing harness:
-//! median of N runs (see also `ingestion_micro` for the artifact-load path).
+//! Optimizer micro-benchmark — a thin front-end over the shared perf
+//! suite (`da4ml::perf`), so `cargo bench optimizer_micro` and
+//! `da4ml perf --smoke` measure the same cases through the same
+//! plumbing and report identical numbers (the CLI additionally writes
+//! the machine-readable `BENCH_cmvm.json`; see docs/perf.md).
+//!
+//! The ad-hoc table that used to live here is gone: phase timings,
+//! adder counts and the engine work counters all come from
+//! [`da4ml::perf::run_suite`]. Interpreter throughput moved to
+//! `netlist_micro`, which times the cycle-accurate simulator on the
+//! same workload.
 
-use da4ml::cmvm::{optimize, CmvmProblem, Strategy};
-use da4ml::dais::interp;
-use da4ml::report::{sci, Table};
-use da4ml::util::time_median;
+use da4ml::perf::{self, PerfConfig};
 
 fn main() {
-    let mut table = Table::new(
-        "Optimizer micro-benchmarks",
-        &["case", "median[ms]", "adders"],
+    let cfg = PerfConfig::smoke();
+    let report = perf::run_suite(&cfg).expect("perf suite");
+    println!("{}", perf::render_table(&report));
+    println!(
+        "(shared plumbing with `da4ml perf --smoke`; add --out/--baseline there for \
+         the machine-readable report and the regression gate)"
     );
-    for &(m, bw, dc) in &[(16usize, 8u32, -1i32), (16, 8, 0), (32, 8, -1), (64, 8, 2), (64, 4, 2)] {
-        let p = CmvmProblem::random(5 + m as u64, m, m, bw);
-        let runs = if m <= 16 { 9 } else { 3 };
-        let (d, sol) = time_median(runs, || optimize(&p, Strategy::Da { dc }).expect("optimize"));
-        table.push(vec![
-            format!("da {m}x{m} {bw}b dc={dc}"),
-            sci(d.as_secs_f64() * 1e3),
-            sol.adders.to_string(),
-        ]);
-    }
-    // Interpreter throughput (e2e accuracy sweeps depend on it).
-    let p = CmvmProblem::random(99, 32, 32, 8);
-    let sol = optimize(&p, Strategy::Da { dc: 2 }).expect("optimize");
-    let xs: Vec<Vec<i64>> = (0..256)
-        .map(|i| (0..32).map(|j| ((i * 31 + j * 17) % 255 - 128) as i64).collect())
-        .collect();
-    let (d, _) = time_median(5, || interp::evaluate_batch(&sol.program, &xs));
-    let evals = 256.0 * sol.program.nodes.len() as f64;
-    table.push(vec![
-        "interp 32x32 x256 vec".into(),
-        sci(d.as_secs_f64() * 1e3),
-        format!("{:.1} Mop/s", evals / d.as_secs_f64() / 1e6),
-    ]);
-    println!("{}", table.render());
 }

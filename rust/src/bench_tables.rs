@@ -44,6 +44,29 @@ pub fn synthetic_jet_spec() -> NetworkSpec {
     }
 }
 
+/// The jet-MLP shape with every hidden dimension scaled by `num/den`
+/// (floored at 2, output head fixed at 5) — the size axis of the perf
+/// suite's network cases. `synthetic_jet_spec_scaled(1, 1)` has the
+/// dimensions of [`synthetic_jet_spec`] under a scale-tagged name.
+pub fn synthetic_jet_spec_scaled(num: usize, den: usize) -> NetworkSpec {
+    assert!(num > 0 && den > 0, "scale must be positive");
+    let s = |d: usize| ((d * num) / den).max(2);
+    let dims = [s(16), s(64), s(32), s(32)];
+    let mut rng = Rng::seed_from(42);
+    NetworkSpec {
+        name: format!("jet_mlp_synthetic_x{num}of{den}"),
+        input_bits: 8,
+        input_signed: true,
+        input_shape: vec![dims[0]],
+        layers: vec![
+            synthetic_dense(&mut rng, dims[0], dims[1], true),
+            synthetic_dense(&mut rng, dims[1], dims[2], true),
+            synthetic_dense(&mut rng, dims[2], dims[3], true),
+            synthetic_dense(&mut rng, dims[3], 5, false),
+        ],
+    }
+}
+
 /// Tables 3/4: resource/latency rows for random matrices at one weight
 /// bitwidth, DA(dc ∈ {0,2,-1}) vs the latency baseline.
 pub fn resource_table(title: &str, bw: u32) {

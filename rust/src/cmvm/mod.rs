@@ -11,7 +11,7 @@ mod normalize;
 pub use normalize::{denormalize_check, normalize, Normalization};
 
 use crate::csd;
-use crate::cse::{self, CseConfig, InputTerm, OutTerm};
+use crate::cse::{self, CseConfig, CseStats, InputTerm, OutTerm};
 use crate::dais::{DaisBuilder, DaisProgram};
 use crate::fixed::QInterval;
 use crate::graph;
@@ -144,6 +144,11 @@ pub struct CmvmSolution {
     pub opt_time: std::time::Duration,
     /// Strategy that produced this solution.
     pub strategy: Strategy,
+    /// CSE engine work counters, accumulated over every engine
+    /// invocation the strategy made (two for the two-stage flow; zeros
+    /// for strategies that bypass the engine: latency / naive-da /
+    /// lookahead). Deterministic — the perf baseline pins them.
+    pub cse: CseStats,
 }
 
 /// Run a strategy into an existing builder with caller-provided input
@@ -159,14 +164,30 @@ pub fn optimize_terms(
     problem: &CmvmProblem,
     strategy: Strategy,
 ) -> Result<Vec<OutTerm>> {
+    optimize_terms_stats(builder, inputs, problem, strategy).map(|(outs, _)| outs)
+}
+
+/// Like [`optimize_terms`] but also returns the CSE engine work
+/// counters accumulated across every engine invocation the strategy
+/// made. Strategies that never run the engine (latency / naive-da /
+/// lookahead) report zeroed counters.
+pub fn optimize_terms_stats(
+    builder: &mut DaisBuilder,
+    inputs: &[InputTerm],
+    problem: &CmvmProblem,
+    strategy: Strategy,
+) -> Result<(Vec<OutTerm>, CseStats)> {
     Ok(match strategy {
         Strategy::Latency | Strategy::NaiveDa => {
             // The latency strategy's *functional* model is the naive DA
             // graph (bit-exact); its *resource* model differs (see
             // baseline::mac).
-            cse::naive_da(builder, inputs, &problem.matrix, problem.d_in, problem.d_out)
+            (
+                cse::naive_da(builder, inputs, &problem.matrix, problem.d_in, problem.d_out),
+                CseStats::default(),
+            )
         }
-        Strategy::CseOnly { dc } => cse::optimize_into(
+        Strategy::CseOnly { dc } => cse::optimize_into_stats(
             builder,
             inputs,
             &problem.matrix,
@@ -175,9 +196,10 @@ pub fn optimize_terms(
             &CseConfig { dc, ..CseConfig::default() },
         ),
         Strategy::Da { dc } => two_stage(builder, inputs, problem, dc)?,
-        Strategy::Lookahead { dc } => {
-            crate::baseline::lookahead::optimize_into(builder, inputs, problem, dc)
-        }
+        Strategy::Lookahead { dc } => (
+            crate::baseline::lookahead::optimize_into(builder, inputs, problem, dc),
+            CseStats::default(),
+        ),
     })
 }
 
@@ -193,7 +215,7 @@ pub fn optimize(problem: &CmvmProblem, strategy: Strategy) -> Result<CmvmSolutio
         })
         .collect();
 
-    let outs = optimize_terms(&mut builder, &inputs, problem, strategy)?;
+    let (outs, cse_stats) = optimize_terms_stats(&mut builder, &inputs, problem, strategy)?;
     bind_outputs(&mut builder, &outs);
     let program = builder.finish();
     Ok(CmvmSolution {
@@ -202,6 +224,7 @@ pub fn optimize(problem: &CmvmProblem, strategy: Strategy) -> Result<CmvmSolutio
         program,
         opt_time: t0.elapsed(),
         strategy,
+        cse: cse_stats,
     })
 }
 
@@ -213,14 +236,14 @@ fn two_stage(
     inputs: &[InputTerm],
     problem: &CmvmProblem,
     dc: i32,
-) -> Result<Vec<OutTerm>> {
+) -> Result<(Vec<OutTerm>, CseStats)> {
     let decomp = graph::decompose(&problem.matrix, problem.d_in, problem.d_out, dc);
     let cfg = CseConfig { dc, ..CseConfig::default() };
 
     if decomp.is_trivial() {
         // No cross-column structure found: stage 1 degenerates to the
         // identity and we run CSE on M directly.
-        return Ok(cse::optimize_into(
+        return Ok(cse::optimize_into_stats(
             builder,
             inputs,
             &problem.matrix,
@@ -231,7 +254,7 @@ fn two_stage(
     }
 
     // Stage 2a: CSE over M1 (d_in × k).
-    let mids = cse::optimize_into(
+    let (mids, mut stats) = cse::optimize_into_stats(
         builder,
         inputs,
         &decomp.m1,
@@ -273,7 +296,10 @@ fn two_stage(
         }
     }
 
-    Ok(cse::optimize_into(builder, &mid_inputs, &m2, decomp.k, problem.d_out, &cfg))
+    let (outs, stage2) =
+        cse::optimize_into_stats(builder, &mid_inputs, &m2, decomp.k, problem.d_out, &cfg);
+    stats.absorb(&stage2);
+    Ok((outs, stats))
 }
 
 /// Materialize the CSE output terms as program outputs (inserting `Neg`
@@ -393,6 +419,19 @@ mod tests {
                 naive.adders
             );
         }
+    }
+
+    /// The engine counters ride along on solutions (the perf suite and
+    /// coordinator totals depend on this plumbing).
+    #[test]
+    fn cse_stats_flow_through_solutions() {
+        let p = CmvmProblem::random(5, 8, 8, 8);
+        let da = optimize(&p, Strategy::Da { dc: -1 }).unwrap();
+        assert!(da.cse.steps > 0, "8x8 8-bit CMVM must share something");
+        assert!(da.cse.heap_pops >= da.cse.steps);
+        assert!(da.cse.occ_cols_scanned > 0);
+        let naive = optimize(&p, Strategy::NaiveDa).unwrap();
+        assert_eq!(naive.cse, CseStats::default(), "naive-da bypasses the engine");
     }
 
     #[test]

@@ -66,6 +66,11 @@ pub struct CoordinatorStats {
     pub cache_hits: u64,
     /// Total optimizer time across executed jobs.
     pub total_opt_time: std::time::Duration,
+    /// CSE update steps across executed (non-cached) jobs.
+    pub total_cse_steps: u64,
+    /// Optimizer heap pops across executed jobs — the work proxy the
+    /// perf suite tracks; cache hits add nothing here.
+    pub total_heap_pops: u64,
 }
 
 /// The full identity of a compile job — everything that affects the
@@ -152,6 +157,8 @@ impl<S: BuildHasher + Default> Coordinator<S> {
         let sol = Arc::new(optimize(&job.problem, job.strategy)?);
         let mut inner = self.inner.lock().unwrap();
         inner.stats.total_opt_time += sol.opt_time;
+        inner.stats.total_cse_steps += sol.cse.steps as u64;
+        inner.stats.total_heap_pops += sol.cse.heap_pops as u64;
         inner.cache.entry(key).or_insert_with(|| sol.clone());
         Ok((sol, false))
     }
@@ -227,6 +234,10 @@ mod tests {
         assert_eq!(s.submitted, 2);
         assert_eq!(s.cache_hits, 1);
         assert_eq!(c.cache_len(), 1);
+        // Optimizer work counters accumulate once per *executed* job;
+        // the cached reply added nothing.
+        assert_eq!(s.total_cse_steps, a.cse.steps as u64);
+        assert_eq!(s.total_heap_pops, a.cse.heap_pops as u64);
     }
 
     #[test]

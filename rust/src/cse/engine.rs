@@ -1,12 +1,33 @@
 //! The CSE engine proper: digit tensor, pattern frequency table, greedy
 //! selection loop, and delay-constraint bookkeeping.
+//!
+//! Hot-path layout (tracked by the `perf` suite and the
+//! `optimizer_micro` bench): occurrence matching is driven by two
+//! incremental indices maintained differentially in `add_digit` /
+//! `kill` alongside the pattern frequency table —
+//!
+//! * a per-pattern **column index** (`PatEntry::cols`): the columns that
+//!   currently contain at least one digit pair of the pattern, with the
+//!   per-column pair count. `match_occurrences` walks exactly these
+//!   columns (ascending), instead of rescanning every column of the
+//!   tensor on every heap pop;
+//! * a per-column **row index** (`Column::row_digits`): the alive digit
+//!   indices of each row, so a pattern's a-side digits are read off
+//!   directly instead of filtering a full column scan.
+//!
+//! Scratch buffers (`scratch`, `a_side`, `used`) are engine fields,
+//! reserved once and reused across the hot loop.
+//!
+//! The pre-index engine is retained verbatim in `reference.rs`; the
+//! seeded differential sweep in `tests.rs` proves both emit
+//! bit-identical programs, and the perf suite times them head-to-head.
 
 use super::tree;
 use crate::csd::Csd;
 use crate::dais::{DaisBuilder, NodeId};
 use crate::fixed::QInterval;
 use crate::util::fxhash::FxHashMap;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BinaryHeap};
 
 /// An input to the CSE stage: a node already present in the builder.
 #[derive(Debug, Clone, Copy)]
@@ -44,13 +65,44 @@ impl Default for CseConfig {
     }
 }
 
-/// Statistics for reporting / ablations.
-#[derive(Debug, Clone, Default)]
+/// Statistics and work counters for reporting / ablations / the perf
+/// suite.
+///
+/// The engine is fully deterministic, so every counter is an exact
+/// function of the problem — the perf baseline pins them exactly, and
+/// any drift is a behavior change, not noise.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CseStats {
     /// Number of CSE update steps (implemented subexpressions).
     pub steps: usize,
     /// Candidates rejected by the delay constraint.
     pub depth_rejections: usize,
+    /// Heap pops in the selection loop (including stale entries).
+    pub heap_pops: usize,
+    /// Heap pops discarded as stale (count changed since push, below
+    /// the pair threshold, or parked).
+    pub stale_pops: usize,
+    /// Columns visited by occurrence matching.
+    pub occ_cols_scanned: usize,
+    /// Digits examined by occurrence matching — the work the pattern
+    /// column index and per-row digit lists bound. The reference engine
+    /// counts every digit slot its full column scans walk; the indexed
+    /// engine counts only the a-side digits it materializes.
+    pub occ_digits_scanned: usize,
+}
+
+impl CseStats {
+    /// Accumulate another run's counters (used when a strategy invokes
+    /// the engine more than once, e.g. the two-stage flow, or when a
+    /// report aggregates per-layer runs).
+    pub fn absorb(&mut self, other: &CseStats) {
+        self.steps += other.steps;
+        self.depth_rejections += other.depth_rejections;
+        self.heap_pops += other.heap_pops;
+        self.stale_pops += other.stale_pops;
+        self.occ_cols_scanned += other.occ_cols_scanned;
+        self.occ_digits_scanned += other.occ_digits_scanned;
+    }
 }
 
 /// One signed digit of the tensor, located in a column.
@@ -62,8 +114,9 @@ struct ColDigit {
     alive: bool,
 }
 
-/// A column of `M_expr` with a (row, power) index for O(1) partner lookup
-/// and the Kraft sum for the depth-feasibility check.
+/// A column of `M_expr` with a (row, power) index for O(1) partner
+/// lookup, per-row alive-digit lists for O(row) a-side collection, and
+/// the Kraft sum for the depth-feasibility check.
 #[derive(Debug, Default)]
 struct Column {
     digits: Vec<ColDigit>,
@@ -72,46 +125,49 @@ struct Column {
     kraft: u128,
     /// Dead entries in `digits` (compaction trigger).
     dead: u32,
-    /// Alive digits per row, indexed by row id (lets occurrence
-    /// matching skip columns that cannot contain a pattern at all).
-    row_count: Vec<u32>,
+    /// Alive digit indices per row, indexed by row id. Occurrence
+    /// matching reads a pattern's a-side digits straight off this list
+    /// instead of filtering a full column scan.
+    row_digits: Vec<Vec<u32>>,
 }
 
 impl Column {
-    /// Drop dead digits and rebuild the index. Pattern counts are
+    /// Drop dead digits and rebuild the indices. Pattern counts are
     /// index-independent, so this is safe between update steps; it keeps
-    /// the alive() scans O(live) instead of O(all-ever-created) — the
-    /// optimizer's dominant cost without it (the `optimizer_micro` bench tracks this hot path).
+    /// the alive() scans O(live) instead of O(all-ever-created).
     fn compact(&mut self) {
         if (self.dead as usize) * 2 < self.digits.len() {
             return;
         }
         self.digits.retain(|d| d.alive);
         self.index.clear();
+        for list in &mut self.row_digits {
+            list.clear();
+        }
         for (i, d) in self.digits.iter().enumerate() {
             self.index.insert((d.row, d.power), i as u32);
+            self.row_digits[d.row as usize].push(i as u32);
         }
         self.dead = 0;
     }
 
-    fn row_inc(&mut self, row: u32) {
+    fn row_add(&mut self, row: u32, idx: u32) {
         let r = row as usize;
-        if r >= self.row_count.len() {
-            self.row_count.resize(r + 1, 0);
+        if r >= self.row_digits.len() {
+            self.row_digits.resize_with(r + 1, Vec::new);
         }
-        self.row_count[r] += 1;
+        self.row_digits[r].push(idx);
     }
 
-    fn row_dec(&mut self, row: u32) {
-        self.row_count[row as usize] -= 1;
+    fn row_remove(&mut self, row: u32, idx: u32) {
+        let list = &mut self.row_digits[row as usize];
+        let pos = list
+            .iter()
+            .position(|&i| i == idx)
+            .expect("killed digit present in its row list");
+        list.swap_remove(pos);
     }
 
-    fn has_row(&self, row: u32) -> bool {
-        self.row_count.get(row as usize).copied().unwrap_or(0) > 0
-    }
-}
-
-impl Column {
     fn alive(&self) -> impl Iterator<Item = (u32, &ColDigit)> {
         self.digits.iter().enumerate().filter(|(_, d)| d.alive).map(|(i, d)| (i as u32, d))
     }
@@ -156,7 +212,23 @@ fn canon(d1: (u32, &ColDigit), d2: (u32, &ColDigit)) -> Option<(Pattern, u32, u3
     ))
 }
 
-/// Heap entry (max-heap by score, deterministic tie-break on pattern).
+/// Heap entry for the greedy selection loop.
+///
+/// The ordering is a **total, documented order**, so pattern selection
+/// is deterministic on every platform and across repeated runs (pinned
+/// by `cse::tests::repeated_runs_are_bit_identical`):
+///
+/// 1. higher weighted score pops first;
+/// 2. then higher occurrence count (prefers the more frequent pattern
+///    among equal scores);
+/// 3. then the lexicographically **smallest** `(ra, rb, shift, sub)`
+///    pattern — note the reversed operand order in `cmp`:
+///    `BinaryHeap` is a max-heap, so inverting the pattern comparison
+///    makes the smallest pattern the maximum.
+///
+/// Entries that compare equal are bit-identical (the pattern is part of
+/// the key), so heap-internal tie handling can never influence which
+/// pattern is selected.
 #[derive(PartialEq, Eq)]
 struct HeapEntry {
     score: i64,
@@ -169,8 +241,6 @@ impl Ord for HeapEntry {
         self.score
             .cmp(&other.score)
             .then(self.count.cmp(&other.count))
-            // Deterministic tie-break: lexicographically smaller pattern
-            // wins (max-heap pops it first).
             .then_with(|| other.pattern.cmp(&self.pattern))
     }
 }
@@ -180,6 +250,20 @@ impl PartialOrd for HeapEntry {
     }
 }
 
+/// Differential frequency-table entry for one pattern.
+#[derive(Debug, Default)]
+struct PatEntry {
+    /// Total pair count across all columns — exactly the counter the
+    /// pre-index reference engine maintains; it drives scoring and
+    /// parking, so heap behavior is unchanged by the index.
+    total: u32,
+    /// Pair count per column. A `BTreeMap` so occurrence matching
+    /// visits columns in ascending order — the order the reference
+    /// engine's full scan visits them, which the bit-identical
+    /// differential sweep relies on.
+    cols: BTreeMap<u32, u32>,
+}
+
 struct Engine<'a> {
     builder: &'a mut DaisBuilder,
     d_out: usize,
@@ -187,7 +271,7 @@ struct Engine<'a> {
     /// Implemented values; index == row id of the digit tensor.
     rows: Vec<RowInfo>,
     cols: Vec<Column>,
-    counts: FxHashMap<Pattern, u32>,
+    counts: FxHashMap<Pattern, PatEntry>,
     heap: BinaryHeap<HeapEntry>,
     /// Patterns parked at a given count (depth-infeasible or
     /// insufficient disjoint occurrences); re-eligible when count moves.
@@ -196,6 +280,10 @@ struct Engine<'a> {
     budget: Option<Vec<u32>>,
     /// Reusable pattern scratch buffer (hot path: kill/add).
     scratch: Vec<Pattern>,
+    /// Reusable a-side digit buffer (hot path: match_occurrences).
+    a_side: Vec<(u32, ColDigit)>,
+    /// Reusable matched-digit buffer (hot path: match_occurrences).
+    used: Vec<u32>,
     stats: CseStats,
 }
 
@@ -223,37 +311,60 @@ impl<'a> Engine<'a> {
     }
 
     fn push_heap(&mut self, p: Pattern) {
-        let count = *self.counts.get(&p).unwrap_or(&0);
+        let count = self.counts.get(&p).map(|e| e.total).unwrap_or(0);
         if count >= 2 {
             self.heap.push(HeapEntry { score: self.score(&p, count), count, pattern: p });
         }
     }
 
-    /// Adjust the count of `p` by ±1 and refresh heap/parking state.
-    fn bump(&mut self, p: Pattern, delta: i32) {
-        let e = self.counts.entry(p).or_insert(0);
-        *e = (*e as i32 + delta) as u32;
-        let c = *e;
-        if c == 0 {
+    /// Adjust the pair count of `p` in column `c` by ±1 and refresh
+    /// heap/parking state. The heap interaction depends only on the
+    /// cross-column total, matching the reference engine exactly.
+    fn bump(&mut self, p: Pattern, c: usize, delta: i32) {
+        let total = {
+            let e = self.counts.entry(p).or_default();
+            e.total = (e.total as i32 + delta) as u32;
+            match e.cols.entry(c as u32) {
+                std::collections::btree_map::Entry::Occupied(mut o) => {
+                    let v = (*o.get() as i32 + delta) as u32;
+                    if v == 0 {
+                        o.remove();
+                    } else {
+                        *o.get_mut() = v;
+                    }
+                }
+                std::collections::btree_map::Entry::Vacant(v) => {
+                    debug_assert!(delta > 0, "negative bump on column without pairs");
+                    v.insert(delta as u32);
+                }
+            }
+            e.total
+        };
+        if total == 0 {
             self.counts.remove(&p);
         }
         if let Some(&parked_at) = self.parked.get(&p) {
-            if parked_at != c {
+            if parked_at != total {
                 self.parked.remove(&p);
             }
         }
-        if c >= 2 && !self.parked.contains_key(&p) {
-            self.heap.push(HeapEntry { score: self.score(&p, c), count: c, pattern: p });
+        if total >= 2 && !self.parked.contains_key(&p) {
+            self.heap.push(HeapEntry {
+                score: self.score(&p, total),
+                count: total,
+                pattern: p,
+            });
         }
     }
 
-    /// Kill digit `idx` in column `c`, updating counts and Kraft sum.
+    /// Kill digit `idx` in column `c`, updating counts, indices and the
+    /// Kraft sum.
     fn kill(&mut self, c: usize, idx: u32) {
         let d = self.cols[c].digits[idx as usize];
         debug_assert!(d.alive);
         self.cols[c].digits[idx as usize].alive = false;
         self.cols[c].dead += 1;
-        self.cols[c].row_dec(d.row);
+        self.cols[c].row_remove(d.row, idx);
         self.cols[c].index.remove(&(d.row, d.power));
         self.cols[c].kraft -= 1u128 << self.rows[d.row as usize].depth;
         let mut pairs = std::mem::take(&mut self.scratch);
@@ -264,12 +375,13 @@ impl<'a> Engine<'a> {
                 .filter_map(|e| canon((idx, &d), e).map(|(p, _, _)| p)),
         );
         for p in &pairs {
-            self.bump(*p, -1);
+            self.bump(*p, c, -1);
         }
         self.scratch = pairs;
     }
 
-    /// Add a digit to column `c`, updating counts and Kraft sum.
+    /// Add a digit to column `c`, updating counts, indices and the
+    /// Kraft sum.
     fn add_digit(&mut self, c: usize, row: u32, power: i32, sign: i8) {
         let digit = ColDigit { row, power, sign, alive: true };
         let mut pairs = std::mem::take(&mut self.scratch);
@@ -286,29 +398,47 @@ impl<'a> Engine<'a> {
         );
         self.cols[c].digits.push(digit);
         self.cols[c].index.insert((row, power), idx);
-        self.cols[c].row_inc(row);
+        self.cols[c].row_add(row, idx);
         self.cols[c].kraft += 1u128 << self.rows[row as usize].depth;
         for p in &pairs {
-            self.bump(*p, 1);
+            self.bump(*p, c, 1);
         }
         self.scratch = pairs;
     }
 
-    /// Greedily match disjoint occurrences of `p` in every column.
-    /// Returns (column, a-digit-idx, b-digit-idx) triples.
-    fn match_occurrences(&self, p: &Pattern) -> Vec<(usize, u32, u32)> {
+    /// Greedily match disjoint occurrences of `p`, visiting only the
+    /// columns the pattern index lists (ascending — the same order the
+    /// reference engine's full scan yields them in). Returns
+    /// (column, a-digit-idx, b-digit-idx) triples.
+    ///
+    /// A column appears in the index iff it holds at least one digit
+    /// pair canonicalizing to `p`, so no occurrence can hide in a
+    /// skipped column; a listed column's greedy matching depends only
+    /// on the column contents, which evolve identically in both
+    /// engines — hence bit-identical output.
+    fn match_occurrences(&mut self, p: &Pattern) -> Vec<(usize, u32, u32)> {
         let mut occ = Vec::new();
-        for (c, col) in self.cols.iter().enumerate() {
-            if !col.has_row(p.ra) || !col.has_row(p.rb) {
-                continue;
+        let Some(entry) = self.counts.get(p) else { return occ };
+        let mut a_side = std::mem::take(&mut self.a_side);
+        let mut used = std::mem::take(&mut self.used);
+        let mut cols_scanned = 0usize;
+        let mut digits_scanned = 0usize;
+        for &c_id in entry.cols.keys() {
+            let c = c_id as usize;
+            let col = &self.cols[c];
+            cols_scanned += 1;
+            used.clear();
+            a_side.clear();
+            // Read the a-side digits straight off the per-row index, in
+            // power order for maximal greedy matching of chain patterns
+            // (same-row, shifted).
+            if let Some(list) = col.row_digits.get(p.ra as usize) {
+                a_side.extend(list.iter().map(|&i| (i, col.digits[i as usize])));
             }
-            let mut used: Vec<u32> = Vec::new();
-            // Iterate a-side digits in power order for maximal greedy
-            // matching of chain patterns (same-row, shifted).
-            let mut a_side: Vec<(u32, &ColDigit)> =
-                col.alive().filter(|(_, d)| d.row == p.ra).collect();
             a_side.sort_by_key(|(_, d)| d.power);
-            for (ia, da) in a_side {
+            digits_scanned += a_side.len();
+            for &(ia, da) in a_side.iter() {
+                debug_assert!(da.alive);
                 if used.contains(&ia) {
                     continue;
                 }
@@ -326,7 +456,7 @@ impl<'a> Engine<'a> {
                     }
                     // …and the orientation must canonicalize to `p`
                     // (guards the shift==0 row-order tie and ra==rb).
-                    if let Some((cp, ca, cb)) = canon((ia, da), (ib, db)) {
+                    if let Some((cp, ca, cb)) = canon((ia, &da), (ib, db)) {
                         if cp == *p {
                             used.push(ca);
                             used.push(cb);
@@ -336,6 +466,10 @@ impl<'a> Engine<'a> {
                 }
             }
         }
+        self.a_side = a_side;
+        self.used = used;
+        self.stats.occ_cols_scanned += cols_scanned;
+        self.stats.occ_digits_scanned += digits_scanned;
         occ
     }
 
@@ -370,9 +504,11 @@ impl<'a> Engine<'a> {
     fn step(&mut self) -> bool {
         loop {
             let Some(top) = self.heap.pop() else { return false };
+            self.stats.heap_pops += 1;
             let p = top.pattern;
-            let cur = *self.counts.get(&p).unwrap_or(&0);
+            let cur = self.counts.get(&p).map(|e| e.total).unwrap_or(0);
             if cur != top.count || cur < 2 || self.parked.contains_key(&p) {
+                self.stats.stale_pops += 1;
                 continue; // stale entry
             }
             let occ = self.match_occurrences(&p);
@@ -438,6 +574,15 @@ pub fn optimize_into_stats(
     d_out: usize,
     cfg: &CseConfig,
 ) -> (Vec<OutTerm>, CseStats) {
+    #[cfg(test)]
+    {
+        if test_hooks::USE_REFERENCE.with(|c| c.get()) {
+            return super::reference::optimize_into_stats(
+                builder, inputs, matrix, d_in, d_out, cfg,
+            );
+        }
+    }
+
     assert_eq!(matrix.len(), d_in * d_out, "matrix shape mismatch");
     assert_eq!(inputs.len(), d_in, "input arity mismatch");
 
@@ -464,7 +609,7 @@ pub fn optimize_into_stats(
                     alive: true,
                 });
                 col.index.insert((j as u32, digit.power), idx);
-                col.row_inc(j as u32);
+                col.row_add(j as u32, idx);
                 col.kraft += 1u128 << rows[j].depth;
             }
         }
@@ -491,14 +636,17 @@ pub fn optimize_into_stats(
         None
     };
 
-    // Initial pattern counts: all digit pairs within each column.
-    let mut counts: FxHashMap<Pattern, u32> = FxHashMap::default();
-    for col in &cols {
+    // Initial pattern counts: all digit pairs within each column, into
+    // both the cross-column total and the per-column index.
+    let mut counts: FxHashMap<Pattern, PatEntry> = FxHashMap::default();
+    for (c, col) in cols.iter().enumerate() {
         let alive: Vec<(u32, &ColDigit)> = col.alive().collect();
         for i in 0..alive.len() {
             for j in (i + 1)..alive.len() {
                 if let Some((p, _, _)) = canon(alive[i], alive[j]) {
-                    *counts.entry(p).or_insert(0) += 1;
+                    let e = counts.entry(p).or_default();
+                    e.total += 1;
+                    *e.cols.entry(c as u32).or_insert(0) += 1;
                 }
             }
         }
@@ -515,9 +663,16 @@ pub fn optimize_into_stats(
         parked: FxHashMap::default(),
         budget,
         scratch: Vec::new(),
+        a_side: Vec::new(),
+        used: Vec::new(),
         stats: CseStats::default(),
     };
-    let patterns: Vec<Pattern> = engine.counts.keys().copied().collect();
+    // Seed the heap in sorted pattern order. Pop order is a multiset
+    // property of the heap's total order, so hash-map iteration order
+    // can never matter — but an explicitly sorted seed keeps that
+    // platform-determinism argument local and obvious.
+    let mut patterns: Vec<Pattern> = engine.counts.keys().copied().collect();
+    patterns.sort_unstable();
     for p in patterns {
         engine.push_heap(p);
     }
@@ -544,13 +699,41 @@ pub fn optimize_into_stats(
 }
 
 /// Smallest tree depth `D` such that terms with the given Kraft sum
-/// (Σ 2^{d_k}) fit: `Σ 2^{d_k} ≤ 2^D`.
-fn min_feasible_depth(kraft: u128) -> u32 {
+/// (Σ 2^{d_k}) fit: `Σ 2^{d_k} ≤ 2^D`. Shared with the reference
+/// engine so both compute identical depth budgets.
+pub(super) fn min_feasible_depth(kraft: u128) -> u32 {
     if kraft <= 1 {
         return 0;
     }
-    let bits = 128 - (kraft - 1).leading_zeros();
-    bits
+    128 - (kraft - 1).leading_zeros()
+}
+
+/// Test-only switch routing [`optimize_into_stats`] through the
+/// pre-index reference engine on the current thread, so the
+/// differential sweep can drive identical full strategy flows
+/// (`crate::cmvm::optimize`) through both engines without duplicating
+/// the two-stage plumbing.
+#[cfg(test)]
+pub(crate) mod test_hooks {
+    use std::cell::Cell;
+
+    thread_local! {
+        pub static USE_REFERENCE: Cell<bool> = const { Cell::new(false) };
+    }
+
+    /// Run `f` with the reference engine substituted for the indexed
+    /// one on this thread (reset on unwind).
+    pub fn with_reference_engine<T>(f: impl FnOnce() -> T) -> T {
+        struct Reset;
+        impl Drop for Reset {
+            fn drop(&mut self) {
+                USE_REFERENCE.with(|c| c.set(false));
+            }
+        }
+        USE_REFERENCE.with(|c| c.set(true));
+        let _reset = Reset;
+        f()
+    }
 }
 
 #[cfg(test)]
@@ -569,5 +752,25 @@ mod unit {
         assert_eq!(min_feasible_depth(9), 4);
         // 22 digits (8x8 8-bit column): depth 5, matching Table 2 dc=0.
         assert_eq!(min_feasible_depth(22), 5);
+    }
+
+    /// Pins the documented total heap order: score desc, then count
+    /// desc, then lexicographically smallest pattern first.
+    #[test]
+    fn heap_order_is_total_and_documented() {
+        let p_small = Pattern { ra: 0, rb: 1, shift: 0, sub: false };
+        let p_big = Pattern { ra: 0, rb: 1, shift: 1, sub: false };
+        assert!(p_small < p_big);
+        let mut heap = BinaryHeap::new();
+        heap.push(HeapEntry { score: 5, count: 2, pattern: p_big });
+        heap.push(HeapEntry { score: 5, count: 2, pattern: p_small });
+        heap.push(HeapEntry { score: 5, count: 3, pattern: p_big });
+        heap.push(HeapEntry { score: 7, count: 2, pattern: p_big });
+        let order: Vec<(i64, u32, Pattern)> =
+            std::iter::from_fn(|| heap.pop().map(|e| (e.score, e.count, e.pattern))).collect();
+        assert_eq!(
+            order,
+            vec![(7, 2, p_big), (5, 3, p_big), (5, 2, p_small), (5, 2, p_big)]
+        );
     }
 }

@@ -17,8 +17,16 @@
 //! depth `≤ D` iff `Σ 2^{d_k} ≤ 2^D`; every candidate implementation is
 //! admitted only if each affected column stays feasible for its depth
 //! budget.
+//!
+//! The engine's occurrence matching is index-driven (per-pattern column
+//! index + per-column row lists, maintained differentially — see
+//! `engine.rs`); the pre-index implementation is retained in
+//! [`reference`] as the differential/perf baseline, proven bit-identical
+//! by the seeded sweep in `tests.rs` and timed head-to-head by
+//! [`crate::perf`].
 
 mod engine;
+pub mod reference;
 pub mod tree;
 
 pub use engine::{optimize_into, optimize_into_stats, CseConfig, CseStats, InputTerm, OutTerm};

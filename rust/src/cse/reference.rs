@@ -1,0 +1,511 @@
+//! The pre-index CSE engine, retained verbatim as the **differential
+//! reference** for the indexed hot path in `engine.rs` — the same role
+//! the test-only `json::legacy` parser plays for the pull parser.
+//!
+//! Two consumers keep it alive:
+//!
+//! * the seeded differential property sweep in `cse::tests`, which
+//!   proves the indexed engine emits a bit-identical
+//!   [`crate::dais::DaisProgram`] on random matrices × all five
+//!   [`crate::cmvm::Strategy`] variants × depth constraints;
+//! * the perf suite ([`crate::perf`]), whose engine A/B case times both
+//!   engines head-to-head on the jet workload and reports the measured
+//!   speedup in `BENCH_cmvm.json`.
+//!
+//! Its occurrence matching rescans every column of the digit tensor on
+//! every heap pop (`match_occurrences` below), and its a-side digit
+//! collection filters a full column scan — exactly the hot-path costs
+//! the indexed engine eliminates. Do not "optimize" this module: its
+//! entire value is being the frozen pre-refactor behavior. Work
+//! counters ([`CseStats`]) were added for the A/B report; they do not
+//! influence any decision the engine makes.
+
+use super::engine::{CseConfig, CseStats, InputTerm, OutTerm};
+use super::tree;
+use crate::csd::Csd;
+use crate::dais::{DaisBuilder, NodeId};
+use crate::fixed::QInterval;
+use crate::util::fxhash::FxHashMap;
+use std::collections::BinaryHeap;
+
+/// One signed digit of the tensor, located in a column.
+#[derive(Debug, Clone, Copy)]
+struct ColDigit {
+    row: u32,
+    power: i32,
+    sign: i8,
+    alive: bool,
+}
+
+/// A column of `M_expr` with a (row, power) index for O(1) partner lookup
+/// and the Kraft sum for the depth-feasibility check.
+#[derive(Debug, Default)]
+struct Column {
+    digits: Vec<ColDigit>,
+    index: FxHashMap<(u32, i32), u32>,
+    /// Σ 2^depth(row) over alive digits (u128; depths are budget-bounded).
+    kraft: u128,
+    /// Dead entries in `digits` (compaction trigger).
+    dead: u32,
+    /// Alive digits per row, indexed by row id (lets occurrence
+    /// matching skip columns that cannot contain a pattern at all).
+    row_count: Vec<u32>,
+}
+
+impl Column {
+    /// Drop dead digits and rebuild the index. Pattern counts are
+    /// index-independent, so this is safe between update steps; it keeps
+    /// the alive() scans O(live) instead of O(all-ever-created).
+    fn compact(&mut self) {
+        if (self.dead as usize) * 2 < self.digits.len() {
+            return;
+        }
+        self.digits.retain(|d| d.alive);
+        self.index.clear();
+        for (i, d) in self.digits.iter().enumerate() {
+            self.index.insert((d.row, d.power), i as u32);
+        }
+        self.dead = 0;
+    }
+
+    fn row_inc(&mut self, row: u32) {
+        let r = row as usize;
+        if r >= self.row_count.len() {
+            self.row_count.resize(r + 1, 0);
+        }
+        self.row_count[r] += 1;
+    }
+
+    fn row_dec(&mut self, row: u32) {
+        self.row_count[row as usize] -= 1;
+    }
+
+    fn has_row(&self, row: u32) -> bool {
+        self.row_count.get(row as usize).copied().unwrap_or(0) > 0
+    }
+
+    fn alive(&self) -> impl Iterator<Item = (u32, &ColDigit)> {
+        self.digits.iter().enumerate().filter(|(_, d)| d.alive).map(|(i, d)| (i as u32, d))
+    }
+}
+
+/// Canonical two-term pattern: value `L[ra] ± (L[rb] << shift)`.
+/// Orientation: the `ra` digit sits at the lower power; ties broken by
+/// row order. Sign-normalized so the `ra` digit is positive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+struct Pattern {
+    ra: u32,
+    rb: u32,
+    shift: u32,
+    sub: bool,
+}
+
+/// Canonicalize a digit pair into (pattern, a-index, b-index) — `None`
+/// when the two digits are the same digit.
+#[inline]
+fn canon(d1: (u32, &ColDigit), d2: (u32, &ColDigit)) -> Option<(Pattern, u32, u32)> {
+    let (i1, a) = d1;
+    let (i2, b) = d2;
+    if i1 == i2 {
+        return None;
+    }
+    let ((ia, da), (ib, db)) = if (a.power, a.row, i1) <= (b.power, b.row, i2) {
+        ((i1, a), (i2, b))
+    } else {
+        ((i2, b), (i1, a))
+    };
+    Some((
+        Pattern {
+            ra: da.row,
+            rb: db.row,
+            shift: (db.power - da.power) as u32,
+            sub: da.sign != db.sign,
+        },
+        ia,
+        ib,
+    ))
+}
+
+/// Heap entry (max-heap by score, deterministic tie-break on pattern).
+#[derive(PartialEq, Eq)]
+struct HeapEntry {
+    score: i64,
+    count: u32,
+    pattern: Pattern,
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.score
+            .cmp(&other.score)
+            .then(self.count.cmp(&other.count))
+            .then_with(|| other.pattern.cmp(&self.pattern))
+    }
+}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct Engine<'a> {
+    builder: &'a mut DaisBuilder,
+    d_out: usize,
+    cfg: CseConfig,
+    rows: Vec<RowInfo>,
+    cols: Vec<Column>,
+    counts: FxHashMap<Pattern, u32>,
+    heap: BinaryHeap<HeapEntry>,
+    parked: FxHashMap<Pattern, u32>,
+    budget: Option<Vec<u32>>,
+    scratch: Vec<Pattern>,
+    stats: CseStats,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct RowInfo {
+    node: NodeId,
+    qint: QInterval,
+    depth: u32,
+}
+
+impl<'a> Engine<'a> {
+    fn weight(&self, p: &Pattern) -> i64 {
+        if !self.cfg.weighted {
+            return 1;
+        }
+        let qa = self.rows[p.ra as usize].qint;
+        let qb = self.rows[p.rb as usize].qint;
+        let s = p.shift as i32;
+        let ov = (qa.msb().min(qb.msb() + s)) - (qa.lsb().max(qb.lsb() + s));
+        ov.max(1) as i64
+    }
+
+    fn score(&self, p: &Pattern, count: u32) -> i64 {
+        count as i64 * self.weight(p)
+    }
+
+    fn push_heap(&mut self, p: Pattern) {
+        let count = *self.counts.get(&p).unwrap_or(&0);
+        if count >= 2 {
+            self.heap.push(HeapEntry { score: self.score(&p, count), count, pattern: p });
+        }
+    }
+
+    /// Adjust the count of `p` by ±1 and refresh heap/parking state.
+    fn bump(&mut self, p: Pattern, delta: i32) {
+        let e = self.counts.entry(p).or_insert(0);
+        *e = (*e as i32 + delta) as u32;
+        let c = *e;
+        if c == 0 {
+            self.counts.remove(&p);
+        }
+        if let Some(&parked_at) = self.parked.get(&p) {
+            if parked_at != c {
+                self.parked.remove(&p);
+            }
+        }
+        if c >= 2 && !self.parked.contains_key(&p) {
+            self.heap.push(HeapEntry { score: self.score(&p, c), count: c, pattern: p });
+        }
+    }
+
+    /// Kill digit `idx` in column `c`, updating counts and Kraft sum.
+    fn kill(&mut self, c: usize, idx: u32) {
+        let d = self.cols[c].digits[idx as usize];
+        debug_assert!(d.alive);
+        self.cols[c].digits[idx as usize].alive = false;
+        self.cols[c].dead += 1;
+        self.cols[c].row_dec(d.row);
+        self.cols[c].index.remove(&(d.row, d.power));
+        self.cols[c].kraft -= 1u128 << self.rows[d.row as usize].depth;
+        let mut pairs = std::mem::take(&mut self.scratch);
+        pairs.clear();
+        pairs.extend(
+            self.cols[c]
+                .alive()
+                .filter_map(|e| canon((idx, &d), e).map(|(p, _, _)| p)),
+        );
+        for p in &pairs {
+            self.bump(*p, -1);
+        }
+        self.scratch = pairs;
+    }
+
+    /// Add a digit to column `c`, updating counts and Kraft sum.
+    fn add_digit(&mut self, c: usize, row: u32, power: i32, sign: i8) {
+        let digit = ColDigit { row, power, sign, alive: true };
+        let mut pairs = std::mem::take(&mut self.scratch);
+        pairs.clear();
+        pairs.extend(
+            self.cols[c]
+                .alive()
+                .filter_map(|e| canon((u32::MAX, &digit), e).map(|(p, _, _)| p)),
+        );
+        let idx = self.cols[c].digits.len() as u32;
+        debug_assert!(
+            !self.cols[c].index.contains_key(&(row, power)),
+            "duplicate (row, power) digit in column {c}"
+        );
+        self.cols[c].digits.push(digit);
+        self.cols[c].index.insert((row, power), idx);
+        self.cols[c].row_inc(row);
+        self.cols[c].kraft += 1u128 << self.rows[row as usize].depth;
+        for p in &pairs {
+            self.bump(*p, 1);
+        }
+        self.scratch = pairs;
+    }
+
+    /// Greedily match disjoint occurrences of `p` in every column —
+    /// the full rescan the indexed engine replaces. Returns
+    /// (column, a-digit-idx, b-digit-idx) triples.
+    fn match_occurrences(&mut self, p: &Pattern) -> Vec<(usize, u32, u32)> {
+        let mut occ = Vec::new();
+        let mut cols_scanned = 0usize;
+        let mut digits_scanned = 0usize;
+        for (c, col) in self.cols.iter().enumerate() {
+            if !col.has_row(p.ra) || !col.has_row(p.rb) {
+                continue;
+            }
+            cols_scanned += 1;
+            digits_scanned += col.digits.len();
+            let mut used: Vec<u32> = Vec::new();
+            // Iterate a-side digits in power order for maximal greedy
+            // matching of chain patterns (same-row, shifted).
+            let mut a_side: Vec<(u32, &ColDigit)> =
+                col.alive().filter(|(_, d)| d.row == p.ra).collect();
+            a_side.sort_by_key(|(_, d)| d.power);
+            for (ia, da) in a_side {
+                if used.contains(&ia) {
+                    continue;
+                }
+                let pb = da.power + p.shift as i32;
+                if let Some(&ib) = col.index.get(&(p.rb, pb)) {
+                    if ib == ia || used.contains(&ib) {
+                        continue;
+                    }
+                    let db = &col.digits[ib as usize];
+                    debug_assert!(db.alive);
+                    // Sign relation must match the canonical pattern…
+                    let sub = da.sign != db.sign;
+                    if sub != p.sub {
+                        continue;
+                    }
+                    // …and the orientation must canonicalize to `p`
+                    // (guards the shift==0 row-order tie and ra==rb).
+                    if let Some((cp, ca, cb)) = canon((ia, da), (ib, db)) {
+                        if cp == *p {
+                            used.push(ca);
+                            used.push(cb);
+                            occ.push((c, ca, cb));
+                        }
+                    }
+                }
+            }
+        }
+        self.stats.occ_cols_scanned += cols_scanned;
+        self.stats.occ_digits_scanned += digits_scanned;
+        occ
+    }
+
+    /// Depth-feasibility filter: keep as many occurrences per column as
+    /// the Kraft budget allows. Returns the admitted occurrences.
+    fn filter_depth(&mut self, p: &Pattern, occ: Vec<(usize, u32, u32)>) -> Vec<(usize, u32, u32)> {
+        let Some(budget) = &self.budget else { return occ };
+        let da = self.rows[p.ra as usize].depth;
+        let db = self.rows[p.rb as usize].depth;
+        let delta: i128 =
+            (1i128 << (da.max(db) + 1)) - (1i128 << da) - (1i128 << db);
+        if delta == 0 {
+            return occ; // equal-depth merge never hurts feasibility
+        }
+        let mut kept = Vec::with_capacity(occ.len());
+        let mut extra: FxHashMap<usize, i128> = FxHashMap::default();
+        for (c, ia, ib) in occ {
+            let used = extra.entry(c).or_insert(0);
+            let cap = 1i128 << budget[c];
+            if self.cols[c].kraft as i128 + *used + delta <= cap {
+                *used += delta;
+                kept.push((c, ia, ib));
+            } else {
+                self.stats.depth_rejections += 1;
+            }
+        }
+        kept
+    }
+
+    /// One update step: pick the best implementable pattern and rewrite
+    /// the tensor. Returns false when exhausted.
+    fn step(&mut self) -> bool {
+        loop {
+            let Some(top) = self.heap.pop() else { return false };
+            self.stats.heap_pops += 1;
+            let p = top.pattern;
+            let cur = *self.counts.get(&p).unwrap_or(&0);
+            if cur != top.count || cur < 2 || self.parked.contains_key(&p) {
+                self.stats.stale_pops += 1;
+                continue; // stale entry
+            }
+            let occ = self.match_occurrences(&p);
+            let occ = self.filter_depth(&p, occ);
+            if occ.len() < 2 {
+                // Not worth an adder (or depth-blocked): park at this
+                // count; any count change un-parks it.
+                self.parked.insert(p, cur);
+                continue;
+            }
+            // Implement: one new adder node, one new tensor row.
+            let a = self.rows[p.ra as usize];
+            let b = self.rows[p.rb as usize];
+            let node = self.builder.add_shift(a.node, b.node, p.shift, p.sub);
+            let row = self.rows.len() as u32;
+            self.rows.push(RowInfo {
+                node,
+                qint: self.builder.qint(node),
+                depth: self.builder.depth(node),
+            });
+            let mut touched: Vec<usize> = Vec::with_capacity(occ.len());
+            for (c, ia, ib) in occ {
+                // The occurrence's contribution is sign(a-digit) · w << p_a.
+                let (pa, sa) = {
+                    let d = &self.cols[c].digits[ia as usize];
+                    (d.power, d.sign)
+                };
+                self.kill(c, ia);
+                self.kill(c, ib);
+                self.add_digit(c, row, pa, sa);
+                touched.push(c);
+            }
+            for c in touched {
+                self.cols[c].compact();
+            }
+            self.stats.steps += 1;
+            return true;
+        }
+    }
+}
+
+/// Reference implementation of [`super::optimize_into`]: identical
+/// greedy selection, pre-index occurrence matching.
+pub fn optimize_into(
+    builder: &mut DaisBuilder,
+    inputs: &[InputTerm],
+    matrix: &[i64],
+    d_in: usize,
+    d_out: usize,
+    cfg: &CseConfig,
+) -> Vec<OutTerm> {
+    optimize_into_stats(builder, inputs, matrix, d_in, d_out, cfg).0
+}
+
+/// Like [`optimize_into`] but also returns engine statistics.
+pub fn optimize_into_stats(
+    builder: &mut DaisBuilder,
+    inputs: &[InputTerm],
+    matrix: &[i64],
+    d_in: usize,
+    d_out: usize,
+    cfg: &CseConfig,
+) -> (Vec<OutTerm>, CseStats) {
+    assert_eq!(matrix.len(), d_in * d_out, "matrix shape mismatch");
+    assert_eq!(inputs.len(), d_in, "input arity mismatch");
+
+    let rows: Vec<RowInfo> = inputs
+        .iter()
+        .map(|t| RowInfo {
+            node: t.node,
+            qint: builder.qint(t.node),
+            depth: builder.depth(t.node),
+        })
+        .collect();
+
+    // Build the digit tensor column by column.
+    let mut cols: Vec<Column> = (0..d_out).map(|_| Column::default()).collect();
+    for (c, col) in cols.iter_mut().enumerate() {
+        for j in 0..d_in {
+            let w = matrix[j * d_out + c];
+            for digit in Csd::encode(w).digits() {
+                let idx = col.digits.len() as u32;
+                col.digits.push(ColDigit {
+                    row: j as u32,
+                    power: digit.power,
+                    sign: digit.sign,
+                    alive: true,
+                });
+                col.index.insert((j as u32, digit.power), idx);
+                col.row_inc(j as u32);
+                col.kraft += 1u128 << rows[j].depth;
+            }
+        }
+    }
+
+    // Depth budgets, exactly as in the indexed engine (see engine.rs
+    // for the Kraft-sum rationale).
+    let budget = if cfg.dc >= 0 {
+        let col_min: Vec<u32> = cols
+            .iter()
+            .map(|c| super::engine::min_feasible_depth(c.kraft))
+            .collect();
+        let depth_min = col_min.iter().copied().max().unwrap_or(0);
+        Some(
+            col_min
+                .iter()
+                .map(|&m| m.max(depth_min + cfg.dc as u32))
+                .collect::<Vec<u32>>(),
+        )
+    } else {
+        None
+    };
+
+    // Initial pattern counts: all digit pairs within each column.
+    let mut counts: FxHashMap<Pattern, u32> = FxHashMap::default();
+    for col in &cols {
+        let alive: Vec<(u32, &ColDigit)> = col.alive().collect();
+        for i in 0..alive.len() {
+            for j in (i + 1)..alive.len() {
+                if let Some((p, _, _)) = canon(alive[i], alive[j]) {
+                    *counts.entry(p).or_insert(0) += 1;
+                }
+            }
+        }
+    }
+
+    let mut engine = Engine {
+        builder,
+        d_out,
+        cfg: *cfg,
+        rows,
+        cols,
+        counts,
+        heap: BinaryHeap::new(),
+        parked: FxHashMap::default(),
+        budget,
+        scratch: Vec::new(),
+        stats: CseStats::default(),
+    };
+    let patterns: Vec<Pattern> = engine.counts.keys().copied().collect();
+    for p in patterns {
+        engine.push_heap(p);
+    }
+
+    while engine.step() {}
+
+    // Final summation of residual digits, column by column.
+    let term_lists: Vec<Vec<tree::Term>> = (0..engine.d_out)
+        .map(|c| {
+            engine.cols[c]
+                .alive()
+                .map(|(_, d)| tree::Term {
+                    node: engine.rows[d.row as usize].node,
+                    shift: d.power,
+                    neg: d.sign < 0,
+                })
+                .collect()
+        })
+        .collect();
+    let stats = engine.stats;
+    let builder = engine.builder;
+    let out = term_lists.into_iter().map(|terms| tree::combine(builder, terms)).collect();
+    (out, stats)
+}

@@ -1,6 +1,10 @@
-//! Integration and property tests for the CSE stage.
+//! Integration and property tests for the CSE stage, including the
+//! differential sweep proving the indexed engine bit-identical to the
+//! retained pre-index reference.
 
+use super::engine::test_hooks;
 use super::*;
+use crate::cmvm::{self, CmvmProblem, Strategy};
 use crate::dais::{interp, verify, DaisBuilder};
 use crate::fixed::QInterval;
 use crate::util::{property, Rng};
@@ -203,6 +207,113 @@ fn prop_cse_preserves_cmvm_semantics() {
             }
         }
     });
+}
+
+/// Bind CSE output terms as program outputs (shared by the differential
+/// drivers below; mirrors `cmvm::bind_outputs`).
+fn bind_outs(b: &mut DaisBuilder, outs: &[OutTerm]) {
+    for o in outs {
+        match o.node {
+            Some(n) => {
+                let n = if o.neg { b.neg(n) } else { n };
+                b.output(n, o.shift);
+            }
+            None => {
+                let z = b.constant(0);
+                b.output(z, 0);
+            }
+        }
+    }
+}
+
+/// The engine-overhaul acceptance sweep: on random matrices × all five
+/// strategy variants × depth constraints, the indexed engine must emit
+/// a **bit-identical** `DaisProgram` to the pre-refactor reference
+/// (driven through the full `cmvm::optimize` flow — decomposition,
+/// two-stage folding and output binding included — via the test-only
+/// engine switch).
+#[test]
+fn prop_strategies_bit_identical_to_reference_engine() {
+    property("cse_indexed_vs_reference_strategies", 12, |rng| {
+        let d_in = rng.below(6) + 1;
+        let d_out = rng.below(6) + 1;
+        let dc = rng.range_i64(-1, 3) as i32;
+        let m: Vec<i64> =
+            (0..d_in * d_out).map(|_| rng.range_i64(-255, 255)).collect();
+        let p = CmvmProblem::new(d_in, d_out, m, 8);
+        for s in [
+            Strategy::Latency,
+            Strategy::NaiveDa,
+            Strategy::CseOnly { dc },
+            Strategy::Da { dc },
+            Strategy::Lookahead { dc },
+        ] {
+            let indexed = cmvm::optimize(&p, s).unwrap();
+            let reference =
+                test_hooks::with_reference_engine(|| cmvm::optimize(&p, s).unwrap());
+            assert_eq!(
+                indexed.program, reference.program,
+                "engines diverged under {s:?} (dc={dc}, {d_in}x{d_out})"
+            );
+            assert_eq!(indexed.adders, reference.adders);
+            assert_eq!(indexed.depth, reference.depth);
+        }
+    });
+}
+
+/// Engine-level differential on larger tensors than the strategy sweep
+/// (no decomposition in front, so the engine sees the raw matrix).
+#[test]
+fn prop_optimize_into_bit_identical_to_reference() {
+    property("cse_indexed_vs_reference_direct", 10, |rng| {
+        let d_in = rng.below(10) + 1;
+        let d_out = rng.below(10) + 1;
+        let dc = rng.range_i64(-1, 4) as i32;
+        let weighted = rng.chance(0.8);
+        let m: Vec<i64> =
+            (0..d_in * d_out).map(|_| rng.range_i64(-1023, 1023)).collect();
+        let cfg = CseConfig { dc, weighted };
+        let q = QInterval::new(-128, 127, 0);
+
+        let mut bi = DaisBuilder::new();
+        let inputs: Vec<InputTerm> =
+            (0..d_in).map(|j| InputTerm { node: bi.input(j, q, 0) }).collect();
+        let (outs, _) = optimize_into_stats(&mut bi, &inputs, &m, d_in, d_out, &cfg);
+        bind_outs(&mut bi, &outs);
+        let indexed = bi.finish();
+
+        let mut br = DaisBuilder::new();
+        let inputs: Vec<InputTerm> =
+            (0..d_in).map(|j| InputTerm { node: br.input(j, q, 0) }).collect();
+        let (outs, _) =
+            super::reference::optimize_into_stats(&mut br, &inputs, &m, d_in, d_out, &cfg);
+        bind_outs(&mut br, &outs);
+        let reference = br.finish();
+
+        assert_eq!(
+            indexed, reference,
+            "engines diverged (dc={dc}, weighted={weighted}, {d_in}x{d_out})"
+        );
+    });
+}
+
+/// The heap tie-break is a documented total order, so pattern selection
+/// must be bit-identical across repeated runs — on the same thread and
+/// on a fresh one (pins platform/thread determinism, incl. the work
+/// counters).
+#[test]
+fn repeated_runs_are_bit_identical() {
+    let p = CmvmProblem::random(77, 12, 12, 8);
+    let first = cmvm::optimize(&p, Strategy::Da { dc: 2 }).unwrap();
+    let again = cmvm::optimize(&p, Strategy::Da { dc: 2 }).unwrap();
+    assert_eq!(first.program, again.program);
+    assert_eq!(first.cse, again.cse);
+    let p2 = p.clone();
+    let other = std::thread::spawn(move || cmvm::optimize(&p2, Strategy::Da { dc: 2 }).unwrap())
+        .join()
+        .unwrap();
+    assert_eq!(first.program, other.program);
+    assert_eq!(first.cse, other.cse);
 }
 
 /// Depth budgets are respected: with dc >= 0 the final depth never

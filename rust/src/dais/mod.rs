@@ -103,7 +103,11 @@ pub struct OutputSpec {
 }
 
 /// A DAIS program: a topologically ordered op list plus output bindings.
-#[derive(Debug, Clone, Default)]
+///
+/// Equality is structural and exact (node-by-node, output-by-output) —
+/// the differential engine sweeps and the perf suite's A/B check use it
+/// to prove two optimizer paths emitted bit-identical programs.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct DaisProgram {
     /// Nodes in SSA order (operands strictly before users).
     pub nodes: Vec<DaisNode>,

@@ -42,6 +42,12 @@
 //! turns the [`coordinator`] into a long-lived JSONL compile service
 //! (`da4ml serve`). `ARCHITECTURE.md` at the repository root maps every
 //! module to its paper section and walks both data flows.
+//!
+//! The [`perf`] module is the measurement subsystem: a fixed benchmark
+//! suite (`da4ml perf`) that times the optimize/lower/emit phases,
+//! collects the deterministic CSE work counters, writes the
+//! schema-versioned `BENCH_cmvm.json`, and diffs against a committed
+//! baseline so CI gates on perf regressions (`docs/perf.md`).
 
 // The optimizer kernels are deliberately index-heavy (strided matrix
 // walks, triangle enumerations): sequential-index loops are clearer
@@ -62,6 +68,7 @@ pub mod graph;
 pub mod json;
 pub mod netlist;
 pub mod nn;
+pub mod perf;
 pub mod pipeline;
 pub mod report;
 pub mod rtl;

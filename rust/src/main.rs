@@ -34,10 +34,17 @@ impl Args {
     fn parse(argv: &[String]) -> Self {
         let mut positional = Vec::new();
         let mut flags = std::collections::HashMap::new();
-        let mut it = argv.iter();
+        let mut it = argv.iter().peekable();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
-                let val = it.next().cloned().unwrap_or_else(|| "true".into());
+                // Bare boolean flags (`--smoke`) are followed by another
+                // flag or nothing; only consume a value token otherwise.
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        it.next().cloned().unwrap_or_else(|| "true".into())
+                    }
+                    _ => "true".into(),
+                };
                 flags.insert(key.to_string(), val);
             } else {
                 positional.push(a.clone());
@@ -76,7 +83,7 @@ fn load_vectors(path: &str) -> Result<TestVectors> {
     TestVectors::from_json(&runtime::load_text(path)?)
 }
 
-const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|serve> [args]
+const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|serve|perf> [args]
   compile [--d-in N] [--d-out N] [--bits B] [--dc D] [--seed S]
   net <spec.weights.json> [--strategy da|latency|naive-da] [--dc D] [--pipe N]
   rtl <spec.weights.json> <out.v|out.vhd> [--pipe N] [--dc D] [--tb testvec.json]
@@ -88,7 +95,13 @@ const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|se
   dot <spec.weights.json> <out.dot> [--dc D]  (Graphviz adder graph)
   serve [--input jobs.jsonl] [--batch N] [--dc D] [--threads T]
         (JSONL compile service: jobs on stdin or --input, reports on
-         stdout, summary on stderr; wire format in docs/serve.md)";
+         stdout, summary on stderr; wire format in docs/serve.md)
+  perf [--smoke] [--runs N] [--out BENCH_cmvm.json]
+       [--baseline ci/bench_baseline.json] [--bless file] [--with-times]
+       (fixed benchmark suite over optimize/lower/emit + the CSE engine
+        A/B; writes the schema-versioned BENCH_cmvm.json, --baseline
+        diffs against a committed baseline and exits nonzero on
+        regression, --bless writes a new baseline; docs/perf.md)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -319,6 +332,63 @@ fn main() -> Result<()> {
             std::fs::write(out, da4ml::dais::dot::to_dot(&prog, &spec.name))?;
             println!("wrote {out} ({} nodes)", prog.nodes.len());
         }
+        "perf" => {
+            let base = if args.flags.contains_key("smoke") {
+                da4ml::perf::PerfConfig::smoke()
+            } else {
+                da4ml::perf::PerfConfig::full()
+            };
+            let cfg = da4ml::perf::PerfConfig {
+                runs: args.flag("runs", base.runs).max(1),
+                ..base
+            };
+            let report = da4ml::perf::run_suite(&cfg)?;
+            println!("{}", da4ml::perf::render_table(&report));
+            let out = args.flag::<String>("out", "BENCH_cmvm.json".into());
+            std::fs::write(&out, da4ml::perf::schema::render(&report))?;
+            println!(
+                "wrote {out}: schema v{}, {} cases ({} skipped), engine A/B speedup {:.2}x",
+                report.schema_version,
+                report.cases.len(),
+                report.skipped.len(),
+                report.engine_ab.speedup
+            );
+            if let Some(path) = args.flags.get("bless") {
+                let with_times = args.flags.contains_key("with-times");
+                std::fs::write(
+                    path,
+                    da4ml::perf::schema::render_baseline(&report, with_times),
+                )?;
+                println!(
+                    "blessed baseline {path} ({} cases pinned{})",
+                    report.cases.len(),
+                    if with_times { ", with times" } else { "" }
+                );
+            }
+            if let Some(path) = args.flags.get("baseline") {
+                let text = runtime::load_text(path)?;
+                let baseline = da4ml::perf::schema::parse_baseline(&text)
+                    .map_err(|e| anyhow::anyhow!("parsing baseline {path}: {e}"))?;
+                let diff = da4ml::perf::diff::against_baseline(&report, &baseline);
+                for n in &diff.notes {
+                    println!("note: {n}");
+                }
+                if diff.passed() {
+                    println!(
+                        "perf gate: OK ({} metrics checked against {path})",
+                        diff.checked
+                    );
+                } else {
+                    for r in &diff.regressions {
+                        eprintln!("REGRESSION: {r}");
+                    }
+                    bail!(
+                        "perf gate: {} regression(s) vs {path}",
+                        diff.regressions.len()
+                    );
+                }
+            }
+        }
         "serve" => {
             let cfg = da4ml::serve::ServeConfig {
                 batch_size: args.flag("batch", 16usize),
@@ -342,13 +412,15 @@ fn main() -> Result<()> {
             drop(out);
             eprintln!(
                 "serve: {} jobs ({} errors) in {} batches; {} submitted, {} cache hits, \
-                 {:.1} ms optimizer time",
+                 {:.1} ms optimizer time, {} CSE steps / {} heap pops",
                 summary.jobs,
                 summary.errors,
                 summary.batches,
                 summary.stats.submitted,
                 summary.stats.cache_hits,
-                summary.stats.total_opt_time.as_secs_f64() * 1e3
+                summary.stats.total_opt_time.as_secs_f64() * 1e3,
+                summary.stats.total_cse_steps,
+                summary.stats.total_heap_pops
             );
         }
         other => bail!("unknown command '{other}'\n{USAGE}"),

@@ -11,8 +11,8 @@
 
 use super::spec::{LayerSpec, NetworkSpec};
 use crate::baseline::mac::{mac_report, DspPolicy};
-use crate::cmvm::{optimize, optimize_terms, CmvmProblem, Strategy};
-use crate::cse::InputTerm;
+use crate::cmvm::{optimize, optimize_terms, optimize_terms_stats, CmvmProblem, Strategy};
+use crate::cse::{CseStats, InputTerm};
 use crate::dais::{DaisBuilder, DaisOp, DaisProgram, NodeId, RoundMode};
 use crate::estimate::{self, FpgaModel, ResourceReport};
 use crate::fixed::QInterval;
@@ -109,19 +109,28 @@ fn template_for(
     w: &[Vec<i64>],
     in_qint: QInterval,
     strategy: Strategy,
-) -> Result<(CmvmProblem, DaisProgram)> {
+) -> Result<(CmvmProblem, DaisProgram, CseStats)> {
     let d_in = w.len();
     let d_out = w.first().map(|r| r.len()).unwrap_or(0);
     let matrix: Vec<i64> = w.iter().flat_map(|r| r.iter().copied()).collect();
     let mut problem = CmvmProblem::new(d_in, d_out, matrix, 8);
     problem.input_qint = vec![in_qint; d_in];
     let sol = optimize(&problem, strategy)?;
-    Ok((problem, sol.program))
+    Ok((problem, sol.program, sol.cse))
 }
 
 /// Fuse a dense / einsum / residual network into one DAIS program
 /// (fails on conv/pool layers — those use the HLS-flow path).
 pub fn fuse(spec: &NetworkSpec, strategy: Strategy) -> Result<DaisProgram> {
+    fuse_with_stats(spec, strategy).map(|(prog, _)| prog)
+}
+
+/// Like [`fuse`] but also accumulates the CSE engine work counters over
+/// every layer template the strategy optimized (one engine run per
+/// dense layer, one per einsum template — not per spatial instance).
+/// The perf suite reports these per network case.
+pub fn fuse_with_stats(spec: &NetworkSpec, strategy: Strategy) -> Result<(DaisProgram, CseStats)> {
+    let mut cse_stats = CseStats::default();
     let mut b = DaisBuilder::new();
     let in_q = spec.input_qint();
     let n_in = spec.input_len();
@@ -146,7 +155,8 @@ pub fn fuse(spec: &NetworkSpec, strategy: Strategy) -> Result<DaisProgram> {
                 problem.input_qint = vec![qint; d_in];
                 let inputs: Vec<InputTerm> =
                     x.iter().map(|&node| InputTerm { node }).collect();
-                let outs = optimize_terms(&mut b, &inputs, &problem, strategy)?;
+                let (outs, st) = optimize_terms_stats(&mut b, &inputs, &problem, strategy)?;
+                cse_stats.absorb(&st);
                 let ys: Vec<NodeId> = outs
                     .iter()
                     .enumerate()
@@ -164,7 +174,8 @@ pub fn fuse(spec: &NetworkSpec, strategy: Strategy) -> Result<DaisProgram> {
                 let NodeState::Grid { nodes, p, f } = state else {
                     bail!("layer {li}: einsum_dense needs grid state")
                 };
-                let (_, template) = template_for(w, qint, strategy)?;
+                let (_, template, st) = template_for(w, qint, strategy)?;
+                cse_stats.absorb(&st);
                 let d_out = bias.len();
                 let apply = |b: &mut DaisBuilder, xs: &[NodeId]| -> Vec<NodeId> {
                     inline(b, &template, xs)
@@ -241,7 +252,7 @@ pub fn fuse(spec: &NetworkSpec, strategy: Strategy) -> Result<DaisProgram> {
     for n in state.flatten() {
         b.output(n, 0);
     }
-    Ok(b.finish())
+    Ok((b.finish(), cse_stats))
 }
 
 /// Per-layer resource accounting for one strategy.

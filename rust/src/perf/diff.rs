@@ -1,0 +1,329 @@
+//! Baseline comparison for the perf regression gate.
+//!
+//! Semantics (documented in `docs/perf.md`):
+//!
+//! * the baseline's `schema_version` must equal the binary's
+//!   [`super::SCHEMA_VERSION`] — a mismatch is a regression (the gate
+//!   cannot interpret the pins);
+//! * the engine A/B check always gates `programs_match`, and gates the
+//!   measured speedup when the baseline carries `min_speedup` (the
+//!   ratio is same-machine relative, so it ports across CI hosts);
+//! * a counter pinned by a baseline case must match **exactly** — the
+//!   optimizer is deterministic, so any drift is a behavior change;
+//! * a time pinned by a baseline case may grow by at most
+//!   `time_tolerance` (relative), with a 1 ms absolute jitter floor;
+//! * a pinned case missing from the run is a regression (coverage
+//!   loss); a run case absent from the baseline is only a note.
+
+use super::schema::Baseline;
+use super::{CaseReport, SuiteReport, SCHEMA_VERSION};
+
+/// The gate's verdict: regressions fail CI, notes are informational.
+#[derive(Debug, Clone, Default)]
+pub struct DiffOutcome {
+    /// Human-readable regression descriptions; empty = gate passes.
+    pub regressions: Vec<String>,
+    /// Informational findings (unpinned cases, unknown keys, …).
+    pub notes: Vec<String>,
+    /// Number of metrics actually compared.
+    pub checked: usize,
+}
+
+impl DiffOutcome {
+    /// True when no regression was found.
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+fn counter_metric(c: &CaseReport, key: &str) -> Option<i64> {
+    Some(match key {
+        "adders" => c.adders as i64,
+        "depth" => c.depth as i64,
+        "lut" => c.lut as i64,
+        "ff" => c.ff as i64,
+        "stages" => c.stages as i64,
+        "cse_steps" => c.cse.steps as i64,
+        "depth_rejections" => c.cse.depth_rejections as i64,
+        "heap_pops" => c.cse.heap_pops as i64,
+        "stale_pops" => c.cse.stale_pops as i64,
+        "occ_cols_scanned" => c.cse.occ_cols_scanned as i64,
+        "occ_digits_scanned" => c.cse.occ_digits_scanned as i64,
+        _ => return None,
+    })
+}
+
+fn time_metric(c: &CaseReport, key: &str) -> Option<f64> {
+    Some(match key {
+        "optimize_ms" => c.phases.optimize,
+        "lower_ms" => c.phases.lower,
+        "emit_ms" => c.phases.emit,
+        _ => return None,
+    })
+}
+
+/// Compare a fresh run against a parsed baseline.
+pub fn against_baseline(report: &SuiteReport, baseline: &Baseline) -> DiffOutcome {
+    let mut out = DiffOutcome::default();
+
+    if baseline.schema_version != SCHEMA_VERSION as i64 {
+        out.regressions.push(format!(
+            "baseline schema_version {} does not match this binary's {} — \
+             re-bless the baseline",
+            baseline.schema_version, SCHEMA_VERSION
+        ));
+        return out;
+    }
+    if baseline.bootstrap {
+        out.notes.push(
+            "baseline is a bootstrap stub (no pinned cases yet); gate covers the \
+             engine A/B only — bless a full baseline with \
+             `da4ml perf --smoke --bless ci/bench_baseline.json`"
+                .into(),
+        );
+    }
+    // The net/jet/* counters depend on which jet network was measured;
+    // gate the provenance so an artifact-presence mismatch is reported
+    // as such instead of as inexplicable counter drift.
+    if let Some(src) = &baseline.jet_source {
+        out.checked += 1;
+        if *src != report.jet_source {
+            out.regressions.push(format!(
+                "jet_source mismatch: baseline was blessed against '{src}' but this \
+                 run measured '{}' (net/jet/* pins are not comparable; re-bless on a \
+                 machine with the same artifact availability)",
+                report.jet_source
+            ));
+            return out;
+        }
+    }
+
+    // Engine A/B: correctness always, speedup when the baseline pins it.
+    out.checked += 1;
+    if !report.engine_ab.programs_match {
+        out.regressions.push(
+            "engine A/B: indexed and reference engines emitted different programs"
+                .into(),
+        );
+    }
+    if let Some(min) = baseline.min_speedup {
+        out.checked += 1;
+        if report.engine_ab.speedup < min {
+            out.regressions.push(format!(
+                "engine A/B speedup {:.2}x (indexed {:.3} ms vs reference {:.3} ms) \
+                 is below the required {:.2}x",
+                report.engine_ab.speedup,
+                report.engine_ab.indexed_ms,
+                report.engine_ab.reference_ms,
+                min
+            ));
+        }
+    }
+
+    for bc in &baseline.cases {
+        let Some(rc) = report.cases.iter().find(|c| c.id == bc.id) else {
+            out.regressions.push(format!(
+                "case '{}' is pinned by the baseline but missing from the run",
+                bc.id
+            ));
+            continue;
+        };
+        for (key, want) in &bc.counters {
+            out.checked += 1;
+            match counter_metric(rc, key) {
+                Some(got) if got == *want => {}
+                Some(got) => out.regressions.push(format!(
+                    "{}: {key} = {got} but baseline pins {want} — deterministic \
+                     counter drifted (behavior change; re-bless if intended)",
+                    bc.id
+                )),
+                None => out
+                    .notes
+                    .push(format!("{}: unknown counter '{key}' in baseline", bc.id)),
+            }
+        }
+        for (key, want) in &bc.times_ms {
+            out.checked += 1;
+            let Some(got) = time_metric(rc, key) else {
+                out.notes
+                    .push(format!("{}: unknown time metric '{key}' in baseline", bc.id));
+                continue;
+            };
+            let limit = want * (1.0 + baseline.time_tolerance);
+            // 1 ms absolute floor: sub-millisecond phases jitter more
+            // than any tolerance can meaningfully bound.
+            if got > limit && got - want > 1.0 {
+                out.regressions.push(format!(
+                    "{}: {key} {got:.3} ms exceeds baseline {want:.3} ms \
+                     (+{:.0}% tolerance)",
+                    bc.id,
+                    baseline.time_tolerance * 100.0
+                ));
+            }
+        }
+    }
+
+    if !baseline.cases.is_empty() {
+        for rc in &report.cases {
+            if baseline.cases.iter().all(|b| b.id != rc.id) {
+                out.notes
+                    .push(format!("case '{}' is not pinned by the baseline", rc.id));
+            }
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::schema::{parse_baseline, render_baseline};
+    use super::super::{EngineAb, PhaseMs, SuiteReport};
+    use super::*;
+    use crate::cse::CseStats;
+
+    fn report() -> SuiteReport {
+        SuiteReport {
+            schema_version: SCHEMA_VERSION,
+            suite: "smoke",
+            jet_source: "synthetic".into(),
+            runs: 3,
+            cases: vec![CaseReport {
+                id: "cmvm/8x8/da".into(),
+                kind: "cmvm",
+                strategy: "da",
+                phases: PhaseMs { optimize: 10.0, lower: 1.0, emit: 0.5 },
+                adders: 50,
+                depth: 6,
+                lut: 500,
+                ff: 128,
+                stages: 0,
+                worst_stage_ns: 3.0,
+                cse: CseStats {
+                    steps: 12,
+                    depth_rejections: 1,
+                    heap_pops: 90,
+                    stale_pops: 40,
+                    occ_cols_scanned: 70,
+                    occ_digits_scanned: 300,
+                },
+            }],
+            engine_ab: EngineAb {
+                case_id: "jet/cse-stage".into(),
+                indexed_ms: 10.0,
+                reference_ms: 20.0,
+                speedup: 2.0,
+                programs_match: true,
+                indexed: CseStats::default(),
+                reference: CseStats::default(),
+            },
+            skipped: vec![],
+        }
+    }
+
+    /// Self-consistency: a report always passes against the baseline
+    /// blessed from itself (with and without times).
+    #[test]
+    fn self_blessed_baseline_passes() {
+        let r = report();
+        for with_times in [false, true] {
+            let b = parse_baseline(&render_baseline(&r, with_times)).unwrap();
+            let d = against_baseline(&r, &b);
+            assert!(d.passed(), "regressions: {:?}", d.regressions);
+            assert!(d.checked > 2);
+        }
+    }
+
+    #[test]
+    fn counter_drift_is_a_regression() {
+        let r = report();
+        let b = parse_baseline(&render_baseline(&r, false)).unwrap();
+        let mut drifted = r.clone();
+        drifted.cases[0].adders = 51;
+        let d = against_baseline(&drifted, &b);
+        assert!(!d.passed());
+        assert!(d.regressions[0].contains("adders"), "{:?}", d.regressions);
+    }
+
+    #[test]
+    fn time_regression_respects_tolerance_and_floor() {
+        let r = report();
+        let b = parse_baseline(&render_baseline(&r, true)).unwrap();
+        // +40% on a 10ms phase: within the +50% tolerance.
+        let mut ok = r.clone();
+        ok.cases[0].phases.optimize = 14.0;
+        assert!(against_baseline(&ok, &b).passed());
+        // +100%: over tolerance and over the 1ms floor.
+        let mut slow = r.clone();
+        slow.cases[0].phases.optimize = 20.0;
+        let d = against_baseline(&slow, &b);
+        assert!(!d.passed());
+        assert!(d.regressions[0].contains("optimize_ms"));
+        // A sub-millisecond phase can double without tripping the floor.
+        let mut jitter = r.clone();
+        jitter.cases[0].phases.emit = 1.2;
+        assert!(against_baseline(&jitter, &b).passed());
+    }
+
+    #[test]
+    fn speedup_floor_and_program_mismatch_gate() {
+        let r = report();
+        let b = parse_baseline(&render_baseline(&r, false)).unwrap();
+        let mut slow = r.clone();
+        slow.engine_ab.speedup = 1.1;
+        let d = against_baseline(&slow, &b);
+        assert!(!d.passed());
+        assert!(d.regressions[0].contains("speedup"));
+
+        let mut diverged = r.clone();
+        diverged.engine_ab.programs_match = false;
+        assert!(!against_baseline(&diverged, &b).passed());
+    }
+
+    #[test]
+    fn jet_source_mismatch_is_a_regression() {
+        let r = report();
+        let b = parse_baseline(&render_baseline(&r, false)).unwrap();
+        assert_eq!(b.jet_source.as_deref(), Some("synthetic"));
+        let mut artifact_run = r.clone();
+        artifact_run.jet_source = "artifact".into();
+        let d = against_baseline(&artifact_run, &b);
+        assert!(!d.passed());
+        assert!(d.regressions[0].contains("jet_source"), "{:?}", d.regressions);
+    }
+
+    #[test]
+    fn missing_pinned_case_is_a_regression() {
+        let r = report();
+        let b = parse_baseline(&render_baseline(&r, false)).unwrap();
+        let mut empty = r.clone();
+        empty.cases.clear();
+        let d = against_baseline(&empty, &b);
+        assert!(!d.passed());
+        assert!(d.regressions[0].contains("missing from the run"));
+    }
+
+    #[test]
+    fn schema_mismatch_is_a_regression() {
+        let r = report();
+        let mut b = parse_baseline(&render_baseline(&r, false)).unwrap();
+        b.schema_version = 999;
+        let d = against_baseline(&r, &b);
+        assert!(!d.passed());
+        assert!(d.regressions[0].contains("schema_version"));
+    }
+
+    #[test]
+    fn bootstrap_baseline_gates_ab_only() {
+        let r = report();
+        let stub = r#"{"schema_version": 1, "bootstrap": true, "min_speedup": 1.25, "cases": []}"#;
+        let b = parse_baseline(stub).unwrap();
+        let d = against_baseline(&r, &b);
+        assert!(d.passed());
+        assert!(d.notes.iter().any(|n| n.contains("bootstrap")));
+
+        let mut slow = r;
+        slow.engine_ab.speedup = 1.0;
+        assert!(!against_baseline(&slow, &b).passed());
+    }
+}

@@ -1,0 +1,680 @@
+//! The perf lab: a fixed, machine-readable benchmark suite over the
+//! whole compile pipeline.
+//!
+//! The paper's headline claim is that the DA/CSE optimizer matches
+//! state-of-the-art resource reduction *while being significantly
+//! faster to compute*; this module is the measurement subsystem that
+//! keeps the claim honest over time. It runs a deterministic case list
+//! — seeded random CMVMs across sizes × all five
+//! [`crate::cmvm::Strategy`] variants, plus the jet-tagging network
+//! (exported artifact when present, synthetic stand-in otherwise) and
+//! scaled variants of it — and times the three pipeline phases
+//! (**optimize** → **lower** → **emit**) on the monotonic clock,
+//! alongside the deterministic engine work counters
+//! ([`crate::cse::CseStats`]) and the analytic resource estimates
+//! ([`crate::estimate`]), including the per-stage breakdown for
+//! pipelined network cases.
+//!
+//! Results serialize to the schema-versioned `BENCH_cmvm.json`
+//! ([`schema`], documented in `docs/perf.md`) and diff against a
+//! committed baseline with per-metric tolerances ([`diff`]) — the CI
+//! `perf-smoke` job gates on it via `da4ml perf --smoke --baseline
+//! ci/bench_baseline.json`.
+//!
+//! The suite also carries an **engine A/B** case: the indexed CSE
+//! engine vs the retained pre-index [`crate::cse::reference`] engine on
+//! the jet network's layer matrices, reporting the measured speedup and
+//! asserting the two emit bit-identical programs.
+//!
+//! Every case the suite intentionally drops (the O(N³) lookahead
+//! comparator above its size cap, the latency strategy's functionally
+//! identical network twin) is listed in the report's `skipped` array —
+//! no silent coverage holes.
+
+pub mod diff;
+pub mod schema;
+
+use crate::bench_tables::{synthetic_jet_spec, synthetic_jet_spec_scaled};
+use crate::cmvm::{optimize, CmvmProblem, Strategy};
+use crate::cse::{self, CseConfig, CseStats, InputTerm};
+use crate::dais::{DaisBuilder, DaisProgram};
+use crate::estimate::{self, FpgaModel};
+use crate::netlist::Netlist;
+use crate::nn::{self, LayerSpec, NetworkSpec};
+use crate::pipeline::{assign_stages, PipelineConfig};
+use crate::report::{sci, Table};
+use crate::rtl;
+use crate::runtime;
+use crate::util::{median_duration, time_once};
+use crate::Result;
+use anyhow::ensure;
+use std::time::Duration;
+
+/// Version of the `BENCH_cmvm.json` schema this build writes; bumped on
+/// any incompatible change, and checked against the baseline by the
+/// regression gate.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Delay constraint used by the engine-driven suite strategies.
+pub const SUITE_DC: i32 = 2;
+
+/// Pipeline config of the network cases (matches the `rtl` CLI default:
+/// a register every 5 adders).
+pub const PIPE_EVERY: u32 = 5;
+
+/// Suite selection: `Smoke` is CI-sized, `Full` is the weekly run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Suite {
+    /// CI-sized subset (small CMVMs, down-scaled networks, 3 repeats).
+    Smoke,
+    /// The whole case list (up to 64×64 CMVMs and a 2× jet network).
+    Full,
+}
+
+impl Suite {
+    /// Name used in reports and baselines.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Suite::Smoke => "smoke",
+            Suite::Full => "full",
+        }
+    }
+}
+
+/// Perf-run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PerfConfig {
+    /// Which case list to run.
+    pub suite: Suite,
+    /// Timing repeats per case; the **median** per phase is reported.
+    /// The deterministic counters are asserted identical across
+    /// repeats — a mismatch fails the run (it would mean the optimizer
+    /// is not deterministic, which the differential tests forbid).
+    pub runs: usize,
+}
+
+impl PerfConfig {
+    /// The CI-sized configuration (`da4ml perf --smoke`).
+    pub fn smoke() -> Self {
+        Self { suite: Suite::Smoke, runs: 3 }
+    }
+
+    /// The full configuration (`da4ml perf`).
+    pub fn full() -> Self {
+        Self { suite: Suite::Full, runs: 5 }
+    }
+}
+
+/// Median per-phase wall-clock times, milliseconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseMs {
+    /// CMVM optimization (strategy run / network fuse).
+    pub optimize: f64,
+    /// Pipeline stage assignment + netlist lowering.
+    pub lower: f64,
+    /// Verilog emission from the netlist.
+    pub emit: f64,
+}
+
+/// One measured suite case.
+#[derive(Debug, Clone)]
+pub struct CaseReport {
+    /// Stable case id (`cmvm/16x16/da`, `net/jet/da`, …) — the baseline
+    /// join key.
+    pub id: String,
+    /// Case family: `"cmvm"` or `"network"`.
+    pub kind: &'static str,
+    /// Strategy short name.
+    pub strategy: &'static str,
+    /// Median phase timings.
+    pub phases: PhaseMs,
+    /// Adder count of the optimized program.
+    pub adders: u64,
+    /// Adder depth.
+    pub depth: u32,
+    /// LUT estimate (Eq. 1 model).
+    pub lut: u64,
+    /// Flip-flop estimate.
+    pub ff: u64,
+    /// Pipeline stage count (0 for combinational CMVM cases).
+    pub stages: u32,
+    /// Worst per-stage critical path in ns (combinational latency for
+    /// CMVM cases).
+    pub worst_stage_ns: f64,
+    /// Engine work counters (zeros for engine-bypassing strategies).
+    pub cse: CseStats,
+}
+
+/// A case the suite intentionally did not run.
+#[derive(Debug, Clone)]
+pub struct SkippedCase {
+    /// The case id that would have been measured.
+    pub id: String,
+    /// Why it was dropped.
+    pub reason: String,
+}
+
+/// The engine A/B measurement: indexed vs reference CSE engine on the
+/// jet network's layer matrices.
+#[derive(Debug, Clone)]
+pub struct EngineAb {
+    /// Stable id of the A/B case.
+    pub case_id: String,
+    /// Median wall-clock of the indexed engine over all layers, ms.
+    pub indexed_ms: f64,
+    /// Median wall-clock of the reference engine over all layers, ms.
+    pub reference_ms: f64,
+    /// `reference_ms / indexed_ms` — >1 means the indexed engine is
+    /// faster. Machine-relative, so it is gate-able across CI hosts.
+    pub speedup: f64,
+    /// Both engines emitted bit-identical programs on every run.
+    pub programs_match: bool,
+    /// Work counters of the indexed engine.
+    pub indexed: CseStats,
+    /// Work counters of the reference engine (full-rescan semantics).
+    pub reference: CseStats,
+}
+
+/// The whole suite result — serialized to `BENCH_cmvm.json`.
+#[derive(Debug, Clone)]
+pub struct SuiteReport {
+    /// Schema version ([`SCHEMA_VERSION`]).
+    pub schema_version: u32,
+    /// Suite name (`smoke` / `full`).
+    pub suite: &'static str,
+    /// Where the jet network came from: `"artifact"` or `"synthetic"`.
+    pub jet_source: String,
+    /// Timing repeats per case.
+    pub runs: usize,
+    /// Measured cases.
+    pub cases: Vec<CaseReport>,
+    /// The engine A/B measurement.
+    pub engine_ab: EngineAb,
+    /// Cases intentionally not run, with reasons.
+    pub skipped: Vec<SkippedCase>,
+}
+
+fn ms(d: Duration) -> f64 {
+    // Microsecond precision keeps the JSON readable; the tolerances are
+    // far coarser than this rounding.
+    (d.as_secs_f64() * 1e3 * 1e3).round() / 1e3
+}
+
+/// The jet network: the exported artifact when present, otherwise the
+/// synthetic stand-in (the choice is recorded in the report).
+pub fn jet_spec() -> (String, NetworkSpec) {
+    let artifact = runtime::artifacts_dir().join("jet_mlp.weights.json");
+    if let Ok(text) = runtime::load_text(&artifact) {
+        if let Ok(spec) = NetworkSpec::from_json(&text) {
+            return ("artifact".into(), spec);
+        }
+    }
+    ("synthetic".into(), synthetic_jet_spec())
+}
+
+fn cmvm_sizes(suite: Suite) -> &'static [usize] {
+    match suite {
+        Suite::Smoke => &[8, 16],
+        Suite::Full => &[8, 16, 32, 64],
+    }
+}
+
+/// The O(N³) lookahead comparator is only run on CMVMs up to this edge
+/// length; larger cases are recorded as skipped.
+fn lookahead_cap(suite: Suite) -> usize {
+    match suite {
+        Suite::Smoke => 8,
+        Suite::Full => 16,
+    }
+}
+
+fn net_scales(suite: Suite) -> &'static [(usize, usize)] {
+    match suite {
+        Suite::Smoke => &[(1, 4), (1, 2)],
+        Suite::Full => &[(1, 4), (1, 2), (1, 1), (2, 1)],
+    }
+}
+
+/// All five strategy variants, with the suite delay constraint where
+/// one applies.
+fn strategies() -> [(&'static str, Strategy); 5] {
+    [
+        ("latency", Strategy::Latency),
+        ("naive-da", Strategy::NaiveDa),
+        ("cse-only", Strategy::CseOnly { dc: SUITE_DC }),
+        ("da", Strategy::Da { dc: SUITE_DC }),
+        ("lookahead", Strategy::Lookahead { dc: SUITE_DC }),
+    ]
+}
+
+/// The deterministic facts of one case run — asserted identical across
+/// timing repeats.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct CaseFacts {
+    adders: u64,
+    depth: u32,
+    lut: u64,
+    ff: u64,
+    stages: u32,
+    worst_stage_ns: f64,
+    cse: CseStats,
+}
+
+/// Measure one case: run `optimize_fn` (then lower + emit) `runs`
+/// times, median the phase timings, and pin the deterministic facts.
+fn measure_case<F>(
+    runs: usize,
+    id: String,
+    kind: &'static str,
+    strategy: &'static str,
+    pipe: Option<u32>,
+    optimize_fn: F,
+) -> Result<CaseReport>
+where
+    F: Fn() -> Result<(DaisProgram, CseStats)>,
+{
+    let model = FpgaModel::default();
+    let runs = runs.max(1);
+    let mut t_opt = Vec::with_capacity(runs);
+    let mut t_low = Vec::with_capacity(runs);
+    let mut t_emit = Vec::with_capacity(runs);
+    let mut pinned: Option<CaseFacts> = None;
+    // Cheap determinism pin, checked on *every* repeat; the full
+    // resource estimate (a whole-program walk) runs once, on the first.
+    let mut quick_pin: Option<(usize, usize, CseStats)> = None;
+    for run in 0..runs {
+        let (d_opt, optimized) = time_once(&optimize_fn);
+        let (program, cse_stats) = optimized?;
+        // Stage assignment is part of the lowering phase (it is the
+        // schedule the netlist materializes), so it is timed with it.
+        let (d_low, lowered) = time_once(|| {
+            let stages =
+                pipe.map(|n| assign_stages(&program, &PipelineConfig::every_n_adders(n.max(1))));
+            Netlist::lower(&program, stages.as_deref()).map(|nl| (nl, stages))
+        });
+        let (nl, stages) = lowered?;
+        let (d_emit, text) = time_once(|| rtl::verilog_from_netlist(&nl, "perf_case"));
+        ensure!(!text.is_empty(), "perf: empty RTL emission for case {id}");
+        t_opt.push(d_opt);
+        t_low.push(d_low);
+        t_emit.push(d_emit);
+
+        let quick = (program.nodes.len(), program.outputs.len(), cse_stats);
+        match quick_pin {
+            None => {
+                quick_pin = Some(quick);
+                let rep = match &stages {
+                    Some(st) => estimate::pipelined(&program, st, &model),
+                    None => estimate::combinational(&program, &model),
+                };
+                let (n_stages, worst_ns) = match &stages {
+                    Some(st) => {
+                        let per = estimate::per_stage(&program, st, &model);
+                        (
+                            per.len() as u32,
+                            per.iter().map(|s| s.crit_ns).fold(0.0, f64::max),
+                        )
+                    }
+                    None => (0, rep.latency_ns),
+                };
+                pinned = Some(CaseFacts {
+                    adders: rep.adders,
+                    depth: rep.depth,
+                    lut: rep.lut,
+                    ff: rep.ff,
+                    stages: n_stages,
+                    worst_stage_ns: worst_ns,
+                    cse: cse_stats,
+                });
+            }
+            Some(prev) => ensure!(
+                prev == quick,
+                "perf: non-deterministic optimizer output for case {id} on repeat \
+                 {run}: {prev:?} vs {quick:?}"
+            ),
+        }
+    }
+    let facts = pinned.expect("at least one run");
+    Ok(CaseReport {
+        id,
+        kind,
+        strategy,
+        phases: PhaseMs {
+            optimize: ms(median_duration(&mut t_opt)),
+            lower: ms(median_duration(&mut t_low)),
+            emit: ms(median_duration(&mut t_emit)),
+        },
+        adders: facts.adders,
+        depth: facts.depth,
+        lut: facts.lut,
+        ff: facts.ff,
+        stages: facts.stages,
+        worst_stage_ns: facts.worst_stage_ns,
+        cse: facts.cse,
+    })
+}
+
+/// Extract each weight matrix of a network as a standalone CMVM
+/// problem, threading the running activation interval exactly like
+/// [`nn::compile::layer_reports`] does.
+fn layer_problems(spec: &NetworkSpec) -> Vec<CmvmProblem> {
+    let mut qint = spec.input_qint();
+    let mut out = Vec::new();
+    for layer in &spec.layers {
+        match layer {
+            LayerSpec::Dense { w, b, clip_min, clip_max, .. }
+            | LayerSpec::Conv2D { w, b, clip_min, clip_max, .. }
+            | LayerSpec::EinsumDense { w, b, clip_min, clip_max, .. } => {
+                let d_in = w.len();
+                let d_out = b.len();
+                let matrix: Vec<i64> = w.iter().flat_map(|r| r.iter().copied()).collect();
+                let mut p = CmvmProblem::new(d_in, d_out, matrix, 8);
+                p.input_qint = vec![qint; d_in];
+                out.push(p);
+                qint = crate::fixed::QInterval::new(*clip_min, *clip_max, 0);
+            }
+            LayerSpec::AddSaved { .. } => qint = qint.add(&qint),
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Run the CSE stage (only) on each layer problem with one engine;
+/// returns the accumulated counters and the finished per-layer
+/// programs for the bit-identity check.
+fn run_cse_engine(problems: &[CmvmProblem], reference: bool) -> (CseStats, Vec<DaisProgram>) {
+    let cfg = CseConfig::default();
+    let mut stats = CseStats::default();
+    let mut programs = Vec::with_capacity(problems.len());
+    for p in problems {
+        let mut b = DaisBuilder::new();
+        let inputs: Vec<InputTerm> = (0..p.d_in)
+            .map(|j| InputTerm { node: b.input(j, p.input_qint[j], p.input_depth[j]) })
+            .collect();
+        let (outs, st) = if reference {
+            cse::reference::optimize_into_stats(&mut b, &inputs, &p.matrix, p.d_in, p.d_out, &cfg)
+        } else {
+            cse::optimize_into_stats(&mut b, &inputs, &p.matrix, p.d_in, p.d_out, &cfg)
+        };
+        stats.absorb(&st);
+        for o in &outs {
+            match o.node {
+                Some(n) => {
+                    let n = if o.neg { b.neg(n) } else { n };
+                    b.output(n, o.shift);
+                }
+                None => {
+                    let z = b.constant(0);
+                    b.output(z, 0);
+                }
+            }
+        }
+        programs.push(b.finish());
+    }
+    (stats, programs)
+}
+
+/// The engine A/B case: indexed vs reference CSE engine on the given
+/// network's layer matrices (CSE stage only, so the measurement
+/// isolates exactly the overhauled hot path).
+pub fn engine_ab(runs: usize, case_id: &str, spec: &NetworkSpec) -> Result<EngineAb> {
+    let problems = layer_problems(spec);
+    ensure!(!problems.is_empty(), "engine A/B: network has no weight layers");
+    let runs = runs.max(1);
+    let mut t_idx = Vec::with_capacity(runs);
+    let mut t_ref = Vec::with_capacity(runs);
+    let mut programs_match = true;
+    let mut pin: Option<(CseStats, CseStats)> = None;
+    for run in 0..runs {
+        let (d_i, (si, progs_i)) = time_once(|| run_cse_engine(&problems, false));
+        let (d_r, (sr, progs_r)) = time_once(|| run_cse_engine(&problems, true));
+        programs_match &= progs_i == progs_r;
+        match pin {
+            None => pin = Some((si, sr)),
+            Some(prev) => ensure!(
+                prev == (si, sr),
+                "engine A/B ({case_id}): non-deterministic counters on repeat {run}"
+            ),
+        }
+        t_idx.push(d_i);
+        t_ref.push(d_r);
+    }
+    // The bit-identity is an engine invariant, not a tunable metric:
+    // fail every consumer loudly (CLI without --baseline, the
+    // optimizer_micro bench), not just the CI diff — which also gates
+    // on the field for defense in depth.
+    ensure!(
+        programs_match,
+        "engine A/B ({case_id}): indexed and reference engines emitted different \
+         programs — the overhaul broke bit-identity (see cse::tests differential \
+         sweep to localize)"
+    );
+    let (stats_idx, stats_ref) = pin.expect("at least one run");
+    let indexed_ms = ms(median_duration(&mut t_idx));
+    let reference_ms = ms(median_duration(&mut t_ref));
+    Ok(EngineAb {
+        case_id: case_id.to_string(),
+        indexed_ms,
+        reference_ms,
+        speedup: reference_ms / indexed_ms.max(1e-6),
+        programs_match,
+        indexed: stats_idx,
+        reference: stats_ref,
+    })
+}
+
+/// Run the whole suite for a configuration.
+pub fn run_suite(cfg: &PerfConfig) -> Result<SuiteReport> {
+    let (jet_source, jet) = jet_spec();
+    let mut cases = Vec::new();
+    let mut skipped = Vec::new();
+
+    // CMVM group: seeded random square matrices × all five strategies.
+    for &m in cmvm_sizes(cfg.suite) {
+        let problem = CmvmProblem::random(9000 + m as u64, m, m, 8);
+        for (name, strategy) in strategies() {
+            let id = format!("cmvm/{m}x{m}/{name}");
+            if matches!(strategy, Strategy::Lookahead { .. }) && m > lookahead_cap(cfg.suite) {
+                skipped.push(SkippedCase {
+                    id,
+                    reason: format!(
+                        "lookahead is O(N^3) in the digit count; capped at \
+                         {0}x{0} for the {1} suite",
+                        lookahead_cap(cfg.suite),
+                        cfg.suite.name()
+                    ),
+                });
+                continue;
+            }
+            let p = &problem;
+            cases.push(measure_case(cfg.runs, id, "cmvm", name, None, || {
+                optimize(p, strategy).map(|s| (s.program, s.cse))
+            })?);
+        }
+    }
+
+    // Network group: the jet network + scaled synthetic stand-ins,
+    // fused end to end and pipelined like the `rtl` CLI flow.
+    let mut nets: Vec<(String, NetworkSpec)> = vec![("jet".into(), jet.clone())];
+    for &(num, den) in net_scales(cfg.suite) {
+        let net_id = format!("jet-x{num}of{den}");
+        if (num, den) == (1, 1) && jet_source == "synthetic" {
+            // Without the exported artifact the jet case *is* the
+            // seed-42 synthetic network, so the 1:1 scale would measure
+            // byte-identical programs twice under a second id.
+            skipped.push(SkippedCase {
+                id: format!("net/{net_id}/*"),
+                reason: "identical to net/jet/* when the jet artifact is absent \
+                         (jet_source=synthetic)"
+                    .into(),
+            });
+            continue;
+        }
+        nets.push((net_id, synthetic_jet_spec_scaled(num, den)));
+    }
+    for (net_id, spec) in &nets {
+        for (name, strategy) in strategies() {
+            let id = format!("net/{net_id}/{name}");
+            match strategy {
+                Strategy::Lookahead { .. } => {
+                    skipped.push(SkippedCase {
+                        id,
+                        reason: "lookahead is O(N^3) in the digit count; never run on \
+                                 full networks"
+                            .into(),
+                    });
+                    continue;
+                }
+                Strategy::Latency => {
+                    skipped.push(SkippedCase {
+                        id,
+                        reason: "the latency strategy fuses to the same graph as \
+                                 naive-da (functional twin); timed once under naive-da"
+                            .into(),
+                    });
+                    continue;
+                }
+                _ => {}
+            }
+            cases.push(measure_case(
+                cfg.runs,
+                id,
+                "network",
+                name,
+                Some(PIPE_EVERY),
+                || nn::compile::fuse_with_stats(spec, strategy),
+            )?);
+        }
+    }
+
+    let ab = engine_ab(cfg.runs, "jet/cse-stage", &jet)?;
+
+    Ok(SuiteReport {
+        schema_version: SCHEMA_VERSION,
+        suite: cfg.suite.name(),
+        jet_source,
+        runs: cfg.runs,
+        cases,
+        engine_ab: ab,
+        skipped,
+    })
+}
+
+/// Human-readable rendering of a suite report (the CLI and the
+/// `optimizer_micro` bench print exactly this, so bench and CLI always
+/// report the same numbers).
+pub fn render_table(r: &SuiteReport) -> String {
+    let mut table = Table::new(
+        &format!(
+            "perf suite '{}' (runs={}, jet={}, schema v{})",
+            r.suite, r.runs, r.jet_source, r.schema_version
+        ),
+        &[
+            "case",
+            "opt[ms]",
+            "lower[ms]",
+            "emit[ms]",
+            "adders",
+            "depth",
+            "LUT",
+            "stages",
+            "heap pops",
+            "digit scans",
+        ],
+    );
+    for c in &r.cases {
+        table.push(vec![
+            c.id.clone(),
+            sci(c.phases.optimize),
+            sci(c.phases.lower),
+            sci(c.phases.emit),
+            c.adders.to_string(),
+            c.depth.to_string(),
+            c.lut.to_string(),
+            c.stages.to_string(),
+            c.cse.heap_pops.to_string(),
+            c.cse.occ_digits_scanned.to_string(),
+        ]);
+    }
+    let mut out = table.render();
+    let ab = &r.engine_ab;
+    out.push_str(&format!(
+        "\nengine A/B ({}): indexed {} ms vs reference {} ms -> {:.2}x speedup; \
+         programs bit-identical: {}; digit scans {} vs {}\n",
+        ab.case_id,
+        sci(ab.indexed_ms),
+        sci(ab.reference_ms),
+        ab.speedup,
+        ab.programs_match,
+        ab.indexed.occ_digits_scanned,
+        ab.reference.occ_digits_scanned,
+    ));
+    for sk in &r.skipped {
+        out.push_str(&format!("skipped: {} — {}\n", sk.id, sk.reason));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny case through the full measure path (optimize + lower +
+    /// emit, no pipelining): phases time, counters pin, ids stick.
+    #[test]
+    fn measure_case_cmvm_smoke() {
+        let p = CmvmProblem::new(2, 2, vec![3, 5, -7, 9], 8);
+        let c = measure_case(2, "cmvm/2x2/da".into(), "cmvm", "da", None, || {
+            optimize(&p, Strategy::Da { dc: -1 }).map(|s| (s.program, s.cse))
+        })
+        .unwrap();
+        assert_eq!(c.id, "cmvm/2x2/da");
+        assert!(c.adders > 0);
+        assert!(c.lut > 0);
+        assert_eq!(c.stages, 0);
+        assert!(c.phases.optimize >= 0.0);
+    }
+
+    /// A pipelined network case reports stage structure.
+    #[test]
+    fn measure_case_network_smoke() {
+        let spec = synthetic_jet_spec_scaled(1, 8);
+        let c = measure_case(1, "net/tiny/da".into(), "network", "da", Some(PIPE_EVERY), || {
+            nn::compile::fuse_with_stats(&spec, Strategy::Da { dc: SUITE_DC })
+        })
+        .unwrap();
+        assert!(c.stages > 0, "pipelined case must report stages");
+        assert!(c.worst_stage_ns > 0.0);
+        assert!(c.adders > 0);
+    }
+
+    /// The A/B harness on a down-scaled jet: programs must match
+    /// bit-identically and the indexed engine must not scan more digits
+    /// than the reference.
+    #[test]
+    fn engine_ab_tiny_jet() {
+        let spec = synthetic_jet_spec_scaled(1, 8);
+        let ab = engine_ab(1, "tiny/cse-stage", &spec).unwrap();
+        assert!(ab.programs_match, "engines diverged");
+        assert!(ab.indexed_ms > 0.0 && ab.reference_ms > 0.0);
+        assert!(
+            ab.indexed.occ_digits_scanned <= ab.reference.occ_digits_scanned,
+            "index must bound the scan work: {} > {}",
+            ab.indexed.occ_digits_scanned,
+            ab.reference.occ_digits_scanned
+        );
+        assert_eq!(ab.indexed.steps, ab.reference.steps);
+        assert_eq!(ab.indexed.heap_pops, ab.reference.heap_pops);
+    }
+
+    #[test]
+    fn layer_problems_track_shapes() {
+        let spec = synthetic_jet_spec_scaled(1, 4);
+        let ps = layer_problems(&spec);
+        assert_eq!(ps.len(), 4);
+        assert_eq!(ps[0].d_in, 4);
+        assert_eq!(ps[0].d_out, 16);
+        assert_eq!(ps[3].d_out, 5);
+    }
+}

@@ -1,0 +1,353 @@
+//! The `BENCH_cmvm.json` schema (version [`super::SCHEMA_VERSION`]) and
+//! the baseline document the regression gate consumes.
+//!
+//! Both documents are plain JSON through the in-tree [`crate::json`]
+//! layer; the full field reference lives in `docs/perf.md`. A **report**
+//! is what `da4ml perf` writes; a **baseline** is the subset a repo
+//! commits for CI to gate on (`ci/bench_baseline.json`):
+//!
+//! * deterministic counters (`adders`, `lut`, `heap_pops`, …) are pinned
+//!   exactly when present in a baseline case;
+//! * phase timings (`optimize_ms`, …) are machine-dependent, so a
+//!   baseline only carries them when blessed with `--with-times`, and
+//!   the diff applies the relative `time_tolerance`;
+//! * `min_speedup` gates the engine A/B ratio, which is same-machine
+//!   relative and therefore portable across CI hosts.
+
+use super::{CaseReport, EngineAb, SuiteReport};
+use crate::cse::CseStats;
+use crate::json::{self, Value};
+use crate::Result;
+use std::collections::BTreeMap;
+
+/// Deterministic per-case counters a baseline may pin (exact match).
+pub const COUNTER_KEYS: &[&str] = &[
+    "adders",
+    "depth",
+    "lut",
+    "ff",
+    "stages",
+    "cse_steps",
+    "depth_rejections",
+    "heap_pops",
+    "stale_pops",
+    "occ_cols_scanned",
+    "occ_digits_scanned",
+];
+
+/// Machine-dependent per-case timings a baseline may bound (relative
+/// tolerance).
+pub const TIME_KEYS: &[&str] = &["optimize_ms", "lower_ms", "emit_ms"];
+
+/// Default engine A/B speedup floor written into blessed baselines —
+/// deliberately below the measured headline so CI jitter cannot flake
+/// the gate, while still catching a real regression of the overhaul.
+pub const DEFAULT_MIN_SPEEDUP: f64 = 1.25;
+
+/// Default relative tolerance for time metrics (+50 %).
+pub const DEFAULT_TIME_TOLERANCE: f64 = 0.5;
+
+fn obj(entries: Vec<(&str, Value)>) -> Value {
+    Value::Object(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn int(v: u64) -> Value {
+    Value::Int(v as i64)
+}
+
+fn stats_entries(s: &CseStats) -> Vec<(&'static str, Value)> {
+    vec![
+        ("cse_steps", int(s.steps as u64)),
+        ("depth_rejections", int(s.depth_rejections as u64)),
+        ("heap_pops", int(s.heap_pops as u64)),
+        ("stale_pops", int(s.stale_pops as u64)),
+        ("occ_cols_scanned", int(s.occ_cols_scanned as u64)),
+        ("occ_digits_scanned", int(s.occ_digits_scanned as u64)),
+    ]
+}
+
+fn case_value(c: &CaseReport) -> Value {
+    let mut entries = vec![
+        ("id", Value::Str(c.id.clone())),
+        ("kind", Value::Str(c.kind.to_string())),
+        ("strategy", Value::Str(c.strategy.to_string())),
+        ("optimize_ms", Value::Float(c.phases.optimize)),
+        ("lower_ms", Value::Float(c.phases.lower)),
+        ("emit_ms", Value::Float(c.phases.emit)),
+        ("adders", int(c.adders)),
+        ("depth", int(c.depth as u64)),
+        ("lut", int(c.lut)),
+        ("ff", int(c.ff)),
+        ("stages", int(c.stages as u64)),
+        ("worst_stage_ns", Value::Float(c.worst_stage_ns)),
+    ];
+    entries.extend(stats_entries(&c.cse));
+    obj(entries)
+}
+
+fn engine_ab_value(ab: &EngineAb) -> Value {
+    obj(vec![
+        ("case", Value::Str(ab.case_id.clone())),
+        ("indexed_ms", Value::Float(ab.indexed_ms)),
+        ("reference_ms", Value::Float(ab.reference_ms)),
+        ("speedup", Value::Float(ab.speedup)),
+        ("programs_match", Value::Bool(ab.programs_match)),
+        ("indexed", obj(stats_entries(&ab.indexed))),
+        ("reference", obj(stats_entries(&ab.reference))),
+    ])
+}
+
+/// The full report as a JSON value (the `BENCH_cmvm.json` document).
+pub fn to_value(r: &SuiteReport) -> Value {
+    obj(vec![
+        ("schema_version", int(r.schema_version as u64)),
+        ("suite", Value::Str(r.suite.to_string())),
+        ("jet_source", Value::Str(r.jet_source.clone())),
+        ("runs", int(r.runs as u64)),
+        (
+            "cases",
+            Value::Array(r.cases.iter().map(case_value).collect()),
+        ),
+        ("engine_ab", engine_ab_value(&r.engine_ab)),
+        (
+            "skipped",
+            Value::Array(
+                r.skipped
+                    .iter()
+                    .map(|s| {
+                        obj(vec![
+                            ("id", Value::Str(s.id.clone())),
+                            ("reason", Value::Str(s.reason.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Serialize the report to the `BENCH_cmvm.json` text (compact JSON,
+/// one document).
+pub fn render(r: &SuiteReport) -> String {
+    json::to_string(&to_value(r))
+}
+
+/// A blessed baseline document derived from a run: every deterministic
+/// counter of every case, the engine A/B floor, and — only with
+/// `with_times` — the phase timings of the blessing machine.
+pub fn baseline_value(r: &SuiteReport, with_times: bool) -> Value {
+    let cases: Vec<Value> = r
+        .cases
+        .iter()
+        .map(|c| {
+            let mut entries = vec![
+                ("id", Value::Str(c.id.clone())),
+                ("adders", int(c.adders)),
+                ("depth", int(c.depth as u64)),
+                ("lut", int(c.lut)),
+                ("ff", int(c.ff)),
+                ("stages", int(c.stages as u64)),
+            ];
+            entries.extend(stats_entries(&c.cse));
+            if with_times {
+                entries.push(("optimize_ms", Value::Float(c.phases.optimize)));
+                entries.push(("lower_ms", Value::Float(c.phases.lower)));
+                entries.push(("emit_ms", Value::Float(c.phases.emit)));
+            }
+            obj(entries)
+        })
+        .collect();
+    obj(vec![
+        ("schema_version", int(r.schema_version as u64)),
+        ("suite", Value::Str(r.suite.to_string())),
+        // net/jet/* counters depend on which jet network the blessing
+        // run saw (exported artifact vs synthetic stand-in); recording
+        // it lets the gate diagnose artifact-presence mismatches
+        // instead of reporting misleading counter drift.
+        ("jet_source", Value::Str(r.jet_source.clone())),
+        ("min_speedup", Value::Float(DEFAULT_MIN_SPEEDUP)),
+        ("time_tolerance", Value::Float(DEFAULT_TIME_TOLERANCE)),
+        ("cases", Value::Array(cases)),
+    ])
+}
+
+/// Serialize a blessed baseline (see [`baseline_value`]).
+pub fn render_baseline(r: &SuiteReport, with_times: bool) -> String {
+    json::to_string(&baseline_value(r, with_times))
+}
+
+/// One baseline case: the id plus whichever metrics the document pins.
+#[derive(Debug, Clone, Default)]
+pub struct BaselineCase {
+    /// Join key against [`CaseReport::id`].
+    pub id: String,
+    /// Exact-match counter pins present in the document.
+    pub counters: Vec<(String, i64)>,
+    /// Tolerance-bounded time pins present in the document (ms).
+    pub times_ms: Vec<(String, f64)>,
+}
+
+/// A parsed baseline document.
+#[derive(Debug, Clone)]
+pub struct Baseline {
+    /// Schema version the baseline was written against.
+    pub schema_version: i64,
+    /// True for the committed bootstrap stub (no pinned cases yet).
+    pub bootstrap: bool,
+    /// Which jet network the blessing run measured (`"artifact"` /
+    /// `"synthetic"`); absent in hand-written stubs.
+    pub jet_source: Option<String>,
+    /// Engine A/B speedup floor (absent = not gated).
+    pub min_speedup: Option<f64>,
+    /// Relative tolerance for time metrics.
+    pub time_tolerance: f64,
+    /// Pinned cases.
+    pub cases: Vec<BaselineCase>,
+}
+
+/// Parse a baseline document (either a blessed baseline or the
+/// committed bootstrap stub).
+pub fn parse_baseline(text: &str) -> Result<Baseline> {
+    let v = json::parse(text)?;
+    let schema_version = v.get("schema_version")?.as_i64()?;
+    let bootstrap = match v.get_opt("bootstrap") {
+        Some(b) => b.as_bool()?,
+        None => false,
+    };
+    let jet_source = match v.get_opt("jet_source") {
+        Some(x) => Some(x.as_str()?.to_string()),
+        None => None,
+    };
+    let min_speedup = match v.get_opt("min_speedup") {
+        Some(x) => Some(x.as_f64()?),
+        None => None,
+    };
+    let time_tolerance = match v.get_opt("time_tolerance") {
+        Some(x) => x.as_f64()?,
+        None => DEFAULT_TIME_TOLERANCE,
+    };
+    let mut cases = Vec::new();
+    if let Some(arr) = v.get_opt("cases") {
+        for cv in arr.as_array()? {
+            let mut case = BaselineCase {
+                id: cv.get("id")?.as_str()?.to_string(),
+                ..BaselineCase::default()
+            };
+            for &k in COUNTER_KEYS {
+                if let Some(x) = cv.get_opt(k) {
+                    case.counters.push((k.to_string(), x.as_i64()?));
+                }
+            }
+            for &k in TIME_KEYS {
+                if let Some(x) = cv.get_opt(k) {
+                    case.times_ms.push((k.to_string(), x.as_f64()?));
+                }
+            }
+            cases.push(case);
+        }
+    }
+    Ok(Baseline { schema_version, bootstrap, jet_source, min_speedup, time_tolerance, cases })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{PhaseMs, SkippedCase};
+    use super::*;
+
+    fn tiny_report() -> SuiteReport {
+        SuiteReport {
+            schema_version: super::super::SCHEMA_VERSION,
+            suite: "smoke",
+            jet_source: "synthetic".into(),
+            runs: 3,
+            cases: vec![CaseReport {
+                id: "cmvm/2x2/da".into(),
+                kind: "cmvm",
+                strategy: "da",
+                phases: PhaseMs { optimize: 1.5, lower: 0.25, emit: 0.125 },
+                adders: 4,
+                depth: 2,
+                lut: 40,
+                ff: 32,
+                stages: 0,
+                worst_stage_ns: 2.5,
+                cse: CseStats {
+                    steps: 3,
+                    depth_rejections: 0,
+                    heap_pops: 11,
+                    stale_pops: 5,
+                    occ_cols_scanned: 7,
+                    occ_digits_scanned: 21,
+                },
+            }],
+            engine_ab: EngineAb {
+                case_id: "jet/cse-stage".into(),
+                indexed_ms: 2.0,
+                reference_ms: 5.0,
+                speedup: 2.5,
+                programs_match: true,
+                indexed: CseStats::default(),
+                reference: CseStats::default(),
+            },
+            skipped: vec![SkippedCase { id: "cmvm/64x64/lookahead".into(), reason: "O(N^3)".into() }],
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_through_json() {
+        let r = tiny_report();
+        let text = render(&r);
+        let v = json::parse(&text).expect("report is valid JSON");
+        assert_eq!(v.get("schema_version").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(v.get("suite").unwrap().as_str().unwrap(), "smoke");
+        let cases = v.get("cases").unwrap().as_array().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("id").unwrap().as_str().unwrap(), "cmvm/2x2/da");
+        assert_eq!(cases[0].get("heap_pops").unwrap().as_i64().unwrap(), 11);
+        assert!(
+            (cases[0].get("optimize_ms").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-12
+        );
+        let ab = v.get("engine_ab").unwrap();
+        assert!((ab.get("speedup").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-12);
+        assert!(ab.get("programs_match").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("skipped").unwrap().as_array().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn blessed_baseline_parses_back() {
+        let r = tiny_report();
+        let text = render_baseline(&r, false);
+        let b = parse_baseline(&text).expect("baseline parses");
+        assert_eq!(b.schema_version, 1);
+        assert!(!b.bootstrap);
+        assert_eq!(b.jet_source.as_deref(), Some("synthetic"));
+        assert_eq!(b.min_speedup, Some(DEFAULT_MIN_SPEEDUP));
+        assert_eq!(b.cases.len(), 1);
+        let case = &b.cases[0];
+        assert_eq!(case.id, "cmvm/2x2/da");
+        assert!(case.counters.iter().any(|(k, v)| k == "adders" && *v == 4));
+        assert!(case.counters.iter().any(|(k, v)| k == "heap_pops" && *v == 11));
+        assert!(case.times_ms.is_empty(), "times only with --with-times");
+
+        let with_times = parse_baseline(&render_baseline(&r, true)).unwrap();
+        assert!(with_times.cases[0]
+            .times_ms
+            .iter()
+            .any(|(k, v)| k == "optimize_ms" && (*v - 1.5).abs() < 1e-12));
+    }
+
+    #[test]
+    fn bootstrap_stub_parses() {
+        let stub = r#"{"schema_version": 1, "suite": "smoke", "bootstrap": true,
+                       "min_speedup": 1.25, "time_tolerance": 0.5, "cases": []}"#;
+        let b = parse_baseline(stub).unwrap();
+        assert!(b.bootstrap);
+        assert_eq!(b.cases.len(), 0);
+        assert_eq!(b.min_speedup, Some(1.25));
+    }
+}

@@ -377,6 +377,11 @@ fn flush_batch<W: Write>(
     o.insert("cache_hits".into(), Value::Int(stats.cache_hits as i64));
     o.insert("cache_size".into(), Value::Int(coord.cache_len() as i64));
     o.insert("total_opt_ms".into(), Value::Float(stats.total_opt_time.as_secs_f64() * 1e3));
+    // Optimizer work proxies (cumulative, executed jobs only — cache
+    // hits add nothing): lets clients watch perf per batch the same way
+    // the perf suite does per case.
+    o.insert("cse_steps".into(), Value::Int(stats.total_cse_steps as i64));
+    o.insert("heap_pops".into(), Value::Int(stats.total_heap_pops as i64));
     writeln!(output, "{}", json::to_string(&Value::Object(o)))?;
     output.flush()?;
     Ok(())

@@ -43,6 +43,24 @@ pub fn time_median<T, F: FnMut() -> T>(runs: usize, mut f: F) -> (std::time::Dur
     (samples[samples.len() / 2], out)
 }
 
+/// Time a single invocation of `f` on the monotonic clock
+/// (`Instant`). The perf suite times each pipeline phase separately
+/// with this and medians the per-phase samples across repeats.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (std::time::Duration, T) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    (t0.elapsed(), out)
+}
+
+/// Median of duration samples (sorts in place; empty slice -> zero).
+pub fn median_duration(samples: &mut [std::time::Duration]) -> std::time::Duration {
+    if samples.is_empty() {
+        return std::time::Duration::ZERO;
+    }
+    samples.sort_unstable();
+    samples[samples.len() / 2]
+}
+
 /// Run jobs on a scoped thread pool, preserving order (std-only
 /// replacement for the tokio blocking pool on this single-core box).
 pub fn parallel_map<T, U, F>(items: Vec<T>, threads: usize, f: F) -> Vec<U>
@@ -106,5 +124,26 @@ mod tests {
         let (d, v) = time_median(3, || 41 + 1);
         assert_eq!(v, 42);
         assert!(d.as_nanos() < 1_000_000);
+    }
+
+    #[test]
+    fn time_once_returns_value_and_duration() {
+        let (d, v) = time_once(|| "ok");
+        assert_eq!(v, "ok");
+        assert!(d.as_secs() < 1);
+    }
+
+    #[test]
+    fn median_duration_examples() {
+        use std::time::Duration;
+        assert_eq!(median_duration(&mut []), Duration::ZERO);
+        let mut one = [Duration::from_millis(7)];
+        assert_eq!(median_duration(&mut one), Duration::from_millis(7));
+        let mut three = [
+            Duration::from_millis(9),
+            Duration::from_millis(1),
+            Duration::from_millis(5),
+        ];
+        assert_eq!(median_duration(&mut three), Duration::from_millis(5));
     }
 }
