@@ -18,7 +18,11 @@
 //!
 //! The long-lived JSONL compile service ([`crate::serve`]) drives
 //! batches through [`Coordinator::compile_batch`], which reports the
-//! per-job cache-hit flag the streamed replies expose.
+//! per-job cache-hit flag the streamed replies expose. For long-lived
+//! deployments the cache can be bounded
+//! ([`Coordinator::with_cache_cap`] / `serve --cache-cap`): past the
+//! cap, least-recently-used solutions are evicted (counted in
+//! [`CoordinatorStats::evictions`]); the default stays unbounded.
 //!
 //! ```
 //! use da4ml::cmvm::{CmvmProblem, Strategy};
@@ -71,6 +75,9 @@ pub struct CoordinatorStats {
     /// Optimizer heap pops across executed jobs — the work proxy the
     /// perf suite tracks; cache hits add nothing here.
     pub total_heap_pops: u64,
+    /// Cached solutions evicted to honor the cache cap (always 0 for
+    /// the default unbounded cache).
+    pub evictions: u64,
 }
 
 /// The full identity of a compile job — everything that affects the
@@ -97,15 +104,52 @@ fn job_key(problem: &CmvmProblem, strategy: Strategy) -> JobKey {
     }
 }
 
+/// Remove the least-recently-used cache entry. The `last_used` stamps
+/// are unique (one tick per access under the lock), so the victim is
+/// deterministic regardless of hash-map iteration order. Returns
+/// `false` on an empty cache.
+///
+/// Deliberately a linear scan: it costs O(cache_len) per eviction
+/// under the lock, which is fine for the modest caps serve deployments
+/// use (an entry is a whole optimized adder graph — thousands, not
+/// millions). A very large cap would want a secondary recency index.
+fn evict_lru<S: BuildHasher>(inner: &mut Inner<S>) -> bool {
+    let victim = inner
+        .cache
+        .iter()
+        .min_by_key(|(_, e)| e.last_used)
+        .map(|(k, _)| k.clone());
+    match victim {
+        Some(k) => {
+            inner.cache.remove(&k);
+            inner.stats.evictions += 1;
+            true
+        }
+        None => false,
+    }
+}
+
 /// The compile coordinator (thread-safe; cheap to clone). Generic over
 /// the cache hasher — production code uses the FxHash default.
 pub struct Coordinator<S = FxBuildHasher> {
     inner: Arc<Mutex<Inner<S>>>,
 }
 
+/// One cached solution plus its recency stamp (for capped caches).
+struct CacheEntry {
+    sol: Arc<CmvmSolution>,
+    last_used: u64,
+}
+
 struct Inner<S> {
-    cache: HashMap<JobKey, Arc<CmvmSolution>, S>,
+    cache: HashMap<JobKey, CacheEntry, S>,
     stats: CoordinatorStats,
+    /// Maximum cached entries (`None` = unbounded, the default —
+    /// preserves the pre-cap behavior exactly).
+    cap: Option<usize>,
+    /// Monotone access clock; every `compile_cached` call gets a fresh
+    /// tick under the lock, so `last_used` stamps are unique.
+    tick: u64,
 }
 
 impl<S> Clone for Coordinator<S> {
@@ -120,6 +164,8 @@ impl<S: BuildHasher + Default> Default for Coordinator<S> {
             inner: Arc::new(Mutex::new(Inner {
                 cache: HashMap::with_hasher(S::default()),
                 stats: CoordinatorStats::default(),
+                cap: None,
+                tick: 0,
             })),
         }
     }
@@ -129,6 +175,16 @@ impl Coordinator<FxBuildHasher> {
     /// Create an empty coordinator with the default (FxHash) cache.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Create a coordinator whose cache holds at most `cap` solutions
+    /// (least-recently-used entries are evicted past the cap; `cap == 0`
+    /// disables caching entirely). Long-lived `serve` deployments use
+    /// this via `serve --cache-cap`.
+    pub fn with_cache_cap(cap: usize) -> Self {
+        let c = Self::default();
+        c.set_cache_cap(Some(cap));
+        c
     }
 }
 
@@ -149,7 +205,11 @@ impl<S: BuildHasher + Default> Coordinator<S> {
         {
             let mut inner = self.inner.lock().unwrap();
             inner.stats.submitted += 1;
-            if let Some(sol) = inner.cache.get(&key).cloned() {
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(entry) = inner.cache.get_mut(&key) {
+                entry.last_used = tick;
+                let sol = entry.sol.clone();
                 inner.stats.cache_hits += 1;
                 return Ok((sol, true));
             }
@@ -159,8 +219,52 @@ impl<S: BuildHasher + Default> Coordinator<S> {
         inner.stats.total_opt_time += sol.opt_time;
         inner.stats.total_cse_steps += sol.cse.steps as u64;
         inner.stats.total_heap_pops += sol.cse.heap_pops as u64;
-        inner.cache.entry(key).or_insert_with(|| sol.clone());
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.cap {
+            Some(0) => {} // caching disabled
+            cap => {
+                // A racing duplicate may have inserted first; then just
+                // refresh its recency and keep the existing entry.
+                let raced = match inner.cache.get_mut(&key) {
+                    Some(entry) => {
+                        entry.last_used = tick;
+                        true
+                    }
+                    None => false,
+                };
+                if !raced {
+                    if let Some(cap) = cap {
+                        while inner.cache.len() >= cap {
+                            if !evict_lru(&mut inner) {
+                                break;
+                            }
+                        }
+                    }
+                    inner
+                        .cache
+                        .insert(key, CacheEntry { sol: sol.clone(), last_used: tick });
+                }
+            }
+        }
         Ok((sol, false))
+    }
+
+    /// Bound (or unbound) the solution cache. `Some(cap)` evicts
+    /// least-recently-used entries immediately if the cache is already
+    /// over the cap; `Some(0)` disables caching; `None` (the default)
+    /// is unbounded. Eviction only drops cached solutions — the
+    /// hit/miss statistics are never rewritten.
+    pub fn set_cache_cap(&self, cap: Option<usize>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.cap = cap;
+        if let Some(cap) = cap {
+            while inner.cache.len() > cap {
+                if !evict_lru(&mut inner) {
+                    break;
+                }
+            }
+        }
     }
 
     /// Compile a batch concurrently on a scoped worker pool, preserving
@@ -320,6 +424,66 @@ mod tests {
         fn build_hasher(&self) -> CollidingHasher {
             CollidingHasher
         }
+    }
+
+    /// A capped cache evicts the least-recently-used entry, and
+    /// eviction only drops solutions — submitted/hit/miss accounting
+    /// stays exact across evictions and re-compiles.
+    #[test]
+    fn cache_cap_evicts_lru_without_corrupting_stats() {
+        let c = Coordinator::with_cache_cap(2);
+        let (j0, j1, j2) = (job(30), job(31), job(32));
+        c.compile(&j0).unwrap(); // cache: {j0}
+        c.compile(&j1).unwrap(); // cache: {j0, j1}
+        c.compile(&j0).unwrap(); // hit — j0 becomes most recent
+        c.compile(&j2).unwrap(); // evicts j1 (the LRU entry)
+        let s = c.stats();
+        assert_eq!(c.cache_len(), 2);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.submitted, 4);
+        assert_eq!(s.cache_hits, 1);
+        // j0 survived (recently used) …
+        let (_, hit) = c.compile_cached(&j0).unwrap();
+        assert!(hit, "recently used entry must survive eviction");
+        // … while j1 was evicted: a miss that re-optimizes and in turn
+        // evicts the new LRU (j2).
+        let (_, hit) = c.compile_cached(&j1).unwrap();
+        assert!(!hit, "evicted entry must be a miss");
+        let s = c.stats();
+        assert_eq!(s.submitted, 6);
+        assert_eq!(s.cache_hits, 2);
+        assert_eq!(s.evictions, 2);
+        assert_eq!(c.cache_len(), 2);
+    }
+
+    #[test]
+    fn zero_cap_disables_caching() {
+        let c = Coordinator::with_cache_cap(0);
+        let j = job(33);
+        c.compile(&j).unwrap();
+        c.compile(&j).unwrap();
+        assert_eq!(c.cache_len(), 0);
+        let s = c.stats();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.cache_hits, 0);
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn shrinking_the_cap_evicts_immediately() {
+        let c = Coordinator::new();
+        for seed in 40..44 {
+            c.compile(&job(seed)).unwrap();
+        }
+        assert_eq!(c.cache_len(), 4);
+        c.set_cache_cap(Some(2));
+        assert_eq!(c.cache_len(), 2);
+        assert_eq!(c.stats().evictions, 2);
+        // The two most recently inserted entries survive.
+        let (_, hit) = c.compile_cached(&job(43)).unwrap();
+        assert!(hit);
+        let (_, hit) = c.compile_cached(&job(42)).unwrap();
+        assert!(hit);
     }
 
     /// Regression for the cache-poisoning bug: with the old bare-u64

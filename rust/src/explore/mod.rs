@@ -1,0 +1,695 @@
+//! Design-space exploration: deterministic parallel Pareto search over
+//! strategy × pipeline × precision.
+//!
+//! The paper's headline claim is that DA-based CMVM optimization
+//! improves area *and* latency simultaneously — which means the useful
+//! answer to "how should I compile this?" is not one design point but
+//! the **trade-off curve**. This module enumerates a candidate space
+//! (all five [`Strategy`] variants — the `Da` variant being the
+//! two-stage MST + CSE split and `CseOnly` the single-stage ablation —
+//! crossed with a delay-constraint ladder and a pipeline-threshold
+//! ladder derived from [`PipelineConfig::every_n_adders`]), compiles
+//! each distinct strategy through the [`Coordinator`] on the
+//! deterministic worker pool ([`pool`]), scores every candidate with
+//! [`estimate::combinational`] / [`estimate::pipelined`] (stage
+//! assignment via [`crate::pipeline::assign_stages`], depth via
+//! [`crate::pipeline::latency`]), and splits the points into the
+//! non-dominated (LUT, FF, latency) **Pareto front** and a retained
+//! `dominated` array for audit.
+//!
+//! Determinism is load-bearing: the report for `--jobs N` is
+//! bit-identical to `--jobs 1` (results are merged in submission
+//! order; nothing machine- or schedule-dependent is recorded), so the
+//! serialized JSON ([`schema`]) can be diffed, cached, and pinned by
+//! tests. Candidates the explorer intentionally does not run (the
+//! O(N³) lookahead comparator above its size cap, the pipeline ladder
+//! under the MAC-modeled latency baseline) are listed in `skipped` —
+//! no silent coverage holes, following the perf-lab convention.
+//!
+//! Surfaces: the `da4ml explore` CLI subcommand (JSON report + human
+//! table), the `"type": "explore"` serve job ([`crate::serve`],
+//! `docs/serve.md`), and the [`pick`] helper that auto-selects a front
+//! point for an [`Objective`] (used by
+//! [`crate::nn::compile::fuse_auto`]).
+//!
+//! ```
+//! use da4ml::cmvm::CmvmProblem;
+//! use da4ml::explore::{self, ExploreConfig, ExploreTarget, Objective};
+//! use da4ml::coordinator::Coordinator;
+//!
+//! let problem = CmvmProblem::new(2, 2, vec![3, 5, -7, 9], 8);
+//! let cfg = ExploreConfig { jobs: 1, ..ExploreConfig::smoke() };
+//! let report =
+//!     explore::explore(&ExploreTarget::Cmvm(problem), &Coordinator::new(), &cfg).unwrap();
+//! assert!(!report.front.is_empty());
+//! let best = explore::pick(&report.front, Objective::MinLut).unwrap();
+//! assert!(report.front.iter().all(|p| p.lut >= best.lut));
+//! ```
+
+pub mod pool;
+pub mod schema;
+
+use crate::baseline::mac::{mac_report, DspPolicy};
+use crate::cmvm::{CmvmProblem, Strategy};
+use crate::coordinator::{CompileJob, Coordinator};
+use crate::estimate::{self, FpgaModel};
+use crate::nn::{self, NetworkSpec};
+use crate::pipeline::{self, PipelineConfig};
+use crate::report::Table;
+use crate::Result;
+
+/// Version of the explore-report JSON schema ([`schema`]); bumped on
+/// any incompatible change (same convention as [`crate::perf`]).
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// The candidate space: which delay constraints and pipeline
+/// thresholds to cross with the strategy axis.
+#[derive(Debug, Clone)]
+pub struct SpaceConfig {
+    /// Delay-constraint ladder for the engine-driven strategies
+    /// (`-1` = unconstrained).
+    pub dcs: Vec<i32>,
+    /// Pipeline ladder: `None` = combinational, `Some(n)` = a register
+    /// every `n` adders ([`PipelineConfig::every_n_adders`]). Entries
+    /// must be positive.
+    pub pipes: Vec<Option<u32>>,
+    /// The O(N³) lookahead comparator only runs on CMVMs whose longest
+    /// edge is at most this; larger targets record a skip.
+    pub lookahead_max_dim: usize,
+}
+
+impl SpaceConfig {
+    /// The full ladder: `dc ∈ {-1..4}` × `{comb, pipe 1/2/3/5/8}`.
+    pub fn full() -> Self {
+        Self {
+            dcs: vec![-1, 0, 1, 2, 3, 4],
+            pipes: vec![None, Some(1), Some(2), Some(3), Some(5), Some(8)],
+            lookahead_max_dim: 16,
+        }
+    }
+
+    /// CI-sized subset (`da4ml explore --smoke`).
+    pub fn smoke() -> Self {
+        Self {
+            dcs: vec![-1, 0, 2],
+            pipes: vec![None, Some(1), Some(5)],
+            lookahead_max_dim: 8,
+        }
+    }
+}
+
+/// Explorer configuration.
+#[derive(Debug, Clone)]
+pub struct ExploreConfig {
+    /// The candidate space.
+    pub space: SpaceConfig,
+    /// Worker threads for the compile fan-out (`0` = hardware
+    /// parallelism). The report is bit-identical for every value.
+    pub jobs: usize,
+    /// FPGA cost model used for scoring.
+    pub model: FpgaModel,
+}
+
+impl ExploreConfig {
+    /// Full space, hardware parallelism, default model.
+    pub fn full() -> Self {
+        Self { space: SpaceConfig::full(), jobs: 0, model: FpgaModel::default() }
+    }
+
+    /// Smoke space, hardware parallelism, default model.
+    pub fn smoke() -> Self {
+        Self { space: SpaceConfig::smoke(), jobs: 0, model: FpgaModel::default() }
+    }
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        Self::full()
+    }
+}
+
+/// What to explore: a single CMVM or a whole (fusible) network.
+#[derive(Debug, Clone)]
+pub enum ExploreTarget {
+    /// One constant matrix–vector multiplication.
+    Cmvm(CmvmProblem),
+    /// A whole network, fused end to end per strategy
+    /// ([`nn::compile::fuse_with_stats`]) — dense/einsum/residual
+    /// layers only (conv networks use the HLS-flow path and are not
+    /// fusible).
+    Network(NetworkSpec),
+}
+
+impl ExploreTarget {
+    /// Stable target label for reports.
+    pub fn name(&self) -> String {
+        match self {
+            ExploreTarget::Cmvm(p) => format!("cmvm/{}x{}", p.d_in, p.d_out),
+            ExploreTarget::Network(s) => s.name.clone(),
+        }
+    }
+}
+
+/// One scored candidate configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignPoint {
+    /// Stable point id, e.g. `da/dc2/pipe5`, `naive-da/comb`,
+    /// `latency/mac`.
+    pub id: String,
+    /// The compile strategy (carries the delay constraint).
+    pub strategy: Strategy,
+    /// Pipeline threshold (`None` = combinational; the MAC-modeled
+    /// latency baseline is also `None`).
+    pub pipe: Option<u32>,
+    /// Adder/subtractor count.
+    pub adders: u64,
+    /// Adder depth (combinational levels).
+    pub depth: u32,
+    /// LUT estimate — first dominance axis.
+    pub lut: u64,
+    /// DSP estimate (nonzero only for the MAC-modeled latency
+    /// baseline; informational, not a dominance axis).
+    pub dsp: u64,
+    /// Flip-flop estimate — second dominance axis.
+    pub ff: u64,
+    /// End-to-end latency estimate in ns — third dominance axis.
+    pub latency_ns: f64,
+    /// Pipeline latency in cycles (1 = combinational).
+    pub latency_cycles: u32,
+    /// Achievable clock estimate.
+    pub fmax_mhz: f64,
+}
+
+impl DesignPoint {
+    /// The delay constraint of the strategy, when it has one.
+    pub fn dc(&self) -> Option<i32> {
+        strategy_dc(self.strategy)
+    }
+}
+
+/// A candidate the explorer intentionally did not score.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SkippedCandidate {
+    /// The point id(s) that would have been scored.
+    pub id: String,
+    /// Why they were dropped.
+    pub reason: String,
+}
+
+/// The exploration result: the non-dominated front plus every
+/// dominated point (retained for audit) and every skipped candidate.
+#[derive(Debug, Clone)]
+pub struct ExploreReport {
+    /// Schema version ([`SCHEMA_VERSION`]).
+    pub schema_version: u32,
+    /// Target label ([`ExploreTarget::name`]).
+    pub target: String,
+    /// Non-dominated points, sorted by (LUT, latency, FF, id).
+    pub front: Vec<DesignPoint>,
+    /// Dominated points, in candidate enumeration order.
+    pub dominated: Vec<DesignPoint>,
+    /// Candidates not scored, with reasons.
+    pub skipped: Vec<SkippedCandidate>,
+}
+
+/// Selection objective for [`pick`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Smallest LUT count (ties: latency, FF, id).
+    MinLut,
+    /// Smallest latency in ns (ties: LUT, FF, id).
+    MinLatency,
+    /// The knee of the LUT/latency curve: the front point closest (in
+    /// normalized Euclidean distance) to the utopia point
+    /// (min-LUT, min-latency).
+    Knee,
+}
+
+impl Objective {
+    /// Parse a wire/CLI objective name.
+    pub fn parse(name: &str) -> Result<Self> {
+        Ok(match name {
+            "min-lut" => Objective::MinLut,
+            "min-latency" => Objective::MinLatency,
+            "knee" => Objective::Knee,
+            other => anyhow::bail!(
+                "unknown objective '{other}' (expected min-lut|min-latency|knee)"
+            ),
+        })
+    }
+
+    /// Stable objective name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::MinLut => "min-lut",
+            Objective::MinLatency => "min-latency",
+            Objective::Knee => "knee",
+        }
+    }
+}
+
+fn strategy_dc(s: Strategy) -> Option<i32> {
+    match s {
+        Strategy::Latency | Strategy::NaiveDa => None,
+        Strategy::Da { dc } | Strategy::CseOnly { dc } | Strategy::Lookahead { dc } => Some(dc),
+    }
+}
+
+/// Stable id of a (strategy, pipe) candidate.
+fn point_id(strategy: Strategy, pipe: Option<u32>) -> String {
+    if matches!(strategy, Strategy::Latency) {
+        return "latency/mac".into();
+    }
+    let base = match strategy_dc(strategy) {
+        Some(dc) => format!("{}/dc{}", strategy.name(), dc),
+        None => strategy.name().to_string(),
+    };
+    match pipe {
+        Some(n) => format!("{base}/pipe{n}"),
+        None => format!("{base}/comb"),
+    }
+}
+
+/// The compile axis of the space, in deterministic enumeration order:
+/// the two dc-free baselines first, then per delay constraint the
+/// single-stage CSE, the two-stage DA split, and the lookahead
+/// comparator.
+fn compile_axis(space: &SpaceConfig) -> Vec<Strategy> {
+    let mut out = vec![Strategy::Latency, Strategy::NaiveDa];
+    for &dc in &space.dcs {
+        out.push(Strategy::CseOnly { dc });
+        out.push(Strategy::Da { dc });
+        out.push(Strategy::Lookahead { dc });
+    }
+    out
+}
+
+/// Build one point from a resource report.
+fn point_from_report(
+    strategy: Strategy,
+    pipe: Option<u32>,
+    rep: &estimate::ResourceReport,
+) -> DesignPoint {
+    DesignPoint {
+        id: point_id(strategy, pipe),
+        strategy,
+        pipe,
+        adders: rep.adders,
+        depth: rep.depth,
+        lut: rep.lut,
+        dsp: rep.dsp,
+        ff: rep.ff,
+        latency_ns: rep.latency_ns,
+        latency_cycles: rep.latency_cycles,
+        fmax_mhz: rep.fmax_mhz,
+    }
+}
+
+/// Score one compile-axis entry: produce its design points (one per
+/// pipeline rung) and any skips. Pure function of the target and the
+/// strategy — the determinism contract of the pool.
+fn explore_one(
+    target: &ExploreTarget,
+    coord: &Coordinator,
+    strategy: Strategy,
+    space: &SpaceConfig,
+    model: &FpgaModel,
+) -> Result<(Vec<DesignPoint>, Vec<SkippedCandidate>)> {
+    let mut points = Vec::new();
+    let mut skipped = Vec::new();
+
+    // The latency baseline is costed by the analytic MAC model
+    // (baseline::mac) — one point; the pipeline ladder is an adder-graph
+    // notion and does not apply to the HLS MAC schedule.
+    if matches!(strategy, Strategy::Latency) {
+        let rep = match target {
+            ExploreTarget::Cmvm(p) => mac_report(p, model, &DspPolicy::default()),
+            ExploreTarget::Network(spec) => {
+                let reports = nn::compile::layer_reports(
+                    spec,
+                    Strategy::Latency,
+                    model,
+                    &PipelineConfig::default(),
+                )?;
+                nn::compile::aggregate(&reports)
+            }
+        };
+        points.push(point_from_report(strategy, None, &rep));
+        skipped.push(SkippedCandidate {
+            id: "latency/pipe*".into(),
+            reason: "the latency baseline is costed by the analytic MAC model; \
+                     the adder-graph pipeline ladder does not apply"
+                .into(),
+        });
+        return Ok((points, skipped));
+    }
+
+    // The O(N³) lookahead comparator is size-capped (CMVM) and never
+    // run on whole networks, exactly like the perf suite.
+    if matches!(strategy, Strategy::Lookahead { .. }) {
+        let skip_reason = match target {
+            ExploreTarget::Cmvm(p) if p.d_in.max(p.d_out) > space.lookahead_max_dim => {
+                Some(format!(
+                    "lookahead is O(N^3) in the digit count; capped at longest edge \
+                     {} for this space",
+                    space.lookahead_max_dim
+                ))
+            }
+            ExploreTarget::Network(_) => {
+                Some("lookahead is O(N^3) in the digit count; never run on full networks".into())
+            }
+            _ => None,
+        };
+        if let Some(reason) = skip_reason {
+            skipped.push(SkippedCandidate {
+                id: format!("{}/*", point_id(strategy, None).trim_end_matches("/comb")),
+                reason,
+            });
+            return Ok((points, skipped));
+        }
+    }
+
+    // Compile once per strategy; the pipeline rungs re-score the same
+    // program. CMVM targets go through the coordinator so recurring
+    // matrices (and repeated explorations in a serve session) hit the
+    // solution cache.
+    let program = match target {
+        ExploreTarget::Cmvm(p) => {
+            let job = CompileJob {
+                name: point_id(strategy, None),
+                problem: p.clone(),
+                strategy,
+            };
+            let (sol, _cached) = coord.compile_cached(&job)?;
+            sol.program.clone()
+        }
+        ExploreTarget::Network(spec) => nn::compile::fuse_with_stats(spec, strategy)?.0,
+    };
+
+    for &pipe in &space.pipes {
+        let rep = match pipe {
+            None => estimate::combinational(&program, model),
+            Some(n) => {
+                let stages = pipeline::assign_stages(&program, &PipelineConfig::every_n_adders(n));
+                debug_assert_eq!(
+                    estimate::pipelined(&program, &stages, model).latency_cycles,
+                    pipeline::latency(&program, &stages) + 1
+                );
+                estimate::pipelined(&program, &stages, model)
+            }
+        };
+        points.push(point_from_report(strategy, pipe, &rep));
+    }
+    Ok((points, skipped))
+}
+
+/// `a` Pareto-dominates `b` on (LUT, FF, latency): no worse on every
+/// axis and strictly better on at least one.
+pub fn dominates(a: &DesignPoint, b: &DesignPoint) -> bool {
+    let no_worse = a.lut <= b.lut && a.ff <= b.ff && a.latency_ns <= b.latency_ns;
+    let better = a.lut < b.lut || a.ff < b.ff || a.latency_ns < b.latency_ns;
+    no_worse && better
+}
+
+/// Split points into the non-dominated front and the dominated rest.
+/// Ties (identical triples) are all kept on the front — they do not
+/// dominate each other. The front is sorted by (LUT, latency, FF, id);
+/// dominated points keep their enumeration order.
+pub fn pareto_split(points: Vec<DesignPoint>) -> (Vec<DesignPoint>, Vec<DesignPoint>) {
+    let mut front = Vec::new();
+    let mut dominated = Vec::new();
+    for i in 0..points.len() {
+        let is_dominated =
+            points.iter().enumerate().any(|(j, q)| j != i && dominates(q, &points[i]));
+        if is_dominated {
+            dominated.push(points[i].clone());
+        } else {
+            front.push(points[i].clone());
+        }
+    }
+    front.sort_by(|a, b| {
+        a.lut
+            .cmp(&b.lut)
+            .then(a.latency_ns.total_cmp(&b.latency_ns))
+            .then(a.ff.cmp(&b.ff))
+            .then(a.id.cmp(&b.id))
+    });
+    (front, dominated)
+}
+
+/// Explore a target: enumerate the space, compile each strategy on the
+/// deterministic pool (shared `coord` cache), score every pipeline
+/// rung, and split into front / dominated. The report is bit-identical
+/// for every `cfg.jobs` value.
+pub fn explore(
+    target: &ExploreTarget,
+    coord: &Coordinator,
+    cfg: &ExploreConfig,
+) -> Result<ExploreReport> {
+    for pipe in &cfg.space.pipes {
+        if let Some(0) = pipe {
+            anyhow::bail!("explore: pipeline rung 0 is invalid (see PipelineConfig)");
+        }
+    }
+    let strategies = compile_axis(&cfg.space);
+    let results = pool::ordered_fan_out(strategies, cfg.jobs, |s| {
+        explore_one(target, coord, s, &cfg.space, &cfg.model)
+    });
+    let mut points = Vec::new();
+    let mut skipped = Vec::new();
+    for r in results {
+        let (p, s) = r?;
+        points.extend(p);
+        skipped.extend(s);
+    }
+    let (front, dominated) = pareto_split(points);
+    Ok(ExploreReport {
+        schema_version: SCHEMA_VERSION,
+        target: target.name(),
+        front,
+        dominated,
+        skipped,
+    })
+}
+
+/// Explore one CMVM with a fresh coordinator.
+pub fn explore_cmvm(problem: &CmvmProblem, cfg: &ExploreConfig) -> Result<ExploreReport> {
+    explore(&ExploreTarget::Cmvm(problem.clone()), &Coordinator::new(), cfg)
+}
+
+/// Explore one (fusible) network with a fresh coordinator.
+pub fn explore_network(spec: &NetworkSpec, cfg: &ExploreConfig) -> Result<ExploreReport> {
+    explore(&ExploreTarget::Network(spec.clone()), &Coordinator::new(), cfg)
+}
+
+/// Pick one front point for an objective (deterministic; ties broken
+/// by id). Returns `None` only on an empty front.
+pub fn pick(front: &[DesignPoint], objective: Objective) -> Option<&DesignPoint> {
+    if front.is_empty() {
+        return None;
+    }
+    match objective {
+        Objective::MinLut => front.iter().min_by(|a, b| {
+            a.lut
+                .cmp(&b.lut)
+                .then(a.latency_ns.total_cmp(&b.latency_ns))
+                .then(a.ff.cmp(&b.ff))
+                .then(a.id.cmp(&b.id))
+        }),
+        Objective::MinLatency => front.iter().min_by(|a, b| {
+            a.latency_ns
+                .total_cmp(&b.latency_ns)
+                .then(a.lut.cmp(&b.lut))
+                .then(a.ff.cmp(&b.ff))
+                .then(a.id.cmp(&b.id))
+        }),
+        Objective::Knee => {
+            let lut_min = front.iter().map(|p| p.lut).min().unwrap() as f64;
+            let lut_max = front.iter().map(|p| p.lut).max().unwrap() as f64;
+            let lat_min = front.iter().map(|p| p.latency_ns).fold(f64::INFINITY, f64::min);
+            let lat_max = front.iter().map(|p| p.latency_ns).fold(f64::NEG_INFINITY, f64::max);
+            let norm = |v: f64, lo: f64, hi: f64| if hi > lo { (v - lo) / (hi - lo) } else { 0.0 };
+            let dist = |p: &DesignPoint| {
+                let nl = norm(p.lut as f64, lut_min, lut_max);
+                let nt = norm(p.latency_ns, lat_min, lat_max);
+                nl * nl + nt * nt
+            };
+            front
+                .iter()
+                .min_by(|a, b| dist(a).total_cmp(&dist(b)).then(a.id.cmp(&b.id)))
+        }
+    }
+}
+
+/// Human-readable rendering of an explore report (the CLI prints
+/// exactly this next to the JSON artifact).
+pub fn render_table(r: &ExploreReport) -> String {
+    let mut table = Table::new(
+        &format!(
+            "explore '{}' — Pareto front ({} points, {} dominated, schema v{})",
+            r.target,
+            r.front.len(),
+            r.dominated.len(),
+            r.schema_version
+        ),
+        &["point", "LUT", "DSP", "FF", "adders", "depth", "latency[ns]", "cycles", "fmax[MHz]"],
+    );
+    for p in &r.front {
+        table.push(vec![
+            p.id.clone(),
+            p.lut.to_string(),
+            p.dsp.to_string(),
+            p.ff.to_string(),
+            p.adders.to_string(),
+            p.depth.to_string(),
+            format!("{:.2}", p.latency_ns),
+            p.latency_cycles.to_string(),
+            format!("{:.0}", p.fmax_mhz),
+        ]);
+    }
+    let mut out = table.render();
+    for sk in &r.skipped {
+        out.push_str(&format!("skipped: {} — {}\n", sk.id, sk.reason));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::property;
+
+    fn tiny_point(id: &str, lut: u64, ff: u64, lat: f64) -> DesignPoint {
+        DesignPoint {
+            id: id.into(),
+            strategy: Strategy::Da { dc: -1 },
+            pipe: None,
+            adders: 0,
+            depth: 0,
+            lut,
+            dsp: 0,
+            ff,
+            latency_ns: lat,
+            latency_cycles: 1,
+            fmax_mhz: 100.0,
+        }
+    }
+
+    #[test]
+    fn dominance_semantics() {
+        let a = tiny_point("a", 10, 10, 1.0);
+        let b = tiny_point("b", 10, 10, 2.0);
+        let c = tiny_point("c", 9, 11, 1.0);
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        // Incomparable: each better on one axis.
+        assert!(!dominates(&a, &c) && !dominates(&c, &a));
+        // Equal triples never dominate each other.
+        assert!(!dominates(&a, &a.clone()));
+    }
+
+    #[test]
+    fn pareto_split_keeps_ties_and_sorts_front() {
+        let pts = vec![
+            tiny_point("big", 20, 20, 5.0),
+            tiny_point("b", 10, 10, 1.0),
+            tiny_point("a", 10, 10, 1.0), // tie with b: both on the front
+            tiny_point("fast", 15, 10, 0.5),
+        ];
+        let (front, dominated) = pareto_split(pts);
+        assert_eq!(dominated.len(), 1);
+        assert_eq!(dominated[0].id, "big");
+        let ids: Vec<&str> = front.iter().map(|p| p.id.as_str()).collect();
+        // Sorted by (lut, latency, ff, id): the tie orders a before b.
+        assert_eq!(ids, vec!["a", "b", "fast"]);
+    }
+
+    #[test]
+    fn pick_objectives() {
+        let front = vec![
+            tiny_point("lean", 10, 8, 9.0),
+            tiny_point("mid", 14, 12, 5.0),
+            tiny_point("fast", 30, 40, 1.0),
+        ];
+        assert_eq!(pick(&front, Objective::MinLut).unwrap().id, "lean");
+        assert_eq!(pick(&front, Objective::MinLatency).unwrap().id, "fast");
+        // The knee balances both normalized axes: "mid" (0.2, 0.5) beats
+        // the corners (0, 1) and (1, 0).
+        assert_eq!(pick(&front, Objective::Knee).unwrap().id, "mid");
+        assert!(pick(&[], Objective::Knee).is_none());
+    }
+
+    #[test]
+    fn pick_single_point_front() {
+        let front = vec![tiny_point("only", 10, 8, 9.0)];
+        for obj in [Objective::MinLut, Objective::MinLatency, Objective::Knee] {
+            assert_eq!(pick(&front, obj).unwrap().id, "only");
+        }
+    }
+
+    #[test]
+    fn compile_axis_enumeration_order_is_stable() {
+        let axis = compile_axis(&SpaceConfig::smoke());
+        assert_eq!(axis.len(), 2 + 3 * 3);
+        assert_eq!(axis[0], Strategy::Latency);
+        assert_eq!(axis[1], Strategy::NaiveDa);
+        assert_eq!(axis[2], Strategy::CseOnly { dc: -1 });
+        assert_eq!(axis[3], Strategy::Da { dc: -1 });
+        assert_eq!(axis[4], Strategy::Lookahead { dc: -1 });
+    }
+
+    #[test]
+    fn point_ids_are_stable() {
+        assert_eq!(point_id(Strategy::Latency, None), "latency/mac");
+        assert_eq!(point_id(Strategy::NaiveDa, None), "naive-da/comb");
+        assert_eq!(point_id(Strategy::Da { dc: 2 }, Some(5)), "da/dc2/pipe5");
+        assert_eq!(point_id(Strategy::CseOnly { dc: -1 }, Some(1)), "cse-only/dc-1/pipe1");
+        assert_eq!(point_id(Strategy::Lookahead { dc: 0 }, None), "lookahead/dc0/comb");
+    }
+
+    /// Pareto invariants on real explorations of seeded random CMVMs:
+    /// no front point dominates another, and every dominated point is
+    /// dominated by at least one front point.
+    #[test]
+    fn prop_pareto_invariants_on_random_cmvms() {
+        property("explore_pareto_invariants", 4, |rng| {
+            let d_in = rng.below(3) + 2;
+            let d_out = rng.below(3) + 2;
+            let m: Vec<i64> = (0..d_in * d_out).map(|_| rng.range_i64(-127, 127)).collect();
+            let problem = CmvmProblem::new(d_in, d_out, m, 8);
+            let cfg = ExploreConfig { jobs: 2, ..ExploreConfig::smoke() };
+            let report = explore_cmvm(&problem, &cfg).unwrap();
+            assert!(!report.front.is_empty(), "front can never be empty");
+            for (i, a) in report.front.iter().enumerate() {
+                for (j, b) in report.front.iter().enumerate() {
+                    if i != j {
+                        assert!(!dominates(a, b), "front point {} dominates {}", a.id, b.id);
+                    }
+                }
+            }
+            for d in &report.dominated {
+                assert!(
+                    report.front.iter().any(|f| dominates(f, d)),
+                    "dominated point {} not dominated by any front point",
+                    d.id
+                );
+            }
+        });
+    }
+
+    /// The dc ladder produces a genuine area/latency trade-off: the
+    /// front of a non-trivial CMVM has at least two points.
+    #[test]
+    fn front_has_a_tradeoff_on_nontrivial_cmvm() {
+        let problem = CmvmProblem::random(11, 8, 8, 8);
+        let cfg = ExploreConfig { jobs: 1, ..ExploreConfig::smoke() };
+        let report = explore_cmvm(&problem, &cfg).unwrap();
+        assert!(
+            report.front.len() >= 2,
+            "expected a trade-off front, got {:?}",
+            report.front.iter().map(|p| &p.id).collect::<Vec<_>>()
+        );
+        // Everything that was scored landed somewhere.
+        assert!(!report.dominated.is_empty() || report.front.len() > 2);
+    }
+}

@@ -1,0 +1,75 @@
+//! The explorer's deterministic worker pool.
+//!
+//! Exploration fans candidate compiles out across threads, but the
+//! report must be **bit-identical** regardless of `--jobs`: the same
+//! points, in the same order, serializing to the same bytes. This
+//! module owns that contract as a thin front over
+//! [`crate::util::parallel_map`] (the std-only scoped pool whose
+//! results always merge in submission order):
+//!
+//! * `jobs == 0` resolves to the available hardware parallelism;
+//! * `jobs == 1` short-circuits to a plain sequential map (no threads,
+//!   no locks) — the reference order the parallel path must reproduce;
+//! * anything else delegates to the scoped pool, which writes each
+//!   result into the slot of the item that produced it, so the merged
+//!   output is the submission-order sequence no matter which thread
+//!   finished when.
+//!
+//! The determinism tests in `rust/tests/explore.rs` pin `--jobs 4`
+//! byte-identical to `--jobs 1` on the serialized report.
+
+/// Map `f` over `items` on `jobs` scoped threads, returning results in
+/// submission order. `jobs == 0` selects the available hardware
+/// parallelism. Item processing must be a pure function of the item
+/// (plus shared read-only state) for the determinism guarantee to mean
+/// anything — the pool only guarantees *ordering*.
+pub fn ordered_fan_out<T, U, F>(items: Vec<T>, jobs: usize, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let jobs = if jobs == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        jobs
+    };
+    let jobs = jobs.clamp(1, n);
+    if jobs == 1 {
+        // The reference order: strictly sequential, no synchronization.
+        return items.into_iter().map(f).collect();
+    }
+    crate::util::parallel_map(items, jobs, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_preserved_across_thread_counts() {
+        let items: Vec<u64> = (0..53).collect();
+        let want: Vec<u64> = items.iter().map(|x| x * 3 + 1).collect();
+        for jobs in [1usize, 2, 4, 8, 0] {
+            let got = ordered_fan_out(items.clone(), jobs, |x| x * 3 + 1);
+            assert_eq!(got, want, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item() {
+        let got: Vec<u32> = ordered_fan_out(Vec::<u32>::new(), 4, |x| x);
+        assert!(got.is_empty());
+        assert_eq!(ordered_fan_out(vec![7u32], 4, |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn more_jobs_than_items_is_fine() {
+        let got = ordered_fan_out(vec![1u64, 2, 3], 64, |x| x * x);
+        assert_eq!(got, vec![1, 4, 9]);
+    }
+}

@@ -1,0 +1,168 @@
+//! The explore-report JSON schema (version [`super::SCHEMA_VERSION`]),
+//! following the [`crate::perf::schema`] versioning pattern: a compact
+//! schema-versioned document the CLI writes (`da4ml explore --out`),
+//! CI uploads as an artifact, and the serve `"explore"` reply embeds.
+//!
+//! The document is a pure function of the exploration result — no
+//! timings, hostnames, or thread counts — so `--jobs N` output is
+//! byte-identical to `--jobs 1` (pinned by `rust/tests/explore.rs`).
+//! Field reference: `docs/explore.md`.
+
+use super::{DesignPoint, ExploreReport};
+use crate::json::{self, Value};
+use std::collections::BTreeMap;
+
+fn obj(entries: Vec<(&str, Value)>) -> Value {
+    Value::Object(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn int(v: u64) -> Value {
+    Value::Int(v as i64)
+}
+
+/// One design point as a JSON object (shared by the report document
+/// and the serve `"explore"` reply).
+pub fn point_value(p: &DesignPoint) -> Value {
+    obj(vec![
+        ("id", Value::Str(p.id.clone())),
+        ("strategy", Value::Str(p.strategy.name().to_string())),
+        (
+            "dc",
+            match p.dc() {
+                Some(dc) => Value::Int(dc as i64),
+                None => Value::Null,
+            },
+        ),
+        (
+            "pipe",
+            match p.pipe {
+                Some(n) => Value::Int(n as i64),
+                None => Value::Null,
+            },
+        ),
+        ("adders", int(p.adders)),
+        ("depth", int(p.depth as u64)),
+        ("lut", int(p.lut)),
+        ("dsp", int(p.dsp)),
+        ("ff", int(p.ff)),
+        ("latency_ns", Value::Float(p.latency_ns)),
+        ("latency_cycles", int(p.latency_cycles as u64)),
+        ("fmax_mhz", Value::Float(p.fmax_mhz)),
+    ])
+}
+
+/// The full report as a JSON value.
+pub fn to_value(r: &ExploreReport) -> Value {
+    obj(vec![
+        ("schema_version", int(r.schema_version as u64)),
+        ("target", Value::Str(r.target.clone())),
+        (
+            "front",
+            Value::Array(r.front.iter().map(point_value).collect()),
+        ),
+        (
+            "dominated",
+            Value::Array(r.dominated.iter().map(point_value).collect()),
+        ),
+        (
+            "skipped",
+            Value::Array(
+                r.skipped
+                    .iter()
+                    .map(|s| {
+                        obj(vec![
+                            ("id", Value::Str(s.id.clone())),
+                            ("reason", Value::Str(s.reason.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Serialize the report to its compact JSON text.
+pub fn render(r: &ExploreReport) -> String {
+    json::to_string(&to_value(r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ExploreReport, SkippedCandidate, SCHEMA_VERSION};
+    use super::*;
+    use crate::cmvm::Strategy;
+
+    fn tiny_report() -> ExploreReport {
+        let p = DesignPoint {
+            id: "da/dc2/pipe5".into(),
+            strategy: Strategy::Da { dc: 2 },
+            pipe: Some(5),
+            adders: 7,
+            depth: 3,
+            lut: 80,
+            dsp: 0,
+            ff: 64,
+            latency_ns: 3.5,
+            latency_cycles: 2,
+            fmax_mhz: 400.0,
+        };
+        let q = DesignPoint {
+            id: "latency/mac".into(),
+            strategy: Strategy::Latency,
+            pipe: None,
+            adders: 12,
+            depth: 4,
+            lut: 200,
+            dsp: 4,
+            ff: 32,
+            latency_ns: 6.0,
+            latency_cycles: 1,
+            fmax_mhz: 160.0,
+        };
+        ExploreReport {
+            schema_version: SCHEMA_VERSION,
+            target: "cmvm/4x4".into(),
+            front: vec![p],
+            dominated: vec![q],
+            skipped: vec![SkippedCandidate {
+                id: "lookahead/dc2/*".into(),
+                reason: "O(N^3)".into(),
+            }],
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_through_json() {
+        let r = tiny_report();
+        let text = render(&r);
+        let v = json::parse(&text).expect("report is valid JSON");
+        assert_eq!(v.get("schema_version").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(v.get("target").unwrap().as_str().unwrap(), "cmvm/4x4");
+        let front = v.get("front").unwrap().as_array().unwrap();
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].get("id").unwrap().as_str().unwrap(), "da/dc2/pipe5");
+        assert_eq!(front[0].get("dc").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(front[0].get("pipe").unwrap().as_i64().unwrap(), 5);
+        assert_eq!(front[0].get("lut").unwrap().as_i64().unwrap(), 80);
+        assert!((front[0].get("latency_ns").unwrap().as_f64().unwrap() - 3.5).abs() < 1e-12);
+        let dom = v.get("dominated").unwrap().as_array().unwrap();
+        assert_eq!(dom.len(), 1);
+        assert_eq!(dom[0].get("strategy").unwrap().as_str().unwrap(), "latency");
+        assert_eq!(dom[0].get("dc").unwrap(), &Value::Null);
+        assert_eq!(dom[0].get("pipe").unwrap(), &Value::Null);
+        assert_eq!(v.get("skipped").unwrap().as_array().unwrap().len(), 1);
+    }
+
+    /// Rendering is a pure function of the report value: two renders of
+    /// the same report are byte-identical.
+    #[test]
+    fn render_is_deterministic() {
+        let r = tiny_report();
+        assert_eq!(render(&r), render(&r));
+    }
+}

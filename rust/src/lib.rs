@@ -48,6 +48,14 @@
 //! collects the deterministic CSE work counters, writes the
 //! schema-versioned `BENCH_cmvm.json`, and diffs against a committed
 //! baseline so CI gates on perf regressions (`docs/perf.md`).
+//!
+//! The [`explore`] module is the design-space explorer (`da4ml
+//! explore`, the serve `"explore"` job): it sweeps strategy ×
+//! delay-constraint × pipeline candidates on a deterministic worker
+//! pool and reports the non-dominated (LUT, FF, latency) Pareto front
+//! — bit-identical output for any `--jobs` value — with
+//! [`explore::pick`] selecting a front point per objective
+//! (`docs/explore.md`).
 
 // The optimizer kernels are deliberately index-heavy (strided matrix
 // walks, triangle enumerations): sequential-index loops are clearer
@@ -63,6 +71,7 @@ pub mod csd;
 pub mod cse;
 pub mod dais;
 pub mod estimate;
+pub mod explore;
 pub mod fixed;
 pub mod graph;
 pub mod json;

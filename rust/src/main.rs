@@ -14,7 +14,11 @@
 //! * `serve`    — long-lived JSONL compile service: jobs in on stdin
 //!   (or `--input`), solution reports out on stdout, batched through
 //!   the coordinator's cache + worker pool (wire format:
-//!   `docs/serve.md`).
+//!   `docs/serve.md`);
+//! * `explore`  — design-space exploration: sweep strategy × dc ×
+//!   pipeline candidates for a network (or CMVM) and report the
+//!   non-dominated LUT/FF/latency Pareto front, bit-identical for any
+//!   `--jobs` value (`docs/explore.md`).
 
 use anyhow::{bail, Result};
 use da4ml::cmvm::{optimize, CmvmProblem, Strategy};
@@ -83,7 +87,7 @@ fn load_vectors(path: &str) -> Result<TestVectors> {
     TestVectors::from_json(&runtime::load_text(path)?)
 }
 
-const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|serve|perf> [args]
+const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|serve|perf|explore>
   compile [--d-in N] [--d-out N] [--bits B] [--dc D] [--seed S]
   net <spec.weights.json> [--strategy da|latency|naive-da] [--dc D] [--pipe N]
   rtl <spec.weights.json> <out.v|out.vhd> [--pipe N] [--dc D] [--tb testvec.json]
@@ -93,15 +97,24 @@ const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|se
   golden <spec.weights.json> <spec.hlo.txt> <spec.testvec.json>
   verify <spec.weights.json> [--dc D]      (well-formedness + bit-exactness)
   dot <spec.weights.json> <out.dot> [--dc D]  (Graphviz adder graph)
-  serve [--input jobs.jsonl] [--batch N] [--dc D] [--threads T]
+  serve [--input jobs.jsonl] [--batch N] [--dc D] [--threads T] [--cache-cap N]
         (JSONL compile service: jobs on stdin or --input, reports on
-         stdout, summary on stderr; wire format in docs/serve.md)
+         stdout, summary on stderr; --cache-cap bounds the solution
+         cache with LRU eviction; wire format in docs/serve.md)
   perf [--smoke] [--runs N] [--out BENCH_cmvm.json]
        [--baseline ci/bench_baseline.json] [--bless file] [--with-times]
        (fixed benchmark suite over optimize/lower/emit + the CSE engine
         A/B; writes the schema-versioned BENCH_cmvm.json, --baseline
         diffs against a committed baseline and exits nonzero on
-        regression, --bless writes a new baseline; docs/perf.md)";
+        regression, --bless writes a new baseline; docs/perf.md)
+  explore [<spec.weights.json>] [--smoke] [--jobs N] [--out EXPLORE_report.json]
+          [--objective min-lut|min-latency|knee]
+          [--cmvm [--d-in N] [--d-out N] [--bits B] [--seed S]]
+          (design-space exploration: sweeps strategy x dc x pipeline
+           candidates and reports the non-dominated LUT/FF/latency
+           Pareto front; target is the spec file, a seeded random CMVM
+           with --cmvm, or the synthetic jet network by default; output
+           is bit-identical for every --jobs value; docs/explore.md)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -136,7 +149,9 @@ fn main() -> Result<()> {
             let s = parse_strategy(&args.flag::<String>("strategy", "da".into()), dc);
             let pipe: u32 = args.flag("pipe", 5);
             let model = FpgaModel::default();
-            let cfg = PipelineConfig::every_n_adders(pipe.max(1));
+            // --pipe 0 used to be silently clamped to 1; it is a proper
+            // error now (rtl's --pipe 0 still means "combinational").
+            let cfg = PipelineConfig::try_every_n_adders(pipe)?;
             let reports = nn::compile::layer_reports(&spec, s, &model, &cfg)?;
             let mut table = da4ml::report::Table::new(
                 &format!("{} ({})", spec.name, s.name()),
@@ -389,11 +404,66 @@ fn main() -> Result<()> {
                 }
             }
         }
+        "explore" => {
+            let jobs: usize = args.flag("jobs", 0usize);
+            let space = if args.flags.contains_key("smoke") {
+                da4ml::explore::SpaceConfig::smoke()
+            } else {
+                da4ml::explore::SpaceConfig::full()
+            };
+            let cfg = da4ml::explore::ExploreConfig { space, jobs, model: FpgaModel::default() };
+            let target = if let Some(path) = args.positional.first() {
+                da4ml::explore::ExploreTarget::Network(load_spec(path)?)
+            } else if args.flags.contains_key("cmvm") {
+                let d_in: usize = args.flag("d-in", 8);
+                let d_out: usize = args.flag("d-out", 8);
+                let bits: u32 = args.flag("bits", 8);
+                let seed: u64 = args.flag("seed", 0);
+                da4ml::explore::ExploreTarget::Cmvm(CmvmProblem::random(seed, d_in, d_out, bits))
+            } else {
+                // The CI smoke target: the synthetic jet network.
+                da4ml::explore::ExploreTarget::Network(da4ml::bench_tables::synthetic_jet_spec())
+            };
+            let coord = da4ml::coordinator::Coordinator::new();
+            let report = da4ml::explore::explore(&target, &coord, &cfg)?;
+            println!("{}", da4ml::explore::render_table(&report));
+            let objective = da4ml::explore::Objective::parse(
+                &args.flag::<String>("objective", "knee".into()),
+            )?;
+            if let Some(p) = da4ml::explore::pick(&report.front, objective) {
+                println!(
+                    "picked ({}): {} — {} LUT, {} FF, {:.2} ns ({} cycles)",
+                    objective.name(),
+                    p.id,
+                    p.lut,
+                    p.ff,
+                    p.latency_ns,
+                    p.latency_cycles
+                );
+            }
+            let out = args.flag::<String>("out", "EXPLORE_report.json".into());
+            std::fs::write(&out, da4ml::explore::schema::render(&report))?;
+            println!(
+                "wrote {out}: schema v{}, {} front / {} dominated / {} skipped",
+                report.schema_version,
+                report.front.len(),
+                report.dominated.len(),
+                report.skipped.len()
+            );
+        }
         "serve" => {
+            let cache_cap = match args.flags.get("cache-cap") {
+                Some(v) => Some(
+                    v.parse::<usize>()
+                        .map_err(|e| anyhow::anyhow!("--cache-cap {v}: {e}"))?,
+                ),
+                None => None,
+            };
             let cfg = da4ml::serve::ServeConfig {
                 batch_size: args.flag("batch", 16usize),
                 threads: args.flag("threads", 0usize),
                 default_dc: args.flag("dc", -1i32),
+                cache_cap,
                 ..da4ml::serve::ServeConfig::default()
             };
             let stdout = std::io::stdout();
@@ -412,12 +482,13 @@ fn main() -> Result<()> {
             drop(out);
             eprintln!(
                 "serve: {} jobs ({} errors) in {} batches; {} submitted, {} cache hits, \
-                 {:.1} ms optimizer time, {} CSE steps / {} heap pops",
+                 {} evictions, {:.1} ms optimizer time, {} CSE steps / {} heap pops",
                 summary.jobs,
                 summary.errors,
                 summary.batches,
                 summary.stats.submitted,
                 summary.stats.cache_hits,
+                summary.stats.evictions,
                 summary.stats.total_opt_time.as_secs_f64() * 1e3,
                 summary.stats.total_cse_steps,
                 summary.stats.total_heap_pops

@@ -424,6 +424,35 @@ pub fn network_report(
     }
 }
 
+/// Explore the strategy × dc × pipeline design space for a fusible
+/// network, pick the Pareto-front point the objective prefers
+/// ([`crate::explore::pick`]), and compile that configuration: returns
+/// the chosen point, the fused program, and its stage assignment
+/// (`None` = combinational).
+///
+/// The MAC-modeled latency baseline can win an objective; its
+/// *functional* program is the naive-DA fuse (the resource numbers on
+/// the returned point still come from [`crate::baseline::mac`]).
+pub fn fuse_auto(
+    spec: &NetworkSpec,
+    objective: crate::explore::Objective,
+    cfg: &crate::explore::ExploreConfig,
+) -> Result<(crate::explore::DesignPoint, DaisProgram, Option<Vec<u32>>)> {
+    let report = crate::explore::explore_network(spec, cfg)?;
+    let point = crate::explore::pick(&report.front, objective)
+        .ok_or_else(|| anyhow!("explore: empty Pareto front for '{}'", spec.name))?
+        .clone();
+    let strategy = match point.strategy {
+        Strategy::Latency => Strategy::NaiveDa,
+        s => s,
+    };
+    let prog = fuse(spec, strategy)?;
+    let stages = point
+        .pipe
+        .map(|n| pipeline::assign_stages(&prog, &PipelineConfig::every_n_adders(n)));
+    Ok((point, prog, stages))
+}
+
 /// Aggregate layer reports into one network-level report.
 pub fn aggregate(reports: &[LayerReport]) -> ResourceReport {
     let mut total = ResourceReport::default();

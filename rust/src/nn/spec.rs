@@ -148,8 +148,11 @@ impl NetworkSpec {
     }
 
     /// Streaming decode of one network-spec object (field order
-    /// independent; unknown fields are skipped).
-    fn decode(d: &mut Decoder<'_>) -> Result<Self> {
+    /// independent; unknown fields are skipped). Consumes the object's
+    /// `{` itself, so it composes at any value position — the serve
+    /// wire uses this to decode inline `"spec"` objects on explore
+    /// jobs.
+    pub(crate) fn decode(d: &mut Decoder<'_>) -> Result<Self> {
         let mut name = None;
         let mut input_bits = None;
         let mut input_signed = None;

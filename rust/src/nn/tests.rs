@@ -1,7 +1,7 @@
 //! NN frontend tests: host simulation vs fused DAIS programs, layer
 //! shapes, accuracy metric.
 
-use super::compile::{fuse, layer_reports, aggregate};
+use super::compile::{aggregate, fuse, fuse_auto, layer_reports};
 use super::sim;
 use super::spec::{LayerSpec, NetworkSpec};
 use crate::cmvm::Strategy;
@@ -52,6 +52,27 @@ fn fused_dais_matches_host_sim_all_strategies() {
             let got = interp::evaluate_checked(&prog, x);
             assert_eq!(&got, w, "strategy {s:?}");
         }
+    }
+}
+
+/// `fuse_auto` explores the space and compiles the objective's pick:
+/// the program is functionally identical to the host simulation, and
+/// the stage assignment matches the picked pipeline rung.
+#[test]
+fn fuse_auto_compiles_the_picked_configuration() {
+    use crate::explore::{ExploreConfig, Objective};
+    let spec = mlp(5);
+    let cfg = ExploreConfig { jobs: 1, ..ExploreConfig::smoke() };
+    let (point, prog, stages) = fuse_auto(&spec, Objective::Knee, &cfg).unwrap();
+    assert_eq!(stages.is_some(), point.pipe.is_some());
+    if let Some(st) = &stages {
+        assert_eq!(st.len(), prog.nodes.len());
+    }
+    // Whatever configuration won, the compiled program is bit-exact.
+    let mut rng = Rng::seed_from(17);
+    for _ in 0..8 {
+        let x: Vec<i64> = (0..6).map(|_| rng.range_i64(-128, 127)).collect();
+        assert_eq!(interp::evaluate_checked(&prog, &x), sim::forward(&spec, &x));
     }
 }
 

@@ -25,8 +25,24 @@ pub struct PipelineConfig {
 
 impl PipelineConfig {
     /// The paper's 200 MHz setting: a register every 5 adders.
+    ///
+    /// `n` must be positive — "a register every 0 adders" is not a
+    /// schedule (it used to silently behave like `every_n_adders(1)`).
+    /// Panics on 0; untrusted inputs (CLI flags, wire fields) go
+    /// through [`PipelineConfig::try_every_n_adders`] instead.
     pub fn every_n_adders(n: u32) -> Self {
+        assert!(n > 0, "every_n_adders: n must be positive, got 0");
         Self { threshold: n as f64, adder_delay: 1.0, relu_delay: 0.5 }
+    }
+
+    /// Fallible [`PipelineConfig::every_n_adders`]: `n == 0` is a
+    /// proper error instead of a panic.
+    pub fn try_every_n_adders(n: u32) -> crate::Result<Self> {
+        anyhow::ensure!(
+            n > 0,
+            "pipeline: every_n_adders(0) is invalid (the stage threshold must be positive)"
+        );
+        Ok(Self::every_n_adders(n))
     }
 }
 
@@ -136,6 +152,48 @@ mod tests {
             for op in node.op.operands() {
                 assert!(stages[op as usize] <= stages[i]);
             }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "every_n_adders")]
+    fn zero_threshold_rejected() {
+        // Used to silently behave like every_n_adders(1); now a hard
+        // error (try_every_n_adders for the fallible path).
+        let _ = PipelineConfig::every_n_adders(0);
+    }
+
+    #[test]
+    fn try_every_n_adders_is_the_fallible_path() {
+        assert!(PipelineConfig::try_every_n_adders(0).is_err());
+        let cfg = PipelineConfig::try_every_n_adders(5).unwrap();
+        assert_eq!(cfg.threshold, PipelineConfig::every_n_adders(5).threshold);
+    }
+
+    /// Pinned: an empty program has an empty stage assignment and zero
+    /// latency — no panics, no phantom stages.
+    #[test]
+    fn empty_program_assigns_no_stages() {
+        let p = DaisBuilder::new().finish();
+        assert!(p.nodes.is_empty() && p.outputs.is_empty());
+        let stages = assign_stages(&p, &PipelineConfig::default());
+        assert!(stages.is_empty());
+        assert_eq!(latency(&p, &stages), 0);
+    }
+
+    /// Pinned: a program with inputs/outputs but no adders stays
+    /// entirely on stage 0 for every threshold.
+    #[test]
+    fn adderless_program_stays_on_stage_zero() {
+        let mut b = DaisBuilder::new();
+        let q = QInterval::new(-128, 127, 0);
+        let x = b.input(0, q, 0);
+        b.output(x, 0);
+        let p = b.finish();
+        for n in [1, 5] {
+            let stages = assign_stages(&p, &PipelineConfig::every_n_adders(n));
+            assert_eq!(stages, vec![0]);
+            assert_eq!(latency(&p, &stages), 0);
         }
     }
 

@@ -14,6 +14,16 @@
 //! lines and failed jobs produce `"type": "error"` replies; they never
 //! tear down the service.
 //!
+//! Besides compile jobs, a line may post a **design-space
+//! exploration** (`"type": "explore"` with a `matrix` or an inline
+//! network `spec`): the [`crate::explore`] subsystem sweeps the
+//! strategy × dc × pipeline space on the shared coordinator and the
+//! reply carries the Pareto `front`, the `dominated` points, and —
+//! when an `objective` was posted — the `picked` configuration. For
+//! long-lived deployments the solution cache can be bounded with
+//! [`ServeConfig::cache_cap`] (`serve --cache-cap`); evictions are
+//! visible on the stats line.
+//!
 //! ```
 //! use da4ml::serve::{serve, ServeConfig};
 //! use std::io::Cursor;
@@ -37,8 +47,10 @@
 use crate::cmvm::{CmvmProblem, Strategy};
 use crate::coordinator::{CompileJob, Coordinator, CoordinatorStats};
 use crate::estimate::{self, FpgaModel};
+use crate::explore::{self, ExploreConfig, ExploreTarget, Objective, SpaceConfig};
 use crate::json::decode::Decoder;
 use crate::json::{self, Value};
+use crate::nn::NetworkSpec;
 use crate::Result;
 use anyhow::{bail, ensure};
 use std::collections::BTreeMap;
@@ -55,11 +67,22 @@ pub struct ServeConfig {
     pub default_dc: i32,
     /// FPGA cost model used for the per-solution resource estimate.
     pub model: FpgaModel,
+    /// Solution-cache entry cap (`serve --cache-cap`): past it the
+    /// coordinator evicts least-recently-used solutions. `None` (the
+    /// default) keeps the cache unbounded, preserving the historical
+    /// behavior.
+    pub cache_cap: Option<usize>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { batch_size: 16, threads: 0, default_dc: -1, model: FpgaModel::default() }
+        Self {
+            batch_size: 16,
+            threads: 0,
+            default_dc: -1,
+            model: FpgaModel::default(),
+            cache_cap: None,
+        }
     }
 }
 
@@ -109,31 +132,143 @@ pub enum EmitLang {
     Vhdl,
 }
 
-impl JobRequest {
-    /// Streaming-decode one request line (no `Value` tree).
+/// One decoded request line: a compile job (the default) or a
+/// design-space exploration (`"type": "explore"`, see `docs/serve.md`).
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// A CMVM compile job.
+    Compile(JobRequest),
+    /// A design-space exploration job.
+    Explore(ExploreRequest),
+}
+
+/// One decoded explore request (`"type": "explore"`): sweep the
+/// strategy × dc × pipeline space for a posted matrix or network spec
+/// and reply with the Pareto front.
+#[derive(Debug, Clone)]
+pub struct ExploreRequest {
+    /// Reply correlation id; defaults to `job-<line#>` when omitted.
+    pub id: Option<String>,
+    /// CMVM target (exactly one of `matrix` / `spec` must be present).
+    pub matrix: Option<Vec<Vec<i64>>>,
+    /// Network target: a full inline network spec object.
+    pub spec: Option<NetworkSpec>,
+    /// Input bitwidth for `matrix` targets, `1..=63` (default 8). An
+    /// error on `spec` targets — the spec carries its own `input_bits`,
+    /// so a posted value would be silently meaningless.
+    pub bits: Option<i64>,
+    /// Candidate space: `"smoke"` (default) or `"full"`.
+    pub space: Option<String>,
+    /// Optional objective (`min-lut` | `min-latency` | `knee`); the
+    /// reply then carries the `picked` front point.
+    pub objective: Option<String>,
+}
+
+impl ExploreRequest {
+    /// Validate the request into its exploration inputs. Runs at
+    /// line-lowering time (like [`JobRequest::to_compile_job`]) so a
+    /// malformed explore job becomes an immediate error reply with the
+    /// same accounting as a malformed compile job — never a deferred
+    /// failure that inflates the job count.
+    pub fn validate(&self) -> Result<(ExploreTarget, SpaceConfig, Option<Objective>)> {
+        let target = match (&self.matrix, &self.spec) {
+            (Some(matrix), None) => {
+                ExploreTarget::Cmvm(matrix_to_problem(matrix, self.bits.unwrap_or(8))?)
+            }
+            (None, Some(spec)) => {
+                ensure!(
+                    self.bits.is_none(),
+                    "field 'bits' does not apply to spec targets (the spec carries its \
+                     own input_bits)"
+                );
+                ExploreTarget::Network(spec.clone())
+            }
+            _ => bail!("explore job must carry exactly one of 'matrix' or 'spec'"),
+        };
+        let space = match self.space.as_deref() {
+            None | Some("smoke") => SpaceConfig::smoke(),
+            Some("full") => SpaceConfig::full(),
+            Some(other) => bail!("unknown explore space '{other}' (expected smoke|full)"),
+        };
+        let objective = match self.objective.as_deref() {
+            None => None,
+            Some(name) => Some(Objective::parse(name)?),
+        };
+        Ok((target, space, objective))
+    }
+}
+
+impl Request {
+    /// Streaming-decode one request line (no `Value` tree). The
+    /// `"type"` discriminator may appear anywhere on the line; fields
+    /// belonging to the *other* request type are rejected (strict wire:
+    /// a silently ignored field would hide caller bugs).
     pub fn from_json(line: &str) -> Result<Self> {
         let mut d = Decoder::new(line);
+        let mut ty: Option<String> = None;
         let mut id = None;
         let mut matrix = None;
-        let mut bits = 8i64;
+        let mut bits: Option<i64> = None;
         let mut strategy = None;
         let mut dc = None;
         let mut emit = None;
+        let mut spec: Option<NetworkSpec> = None;
+        let mut space = None;
+        let mut objective = None;
         d.object_start()?;
         while let Some(key) = d.next_key()? {
             match key.as_ref() {
+                "type" => ty = Some(d.string()?),
                 "id" => id = Some(d.string()?),
                 "matrix" => matrix = Some(d.i64_mat()?),
-                "bits" => bits = d.i64()?,
+                "bits" => bits = Some(d.i64()?),
                 "strategy" => strategy = Some(d.string()?),
                 "dc" => dc = Some(d.i64()?),
                 "emit" => emit = Some(d.string()?),
+                "spec" => spec = Some(NetworkSpec::decode(&mut d)?),
+                "space" => space = Some(d.string()?),
+                "objective" => objective = Some(d.string()?),
                 _ => d.skip_value()?,
             }
         }
         d.end()?;
-        let matrix = matrix.ok_or_else(|| anyhow::anyhow!("missing field 'matrix'"))?;
-        Ok(Self { id, matrix, bits, strategy, dc, emit })
+        match ty.as_deref() {
+            None | Some("compile") => {
+                for (field, present) in [
+                    ("spec", spec.is_some()),
+                    ("space", space.is_some()),
+                    ("objective", objective.is_some()),
+                ] {
+                    ensure!(!present, "field '{field}' requires \"type\": \"explore\"");
+                }
+                let matrix = matrix.ok_or_else(|| anyhow::anyhow!("missing field 'matrix'"))?;
+                let bits = bits.unwrap_or(8);
+                Ok(Request::Compile(JobRequest { id, matrix, bits, strategy, dc, emit }))
+            }
+            Some("explore") => {
+                for (field, present) in [
+                    ("strategy", strategy.is_some()),
+                    ("dc", dc.is_some()),
+                    ("emit", emit.is_some()),
+                ] {
+                    ensure!(!present, "field '{field}' does not apply to explore jobs");
+                }
+                Ok(Request::Explore(ExploreRequest { id, matrix, spec, bits, space, objective }))
+            }
+            Some(other) => bail!("unknown job type '{other}' (expected compile|explore)"),
+        }
+    }
+}
+
+impl JobRequest {
+    /// Streaming-decode one compile request line (no `Value` tree).
+    /// Explore lines are an error here — use [`Request::from_json`] for
+    /// the full wire.
+    pub fn from_json(line: &str) -> Result<Self> {
+        match Request::from_json(line)? {
+            Request::Compile(req) => Ok(req),
+            Request::Explore(_) => bail!("explore job where a compile job was expected"),
+        }
     }
 
     /// Parse the optional `"emit"` field (strict, like the strategy
@@ -150,22 +285,7 @@ impl JobRequest {
     /// Validate and lower into a [`CompileJob`] (checked here — not in
     /// `CmvmProblem::new`, whose assertions would panic the service).
     pub fn to_compile_job(&self, name: String, default_dc: i32) -> Result<CompileJob> {
-        let d_in = self.matrix.len();
-        ensure!(d_in > 0, "matrix must have at least one row");
-        let d_out = self.matrix[0].len();
-        ensure!(d_out > 0, "matrix rows must be non-empty");
-        for (j, row) in self.matrix.iter().enumerate() {
-            ensure!(
-                row.len() == d_out,
-                "matrix is ragged: row {j} has {} entries, row 0 has {d_out}",
-                row.len()
-            );
-        }
-        ensure!(
-            (1..=63).contains(&self.bits),
-            "bits must be in [1, 63], got {}",
-            self.bits
-        );
+        let problem = matrix_to_problem(&self.matrix, self.bits)?;
         let dc = self.dc.unwrap_or(default_dc as i64);
         ensure!(
             i32::try_from(dc).is_ok(),
@@ -173,13 +293,28 @@ impl JobRequest {
         );
         let dc = dc as i32;
         let strategy = parse_strategy(self.strategy.as_deref().unwrap_or("da"), dc)?;
-        let flat: Vec<i64> = self.matrix.iter().flatten().copied().collect();
-        Ok(CompileJob {
-            name,
-            problem: CmvmProblem::new(d_in, d_out, flat, self.bits as u32),
-            strategy,
-        })
+        Ok(CompileJob { name, problem, strategy })
     }
+}
+
+/// Validate a wire matrix (shape + bits) into a [`CmvmProblem`] —
+/// shared by compile and explore jobs so both wire paths accept
+/// exactly the same matrices.
+fn matrix_to_problem(matrix: &[Vec<i64>], bits: i64) -> Result<CmvmProblem> {
+    let d_in = matrix.len();
+    ensure!(d_in > 0, "matrix must have at least one row");
+    let d_out = matrix[0].len();
+    ensure!(d_out > 0, "matrix rows must be non-empty");
+    for (j, row) in matrix.iter().enumerate() {
+        ensure!(
+            row.len() == d_out,
+            "matrix is ragged: row {j} has {} entries, row 0 has {d_out}",
+            row.len()
+        );
+    }
+    ensure!((1..=63).contains(&bits), "bits must be in [1, 63], got {bits}");
+    let flat: Vec<i64> = matrix.iter().flatten().copied().collect();
+    Ok(CmvmProblem::new(d_in, d_out, flat, bits as u32))
 }
 
 /// Strict strategy-name parser (the CLI's lenient fallback is wrong for
@@ -198,9 +333,11 @@ pub fn parse_strategy(name: &str, dc: i32) -> Result<Strategy> {
     })
 }
 
-/// One batch entry: a lowered job or an immediate error reply.
+/// One batch entry: a lowered compile job, a validated explore job, or
+/// an immediate error reply.
 enum Pending {
     Job { id: String, job: CompileJob, emit: Option<EmitLang> },
+    Explore { id: String, target: ExploreTarget, space: SpaceConfig, objective: Option<Objective> },
     Bad { id: Option<String>, error: String },
 }
 
@@ -213,6 +350,7 @@ pub fn serve<R: BufRead, W: Write>(
     cfg: &ServeConfig,
 ) -> Result<ServeSummary> {
     let coord = Coordinator::new();
+    coord.set_cache_cap(cfg.cache_cap);
     let mut summary = ServeSummary::default();
     let mut batch: Vec<Pending> = Vec::new();
     let batch_size = cfg.batch_size.max(1);
@@ -223,14 +361,23 @@ pub fn serve<R: BufRead, W: Write>(
         line_no += 1;
         let entry = match line {
             Ok(line) if line.trim().is_empty() => continue,
-            Ok(line) => match JobRequest::from_json(&line) {
-                Ok(req) => {
+            Ok(line) => match Request::from_json(&line) {
+                Ok(Request::Compile(req)) => {
                     let id = req.id.clone().unwrap_or_else(|| format!("job-{line_no}"));
                     let lowered = req
                         .to_compile_job(id.clone(), cfg.default_dc)
                         .and_then(|job| Ok((job, req.emit_lang()?)));
                     match lowered {
                         Ok((job, emit)) => Pending::Job { id, job, emit },
+                        Err(e) => Pending::Bad { id: Some(id), error: format!("{e:#}") },
+                    }
+                }
+                Ok(Request::Explore(req)) => {
+                    let id = req.id.clone().unwrap_or_else(|| format!("job-{line_no}"));
+                    match req.validate() {
+                        Ok((target, space, objective)) => {
+                            Pending::Explore { id, target, space, objective }
+                        }
                         Err(e) => Pending::Bad { id: Some(id), error: format!("{e:#}") },
                     }
                 }
@@ -260,9 +407,12 @@ pub fn serve<R: BufRead, W: Write>(
 }
 
 /// One reply slot after the jobs have been moved out for compilation:
-/// correlation metadata only (the job itself is not cloned).
+/// correlation metadata only (the job itself is not cloned). Explore
+/// jobs (already validated) are executed at reply time against the
+/// shared coordinator.
 enum Slot {
     Job { id: String, idx: usize, emit: Option<EmitLang> },
+    Explore { id: String, target: ExploreTarget, space: SpaceConfig, objective: Option<Objective> },
     Bad { id: Option<String>, error: String },
 }
 
@@ -311,6 +461,60 @@ fn result_reply(
     Ok(Value::Object(o))
 }
 
+/// Run one validated explore job against the shared coordinator (so
+/// CMVM candidates hit the same solution cache as compile jobs) and
+/// build its `"type": "explore"` reply. A compile failure bubbles up
+/// into an error reply.
+fn explore_reply(
+    coord: &Coordinator,
+    id: &str,
+    target: &ExploreTarget,
+    space: SpaceConfig,
+    objective: Option<Objective>,
+    cfg: &ServeConfig,
+) -> Result<Value> {
+    let ecfg = ExploreConfig { space, jobs: cfg.threads, model: cfg.model };
+    let report = explore::explore(target, coord, &ecfg)?;
+    let mut o = BTreeMap::new();
+    o.insert("type".into(), Value::Str("explore".into()));
+    o.insert("id".into(), Value::Str(id.into()));
+    o.insert("target".into(), Value::Str(report.target.clone()));
+    o.insert(
+        "schema_version".into(),
+        Value::Int(report.schema_version as i64),
+    );
+    o.insert(
+        "front".into(),
+        Value::Array(report.front.iter().map(explore::schema::point_value).collect()),
+    );
+    o.insert(
+        "dominated".into(),
+        Value::Array(report.dominated.iter().map(explore::schema::point_value).collect()),
+    );
+    o.insert(
+        "skipped".into(),
+        Value::Array(
+            report
+                .skipped
+                .iter()
+                .map(|s| {
+                    let mut sk = BTreeMap::new();
+                    sk.insert("id".into(), Value::Str(s.id.clone()));
+                    sk.insert("reason".into(), Value::Str(s.reason.clone()));
+                    Value::Object(sk)
+                })
+                .collect(),
+        ),
+    );
+    if let Some(obj) = objective {
+        if let Some(picked) = explore::pick(&report.front, obj) {
+            o.insert("objective".into(), Value::Str(obj.name().into()));
+            o.insert("picked".into(), explore::schema::point_value(picked));
+        }
+    }
+    Ok(Value::Object(o))
+}
+
 /// Compile the batched jobs through the coordinator and stream one
 /// reply line per entry (input order), then the batch stats line.
 /// No-op on an empty batch.
@@ -335,6 +539,9 @@ fn flush_batch<W: Write>(
                 slots.push(Slot::Job { id, idx: jobs.len(), emit });
                 jobs.push(job);
             }
+            Pending::Explore { id, target, space, objective } => {
+                slots.push(Slot::Explore { id, target, space, objective })
+            }
             Pending::Bad { id, error } => slots.push(Slot::Bad { id, error }),
         }
     }
@@ -345,6 +552,16 @@ fn flush_batch<W: Write>(
             Slot::Bad { id, error } => {
                 summary.errors += 1;
                 error_reply(id.as_deref(), &error)
+            }
+            Slot::Explore { id, target, space, objective } => {
+                summary.jobs += 1;
+                match explore_reply(coord, &id, &target, space, objective, cfg) {
+                    Ok(reply) => reply,
+                    Err(e) => {
+                        summary.errors += 1;
+                        error_reply(Some(id.as_str()), &format!("{e:#}"))
+                    }
+                }
             }
             Slot::Job { id, idx, emit } => {
                 summary.jobs += 1;
@@ -376,6 +593,7 @@ fn flush_batch<W: Write>(
     o.insert("submitted".into(), Value::Int(stats.submitted as i64));
     o.insert("cache_hits".into(), Value::Int(stats.cache_hits as i64));
     o.insert("cache_size".into(), Value::Int(coord.cache_len() as i64));
+    o.insert("cache_evictions".into(), Value::Int(stats.evictions as i64));
     o.insert("total_opt_ms".into(), Value::Float(stats.total_opt_time.as_secs_f64() * 1e3));
     // Optimizer work proxies (cumulative, executed jobs only — cache
     // hits add nothing): lets clients watch perf per batch the same way
@@ -572,6 +790,118 @@ not even json
             .as_str()
             .unwrap()
             .contains("unknown emit language"));
+    }
+
+    /// The explore job type: a matrix target replies with a Pareto
+    /// front (plus the picked point when an objective is posted), and
+    /// malformed explore jobs fail at lowering time — immediate error
+    /// replies carrying the job id, never counted as jobs.
+    #[test]
+    fn explore_job_replies_with_front() {
+        let input = r#"
+{"type": "explore", "id": "x1", "matrix": [[3, 5], [-7, 9]], "objective": "min-lut"}
+{"type": "explore", "id": "both"}
+{"type": "explore", "id": "bad-space", "matrix": [[1]], "space": "galaxy"}
+{"type": "explore", "id": "bad-obj", "matrix": [[1]], "objective": "fastest"}
+"#;
+        let (summary, lines) = run(input, &ServeConfig::default());
+        // Validation failures never reach the explorer: same accounting
+        // as malformed compile jobs (errors, not jobs).
+        assert_eq!(summary.jobs, 1);
+        assert_eq!(summary.errors, 3);
+        assert_eq!(summary.replies, 4);
+        let reply = &lines[0];
+        assert_eq!(reply.get("type").unwrap().as_str().unwrap(), "explore");
+        assert_eq!(reply.get("id").unwrap().as_str().unwrap(), "x1");
+        assert_eq!(reply.get("target").unwrap().as_str().unwrap(), "cmvm/2x2");
+        let front = reply.get("front").unwrap().as_array().unwrap();
+        assert!(!front.is_empty());
+        let picked = reply.get("picked").unwrap();
+        let min_lut = front
+            .iter()
+            .map(|p| p.get("lut").unwrap().as_i64().unwrap())
+            .min()
+            .unwrap();
+        assert_eq!(picked.get("lut").unwrap().as_i64().unwrap(), min_lut);
+        assert_eq!(reply.get("objective").unwrap().as_str().unwrap(), "min-lut");
+        // Lowering-time failures still correlate with the posted id.
+        assert_eq!(lines[1].get("id").unwrap().as_str().unwrap(), "both");
+        assert!(lines[1]
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("exactly one of 'matrix' or 'spec'"));
+        assert!(lines[2].get("error").unwrap().as_str().unwrap().contains("galaxy"));
+        assert!(lines[3].get("error").unwrap().as_str().unwrap().contains("fastest"));
+    }
+
+    /// An inline network spec explores through the same wire; compile
+    /// fields on an explore line (and vice versa) are strict errors,
+    /// as is `bits` on a spec target (the spec carries its own).
+    #[test]
+    fn explore_spec_target_and_field_strictness() {
+        let spec = crate::bench_tables::synthetic_jet_spec_scaled(1, 8).to_json();
+        let input = format!(
+            "{{\"type\": \"explore\", \"id\": \"net\", \"spec\": {spec}}}\n\
+             {{\"type\": \"explore\", \"id\": \"s1\", \"matrix\": [[1]], \"strategy\": \"da\"}}\n\
+             {{\"id\": \"c1\", \"matrix\": [[1]], \"space\": \"smoke\"}}\n\
+             {{\"type\": \"explore\", \"id\": \"sb\", \"spec\": {spec}, \"bits\": 4}}\n"
+        );
+        let (summary, lines) = run(&input, &ServeConfig::default());
+        // The strict-field violations fail at decode/lowering time (no
+        // job was formed), so only the spec exploration counts as a job.
+        assert_eq!(summary.jobs, 1);
+        assert_eq!(summary.errors, 3);
+        assert_eq!(summary.replies, 4);
+        let reply = &lines[0];
+        assert_eq!(reply.get("type").unwrap().as_str().unwrap(), "explore");
+        assert!(!reply.get("front").unwrap().as_array().unwrap().is_empty());
+        assert!(lines[1]
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("does not apply to explore jobs"));
+        assert!(lines[2]
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("requires \"type\": \"explore\""));
+        assert_eq!(lines[3].get("id").unwrap().as_str().unwrap(), "sb");
+        assert!(lines[3]
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("does not apply to spec targets"));
+    }
+
+    /// `--cache-cap` bounds the coordinator cache; the stats line
+    /// reports evictions and the service keeps answering correctly.
+    #[test]
+    fn cache_cap_bounds_the_serve_cache() {
+        let mut input = String::new();
+        for i in 0..4 {
+            input.push_str(&format!(
+                "{{\"id\": \"j{i}\", \"matrix\": [[{}, 3], [5, {}]], \"dc\": -1}}\n",
+                i + 1,
+                i + 2
+            ));
+        }
+        let cfg = ServeConfig {
+            batch_size: 1,
+            cache_cap: Some(2),
+            ..ServeConfig::default()
+        };
+        let (summary, lines) = run(&input, &cfg);
+        assert_eq!(summary.jobs, 4);
+        assert_eq!(summary.errors, 0);
+        assert_eq!(summary.stats.evictions, 2);
+        let last_stats = lines.last().unwrap();
+        assert_eq!(last_stats.get("cache_size").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(last_stats.get("cache_evictions").unwrap().as_i64().unwrap(), 2);
     }
 
     #[test]

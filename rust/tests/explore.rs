@@ -1,0 +1,115 @@
+//! Explorer acceptance tests: `--jobs N` determinism (byte-identical
+//! serialized reports), Pareto-dominance invariants, the jet-tagging
+//! front, and coordinator cache reuse across explorations.
+
+use da4ml::bench_tables::synthetic_jet_spec_scaled;
+use da4ml::cmvm::CmvmProblem;
+use da4ml::coordinator::Coordinator;
+use da4ml::explore::{self, dominates, ExploreConfig, ExploreTarget, Objective};
+use da4ml::util::property;
+
+fn smoke(jobs: usize) -> ExploreConfig {
+    ExploreConfig { jobs, ..ExploreConfig::smoke() }
+}
+
+/// The acceptance pin: exploring with 4 worker threads produces a
+/// serialized JSON report byte-identical to the single-threaded run,
+/// across a seeded suite of CMVM shapes and a scaled jet network.
+#[test]
+fn jobs4_report_byte_identical_to_jobs1_on_seeded_suite() {
+    let targets: Vec<ExploreTarget> = vec![
+        ExploreTarget::Cmvm(CmvmProblem::random(700, 4, 6, 8)),
+        ExploreTarget::Cmvm(CmvmProblem::random(701, 6, 4, 8)),
+        ExploreTarget::Cmvm(CmvmProblem::random(702, 5, 5, 4)),
+        ExploreTarget::Network(synthetic_jet_spec_scaled(1, 8)),
+    ];
+    for target in &targets {
+        let r1 = explore::explore(target, &Coordinator::new(), &smoke(1)).unwrap();
+        let r4 = explore::explore(target, &Coordinator::new(), &smoke(4)).unwrap();
+        let (t1, t4) = (explore::schema::render(&r1), explore::schema::render(&r4));
+        assert_eq!(t1, t4, "jobs=4 diverged from jobs=1 on {}", r1.target);
+        assert!(!r1.front.is_empty());
+    }
+}
+
+/// Seeded property: `--jobs 1` and `--jobs 4` agree on random problems
+/// too, not just the fixed suite.
+#[test]
+fn prop_report_bytes_independent_of_jobs() {
+    property("explore_jobs_independent", 4, |rng| {
+        let d_in = rng.below(4) + 2;
+        let d_out = rng.below(4) + 2;
+        let m: Vec<i64> = (0..d_in * d_out).map(|_| rng.range_i64(-127, 127)).collect();
+        let target = ExploreTarget::Cmvm(CmvmProblem::new(d_in, d_out, m, 8));
+        let r1 = explore::explore(&target, &Coordinator::new(), &smoke(1)).unwrap();
+        let r4 = explore::explore(&target, &Coordinator::new(), &smoke(4)).unwrap();
+        assert_eq!(explore::schema::render(&r1), explore::schema::render(&r4));
+    });
+}
+
+/// The jet-tagging network's front is a genuine trade-off curve: at
+/// least two non-dominated points, no front point dominating another,
+/// and every dominated point dominated by some front point.
+#[test]
+fn jet_front_tradeoff_and_dominance_invariants() {
+    let spec = synthetic_jet_spec_scaled(1, 4);
+    let report = explore::explore_network(&spec, &smoke(0)).unwrap();
+    assert!(
+        report.front.len() >= 2,
+        "expected >= 2 non-dominated points, got {:?}",
+        report.front.iter().map(|p| &p.id).collect::<Vec<_>>()
+    );
+    for (i, a) in report.front.iter().enumerate() {
+        for (j, b) in report.front.iter().enumerate() {
+            if i != j {
+                assert!(!dominates(a, b), "front point {} dominates {}", a.id, b.id);
+            }
+        }
+    }
+    for d in &report.dominated {
+        assert!(
+            report.front.iter().any(|f| dominates(f, d)),
+            "dominated point {} is not dominated by any front point",
+            d.id
+        );
+    }
+    // Every objective picks a member of the front.
+    for obj in [Objective::MinLut, Objective::MinLatency, Objective::Knee] {
+        let p = explore::pick(&report.front, obj).expect("non-empty front");
+        assert!(report.front.iter().any(|f| f.id == p.id));
+    }
+    // The report serializes and parses back as valid JSON with the
+    // documented top-level fields.
+    let text = explore::schema::render(&report);
+    let v = da4ml::json::parse(&text).expect("valid JSON");
+    assert_eq!(v.get("schema_version").unwrap().as_i64().unwrap(), 1);
+    assert_eq!(
+        v.get("front").unwrap().as_array().unwrap().len(),
+        report.front.len()
+    );
+    assert_eq!(
+        v.get("dominated").unwrap().as_array().unwrap().len(),
+        report.dominated.len()
+    );
+}
+
+/// Explorations share the coordinator's solution cache: re-exploring
+/// the same CMVM compiles nothing and reproduces the same report.
+#[test]
+fn re_exploration_hits_the_shared_cache() {
+    let target = ExploreTarget::Cmvm(CmvmProblem::random(703, 5, 5, 8));
+    let coord = Coordinator::new();
+    let first = explore::explore(&target, &coord, &smoke(2)).unwrap();
+    let s1 = coord.stats();
+    assert!(s1.submitted > 0);
+    assert_eq!(s1.cache_hits, 0);
+    let second = explore::explore(&target, &coord, &smoke(2)).unwrap();
+    let s2 = coord.stats();
+    assert_eq!(s2.submitted, 2 * s1.submitted);
+    assert_eq!(s2.cache_hits, s1.submitted, "every re-compile must be a cache hit");
+    assert_eq!(
+        explore::schema::render(&first),
+        explore::schema::render(&second),
+        "cached exploration must reproduce the identical report"
+    );
+}
