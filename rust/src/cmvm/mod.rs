@@ -19,8 +19,10 @@ use crate::Result;
 use anyhow::bail;
 
 /// Which CMVM implementation strategy to use (mirrors the hls4ml
-/// `strategy` knob: `latency` vs `distributed_arithmetic`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// `strategy` knob: `latency` vs `distributed_arithmetic`). The derived
+/// order (variant order, then `dc`) is part of the canonical cache-file
+/// entry ordering ([`crate::coordinator::persist`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Strategy {
     /// hls4ml's latency-optimized MAC loop (baseline; DSP/LUT multipliers,
     /// modeled analytically by [`crate::baseline::mac`]).

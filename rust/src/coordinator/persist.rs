@@ -1,0 +1,638 @@
+//! Schema-versioned persistence for the coordinator's solution cache.
+//!
+//! A cache file is a single JSON document (schema v1, following the
+//! `perf::schema` / `explore::schema` discipline):
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "kind": "da4ml-solution-cache",
+//!   "entries": [ { "key": { ... }, "solution": { ... } }, ... ]
+//! }
+//! ```
+//!
+//! Each entry carries the **full job identity** (dims, matrix, input
+//! intervals/depths, strategy) and the complete optimized solution: the
+//! DAIS program node-by-node, the adder/depth metadata, the exact
+//! optimizer wall-clock in integer nanoseconds (so a warm-started
+//! `serve` reply reproduces `opt_ms` byte-identically), and the CSE
+//! work counters.
+//!
+//! Determinism: entries are written in the canonical [`Ord`] order of
+//! the job key and every object is serialized with sorted keys, so
+//! save → load → save is byte-identical and two caches with the same
+//! entries serialize identically regardless of insertion order, shard
+//! count, or recency state (recency is runtime state and is *not*
+//! persisted — loaded entries start in file order).
+//!
+//! Loading is paranoid by design — the cache is the service's most
+//! valuable state and a cache file is an integrity boundary: every
+//! program is re-checked for structural well-formedness *and* exact
+//! CMVM equivalence against its key's matrix, and the stored
+//! adder/depth metadata is cross-checked against the program. A
+//! tampered or corrupt file is rejected with an actionable error and
+//! loads nothing; it can never serve a wrong solution.
+
+use super::{Coordinator, JobKey};
+use crate::cmvm::{CmvmSolution, Strategy};
+use crate::cse::CseStats;
+use crate::dais::{verify, DaisNode, DaisOp, DaisProgram, NodeId, OutputSpec, RoundMode};
+use crate::fixed::QInterval;
+use crate::json::{self, Value};
+use crate::Result;
+use anyhow::{anyhow, bail, ensure};
+use std::collections::BTreeMap;
+use std::hash::BuildHasher;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Cache-file schema version this binary writes and reads.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// The `kind` discriminator of a solution-cache file.
+pub const KIND: &str = "da4ml-solution-cache";
+
+fn s(v: &str) -> Value {
+    Value::Str(v.to_string())
+}
+
+fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::Object(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn qint_value(q: QInterval) -> Value {
+    Value::Array(vec![Value::Int(q.min), Value::Int(q.max), Value::Int(q.exp as i64)])
+}
+
+fn parse_qint(v: &Value) -> Result<QInterval> {
+    let a = v.as_array()?;
+    ensure!(a.len() == 3, "qint must be a [min, max, exp] triple, got {} elements", a.len());
+    let (min, max) = (a[0].as_i64()?, a[1].as_i64()?);
+    ensure!(min <= max, "qint min {min} > max {max}");
+    let exp = parse_i32(&a[2], "qint exp")?;
+    Ok(QInterval { min, max, exp })
+}
+
+fn parse_i32(v: &Value, what: &str) -> Result<i32> {
+    let raw = v.as_i64()?;
+    i32::try_from(raw).map_err(|_| anyhow!("{what} {raw} out of i32 range"))
+}
+
+fn parse_u32(v: &Value, what: &str) -> Result<u32> {
+    let raw = v.as_i64()?;
+    u32::try_from(raw).map_err(|_| anyhow!("{what} {raw} out of u32 range"))
+}
+
+fn parse_usize(v: &Value, what: &str) -> Result<usize> {
+    let raw = v.as_i64()?;
+    usize::try_from(raw).map_err(|_| anyhow!("{what} {raw} is negative"))
+}
+
+fn strategy_value(strategy: Strategy) -> Value {
+    let mut fields = vec![("name", s(strategy.name()))];
+    match strategy {
+        Strategy::Da { dc } | Strategy::CseOnly { dc } | Strategy::Lookahead { dc } => {
+            fields.push(("dc", Value::Int(dc as i64)));
+        }
+        Strategy::Latency | Strategy::NaiveDa => {}
+    }
+    obj(fields)
+}
+
+fn parse_strategy(v: &Value) -> Result<Strategy> {
+    let name = v.get("name")?.as_str()?;
+    let dc = |v: &Value| parse_i32(v.get("dc")?, "strategy dc");
+    Ok(match name {
+        "latency" => Strategy::Latency,
+        "naive-da" => Strategy::NaiveDa,
+        "da" => Strategy::Da { dc: dc(v)? },
+        "cse-only" => Strategy::CseOnly { dc: dc(v)? },
+        "lookahead" => Strategy::Lookahead { dc: dc(v)? },
+        other => bail!("unknown strategy '{other}'"),
+    })
+}
+
+fn op_value(op: DaisOp) -> Vec<(&'static str, Value)> {
+    match op {
+        DaisOp::Input { index } => {
+            vec![("op", s("input")), ("index", Value::Int(index as i64))]
+        }
+        DaisOp::Const { value } => vec![("op", s("const")), ("value", Value::Int(value))],
+        DaisOp::AddShift { a, b, shift_a, shift_b, sub } => vec![
+            ("op", s("add-shift")),
+            ("a", Value::Int(a as i64)),
+            ("b", Value::Int(b as i64)),
+            ("shift_a", Value::Int(shift_a as i64)),
+            ("shift_b", Value::Int(shift_b as i64)),
+            ("sub", Value::Bool(sub)),
+        ],
+        DaisOp::Neg { a } => vec![("op", s("neg")), ("a", Value::Int(a as i64))],
+        DaisOp::Relu { a } => vec![("op", s("relu")), ("a", Value::Int(a as i64))],
+        DaisOp::Quant { a, shift, round, clip_min, clip_max } => vec![
+            ("op", s("quant")),
+            ("a", Value::Int(a as i64)),
+            ("shift", Value::Int(shift as i64)),
+            (
+                "round",
+                s(match round {
+                    RoundMode::Floor => "floor",
+                    RoundMode::HalfUp => "half-up",
+                }),
+            ),
+            ("clip_min", Value::Int(clip_min)),
+            ("clip_max", Value::Int(clip_max)),
+        ],
+    }
+}
+
+fn parse_op(v: &Value) -> Result<DaisOp> {
+    let node = |key: &str| -> Result<NodeId> { parse_u32(v.get(key)?, key) };
+    Ok(match v.get("op")?.as_str()? {
+        "input" => DaisOp::Input { index: parse_u32(v.get("index")?, "input index")? },
+        "const" => DaisOp::Const { value: v.get("value")?.as_i64()? },
+        "add-shift" => DaisOp::AddShift {
+            a: node("a")?,
+            b: node("b")?,
+            shift_a: parse_u32(v.get("shift_a")?, "shift_a")?,
+            shift_b: parse_u32(v.get("shift_b")?, "shift_b")?,
+            sub: v.get("sub")?.as_bool()?,
+        },
+        "neg" => DaisOp::Neg { a: node("a")? },
+        "relu" => DaisOp::Relu { a: node("a")? },
+        "quant" => DaisOp::Quant {
+            a: node("a")?,
+            shift: parse_i32(v.get("shift")?, "quant shift")?,
+            round: match v.get("round")?.as_str()? {
+                "floor" => RoundMode::Floor,
+                "half-up" => RoundMode::HalfUp,
+                other => bail!("unknown round mode '{other}'"),
+            },
+            clip_min: v.get("clip_min")?.as_i64()?,
+            clip_max: v.get("clip_max")?.as_i64()?,
+        },
+        other => bail!("unknown op '{other}'"),
+    })
+}
+
+fn program_value(p: &DaisProgram) -> Value {
+    let nodes: Vec<Value> = p
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut fields = op_value(n.op);
+            fields.push(("qint", qint_value(n.qint)));
+            fields.push(("depth", Value::Int(n.depth as i64)));
+            obj(fields)
+        })
+        .collect();
+    let outputs: Vec<Value> = p
+        .outputs
+        .iter()
+        .map(|o| Value::Array(vec![Value::Int(o.node as i64), Value::Int(o.shift as i64)]))
+        .collect();
+    obj(vec![
+        ("num_inputs", Value::Int(p.num_inputs as i64)),
+        ("nodes", Value::Array(nodes)),
+        ("outputs", Value::Array(outputs)),
+    ])
+}
+
+fn parse_node(v: &Value) -> Result<DaisNode> {
+    Ok(DaisNode {
+        op: parse_op(v)?,
+        qint: parse_qint(v.get("qint")?)?,
+        depth: parse_u32(v.get("depth")?, "node depth")?,
+    })
+}
+
+fn parse_program(v: &Value) -> Result<DaisProgram> {
+    let num_inputs = parse_usize(v.get("num_inputs")?, "num_inputs")?;
+    let mut nodes = Vec::new();
+    for (i, n) in v.get("nodes")?.as_array()?.iter().enumerate() {
+        nodes.push(parse_node(n).map_err(|e| anyhow!("node {i}: {e}"))?);
+    }
+    let mut outputs = Vec::new();
+    for (i, o) in v.get("outputs")?.as_array()?.iter().enumerate() {
+        let pair = o.as_array()?;
+        ensure!(pair.len() == 2, "output {i} must be a [node, shift] pair");
+        outputs.push(OutputSpec {
+            node: parse_u32(&pair[0], "output node")?,
+            shift: parse_i32(&pair[1], "output shift")?,
+        });
+    }
+    Ok(DaisProgram { nodes, outputs, num_inputs })
+}
+
+fn key_value(key: &JobKey) -> Value {
+    obj(vec![
+        ("d_in", Value::Int(key.d_in as i64)),
+        ("d_out", Value::Int(key.d_out as i64)),
+        ("matrix", Value::Array(key.matrix.iter().map(|&w| Value::Int(w)).collect())),
+        ("input_qint", Value::Array(key.input_qint.iter().map(|&q| qint_value(q)).collect())),
+        (
+            "input_depth",
+            Value::Array(key.input_depth.iter().map(|&d| Value::Int(d as i64)).collect()),
+        ),
+        ("strategy", strategy_value(key.strategy)),
+    ])
+}
+
+fn parse_key(v: &Value) -> Result<JobKey> {
+    let d_in = parse_usize(v.get("d_in")?, "d_in")?;
+    let d_out = parse_usize(v.get("d_out")?, "d_out")?;
+    ensure!(d_in >= 1 && d_out >= 1, "degenerate dims {d_in}x{d_out}");
+    let matrix = v.get("matrix")?.to_i64_vec()?;
+    ensure!(
+        matrix.len() == d_in * d_out,
+        "matrix has {} entries, dims say {d_in}x{d_out}",
+        matrix.len()
+    );
+    let input_qint: Vec<QInterval> = v
+        .get("input_qint")?
+        .as_array()?
+        .iter()
+        .map(parse_qint)
+        .collect::<Result<_>>()?;
+    ensure!(input_qint.len() == d_in, "input_qint has {} entries, d_in is {d_in}", input_qint.len());
+    let input_depth: Vec<u32> = v
+        .get("input_depth")?
+        .as_array()?
+        .iter()
+        .map(|d| parse_u32(d, "input depth"))
+        .collect::<Result<_>>()?;
+    ensure!(
+        input_depth.len() == d_in,
+        "input_depth has {} entries, d_in is {d_in}",
+        input_depth.len()
+    );
+    let strategy = parse_strategy(v.get("strategy")?)?;
+    Ok(JobKey { d_in, d_out, matrix, input_qint, input_depth, strategy })
+}
+
+fn cse_value(c: &CseStats) -> Value {
+    obj(vec![
+        ("steps", Value::Int(c.steps as i64)),
+        ("depth_rejections", Value::Int(c.depth_rejections as i64)),
+        ("heap_pops", Value::Int(c.heap_pops as i64)),
+        ("stale_pops", Value::Int(c.stale_pops as i64)),
+        ("occ_cols_scanned", Value::Int(c.occ_cols_scanned as i64)),
+        ("occ_digits_scanned", Value::Int(c.occ_digits_scanned as i64)),
+    ])
+}
+
+fn parse_cse(v: &Value) -> Result<CseStats> {
+    Ok(CseStats {
+        steps: parse_usize(v.get("steps")?, "cse steps")?,
+        depth_rejections: parse_usize(v.get("depth_rejections")?, "cse depth_rejections")?,
+        heap_pops: parse_usize(v.get("heap_pops")?, "cse heap_pops")?,
+        stale_pops: parse_usize(v.get("stale_pops")?, "cse stale_pops")?,
+        occ_cols_scanned: parse_usize(v.get("occ_cols_scanned")?, "cse occ_cols_scanned")?,
+        occ_digits_scanned: parse_usize(v.get("occ_digits_scanned")?, "cse occ_digits_scanned")?,
+    })
+}
+
+fn entry_value(key: &JobKey, sol: &CmvmSolution) -> Value {
+    let opt_ns = i64::try_from(sol.opt_time.as_nanos()).unwrap_or(i64::MAX);
+    obj(vec![
+        ("key", key_value(key)),
+        (
+            "solution",
+            obj(vec![
+                ("adders", Value::Int(sol.adders as i64)),
+                ("depth", Value::Int(sol.depth as i64)),
+                ("opt_ns", Value::Int(opt_ns)),
+                ("cse", cse_value(&sol.cse)),
+                ("program", program_value(&sol.program)),
+            ]),
+        ),
+    ])
+}
+
+/// Parse and fully validate one cache entry. The strategy is part of
+/// the key, so the solution does not repeat it.
+fn parse_entry(v: &Value) -> Result<(JobKey, CmvmSolution)> {
+    let key = parse_key(v.get("key")?)?;
+    let sv = v.get("solution")?;
+    let adders = parse_usize(sv.get("adders")?, "adders")?;
+    let depth = parse_u32(sv.get("depth")?, "depth")?;
+    let opt_ns = sv.get("opt_ns")?.as_i64()?;
+    ensure!(opt_ns >= 0, "negative opt_ns {opt_ns}");
+    let cse = parse_cse(sv.get("cse")?)?;
+    let program = parse_program(sv.get("program")?)?;
+
+    // Integrity boundary: the program must be structurally sound and
+    // *exactly* equivalent to the key's matrix — a tampered cache file
+    // can never serve a wrong adder graph.
+    verify::check_well_formed(&program).map_err(|e| anyhow!("corrupt program: {e}"))?;
+    ensure!(
+        program.num_inputs == key.d_in,
+        "program arity {} != key d_in {}",
+        program.num_inputs,
+        key.d_in
+    );
+    ensure!(
+        program.outputs.len() == key.d_out,
+        "program has {} outputs, key d_out is {}",
+        program.outputs.len(),
+        key.d_out
+    );
+    verify::check_cmvm_equivalence(&program, &key.matrix, key.d_in, key.d_out)
+        .map_err(|e| anyhow!("program does not compute the key's matrix: {e}"))?;
+    ensure!(
+        adders == program.adder_count(),
+        "adders metadata {adders} != program adder count {}",
+        program.adder_count()
+    );
+    ensure!(
+        depth == program.adder_depth(),
+        "depth metadata {depth} != program adder depth {}",
+        program.adder_depth()
+    );
+
+    let strategy = key.strategy;
+    let sol = CmvmSolution {
+        program,
+        adders,
+        depth,
+        opt_time: Duration::from_nanos(opt_ns as u64),
+        strategy,
+        cse,
+    };
+    Ok((key, sol))
+}
+
+/// Parse and validate a whole cache document into its entries.
+fn parse_entries(text: &str) -> Result<Vec<(JobKey, CmvmSolution)>> {
+    let v = json::parse(text).map_err(|e| anyhow!("cache load: not valid JSON: {e}"))?;
+    let kind = v
+        .get_opt("kind")
+        .and_then(|k| k.as_str().ok())
+        .unwrap_or("<missing>");
+    ensure!(
+        kind == KIND,
+        "cache load: not a solution-cache file (kind = '{kind}', expected '{KIND}')"
+    );
+    let sv = v.get("schema_version")?.as_i64()?;
+    ensure!(
+        sv == SCHEMA_VERSION as i64,
+        "cache load: file is schema v{sv}, this binary reads v{SCHEMA_VERSION} — \
+         re-bake it with `da4ml cache bake`"
+    );
+    let mut out = Vec::new();
+    for (i, e) in v.get("entries")?.as_array()?.iter().enumerate() {
+        out.push(parse_entry(e).map_err(|err| anyhow!("cache load: entry {i}: {err}"))?);
+    }
+    Ok(out)
+}
+
+/// Summary of a cache file, as printed by `da4ml cache info`. Produced
+/// by [`info`], which runs the *full* load-path validation — `cache
+/// info` doubles as an integrity check.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheInfo {
+    /// Schema version of the file.
+    pub schema_version: u32,
+    /// Number of cached solutions.
+    pub entries: usize,
+    /// Entry count per strategy name.
+    pub by_strategy: BTreeMap<String, usize>,
+    /// Sum of adder counts across all cached programs.
+    pub total_adders: u64,
+}
+
+/// Validate a cache document and summarize it (see [`CacheInfo`]).
+pub fn info(text: &str) -> Result<CacheInfo> {
+    let entries = parse_entries(text)?;
+    let mut by_strategy: BTreeMap<String, usize> = BTreeMap::new();
+    let mut total_adders = 0u64;
+    for (key, sol) in &entries {
+        *by_strategy.entry(key.strategy.name().to_string()).or_insert(0) += 1;
+        total_adders += sol.adders as u64;
+    }
+    Ok(CacheInfo {
+        schema_version: SCHEMA_VERSION,
+        entries: entries.len(),
+        by_strategy,
+        total_adders,
+    })
+}
+
+impl<S: BuildHasher> Coordinator<S> {
+    /// Serialize the full solution cache to the schema-v1 JSON document.
+    ///
+    /// Deterministic: entries are sorted by the canonical job-key order
+    /// and recency state is not persisted, so the bytes depend only on
+    /// the set of cached (key, solution) pairs — not on shard count,
+    /// insertion order, or access history.
+    pub fn save_cache(&self) -> String {
+        let mut entries: Vec<(JobKey, Arc<CmvmSolution>)> = Vec::new();
+        for shard in &self.inner.shards {
+            let shard = shard.lock().unwrap();
+            for (key, entry) in &shard.cache {
+                entries.push((JobKey::clone(key), Arc::clone(&entry.sol)));
+            }
+        }
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let items: Vec<Value> = entries.iter().map(|(k, sol)| entry_value(k, sol)).collect();
+        let doc = obj(vec![
+            ("schema_version", Value::Int(SCHEMA_VERSION as i64)),
+            ("kind", s(KIND)),
+            ("entries", Value::Array(items)),
+        ]);
+        json::to_string(&doc)
+    }
+
+    /// Warm-start the cache from a document produced by
+    /// [`Coordinator::save_cache`]. Returns the number of entries
+    /// inserted (counted in [`super::CoordinatorStats::loaded`]).
+    ///
+    /// The whole file is validated *before* anything is inserted — a
+    /// corrupt, tampered, or wrong-schema file is rejected with an
+    /// actionable error and leaves the cache untouched. Entries already
+    /// present in the live cache win over the file's copy; a `cap == 0`
+    /// (caching disabled) coordinator loads nothing; a capped cache
+    /// honors its cap by evicting exactly as a computed insert would.
+    pub fn load_cache(&self, text: &str) -> Result<u64> {
+        let entries = parse_entries(text)?;
+        let mut loaded = 0u64;
+        for (key, sol) in entries {
+            let idx = self.inner.shard_index(&key);
+            let mut shard = self.inner.shards[idx].lock().unwrap();
+            if shard.cap == Some(0) || shard.cache.contains_key(&key) {
+                continue;
+            }
+            shard.tick += 1;
+            let tick = shard.tick;
+            shard.insert_new(key, Arc::new(sol), tick);
+            shard.stats.loaded += 1;
+            loaded += 1;
+        }
+        Ok(loaded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::CompileJob;
+    use super::*;
+    use crate::cmvm::CmvmProblem;
+    use crate::util::Rng;
+
+    fn job(seed: u64, strategy: Strategy) -> CompileJob {
+        let mut rng = Rng::seed_from(seed);
+        let m: Vec<i64> = (0..6).map(|_| rng.range_i64(-127, 127)).collect();
+        CompileJob {
+            name: format!("p{seed}"),
+            problem: CmvmProblem::new(2, 3, m, 8),
+            strategy,
+        }
+    }
+
+    fn warm_coordinator() -> Coordinator {
+        let c = Coordinator::new();
+        c.compile(&job(1, Strategy::Da { dc: 2 })).unwrap();
+        c.compile(&job(2, Strategy::Da { dc: -1 })).unwrap();
+        c.compile(&job(3, Strategy::NaiveDa)).unwrap();
+        c.compile(&job(4, Strategy::CseOnly { dc: 0 })).unwrap();
+        c.compile(&job(5, Strategy::Latency)).unwrap();
+        c
+    }
+
+    #[test]
+    fn save_load_save_is_byte_identical() {
+        let c = warm_coordinator();
+        let saved = c.save_cache();
+        let fresh = Coordinator::new();
+        let n = fresh.load_cache(&saved).unwrap();
+        assert_eq!(n, 5);
+        assert_eq!(fresh.cache_len(), 5);
+        assert_eq!(fresh.stats().loaded, 5);
+        assert_eq!(fresh.save_cache(), saved, "save -> load -> save must round-trip");
+    }
+
+    #[test]
+    fn loaded_solutions_serve_identical_hits() {
+        let c = warm_coordinator();
+        let saved = c.save_cache();
+        let fresh = Coordinator::new();
+        fresh.load_cache(&saved).unwrap();
+        for (seed, strategy) in [
+            (1, Strategy::Da { dc: 2 }),
+            (2, Strategy::Da { dc: -1 }),
+            (3, Strategy::NaiveDa),
+            (4, Strategy::CseOnly { dc: 0 }),
+            (5, Strategy::Latency),
+        ] {
+            let j = job(seed, strategy);
+            let original = c.compile(&j).unwrap();
+            let (warm, hit) = fresh.compile_cached(&j).unwrap();
+            assert!(hit, "loaded entry must serve a hit");
+            assert_eq!(warm.program, original.program);
+            assert_eq!(warm.adders, original.adders);
+            assert_eq!(warm.depth, original.depth);
+            assert_eq!(warm.cse, original.cse);
+            // Exact nanosecond round-trip keeps serve's opt_ms
+            // byte-identical between warm and in-memory replies.
+            assert_eq!(warm.opt_time, original.opt_time);
+        }
+        // Loads are not submissions; the 5 probe compiles are.
+        assert_eq!(fresh.stats().submitted, 5);
+        assert_eq!(fresh.stats().cache_hits, 5);
+    }
+
+    #[test]
+    fn save_is_shard_count_invariant() {
+        let saved = warm_coordinator().save_cache();
+        let sharded = Coordinator::with_shards(4);
+        sharded.load_cache(&saved).unwrap();
+        assert_eq!(sharded.save_cache(), saved);
+    }
+
+    #[test]
+    fn wrong_schema_version_rejected_with_actionable_error() {
+        let saved = warm_coordinator().save_cache();
+        let doctored = saved.replace("\"schema_version\":1", "\"schema_version\":2");
+        assert_ne!(saved, doctored, "test must actually change the version");
+        let fresh = Coordinator::new();
+        let err = fresh.load_cache(&doctored).unwrap_err().to_string();
+        assert!(err.contains("schema v2"), "unhelpful error: {err}");
+        assert!(err.contains("re-bake"), "error must say how to recover: {err}");
+        assert_eq!(fresh.cache_len(), 0);
+    }
+
+    #[test]
+    fn corrupt_and_foreign_files_rejected() {
+        let fresh = Coordinator::new();
+        let err = fresh.load_cache("{\"not\": json").unwrap_err().to_string();
+        assert!(err.contains("not valid JSON"), "got: {err}");
+        let err = fresh.load_cache("{\"schema_version\":1}").unwrap_err().to_string();
+        assert!(err.contains("kind"), "got: {err}");
+        assert_eq!(fresh.cache_len(), 0);
+    }
+
+    #[test]
+    fn tampered_matrix_rejected() {
+        let c = Coordinator::new();
+        c.compile(&job(7, Strategy::Da { dc: -1 })).unwrap();
+        let saved = c.save_cache();
+        // Flip one matrix weight: the stored program no longer computes
+        // the claimed matrix, so equivalence checking must reject it.
+        let matrix = job(7, Strategy::Da { dc: -1 }).problem.matrix;
+        let needle = format!("\"matrix\":[{}", matrix[0]);
+        let swapped = format!("\"matrix\":[{}", matrix[0] + 1);
+        let doctored = saved.replace(&needle, &swapped);
+        assert_ne!(saved, doctored, "needle not found in the saved document");
+        let fresh = Coordinator::new();
+        let err = fresh.load_cache(&doctored).unwrap_err().to_string();
+        assert!(err.contains("does not compute"), "got: {err}");
+        assert_eq!(fresh.cache_len(), 0);
+    }
+
+    #[test]
+    fn live_entries_win_over_loaded_ones() {
+        let c = warm_coordinator();
+        let saved = c.save_cache();
+        let fresh = Coordinator::new();
+        let j = job(1, Strategy::Da { dc: 2 });
+        let live = fresh.compile(&j).unwrap();
+        let n = fresh.load_cache(&saved).unwrap();
+        assert_eq!(n, 4, "the already-live entry is skipped");
+        let (again, hit) = fresh.compile_cached(&j).unwrap();
+        assert!(hit);
+        assert!(Arc::ptr_eq(&live, &again), "load must not replace the live entry");
+    }
+
+    #[test]
+    fn zero_cap_coordinator_loads_nothing() {
+        let saved = warm_coordinator().save_cache();
+        let disabled = Coordinator::with_cache_cap(0);
+        assert_eq!(disabled.load_cache(&saved).unwrap(), 0);
+        assert_eq!(disabled.cache_len(), 0);
+        assert_eq!(disabled.stats().loaded, 0);
+    }
+
+    #[test]
+    fn capped_load_evicts_like_computed_inserts() {
+        let saved = warm_coordinator().save_cache();
+        let capped = Coordinator::with_cache_cap(2);
+        let n = capped.load_cache(&saved).unwrap();
+        assert_eq!(n, 5, "every entry is loaded (then LRU-bounded)");
+        assert_eq!(capped.cache_len(), 2);
+        assert_eq!(capped.stats().evictions, 3);
+        assert_eq!(capped.stats().loaded, 5);
+    }
+
+    #[test]
+    fn info_summarizes_and_validates() {
+        let c = warm_coordinator();
+        let i = info(&c.save_cache()).unwrap();
+        assert_eq!(i.schema_version, SCHEMA_VERSION);
+        assert_eq!(i.entries, 5);
+        assert_eq!(i.by_strategy.get("da"), Some(&2));
+        assert_eq!(i.by_strategy.get("naive-da"), Some(&1));
+        assert_eq!(i.by_strategy.get("cse-only"), Some(&1));
+        assert_eq!(i.by_strategy.get("latency"), Some(&1));
+        assert!(i.total_adders > 0);
+        assert!(info("[]").is_err());
+    }
+}

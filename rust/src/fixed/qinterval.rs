@@ -5,7 +5,7 @@
 /// All adder-graph values are tracked with this type; it determines the
 /// exact bitwidths fed to the cost model (Eq. 1) and the wrap-free
 /// semantics the DAIS interpreter enforces.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct QInterval {
     /// Smallest integer mantissa.
     pub min: i64,

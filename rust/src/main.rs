@@ -87,7 +87,7 @@ fn load_vectors(path: &str) -> Result<TestVectors> {
     TestVectors::from_json(&runtime::load_text(path)?)
 }
 
-const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|serve|perf|explore>
+const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|serve|perf|explore|cache>
   compile [--d-in N] [--d-out N] [--bits B] [--dc D] [--seed S]
   net <spec.weights.json> [--strategy da|latency|naive-da] [--dc D] [--pipe N]
   rtl <spec.weights.json> <out.v|out.vhd> [--pipe N] [--dc D] [--tb testvec.json]
@@ -98,9 +98,12 @@ const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|se
   verify <spec.weights.json> [--dc D]      (well-formedness + bit-exactness)
   dot <spec.weights.json> <out.dot> [--dc D]  (Graphviz adder graph)
   serve [--input jobs.jsonl] [--batch N] [--dc D] [--threads T] [--cache-cap N]
+        [--cache-shards N] [--cache-load cache.json] [--cache-save cache.json]
         (JSONL compile service: jobs on stdin or --input, reports on
          stdout, summary on stderr; --cache-cap bounds the solution
-         cache with LRU eviction; wire format in docs/serve.md)
+         cache with LRU eviction, --cache-shards splits it across
+         independently locked shards, --cache-load/--cache-save restart
+         the service warm; wire format in docs/serve.md)
   perf [--smoke] [--runs N] [--out BENCH_cmvm.json]
        [--baseline ci/bench_baseline.json] [--bless file] [--with-times]
        (fixed benchmark suite over optimize/lower/emit + the CSE engine
@@ -110,11 +113,23 @@ const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|se
   explore [<spec.weights.json>] [--smoke] [--jobs N] [--out EXPLORE_report.json]
           [--objective min-lut|min-latency|knee]
           [--cmvm [--d-in N] [--d-out N] [--bits B] [--seed S]]
+          [--cache-load cache.json] [--cache-save cache.json]
           (design-space exploration: sweeps strategy x dc x pipeline
            candidates and reports the non-dominated LUT/FF/latency
            Pareto front; target is the spec file, a seeded random CMVM
            with --cmvm, or the synthetic jet network by default; output
-           is bit-identical for every --jobs value; docs/explore.md)";
+           is bit-identical for every --jobs value; --cache-load warms
+           the shared solution cache, --cache-save persists it after
+           the sweep; docs/explore.md)
+  cache bake [<spec.weights.json>...] [--corpus jobs.jsonl] [--strategy S]
+             [--dc D] [--shards N] [--threads T] [--out cache.json]
+        (compile every layer of each spec — or every corpus job — and
+         save the solution cache; the synthetic jet network when
+         neither is given)
+  cache info <cache.json>            (validate + summarize a cache file)
+  cache merge <out.json> <in.json...>
+        (union of the inputs; earlier files win on key clashes;
+         persistence format + workflow in docs/cache.md)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -425,7 +440,21 @@ fn main() -> Result<()> {
                 da4ml::explore::ExploreTarget::Network(da4ml::bench_tables::synthetic_jet_spec())
             };
             let coord = da4ml::coordinator::Coordinator::new();
+            if let Some(path) = args.flags.get("cache-load") {
+                let text = runtime::load_text(path)?;
+                let n = coord
+                    .load_cache(&text)
+                    .map_err(|e| anyhow::anyhow!("loading cache {path}: {e:#}"))?;
+                println!("explore: warm start: loaded {n} solutions from {path}");
+            }
             let report = da4ml::explore::explore(&target, &coord, &cfg)?;
+            if let Some(path) = args.flags.get("cache-save") {
+                std::fs::write(path, coord.save_cache())?;
+                println!(
+                    "explore: saved {} cache entries to {path}",
+                    coord.cache_len()
+                );
+            }
             println!("{}", da4ml::explore::render_table(&report));
             let objective = da4ml::explore::Objective::parse(
                 &args.flag::<String>("objective", "knee".into()),
@@ -464,35 +493,141 @@ fn main() -> Result<()> {
                 threads: args.flag("threads", 0usize),
                 default_dc: args.flag("dc", -1i32),
                 cache_cap,
+                cache_shards: args.flag("cache-shards", 1usize).max(1),
                 ..da4ml::serve::ServeConfig::default()
             };
+            // The CLI owns the coordinator (not `serve`) so the cache
+            // can be loaded before the first job and saved after EOF.
+            let coord = da4ml::coordinator::Coordinator::with_shards(cfg.cache_shards);
+            coord.set_cache_cap(cfg.cache_cap);
+            if let Some(path) = args.flags.get("cache-load") {
+                let text = runtime::load_text(path)?;
+                let n = coord
+                    .load_cache(&text)
+                    .map_err(|e| anyhow::anyhow!("loading cache {path}: {e:#}"))?;
+                eprintln!("serve: warm start: loaded {n} solutions from {path}");
+            }
             let stdout = std::io::stdout();
             let mut out = std::io::BufWriter::new(stdout.lock());
             let summary = match args.flags.get("input") {
                 Some(path) => {
                     let file = std::fs::File::open(path)
                         .map_err(|e| anyhow::anyhow!("opening {path}: {e}"))?;
-                    da4ml::serve::serve(std::io::BufReader::new(file), &mut out, &cfg)?
+                    da4ml::serve::serve_with(&coord, std::io::BufReader::new(file), &mut out, &cfg)?
                 }
                 None => {
                     let stdin = std::io::stdin();
-                    da4ml::serve::serve(stdin.lock(), &mut out, &cfg)?
+                    da4ml::serve::serve_with(&coord, stdin.lock(), &mut out, &cfg)?
                 }
             };
             drop(out);
             eprintln!(
                 "serve: {} jobs ({} errors) in {} batches; {} submitted, {} cache hits, \
-                 {} evictions, {:.1} ms optimizer time, {} CSE steps / {} heap pops",
+                 {} loaded, {} evictions over {} shard(s), {:.1} ms optimizer time, \
+                 {} CSE steps / {} heap pops",
                 summary.jobs,
                 summary.errors,
                 summary.batches,
                 summary.stats.submitted,
                 summary.stats.cache_hits,
+                summary.stats.loaded,
                 summary.stats.evictions,
+                coord.shard_count(),
                 summary.stats.total_opt_time.as_secs_f64() * 1e3,
                 summary.stats.total_cse_steps,
                 summary.stats.total_heap_pops
             );
+            if let Some(path) = args.flags.get("cache-save") {
+                std::fs::write(path, coord.save_cache())?;
+                eprintln!(
+                    "serve: saved {} cache entries to {path}",
+                    coord.cache_len()
+                );
+            }
+        }
+        "cache" => {
+            match args.pos(0, "cache subcommand (bake|info|merge)")? {
+                "bake" => {
+                    let dc: i32 = args.flag("dc", -1);
+                    let strategy =
+                        parse_strategy(&args.flag::<String>("strategy", "da".into()), dc);
+                    let shards: usize = args.flag("shards", 1usize);
+                    let coord = da4ml::coordinator::Coordinator::with_shards(shards);
+                    let mut jobs = Vec::new();
+                    for path in &args.positional[1..] {
+                        let spec = load_spec(path)?;
+                        jobs.extend(nn::compile::layer_jobs(&spec, strategy)?);
+                    }
+                    if let Some(path) = args.flags.get("corpus") {
+                        let text = runtime::load_text(path)?;
+                        for (no, line) in text.lines().enumerate() {
+                            if line.trim().is_empty() {
+                                continue;
+                            }
+                            let req = da4ml::serve::JobRequest::from_json(line)
+                                .map_err(|e| anyhow::anyhow!("{path}:{}: {e:#}", no + 1))?;
+                            let id =
+                                req.id.clone().unwrap_or_else(|| format!("job-{}", no + 1));
+                            let job = req
+                                .to_compile_job(id, dc)
+                                .map_err(|e| anyhow::anyhow!("{path}:{}: {e:#}", no + 1))?;
+                            jobs.push(job);
+                        }
+                    }
+                    if jobs.is_empty() {
+                        // CI-smoke default: the synthetic jet network.
+                        let spec = da4ml::bench_tables::synthetic_jet_spec();
+                        jobs = nn::compile::layer_jobs(&spec, strategy)?;
+                    }
+                    let n_jobs = jobs.len();
+                    for r in coord.compile_batch(jobs, args.flag("threads", 0usize)) {
+                        r?;
+                    }
+                    let out = args.flag::<String>("out", "cache.json".into());
+                    std::fs::write(&out, coord.save_cache())?;
+                    let stats = coord.stats();
+                    println!(
+                        "baked {out}: {} solutions from {n_jobs} jobs ({} cache hits), \
+                         {:.1} ms optimizer time",
+                        coord.cache_len(),
+                        stats.cache_hits,
+                        stats.total_opt_time.as_secs_f64() * 1e3
+                    );
+                }
+                "info" => {
+                    let path = args.pos(1, "cache file")?;
+                    let text = runtime::load_text(path)?;
+                    let info = da4ml::coordinator::persist::info(&text)
+                        .map_err(|e| anyhow::anyhow!("{path}: {e:#}"))?;
+                    println!(
+                        "{path}: schema v{}, {} entries, {} adders total",
+                        info.schema_version, info.entries, info.total_adders
+                    );
+                    for (name, n) in &info.by_strategy {
+                        println!("  {name}: {n}");
+                    }
+                }
+                "merge" => {
+                    let out = args.pos(1, "output cache file")?.to_string();
+                    anyhow::ensure!(
+                        args.positional.len() > 2,
+                        "merge needs at least one input cache file"
+                    );
+                    let coord = da4ml::coordinator::Coordinator::new();
+                    for path in &args.positional[2..] {
+                        let text = runtime::load_text(path)?;
+                        let n = coord
+                            .load_cache(&text)
+                            .map_err(|e| anyhow::anyhow!("{path}: {e:#}"))?;
+                        println!("loaded {path}: {n} new entries ({} total)", coord.cache_len());
+                    }
+                    std::fs::write(&out, coord.save_cache())?;
+                    println!("merged {} entries into {out}", coord.cache_len());
+                }
+                other => {
+                    bail!("unknown cache subcommand '{other}' (expected bake|info|merge)\n{USAGE}")
+                }
+            }
         }
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }

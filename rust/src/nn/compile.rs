@@ -12,6 +12,7 @@
 use super::spec::{LayerSpec, NetworkSpec};
 use crate::baseline::mac::{mac_report, DspPolicy};
 use crate::cmvm::{optimize, optimize_terms, optimize_terms_stats, CmvmProblem, Strategy};
+use crate::coordinator::CompileJob;
 use crate::cse::{CseStats, InputTerm};
 use crate::dais::{DaisBuilder, DaisOp, DaisProgram, NodeId, RoundMode};
 use crate::estimate::{self, FpgaModel, ResourceReport};
@@ -351,6 +352,53 @@ pub fn layer_reports(
         }
     }
     Ok(reports)
+}
+
+/// Extract each weight matrix of a network as a standalone CMVM
+/// problem, threading the running activation interval exactly like
+/// [`layer_reports`] does. Shared by the perf lab's engine A/B case and
+/// the solution-cache bake flow ([`layer_jobs`]).
+pub fn layer_problems(spec: &NetworkSpec) -> Result<Vec<CmvmProblem>> {
+    let mut qint = spec.input_qint();
+    let mut out = Vec::new();
+    for (li, layer) in spec.layers.iter().enumerate() {
+        match layer {
+            LayerSpec::Dense { w, b, clip_min, clip_max, .. }
+            | LayerSpec::Conv2D { w, b, clip_min, clip_max, .. }
+            | LayerSpec::EinsumDense { w, b, clip_min, clip_max, .. } => {
+                let d_in = w.len();
+                let d_out = b.len();
+                let matrix: Vec<i64> = w.iter().flat_map(|r| r.iter().copied()).collect();
+                let mut p = CmvmProblem::new(d_in, d_out, matrix, 8);
+                p.input_qint = vec![qint; d_in];
+                out.push(p);
+                anyhow::ensure!(
+                    clip_min <= clip_max,
+                    "layer {li}: clip range [{clip_min}, {clip_max}] is empty"
+                );
+                qint = QInterval::new(*clip_min, *clip_max, 0);
+            }
+            LayerSpec::AddSaved { .. } => qint = qint.add(&qint),
+            _ => {}
+        }
+    }
+    Ok(out)
+}
+
+/// Every weight layer of a network as a coordinator [`CompileJob`]
+/// (named `"{spec.name}/L{i}"`), all under one strategy — the `da4ml
+/// cache bake` surface: compile these through a [`Coordinator`]
+/// (`crate::coordinator::Coordinator`) and persist its solution cache.
+pub fn layer_jobs(spec: &NetworkSpec, strategy: Strategy) -> Result<Vec<CompileJob>> {
+    Ok(layer_problems(spec)?
+        .into_iter()
+        .enumerate()
+        .map(|(i, problem)| CompileJob {
+            name: format!("{}/L{i}", spec.name),
+            problem,
+            strategy,
+        })
+        .collect())
 }
 
 /// Grid shape seen by layer `li` (replaying shape transforms).

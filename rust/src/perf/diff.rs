@@ -119,6 +119,24 @@ pub fn against_baseline(report: &SuiteReport, baseline: &Baseline) -> DiffOutcom
             ));
         }
     }
+    // Coordinator shard hammer: gated only when the baseline pins the
+    // floor (single-core hosts cannot beat a single lock, so the stub
+    // and locally blessed baselines may omit it).
+    if let Some(min) = baseline.min_shard_speedup {
+        out.checked += 1;
+        if report.coordinator.speedup < min {
+            out.regressions.push(format!(
+                "coordinator shard speedup {:.2}x (single-lock {:.3} ms vs \
+                 {}-shard {:.3} ms under {} threads) is below the required {:.2}x",
+                report.coordinator.speedup,
+                report.coordinator.single_warm_ms,
+                report.coordinator.shards,
+                report.coordinator.sharded_warm_ms,
+                report.coordinator.threads,
+                min
+            ));
+        }
+    }
 
     for bc in &baseline.cases {
         let Some(rc) = report.cases.iter().find(|c| c.id == bc.id) else {
@@ -178,7 +196,7 @@ pub fn against_baseline(report: &SuiteReport, baseline: &Baseline) -> DiffOutcom
 #[cfg(test)]
 mod tests {
     use super::super::schema::{parse_baseline, render_baseline};
-    use super::super::{EngineAb, PhaseMs, SuiteReport};
+    use super::super::{CoordinatorShardBench, EngineAb, PhaseMs, SuiteReport};
     use super::*;
     use crate::cse::CseStats;
 
@@ -216,6 +234,17 @@ mod tests {
                 programs_match: true,
                 indexed: CseStats::default(),
                 reference: CseStats::default(),
+            },
+            coordinator: CoordinatorShardBench {
+                case_id: "coordinator/shard-hammer".into(),
+                threads: 4,
+                shards: 8,
+                jobs: 24,
+                lookups: 6144,
+                cold_ms: 12.0,
+                single_warm_ms: 4.0,
+                sharded_warm_ms: 2.0,
+                speedup: 2.0,
             },
             skipped: vec![],
         }
@@ -278,6 +307,29 @@ mod tests {
         let mut diverged = r.clone();
         diverged.engine_ab.programs_match = false;
         assert!(!against_baseline(&diverged, &b).passed());
+    }
+
+    /// The shard-speedup floor gates only when the baseline pins it —
+    /// and a blessed baseline does pin it.
+    #[test]
+    fn shard_speedup_floor_gates_when_pinned() {
+        let r = report();
+        let b = parse_baseline(&render_baseline(&r, false)).unwrap();
+        assert!(b.min_shard_speedup.is_some());
+        let mut slow = r.clone();
+        slow.coordinator.speedup = 0.9;
+        let d = against_baseline(&slow, &b);
+        assert!(!d.passed());
+        assert!(
+            d.regressions[0].contains("coordinator shard speedup"),
+            "{:?}",
+            d.regressions
+        );
+
+        // Without the key the case is informational only.
+        let stub = r#"{"schema_version": 1, "bootstrap": true, "cases": []}"#;
+        let unpinned = parse_baseline(stub).unwrap();
+        assert!(against_baseline(&slow, &unpinned).passed());
     }
 
     #[test]

@@ -24,7 +24,12 @@
 //! The suite also carries an **engine A/B** case: the indexed CSE
 //! engine vs the retained pre-index [`crate::cse::reference`] engine on
 //! the jet network's layer matrices, reporting the measured speedup and
-//! asserting the two emit bit-identical programs.
+//! asserting the two emit bit-identical programs. A second same-machine
+//! A/B measures the **coordinator cache under contention**: a
+//! multi-threaded warm hammer over one job set, on the single-lock
+//! cache vs the sharded one ([`coordinator_shard`]) — with exact
+//! hit/miss accounting asserted, so a lost update fails the suite, not
+//! just the gate.
 //!
 //! Every case the suite intentionally drops (the O(N³) lookahead
 //! comparator above its size cap, the latency strategy's functionally
@@ -36,11 +41,12 @@ pub mod schema;
 
 use crate::bench_tables::{synthetic_jet_spec, synthetic_jet_spec_scaled};
 use crate::cmvm::{optimize, CmvmProblem, Strategy};
+use crate::coordinator::{CompileJob, Coordinator};
 use crate::cse::{self, CseConfig, CseStats, InputTerm};
 use crate::dais::{DaisBuilder, DaisProgram};
 use crate::estimate::{self, FpgaModel};
 use crate::netlist::Netlist;
-use crate::nn::{self, LayerSpec, NetworkSpec};
+use crate::nn::{self, NetworkSpec};
 use crate::pipeline::{assign_stages, PipelineConfig};
 use crate::report::{sci, Table};
 use crate::rtl;
@@ -175,6 +181,34 @@ pub struct EngineAb {
     pub reference: CseStats,
 }
 
+/// The coordinator sharding measurement: a cold bake (all misses)
+/// followed by a multi-threaded warm hammer (all hits) over the same
+/// job set, timed on a single-lock coordinator vs a sharded one. The
+/// speedup is same-machine relative (like [`EngineAb::speedup`]), so
+/// the CI gate can floor it across hosts.
+#[derive(Debug, Clone)]
+pub struct CoordinatorShardBench {
+    /// Stable id of the contention case.
+    pub case_id: String,
+    /// Hammer threads (the contention level).
+    pub threads: usize,
+    /// Shard count of the sharded coordinator under test.
+    pub shards: usize,
+    /// Distinct jobs in the working set.
+    pub jobs: usize,
+    /// Total warm cache-hit lookups performed per coordinator.
+    pub lookups: u64,
+    /// Cold bake wall-clock (all misses, sharded coordinator), ms.
+    pub cold_ms: f64,
+    /// Median warm-hammer wall-clock on the single-lock cache, ms.
+    pub single_warm_ms: f64,
+    /// Median warm-hammer wall-clock on the sharded cache, ms.
+    pub sharded_warm_ms: f64,
+    /// `single_warm_ms / sharded_warm_ms` — >1 means sharding wins
+    /// under contention.
+    pub speedup: f64,
+}
+
 /// The whole suite result — serialized to `BENCH_cmvm.json`.
 #[derive(Debug, Clone)]
 pub struct SuiteReport {
@@ -190,6 +224,8 @@ pub struct SuiteReport {
     pub cases: Vec<CaseReport>,
     /// The engine A/B measurement.
     pub engine_ab: EngineAb,
+    /// The coordinator-cache contention measurement.
+    pub coordinator: CoordinatorShardBench,
     /// Cases intentionally not run, with reasons.
     pub skipped: Vec<SkippedCase>,
 }
@@ -354,32 +390,6 @@ where
     })
 }
 
-/// Extract each weight matrix of a network as a standalone CMVM
-/// problem, threading the running activation interval exactly like
-/// [`nn::compile::layer_reports`] does.
-fn layer_problems(spec: &NetworkSpec) -> Vec<CmvmProblem> {
-    let mut qint = spec.input_qint();
-    let mut out = Vec::new();
-    for layer in &spec.layers {
-        match layer {
-            LayerSpec::Dense { w, b, clip_min, clip_max, .. }
-            | LayerSpec::Conv2D { w, b, clip_min, clip_max, .. }
-            | LayerSpec::EinsumDense { w, b, clip_min, clip_max, .. } => {
-                let d_in = w.len();
-                let d_out = b.len();
-                let matrix: Vec<i64> = w.iter().flat_map(|r| r.iter().copied()).collect();
-                let mut p = CmvmProblem::new(d_in, d_out, matrix, 8);
-                p.input_qint = vec![qint; d_in];
-                out.push(p);
-                qint = crate::fixed::QInterval::new(*clip_min, *clip_max, 0);
-            }
-            LayerSpec::AddSaved { .. } => qint = qint.add(&qint),
-            _ => {}
-        }
-    }
-    out
-}
-
 /// Run the CSE stage (only) on each layer problem with one engine;
 /// returns the accumulated counters and the finished per-layer
 /// programs for the bit-identity check.
@@ -419,7 +429,7 @@ fn run_cse_engine(problems: &[CmvmProblem], reference: bool) -> (CseStats, Vec<D
 /// network's layer matrices (CSE stage only, so the measurement
 /// isolates exactly the overhauled hot path).
 pub fn engine_ab(runs: usize, case_id: &str, spec: &NetworkSpec) -> Result<EngineAb> {
-    let problems = layer_problems(spec);
+    let problems = nn::compile::layer_problems(spec)?;
     ensure!(!problems.is_empty(), "engine A/B: network has no weight layers");
     let runs = runs.max(1);
     let mut t_idx = Vec::with_capacity(runs);
@@ -461,6 +471,117 @@ pub fn engine_ab(runs: usize, case_id: &str, spec: &NetworkSpec) -> Result<Engin
         programs_match,
         indexed: stats_idx,
         reference: stats_ref,
+    })
+}
+
+/// The coordinator sharding A/B: bake one tiny job set cold into a
+/// single-lock and an 8-shard coordinator (asserting bit-identical
+/// programs), then hammer both warm from 4 threads and compare the
+/// median wall-clock. Accounting is asserted exact on both
+/// coordinators — every lookup a hit, nothing lost, nothing evicted —
+/// so the timing can never paper over a correctness bug. Timings are
+/// meaningless on a single-core host; the gate floors the speedup only
+/// when the baseline pins `min_shard_speedup` (CI runs multi-core).
+pub fn coordinator_shard(runs: usize, case_id: &str) -> Result<CoordinatorShardBench> {
+    const THREADS: usize = 4;
+    const SHARDS: usize = 8;
+    const JOBS: usize = 24;
+    const ROUNDS: usize = 64;
+    let jobs: Vec<CompileJob> = (0..JOBS)
+        .map(|i| CompileJob {
+            name: format!("shard-bench/{i}"),
+            problem: CmvmProblem::random(7100 + i as u64, 3, 3, 8),
+            strategy: Strategy::Da { dc: SUITE_DC },
+        })
+        .collect();
+    let runs = runs.max(1);
+
+    let single = Coordinator::new();
+    let sharded = Coordinator::with_shards(SHARDS);
+    // Cold bake. Only the sharded pass is timed — cold compile time is
+    // optimizer-dominated either way; the warm A/B below is the
+    // contention measurement.
+    let (d_cold, baked) = time_once(|| {
+        jobs.iter()
+            .map(|j| sharded.compile_cached(j))
+            .collect::<Result<Vec<_>>>()
+    });
+    let baked = baked?;
+    for (j, (sol, hit)) in jobs.iter().zip(&baked) {
+        ensure!(!hit, "coordinator shard bench: cold pass must miss ({})", j.name);
+        let (single_sol, single_hit) = single.compile_cached(j)?;
+        ensure!(!single_hit, "coordinator shard bench: cold pass must miss ({})", j.name);
+        ensure!(
+            single_sol.program == sol.program,
+            "coordinator shard bench: single-lock and sharded coordinators \
+             produced different programs for {}",
+            j.name
+        );
+    }
+
+    let hammer = |coord: &Coordinator| {
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let jobs = &jobs;
+                scope.spawn(move || {
+                    for round in 0..ROUNDS {
+                        for k in 0..jobs.len() {
+                            // Offset the walk per thread and per round so
+                            // threads collide on different keys (and thus
+                            // different shards) at any instant.
+                            let j = &jobs[(k + t * 7 + round) % jobs.len()];
+                            coord.compile_cached(j).expect("warm lookup cannot fail");
+                        }
+                    }
+                });
+            }
+        });
+    };
+    let mut t_single = Vec::with_capacity(runs);
+    let mut t_sharded = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        t_single.push(time_once(|| hammer(&single)).0);
+        t_sharded.push(time_once(|| hammer(&sharded)).0);
+    }
+
+    // Exact accounting on both coordinators: JOBS misses, every warm
+    // lookup a hit, zero evictions (uncapped) — no lost updates under
+    // contention.
+    let lookups = (runs * THREADS * ROUNDS * JOBS) as u64;
+    for (name, coord) in [("single", &single), ("sharded", &sharded)] {
+        let st = coord.stats();
+        ensure!(
+            st.submitted == lookups + JOBS as u64,
+            "coordinator shard bench ({name}): submitted {} != {}",
+            st.submitted,
+            lookups + JOBS as u64
+        );
+        ensure!(
+            st.cache_hits == lookups,
+            "coordinator shard bench ({name}): lost updates — {} hits, want {lookups}",
+            st.cache_hits
+        );
+        ensure!(
+            st.evictions == 0 && coord.cache_len() == JOBS,
+            "coordinator shard bench ({name}): cache corrupted — {} evictions, \
+             {} entries (want 0 / {JOBS})",
+            st.evictions,
+            coord.cache_len()
+        );
+    }
+
+    let single_warm_ms = ms(median_duration(&mut t_single));
+    let sharded_warm_ms = ms(median_duration(&mut t_sharded));
+    Ok(CoordinatorShardBench {
+        case_id: case_id.to_string(),
+        threads: THREADS,
+        shards: SHARDS,
+        jobs: JOBS,
+        lookups,
+        cold_ms: ms(d_cold),
+        single_warm_ms,
+        sharded_warm_ms,
+        speedup: single_warm_ms / sharded_warm_ms.max(1e-6),
     })
 }
 
@@ -549,6 +670,7 @@ pub fn run_suite(cfg: &PerfConfig) -> Result<SuiteReport> {
     }
 
     let ab = engine_ab(cfg.runs, "jet/cse-stage", &jet)?;
+    let coordinator = coordinator_shard(cfg.runs, "coordinator/shard-hammer")?;
 
     Ok(SuiteReport {
         schema_version: SCHEMA_VERSION,
@@ -557,6 +679,7 @@ pub fn run_suite(cfg: &PerfConfig) -> Result<SuiteReport> {
         runs: cfg.runs,
         cases,
         engine_ab: ab,
+        coordinator,
         skipped,
     })
 }
@@ -609,6 +732,19 @@ pub fn render_table(r: &SuiteReport) -> String {
         ab.programs_match,
         ab.indexed.occ_digits_scanned,
         ab.reference.occ_digits_scanned,
+    ));
+    let cs = &r.coordinator;
+    out.push_str(&format!(
+        "coordinator shard hammer ({}): {} threads x {} jobs warm, single-lock \
+         {} ms vs {}-shard {} ms -> {:.2}x speedup (cold bake {} ms)\n",
+        cs.case_id,
+        cs.threads,
+        cs.jobs,
+        sci(cs.single_warm_ms),
+        cs.shards,
+        sci(cs.sharded_warm_ms),
+        cs.speedup,
+        sci(cs.cold_ms),
     ));
     for sk in &r.skipped {
         out.push_str(&format!("skipped: {} — {}\n", sk.id, sk.reason));
@@ -668,10 +804,25 @@ mod tests {
         assert_eq!(ab.indexed.heap_pops, ab.reference.heap_pops);
     }
 
+    /// The contention A/B completes with exact accounting (the
+    /// accounting ensures inside `coordinator_shard` are the real
+    /// assertions; timings are not compared — this host may be
+    /// single-core, the CI gate floors the speedup instead).
+    #[test]
+    fn coordinator_shard_bench_accounts_exactly() {
+        let b = coordinator_shard(1, "tiny/coordinator-shard").unwrap();
+        assert_eq!(b.case_id, "tiny/coordinator-shard");
+        assert_eq!(b.threads, 4);
+        assert_eq!(b.shards, 8);
+        assert!(b.jobs > 0 && b.lookups > 0);
+        assert!(b.single_warm_ms >= 0.0 && b.sharded_warm_ms >= 0.0);
+        assert!(b.speedup > 0.0);
+    }
+
     #[test]
     fn layer_problems_track_shapes() {
         let spec = synthetic_jet_spec_scaled(1, 4);
-        let ps = layer_problems(&spec);
+        let ps = nn::compile::layer_problems(&spec).unwrap();
         assert_eq!(ps.len(), 4);
         assert_eq!(ps[0].d_in, 4);
         assert_eq!(ps[0].d_out, 16);

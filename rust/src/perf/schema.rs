@@ -14,7 +14,7 @@
 //! * `min_speedup` gates the engine A/B ratio, which is same-machine
 //!   relative and therefore portable across CI hosts.
 
-use super::{CaseReport, EngineAb, SuiteReport};
+use super::{CaseReport, CoordinatorShardBench, EngineAb, SuiteReport};
 use crate::cse::CseStats;
 use crate::json::{self, Value};
 use crate::Result;
@@ -46,6 +46,13 @@ pub const DEFAULT_MIN_SPEEDUP: f64 = 1.25;
 
 /// Default relative tolerance for time metrics (+50 %).
 pub const DEFAULT_TIME_TOLERANCE: f64 = 0.5;
+
+/// Default coordinator-shard speedup floor written into blessed
+/// baselines. Deliberately modest: the warm hammer is lock-bound, so
+/// the win over a single mutex varies with core count far more than
+/// the engine A/B does — 1.1x still catches a refactor that reverts to
+/// one global lock.
+pub const DEFAULT_MIN_SHARD_SPEEDUP: f64 = 1.1;
 
 fn obj(entries: Vec<(&str, Value)>) -> Value {
     Value::Object(
@@ -102,6 +109,20 @@ fn engine_ab_value(ab: &EngineAb) -> Value {
     ])
 }
 
+fn coordinator_value(cs: &CoordinatorShardBench) -> Value {
+    obj(vec![
+        ("case", Value::Str(cs.case_id.clone())),
+        ("threads", int(cs.threads as u64)),
+        ("shards", int(cs.shards as u64)),
+        ("jobs", int(cs.jobs as u64)),
+        ("lookups", int(cs.lookups)),
+        ("cold_ms", Value::Float(cs.cold_ms)),
+        ("single_warm_ms", Value::Float(cs.single_warm_ms)),
+        ("sharded_warm_ms", Value::Float(cs.sharded_warm_ms)),
+        ("speedup", Value::Float(cs.speedup)),
+    ])
+}
+
 /// The full report as a JSON value (the `BENCH_cmvm.json` document).
 pub fn to_value(r: &SuiteReport) -> Value {
     obj(vec![
@@ -114,6 +135,7 @@ pub fn to_value(r: &SuiteReport) -> Value {
             Value::Array(r.cases.iter().map(case_value).collect()),
         ),
         ("engine_ab", engine_ab_value(&r.engine_ab)),
+        ("coordinator", coordinator_value(&r.coordinator)),
         (
             "skipped",
             Value::Array(
@@ -171,6 +193,7 @@ pub fn baseline_value(r: &SuiteReport, with_times: bool) -> Value {
         // instead of reporting misleading counter drift.
         ("jet_source", Value::Str(r.jet_source.clone())),
         ("min_speedup", Value::Float(DEFAULT_MIN_SPEEDUP)),
+        ("min_shard_speedup", Value::Float(DEFAULT_MIN_SHARD_SPEEDUP)),
         ("time_tolerance", Value::Float(DEFAULT_TIME_TOLERANCE)),
         ("cases", Value::Array(cases)),
     ])
@@ -204,6 +227,10 @@ pub struct Baseline {
     pub jet_source: Option<String>,
     /// Engine A/B speedup floor (absent = not gated).
     pub min_speedup: Option<f64>,
+    /// Coordinator shard-hammer speedup floor (absent = not gated; a
+    /// single-core host cannot meaningfully exceed 1.0, so only
+    /// multi-core CI baselines should pin this).
+    pub min_shard_speedup: Option<f64>,
     /// Relative tolerance for time metrics.
     pub time_tolerance: f64,
     /// Pinned cases.
@@ -224,6 +251,10 @@ pub fn parse_baseline(text: &str) -> Result<Baseline> {
         None => None,
     };
     let min_speedup = match v.get_opt("min_speedup") {
+        Some(x) => Some(x.as_f64()?),
+        None => None,
+    };
+    let min_shard_speedup = match v.get_opt("min_shard_speedup") {
         Some(x) => Some(x.as_f64()?),
         None => None,
     };
@@ -251,7 +282,15 @@ pub fn parse_baseline(text: &str) -> Result<Baseline> {
             cases.push(case);
         }
     }
-    Ok(Baseline { schema_version, bootstrap, jet_source, min_speedup, time_tolerance, cases })
+    Ok(Baseline {
+        schema_version,
+        bootstrap,
+        jet_source,
+        min_speedup,
+        min_shard_speedup,
+        time_tolerance,
+        cases,
+    })
 }
 
 #[cfg(test)]
@@ -294,6 +333,17 @@ mod tests {
                 indexed: CseStats::default(),
                 reference: CseStats::default(),
             },
+            coordinator: CoordinatorShardBench {
+                case_id: "coordinator/shard-hammer".into(),
+                threads: 4,
+                shards: 8,
+                jobs: 24,
+                lookups: 6144,
+                cold_ms: 12.0,
+                single_warm_ms: 4.0,
+                sharded_warm_ms: 2.0,
+                speedup: 2.0,
+            },
             skipped: vec![SkippedCase { id: "cmvm/64x64/lookahead".into(), reason: "O(N^3)".into() }],
         }
     }
@@ -315,6 +365,10 @@ mod tests {
         let ab = v.get("engine_ab").unwrap();
         assert!((ab.get("speedup").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-12);
         assert!(ab.get("programs_match").unwrap().as_bool().unwrap());
+        let cs = v.get("coordinator").unwrap();
+        assert_eq!(cs.get("threads").unwrap().as_i64().unwrap(), 4);
+        assert_eq!(cs.get("shards").unwrap().as_i64().unwrap(), 8);
+        assert!((cs.get("speedup").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-12);
         assert_eq!(v.get("skipped").unwrap().as_array().unwrap().len(), 1);
     }
 
@@ -327,6 +381,7 @@ mod tests {
         assert!(!b.bootstrap);
         assert_eq!(b.jet_source.as_deref(), Some("synthetic"));
         assert_eq!(b.min_speedup, Some(DEFAULT_MIN_SPEEDUP));
+        assert_eq!(b.min_shard_speedup, Some(DEFAULT_MIN_SHARD_SPEEDUP));
         assert_eq!(b.cases.len(), 1);
         let case = &b.cases[0];
         assert_eq!(case.id, "cmvm/2x2/da");
@@ -349,5 +404,6 @@ mod tests {
         assert!(b.bootstrap);
         assert_eq!(b.cases.len(), 0);
         assert_eq!(b.min_speedup, Some(1.25));
+        assert_eq!(b.min_shard_speedup, None, "stub without the key does not gate it");
     }
 }

@@ -22,7 +22,14 @@
 //! when an `objective` was posted — the `picked` configuration. For
 //! long-lived deployments the solution cache can be bounded with
 //! [`ServeConfig::cache_cap`] (`serve --cache-cap`); evictions are
-//! visible on the stats line.
+//! visible on the stats line. The cache itself can be sharded across
+//! independent locks ([`ServeConfig::cache_shards`], `serve
+//! --cache-shards`) so concurrent batches stop contending on one
+//! mutex, and a deployment can restart warm: the CLI loads a baked
+//! cache file into the coordinator before serving and saves it after
+//! EOF (`serve --cache-load/--cache-save`, wired through
+//! [`serve_with`]). The stats line reports both knobs
+//! (`cache_shards`, `cache_loaded`).
 //!
 //! ```
 //! use da4ml::serve::{serve, ServeConfig};
@@ -72,6 +79,11 @@ pub struct ServeConfig {
     /// default) keeps the cache unbounded, preserving the historical
     /// behavior.
     pub cache_cap: Option<usize>,
+    /// Solution-cache shard count (`serve --cache-shards`): the cache
+    /// splits into this many independently locked shards keyed by
+    /// job-key hash. `1` (the default) reproduces the historical
+    /// single-lock cache — including its exact eviction order.
+    pub cache_shards: usize,
 }
 
 impl Default for ServeConfig {
@@ -82,6 +94,7 @@ impl Default for ServeConfig {
             default_dc: -1,
             model: FpgaModel::default(),
             cache_cap: None,
+            cache_shards: 1,
         }
     }
 }
@@ -349,8 +362,24 @@ pub fn serve<R: BufRead, W: Write>(
     output: &mut W,
     cfg: &ServeConfig,
 ) -> Result<ServeSummary> {
-    let coord = Coordinator::new();
+    let coord = Coordinator::with_shards(cfg.cache_shards);
     coord.set_cache_cap(cfg.cache_cap);
+    serve_with(&coord, input, output, cfg)
+}
+
+/// [`serve`] against a caller-owned [`Coordinator`]. This is the warm
+/// restart surface: the CLI loads a persisted cache into the
+/// coordinator first (`serve --cache-load`), serves, then saves the
+/// final cache after EOF (`--cache-save`). The coordinator's own
+/// sharding/cap configuration wins — [`ServeConfig::cache_shards`] and
+/// [`ServeConfig::cache_cap`] are applied only by [`serve`], which owns
+/// its coordinator.
+pub fn serve_with<R: BufRead, W: Write>(
+    coord: &Coordinator,
+    input: R,
+    output: &mut W,
+    cfg: &ServeConfig,
+) -> Result<ServeSummary> {
     let mut summary = ServeSummary::default();
     let mut batch: Vec<Pending> = Vec::new();
     let batch_size = cfg.batch_size.max(1);
@@ -391,17 +420,17 @@ pub fn serve<R: BufRead, W: Write>(
             }
             // A genuine I/O failure: answer what we have, then stop.
             Err(e) => {
-                flush_batch(&coord, &mut batch, output, cfg, &mut summary)?;
+                flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
                 summary.stats = coord.stats();
                 return Err(e.into());
             }
         };
         batch.push(entry);
         if batch.len() >= batch_size {
-            flush_batch(&coord, &mut batch, output, cfg, &mut summary)?;
+            flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
         }
     }
-    flush_batch(&coord, &mut batch, output, cfg, &mut summary)?;
+    flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
     summary.stats = coord.stats();
     Ok(summary)
 }
@@ -594,6 +623,12 @@ fn flush_batch<W: Write>(
     o.insert("cache_hits".into(), Value::Int(stats.cache_hits as i64));
     o.insert("cache_size".into(), Value::Int(coord.cache_len() as i64));
     o.insert("cache_evictions".into(), Value::Int(stats.evictions as i64));
+    // Deployment-shape keys: how many independently locked shards the
+    // cache runs on, and how many solutions this process inherited from
+    // a persisted cache file (`serve --cache-load`) rather than
+    // computing or receiving over the wire.
+    o.insert("cache_shards".into(), Value::Int(coord.shard_count() as i64));
+    o.insert("cache_loaded".into(), Value::Int(stats.loaded as i64));
     o.insert("total_opt_ms".into(), Value::Float(stats.total_opt_time.as_secs_f64() * 1e3));
     // Optimizer work proxies (cumulative, executed jobs only — cache
     // hits add nothing): lets clients watch perf per batch the same way
@@ -911,6 +946,120 @@ not even json
         assert_eq!(module_name("0abc"), "m_0abc");
         assert_eq!(module_name(""), "m_");
         assert_eq!(module_name("ok_name"), "ok_name");
+    }
+
+    /// `--cache-shards` must be invisible on the wire: the same input
+    /// served over 1 shard and over 4 shards yields byte-identical
+    /// reply lines once the two wall-clock fields (`opt_ms`,
+    /// `total_opt_ms`) are masked — and the masked fields themselves
+    /// only differ because they are timings, not because the solutions
+    /// or the accounting do.
+    #[test]
+    fn sharded_serve_replies_match_single_shard_byte_for_byte() {
+        let mut input = String::new();
+        for i in 0..6 {
+            // Repeat every matrix once so both layouts serve a mix of
+            // misses and hits. No cache cap: a cap legitimately changes
+            // eviction timing across shard layouts (it splits
+            // per-shard), which is exactly why the determinism claim is
+            // scoped to the uncapped cache.
+            let line = format!(
+                "{{\"id\": \"j{i}\", \"matrix\": [[{}, 3], [5, {}]], \"dc\": -1}}\n",
+                i + 1,
+                i + 2
+            );
+            input.push_str(&line);
+            input.push_str(&line);
+        }
+        let mask_timing = |lines: Vec<Value>| -> Vec<String> {
+            lines
+                .into_iter()
+                .map(|mut v| {
+                    if let Value::Object(o) = &mut v {
+                        for key in ["opt_ms", "total_opt_ms"] {
+                            if o.contains_key(key) {
+                                o.insert(key.into(), Value::Int(0));
+                            }
+                        }
+                    }
+                    json::to_string(&v)
+                })
+                .collect()
+        };
+        let run_with_shards = |shards: usize| {
+            let cfg = ServeConfig {
+                batch_size: 1,
+                cache_shards: shards,
+                ..ServeConfig::default()
+            };
+            run(&input, &cfg)
+        };
+        let (sum1, lines1) = run_with_shards(1);
+        let (sum4, lines4) = run_with_shards(4);
+        assert_eq!(sum1.jobs, 12);
+        assert_eq!(sum4.jobs, 12);
+        assert_eq!(sum1.stats.submitted, sum4.stats.submitted);
+        assert_eq!(sum1.stats.cache_hits, sum4.stats.cache_hits);
+        let masked1 = mask_timing(lines1);
+        let mut masked4 = mask_timing(lines4);
+        // The only licensed difference: the stats lines advertise their
+        // own shard count.
+        for line in &mut masked4 {
+            *line = line.replace("\"cache_shards\":4", "\"cache_shards\":1");
+        }
+        assert_eq!(masked1, masked4);
+    }
+
+    /// The stats line advertises the deployment shape: shard count and
+    /// how many solutions arrived from a persisted cache file.
+    #[test]
+    fn stats_line_reports_shards_and_loaded() {
+        let input = "{\"id\": \"a\", \"matrix\": [[3, 5], [-7, 9]], \"dc\": -1}\n";
+        let cfg = ServeConfig { cache_shards: 3, ..ServeConfig::default() };
+        let (_, lines) = run(input, &cfg);
+        let stats = lines.last().unwrap();
+        assert_eq!(stats.get("cache_shards").unwrap().as_i64().unwrap(), 3);
+        assert_eq!(stats.get("cache_loaded").unwrap().as_i64().unwrap(), 0);
+    }
+
+    /// Warm restart through [`serve_with`]: a reply served from a
+    /// loaded-from-disk cache is byte-identical to one served from the
+    /// live cache that was saved — including the exact `opt_ms` (the
+    /// persisted nanosecond counter round-trips).
+    #[test]
+    fn loaded_cache_serves_byte_identical_replies() {
+        let job = crate::coordinator::CompileJob {
+            name: "warm".into(),
+            problem: CmvmProblem::new(2, 2, vec![3, 5, -7, 9], 8),
+            strategy: Strategy::Da { dc: -1 },
+        };
+        let live = Coordinator::new();
+        live.compile_cached(&job).unwrap();
+        let saved = live.save_cache();
+
+        let input = "{\"id\": \"a\", \"matrix\": [[3, 5], [-7, 9]], \"dc\": -1}\n";
+        let cfg = ServeConfig::default();
+        let mut out_live = Vec::new();
+        let sum_live =
+            serve_with(&live, Cursor::new(input), &mut out_live, &cfg).unwrap();
+        assert_eq!(sum_live.stats.cache_hits, 1, "live cache answers the wire job");
+
+        let warm = Coordinator::new();
+        assert_eq!(warm.load_cache(&saved).unwrap(), 1);
+        let mut out_warm = Vec::new();
+        let sum_warm =
+            serve_with(&warm, Cursor::new(input), &mut out_warm, &cfg).unwrap();
+        assert_eq!(sum_warm.stats.cache_hits, 1, "loaded cache answers the wire job");
+
+        let reply_live = String::from_utf8(out_live).unwrap();
+        let reply_warm = String::from_utf8(out_warm).unwrap();
+        // Result lines are byte-identical; only the stats lines differ
+        // (the warm run reports cache_loaded=1, the live one carries
+        // the pre-serve compile in submitted/total_opt_ms).
+        assert_eq!(reply_live.lines().next().unwrap(), reply_warm.lines().next().unwrap());
+        assert!(reply_live.lines().next().unwrap().contains("\"cached\":true"));
+        let warm_stats = json::parse(reply_warm.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(warm_stats.get("cache_loaded").unwrap().as_i64().unwrap(), 1);
     }
 
     /// Within one batch, duplicate jobs may race to a miss; the

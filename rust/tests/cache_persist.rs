@@ -1,0 +1,207 @@
+//! Integration test for cache persistence: a serve run baked into a
+//! schema-v1 cache file must warm-start a fresh coordinator so that the
+//! same workload is answered entirely from the loaded cache with
+//! byte-identical result lines (only the `cached` flag flips). Also
+//! exercises the `da4ml cache bake|info|merge` CLI round trip end to
+//! end through the real binary.
+
+use da4ml::coordinator::Coordinator;
+use da4ml::json::{self, Value};
+use da4ml::serve::{serve_with, ServeConfig};
+use da4ml::util::Rng;
+use std::io::Cursor;
+
+fn matrix_json(seed: u64, d_in: usize, d_out: usize) -> String {
+    let mut rng = Rng::seed_from(seed);
+    let rows: Vec<String> = (0..d_in)
+        .map(|_| {
+            let row: Vec<String> =
+                (0..d_out).map(|_| rng.range_i64(-127, 127).to_string()).collect();
+            format!("[{}]", row.join(","))
+        })
+        .collect();
+    format!("[{}]", rows.join(","))
+}
+
+/// The determinism contract of `docs/cache.md`: replies computed live,
+/// replies served from the in-memory cache, and replies served from a
+/// cache reloaded off disk are byte-identical (the `cached` flag is
+/// the only field allowed to differ, and `opt_ms` survives the disk
+/// round trip exactly because the file stores integer nanoseconds).
+#[test]
+fn warm_start_serves_byte_identical_replies() {
+    let mut input = String::new();
+    for round in 0..2 {
+        for (i, seed) in [41u64, 42, 43].iter().enumerate() {
+            input.push_str(&format!(
+                "{{\"id\": \"r{round}-m{i}\", \"matrix\": {}, \"dc\": -1}}\n",
+                matrix_json(*seed, 6, 6)
+            ));
+        }
+    }
+    let cfg = ServeConfig { batch_size: 1, ..ServeConfig::default() };
+
+    // Cold run: 3 compiles + 3 in-memory hits.
+    let cold = Coordinator::new();
+    let mut cold_out = Vec::new();
+    let cold_summary =
+        serve_with(&cold, Cursor::new(input.clone()), &mut cold_out, &cfg).unwrap();
+    assert_eq!(cold_summary.jobs, 6);
+    assert_eq!(cold_summary.stats.cache_hits, 3);
+    assert_eq!(cold_summary.stats.loaded, 0);
+
+    // Persist, then warm-start a fresh coordinator from the file text.
+    let saved = cold.save_cache();
+    let warm = Coordinator::new();
+    assert_eq!(warm.load_cache(&saved).unwrap(), 3);
+    // The file format is canonical: saving the loaded cache reproduces
+    // the original bytes.
+    assert_eq!(warm.save_cache(), saved, "save -> load -> save must be stable");
+
+    let mut warm_out = Vec::new();
+    let warm_summary = serve_with(&warm, Cursor::new(input), &mut warm_out, &cfg).unwrap();
+    assert_eq!(warm_summary.jobs, 6);
+    assert_eq!(warm_summary.stats.submitted, 6);
+    assert_eq!(warm_summary.stats.cache_hits, 6, "every warm job must hit");
+    assert_eq!(warm_summary.stats.loaded, 3);
+
+    let cold_text = String::from_utf8(cold_out).unwrap();
+    let warm_text = String::from_utf8(warm_out).unwrap();
+    let mask = |text: &str| -> Vec<String> {
+        text.lines()
+            .filter(|l| {
+                json::parse(l).unwrap().get("type").unwrap().as_str().unwrap() == "result"
+            })
+            .map(|l| {
+                l.replace("\"cached\":false", "\"cached\":#")
+                    .replace("\"cached\":true", "\"cached\":#")
+            })
+            .collect()
+    };
+    let cold_results = mask(&cold_text);
+    let warm_results = mask(&warm_text);
+    assert_eq!(cold_results.len(), 6);
+    assert_eq!(
+        cold_results, warm_results,
+        "loaded-from-disk replies must be byte-identical to computed ones"
+    );
+    for line in warm_text.lines() {
+        let v = json::parse(line).unwrap();
+        match v.get("type").unwrap().as_str().unwrap() {
+            "result" => {
+                assert!(v.get("cached").unwrap().as_bool().unwrap(), "warm reply not cached")
+            }
+            "stats" => {
+                assert_eq!(v.get("cache_loaded").unwrap().as_i64().unwrap(), 3);
+                assert_eq!(v.get("cache_shards").unwrap().as_i64().unwrap(), 1);
+            }
+            other => panic!("unexpected reply type {other}"),
+        }
+    }
+}
+
+/// Sharding is a cache-internal detail: a cache baked by a sharded
+/// coordinator warm-starts a single-shard one (and vice versa), since
+/// the file orders entries by key, not by shard.
+#[test]
+fn cache_files_are_shard_layout_independent() {
+    let mut input = String::new();
+    for (i, seed) in [61u64, 62, 63, 64, 65].iter().enumerate() {
+        input.push_str(&format!(
+            "{{\"id\": \"m{i}\", \"matrix\": {}, \"dc\": -1}}\n",
+            matrix_json(*seed, 4, 4)
+        ));
+    }
+    let cfg = ServeConfig { batch_size: 1, ..ServeConfig::default() };
+    let sharded = Coordinator::with_shards(4);
+    let mut out = Vec::new();
+    serve_with(&sharded, Cursor::new(input.clone()), &mut out, &cfg).unwrap();
+    let saved = sharded.save_cache();
+
+    for shards in [1usize, 3] {
+        let coord = Coordinator::with_shards(shards);
+        assert_eq!(coord.load_cache(&saved).unwrap(), 5, "{shards}-shard load");
+        let mut warm_out = Vec::new();
+        let summary =
+            serve_with(&coord, Cursor::new(input.clone()), &mut warm_out, &cfg).unwrap();
+        assert_eq!(summary.stats.cache_hits, 5, "{shards}-shard warm run must all hit");
+    }
+}
+
+/// End-to-end CLI round trip through the real binary:
+/// `cache bake --corpus` -> `cache info` -> `serve --cache-load`
+/// (all hits) -> `cache merge`. Mirrors the CI perf-smoke recipe.
+#[test]
+fn cli_bake_info_warm_serve_round_trip() {
+    use std::process::Command;
+
+    let dir = std::env::temp_dir().join(format!("da4ml-cache-persist-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let jobs = dir.join("jobs.jsonl");
+    let cache = dir.join("cache.json");
+    let merged = dir.join("merged.json");
+    std::fs::write(
+        &jobs,
+        "{\"id\": \"a\", \"matrix\": [[3, 5], [-7, 9]], \"dc\": -1}\n\
+         {\"id\": \"b\", \"matrix\": [[2, 4, 6], [1, -8, 11]], \"dc\": -1}\n",
+    )
+    .unwrap();
+    let bin = env!("CARGO_BIN_EXE_da4ml");
+
+    let bake = Command::new(bin)
+        .args(["cache", "bake", "--corpus"])
+        .arg(&jobs)
+        .arg("--out")
+        .arg(&cache)
+        .output()
+        .unwrap();
+    let bake_out = String::from_utf8_lossy(&bake.stdout).to_string();
+    assert!(bake.status.success(), "bake failed: {}", String::from_utf8_lossy(&bake.stderr));
+    assert!(bake_out.contains("2 solutions from 2 jobs"), "bake stdout: {bake_out}");
+
+    let info = Command::new(bin).args(["cache", "info"]).arg(&cache).output().unwrap();
+    let info_out = String::from_utf8_lossy(&info.stdout).to_string();
+    assert!(info.status.success(), "info failed: {}", String::from_utf8_lossy(&info.stderr));
+    assert!(info_out.contains("schema v1"), "info stdout: {info_out}");
+    assert!(info_out.contains("2 entries"), "info stdout: {info_out}");
+
+    let serve = Command::new(bin)
+        .args(["serve", "--batch", "1", "--input"])
+        .arg(&jobs)
+        .arg("--cache-load")
+        .arg(&cache)
+        .output()
+        .unwrap();
+    assert!(serve.status.success(), "serve failed: {}", String::from_utf8_lossy(&serve.stderr));
+    let serve_err = String::from_utf8_lossy(&serve.stderr).to_string();
+    assert!(
+        serve_err.contains("warm start: loaded 2 solutions"),
+        "serve stderr: {serve_err}"
+    );
+    let serve_out = String::from_utf8_lossy(&serve.stdout).to_string();
+    let results: Vec<Value> = serve_out
+        .lines()
+        .map(|l| json::parse(l).unwrap())
+        .filter(|v| v.get("type").unwrap().as_str().unwrap() == "result")
+        .collect();
+    assert_eq!(results.len(), 2, "serve stdout: {serve_out}");
+    for r in &results {
+        assert!(
+            r.get("cached").unwrap().as_bool().unwrap(),
+            "warm serve must answer from the baked cache: {serve_out}"
+        );
+    }
+
+    let merge = Command::new(bin)
+        .args(["cache", "merge"])
+        .arg(&merged)
+        .arg(&cache)
+        .arg(&cache)
+        .output()
+        .unwrap();
+    let merge_out = String::from_utf8_lossy(&merge.stdout).to_string();
+    assert!(merge.status.success(), "merge failed: {}", String::from_utf8_lossy(&merge.stderr));
+    assert!(merge_out.contains("merged 2 entries"), "merge stdout: {merge_out}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
