@@ -1,0 +1,65 @@
+//! Fuzz target for the streaming JSON pull parser (`json::pull`).
+//!
+//! Properties checked on every input:
+//!
+//! 1. Neither the pull parser nor the DOM parser panics, whatever the
+//!    bytes.
+//! 2. The pull walk terminates within the liveness bound: every
+//!    non-`Eof` event consumes at least one input byte, so a document
+//!    can never yield more events than bytes (+1 for the closing
+//!    event of an empty-input probe).
+//! 3. The DOM parser is a fold over the same event stream, so both
+//!    sides must agree on well-formedness.
+//! 4. Serialization stabilizes: `to_string ∘ parse` reaches a
+//!    fixpoint after one normalization round. Round one may change
+//!    the text legitimately — `-0.0` prints as `-0`, which reparses
+//!    as the integer `0` — but round two must be byte-identical.
+//!    (Huge integral floats render as integer literals outside the
+//!    `i64` range, which the parser rejects by design; those skip the
+//!    fixpoint check at the first reparse.)
+
+use da4ml::json::pull::{Event, PullParser};
+use da4ml::json::{parse, to_string};
+
+fn main() {
+    da4ml_fuzz::run("json_pull", |data| {
+        let Ok(text) = std::str::from_utf8(data) else {
+            return;
+        };
+
+        let mut parser = PullParser::new(text);
+        let mut events = 0usize;
+        let pull_ok = loop {
+            match parser.next() {
+                Ok(Event::Eof) => break true,
+                Ok(_) => {
+                    events += 1;
+                    assert!(events <= text.len() + 1, "pull parser livelock on {text:?}");
+                }
+                Err(_) => break false,
+            }
+        };
+
+        let dom = parse(text);
+        assert_eq!(
+            pull_ok,
+            dom.is_ok(),
+            "pull and DOM parsers disagree on the well-formedness of input {text:?}"
+        );
+
+        if let Ok(v) = dom {
+            let s1 = to_string(&v);
+            if let Ok(v2) = parse(&s1) {
+                let s2 = to_string(&v2);
+                let v3 = parse(&s2).unwrap_or_else(|e| {
+                    panic!("normalized output {s2:?} failed to reparse: {e}")
+                });
+                assert_eq!(
+                    to_string(&v3),
+                    s2,
+                    "serializer failed to reach a fixpoint after one round for {text:?}"
+                );
+            }
+        }
+    });
+}

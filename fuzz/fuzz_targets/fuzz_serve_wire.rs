@@ -1,0 +1,49 @@
+//! Fuzz target for the serve wire decoder (`serve::Request`).
+//!
+//! The socket transport decodes request lines straight from reused
+//! byte buffers ([`da4ml::serve::Request::from_json_bytes`]) while the
+//! stdin transport decodes from `&str`
+//! ([`da4ml::serve::Request::from_json`]). Properties checked on every
+//! input:
+//!
+//! 1. The byte-slice entry point never panics, whatever the bytes.
+//! 2. Non-UTF-8 input is a decode error, never a partial decode.
+//! 3. On valid UTF-8 the two entry points agree exactly: same
+//!    accept/reject verdict, identical decoded request (via `Debug`),
+//!    identical error rendering — so the transports cannot drift
+//!    apart on what counts as a well-formed job.
+
+use da4ml::serve::Request;
+
+fn main() {
+    da4ml_fuzz::run("serve_wire", |data| {
+        let from_bytes = Request::from_json_bytes(data);
+        match std::str::from_utf8(data) {
+            Ok(text) => {
+                let from_str = Request::from_json(text);
+                match (&from_bytes, &from_str) {
+                    (Ok(a), Ok(b)) => assert_eq!(
+                        format!("{a:?}"),
+                        format!("{b:?}"),
+                        "byte and str decoders produced different requests for {text:?}"
+                    ),
+                    (Err(a), Err(b)) => assert_eq!(
+                        format!("{a:#}"),
+                        format!("{b:#}"),
+                        "byte and str decoders produced different errors for {text:?}"
+                    ),
+                    (a, b) => panic!(
+                        "byte and str decoders disagree on {text:?}: \
+                         bytes → {:?}, str → {:?}",
+                        a.is_ok(),
+                        b.is_ok()
+                    ),
+                }
+            }
+            Err(_) => assert!(
+                from_bytes.is_err(),
+                "non-UTF-8 input must be rejected, got {from_bytes:?}"
+            ),
+        }
+    });
+}

@@ -1,0 +1,304 @@
+//! In-tree mutation fuzzer for the da4ml wire decoders.
+//!
+//! The workspace is hermetic (no registry access), so the usual
+//! `cargo-fuzz`/libFuzzer pairing is unavailable. This crate keeps the
+//! cargo-fuzz *layout* — one binary per target under `fuzz_targets/`,
+//! a seed corpus under `corpus/<target>/` — but drives the targets
+//! with a small deterministic mutation engine built on
+//! [`da4ml::util::Rng`]. Every corpus seed runs unmutated first, then
+//! `--runs` mutated inputs are derived from it; a property violation
+//! is a plain `panic!`, so a failing input aborts the process after
+//! printing the run seed that reproduces it.
+//!
+//! ```text
+//! cargo run -p da4ml-fuzz --bin fuzz_json_pull -- --runs 4096
+//! cargo run -p da4ml-fuzz --bin fuzz_serve_wire -- --runs 4096 --seed 7
+//! ```
+
+use da4ml::util::Rng;
+use std::fs;
+use std::path::PathBuf;
+
+/// Command-line options shared by every fuzz target.
+#[derive(Debug, Clone)]
+pub struct Options {
+    /// Mutated inputs to run after the unmutated corpus pass.
+    pub runs: u64,
+    /// Base seed; each run derives its own RNG stream from it.
+    pub seed: u64,
+    /// Mutated inputs are clamped to this many bytes.
+    pub max_len: usize,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Self {
+            runs: 1024,
+            seed: 0xda4b_a5e,
+            max_len: 4096,
+        }
+    }
+}
+
+impl Options {
+    /// Parse `--runs N`, `--seed N` and `--max-len N` from the process
+    /// arguments. Unknown flags abort with a usage message so a typo
+    /// cannot silently shrink a CI fuzz budget.
+    pub fn from_args() -> Self {
+        let mut opts = Self::default();
+        let mut args = std::env::args().skip(1);
+        while let Some(flag) = args.next() {
+            match flag.as_str() {
+                "--runs" => opts.runs = arg_u64(&mut args, "--runs"),
+                "--seed" => opts.seed = arg_u64(&mut args, "--seed"),
+                "--max-len" => opts.max_len = arg_u64(&mut args, "--max-len") as usize,
+                other => panic!("unknown flag {other:?} (want --runs, --seed, --max-len)"),
+            }
+        }
+        opts
+    }
+}
+
+fn arg_u64(args: &mut impl Iterator<Item = String>, flag: &str) -> u64 {
+    let text = args.next().unwrap_or_else(|| panic!("{flag} requires a value"));
+    text.parse()
+        .unwrap_or_else(|e| panic!("{flag}: invalid number {text:?}: {e}"))
+}
+
+/// Load the seed corpus for `target`: every non-empty line of every
+/// file under `corpus/<target>/` (sorted by file name) is one input,
+/// so a single `seeds.jsonl` and one-file-per-seed layouts both work.
+/// Falls back to `{}` when the directory is missing or empty so a
+/// target never fuzzes from nothing.
+pub fn load_corpus(target: &str) -> Vec<Vec<u8>> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("corpus")
+        .join(target);
+    let mut files: Vec<PathBuf> = match fs::read_dir(&dir) {
+        Ok(entries) => entries
+            .filter_map(Result::ok)
+            .map(|e| e.path())
+            .filter(|p| p.is_file())
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    files.sort();
+    let mut corpus = Vec::new();
+    for path in files {
+        let Ok(bytes) = fs::read(&path) else { continue };
+        for line in bytes.split(|&b| b == b'\n') {
+            let line = trim_ascii(line);
+            if !line.is_empty() {
+                corpus.push(line.to_vec());
+            }
+        }
+    }
+    if corpus.is_empty() {
+        corpus.push(b"{}".to_vec());
+    }
+    corpus
+}
+
+fn trim_ascii(mut bytes: &[u8]) -> &[u8] {
+    while let [first, rest @ ..] = bytes {
+        if first.is_ascii_whitespace() {
+            bytes = rest;
+        } else {
+            break;
+        }
+    }
+    while let [rest @ .., last] = bytes {
+        if last.is_ascii_whitespace() {
+            bytes = rest;
+        } else {
+            break;
+        }
+    }
+    bytes
+}
+
+/// Structure-aware dictionary: wire keywords and boundary literals the
+/// byte-level mutations would take a long time to stumble into
+/// (`-0.0` and `1e300` exercise the serializer's float edge cases,
+/// the quoted keys steer mutants toward deep decoder states).
+const TOKENS: &[&[u8]] = &[
+    b"{",
+    b"}",
+    b"[",
+    b"]",
+    b":",
+    b",",
+    b"\"",
+    b"\\",
+    b"null",
+    b"true",
+    b"false",
+    b"-0.0",
+    b"1e300",
+    b"-9223372036854775808",
+    b"9223372036854775807",
+    b"\\u0041",
+    b"\\ud834",
+    b"\"type\"",
+    b"\"explore\"",
+    b"\"shutdown\"",
+    b"\"stats\"",
+    b"\"id\"",
+    b"\"matrix\"",
+    b"\"bits\"",
+    b"\"strategy\"",
+    b"\"dc\"",
+    b"\"emit\"",
+    b"\"objective\"",
+    b"\"verilog\"",
+];
+
+/// Derive one mutated input: clone a random corpus seed, apply 1..=8
+/// random mutations (bit flips, byte edits, span duplication, splices
+/// from other seeds, truncation, dictionary-token insertion), clamp to
+/// `max_len`.
+pub fn mutate(corpus: &[Vec<u8>], rng: &mut Rng, max_len: usize) -> Vec<u8> {
+    let mut buf = corpus[rng.below(corpus.len())].clone();
+    let steps = 1 + rng.below(8);
+    for _ in 0..steps {
+        mutate_once(&mut buf, corpus, rng);
+    }
+    buf.truncate(max_len);
+    buf
+}
+
+fn mutate_once(buf: &mut Vec<u8>, corpus: &[Vec<u8>], rng: &mut Rng) {
+    match rng.below(8) {
+        0 => {
+            // Flip one bit.
+            if !buf.is_empty() {
+                let i = rng.below(buf.len());
+                buf[i] ^= 1 << rng.below(8);
+            }
+        }
+        1 => {
+            // Overwrite one byte with a random value.
+            if !buf.is_empty() {
+                let i = rng.below(buf.len());
+                buf[i] = rng.next_u64() as u8;
+            }
+        }
+        2 => {
+            // Insert one random byte.
+            let i = rng.below(buf.len() + 1);
+            buf.insert(i, rng.next_u64() as u8);
+        }
+        3 => {
+            // Delete one byte.
+            if !buf.is_empty() {
+                let i = rng.below(buf.len());
+                buf.remove(i);
+            }
+        }
+        4 => {
+            // Duplicate a short span to a random position.
+            if !buf.is_empty() {
+                let start = rng.below(buf.len());
+                let len = (1 + rng.below(16)).min(buf.len() - start);
+                let span: Vec<u8> = buf[start..start + len].to_vec();
+                let at = rng.below(buf.len() + 1);
+                buf.splice(at..at, span);
+            }
+        }
+        5 => {
+            // Splice in a random slice of another corpus seed.
+            let donor = &corpus[rng.below(corpus.len())];
+            if !donor.is_empty() {
+                let start = rng.below(donor.len());
+                let len = (1 + rng.below(32)).min(donor.len() - start);
+                let at = rng.below(buf.len() + 1);
+                buf.splice(at..at, donor[start..start + len].iter().copied());
+            }
+        }
+        6 => {
+            // Truncate.
+            let keep = rng.below(buf.len() + 1);
+            buf.truncate(keep);
+        }
+        _ => {
+            // Insert a dictionary token.
+            let token = TOKENS[rng.below(TOKENS.len())];
+            let at = rng.below(buf.len() + 1);
+            buf.splice(at..at, token.iter().copied());
+        }
+    }
+}
+
+/// Drive `check` over the whole corpus unmutated, then over
+/// [`Options::runs`] mutated inputs. On a property violation
+/// (`check` panics) the failing run's derived seed and escaped input
+/// are printed before the panic propagates, so
+/// `--runs 1 --seed <printed>` reproduces it in isolation.
+pub fn run(target: &str, mut check: impl FnMut(&[u8])) {
+    let opts = Options::from_args();
+    let corpus = load_corpus(target);
+    for (i, seed_input) in corpus.iter().enumerate() {
+        guarded(target, &format!("corpus[{i}]"), seed_input, &mut check);
+    }
+    for i in 0..opts.runs {
+        // Per-run stream: reproducible from the printed seed alone,
+        // independent of how many runs preceded it.
+        let run_seed = opts.seed.wrapping_add(i).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut rng = Rng::seed_from(run_seed);
+        let input = mutate(&corpus, &mut rng, opts.max_len);
+        guarded(target, &format!("run seed {run_seed:#x}"), &input, &mut check);
+    }
+    println!(
+        "fuzz {target}: {} corpus seeds + {} mutated runs, no property violations",
+        corpus.len(),
+        opts.runs
+    );
+}
+
+fn guarded(target: &str, label: &str, input: &[u8], check: &mut impl FnMut(&[u8])) {
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| check(input)));
+    if let Err(panic) = outcome {
+        eprintln!(
+            "fuzz {target}: property violation at {label}\n  input ({} bytes): {}",
+            input.len(),
+            escape(input)
+        );
+        std::panic::resume_unwind(panic);
+    }
+}
+
+fn escape(bytes: &[u8]) -> String {
+    bytes
+        .iter()
+        .flat_map(|&b| std::ascii::escape_default(b))
+        .map(char::from)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_loads_and_mutations_stay_bounded() {
+        for target in ["json_pull", "serve_wire"] {
+            let corpus = load_corpus(target);
+            assert!(!corpus.is_empty(), "{target}: corpus must never be empty");
+            let mut rng = Rng::seed_from(42);
+            for _ in 0..256 {
+                let input = mutate(&corpus, &mut rng, 128);
+                assert!(input.len() <= 128);
+            }
+        }
+    }
+
+    #[test]
+    fn mutation_streams_are_deterministic() {
+        let corpus = load_corpus("json_pull");
+        let mut a = Rng::seed_from(7);
+        let mut b = Rng::seed_from(7);
+        for _ in 0..64 {
+            assert_eq!(mutate(&corpus, &mut a, 512), mutate(&corpus, &mut b, 512));
+        }
+    }
+}

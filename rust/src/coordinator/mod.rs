@@ -42,7 +42,12 @@
 //!
 //! The long-lived JSONL compile service ([`crate::serve`]) drives
 //! batches through [`Coordinator::compile_batch`], which reports the
-//! per-job cache-hit flag the streamed replies expose. For long-lived
+//! per-job cache-hit flag the streamed replies expose. The concurrent
+//! socket server ([`crate::serve::server`]) is the scenario sharding
+//! was built for: one `Arc<Coordinator>` shared by a worker pool
+//! serving many client connections at once, where one client's
+//! compile warms the cache for every other client and shard-local
+//! locks keep the warm path contention-free. For long-lived
 //! deployments the cache can be bounded
 //! ([`Coordinator::with_cache_cap`] / `serve --cache-cap`): past the
 //! cap, least-recently-used solutions are evicted (counted in

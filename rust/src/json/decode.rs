@@ -57,6 +57,16 @@ impl<'a> Decoder<'a> {
         Self { p: PullParser::with_max_depth(text, max_depth) }
     }
 
+    /// Decoder over raw bytes (UTF-8 validated here, not copied). The
+    /// socket transport reads request lines out of a reused byte
+    /// buffer; this is its entry into the same zero-copy pipeline.
+    pub fn from_bytes(bytes: &'a [u8]) -> Result<Self> {
+        match std::str::from_utf8(bytes) {
+            Ok(text) => Ok(Self::new(text)),
+            Err(e) => bail!("invalid UTF-8: {e}"),
+        }
+    }
+
     /// Consume the opening `{` of an object.
     pub fn object_start(&mut self) -> Result<()> {
         match self.p.next()? {

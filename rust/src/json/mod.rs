@@ -36,7 +36,7 @@ pub mod decode;
 pub mod pull;
 
 #[cfg(test)]
-mod legacy;
+pub(crate) mod legacy;
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;

@@ -40,8 +40,11 @@
 //! zero-copy pull parser feeds typed decoders so weight matrices and
 //! test vectors never materialize a DOM tree, and the [`serve`] module
 //! turns the [`coordinator`] into a long-lived JSONL compile service
-//! (`da4ml serve`). `ARCHITECTURE.md` at the repository root maps every
-//! module to its paper section and walks both data flows.
+//! (`da4ml serve`) — either over stdin, or as a concurrent socket
+//! server ([`serve::server`]) with bounded in-flight work,
+//! per-connection backpressure and graceful drain. `ARCHITECTURE.md`
+//! at the repository root maps every module to its paper section and
+//! walks both data flows.
 //!
 //! The [`perf`] module is the measurement subsystem: a fixed benchmark
 //! suite (`da4ml perf`) that times the optimize/lower/emit phases,

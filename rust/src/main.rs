@@ -79,6 +79,34 @@ fn parse_strategy(s: &str, dc: i32) -> Strategy {
     }
 }
 
+/// Set by the SIGTERM/SIGINT handler; polled by the socket server's
+/// accept loop to start a graceful drain.
+static TERM_REQUESTED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn on_term(_signum: i32) {
+    // Only async-signal-safe work here: set the flag, nothing else.
+    TERM_REQUESTED.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+fn term_requested() -> bool {
+    TERM_REQUESTED.load(std::sync::atomic::Ordering::SeqCst)
+}
+
+/// Route SIGTERM and SIGINT to the drain flag. Raw libc `signal` —
+/// the offline build has no `signal-hook`/`ctrlc` crate, and a
+/// one-shot boolean handler is all the drain protocol needs.
+fn install_term_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_term);
+        signal(SIGINT, on_term);
+    }
+}
+
 fn load_spec(path: &str) -> Result<NetworkSpec> {
     NetworkSpec::from_json(&runtime::load_text(path)?)
 }
@@ -99,11 +127,19 @@ const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|se
   dot <spec.weights.json> <out.dot> [--dc D]  (Graphviz adder graph)
   serve [--input jobs.jsonl] [--batch N] [--dc D] [--threads T] [--cache-cap N]
         [--cache-shards N] [--cache-load cache.json] [--cache-save cache.json]
+        [--socket /path.sock [--listen host:port] [--workers N]
+         [--stats-every N] [--max-inflight N] [--conn-inflight N]]
+        [--connect /path.sock|host:port]
         (JSONL compile service: jobs on stdin or --input, reports on
-         stdout, summary on stderr; --cache-cap bounds the solution
-         cache with LRU eviction, --cache-shards splits it across
-         independently locked shards, --cache-load/--cache-save restart
-         the service warm; wire format in docs/serve.md)
+         stdout, summary on stderr; --socket starts the concurrent
+         socket server instead — Unix socket always, TCP with --listen,
+         many clients over one shared cache, busy replies past
+         --max-inflight, graceful drain on SIGTERM/SIGINT or a
+         {\"type\": \"shutdown\"} control line; --connect streams jobs
+         to a running server and prints its replies; --cache-cap bounds
+         the solution cache with LRU eviction, --cache-shards splits it
+         across independently locked shards, --cache-load/--cache-save
+         restart the service warm; wire format in docs/serve.md)
   perf [--smoke] [--runs N] [--out BENCH_cmvm.json]
        [--baseline ci/bench_baseline.json] [--bless file] [--with-times]
        (fixed benchmark suite over optimize/lower/emit + the CSE engine
@@ -481,6 +517,29 @@ fn main() -> Result<()> {
             );
         }
         "serve" => {
+            // Thin client mode: stream jobs to a running socket server
+            // and print its reply stream (same bytes the stdin
+            // transport would produce for the same jobs).
+            if let Some(target) = args.flags.get("connect") {
+                let stdout = std::io::stdout();
+                let mut out = std::io::BufWriter::new(stdout.lock());
+                match args.flags.get("input") {
+                    Some(path) => {
+                        let file = std::fs::File::open(path)
+                            .map_err(|e| anyhow::anyhow!("opening {path}: {e}"))?;
+                        da4ml::serve::server::run_client(
+                            target,
+                            std::io::BufReader::new(file),
+                            &mut out,
+                        )?;
+                    }
+                    None => {
+                        let stdin = std::io::stdin();
+                        da4ml::serve::server::run_client(target, stdin.lock(), &mut out)?;
+                    }
+                }
+                return Ok(());
+            }
             let cache_cap = match args.flags.get("cache-cap") {
                 Some(v) => Some(
                     v.parse::<usize>()
@@ -506,6 +565,59 @@ fn main() -> Result<()> {
                     .load_cache(&text)
                     .map_err(|e| anyhow::anyhow!("loading cache {path}: {e:#}"))?;
                 eprintln!("serve: warm start: loaded {n} solutions from {path}");
+            }
+            // Socket server mode: many concurrent clients over the
+            // same coordinator; drained gracefully by SIGTERM/SIGINT
+            // or a shutdown control line from any client.
+            if let Some(socket) = args.flags.get("socket") {
+                let scfg = da4ml::serve::server::ServerConfig {
+                    serve: cfg.clone(),
+                    workers: args.flag("workers", 0usize),
+                    max_inflight: args.flag("max-inflight", 256usize).max(1),
+                    conn_inflight: args.flag("conn-inflight", 32usize).max(1),
+                    stats_every: args.flag("stats-every", 0u64),
+                    max_line_bytes: args.flag("max-line-bytes", 8usize * 1024 * 1024),
+                    write_timeout_ms: args.flag("write-timeout-ms", 30_000u64),
+                    drain_when: Some(term_requested),
+                };
+                install_term_handler();
+                let listen = args.flags.get("listen").map(|s| s.as_str());
+                let server = da4ml::serve::server::Server::bind(
+                    coord.clone(),
+                    scfg,
+                    std::path::Path::new(socket),
+                    listen,
+                )?;
+                match listen {
+                    Some(addr) => eprintln!("serve: listening on {socket} and {addr}"),
+                    None => eprintln!("serve: listening on {socket}"),
+                }
+                let summary = server.run()?;
+                eprintln!(
+                    "serve: {} client(s), {} jobs, {} replies ({} errors, {} busy-rejected, \
+                     {} dropped); {} submitted, {} cache hits, {} loaded, {} evictions over \
+                     {} shard(s), {:.1} ms optimizer time",
+                    summary.clients,
+                    summary.jobs,
+                    summary.replies,
+                    summary.errors,
+                    summary.rejected_busy,
+                    summary.dropped_jobs,
+                    summary.stats.submitted,
+                    summary.stats.cache_hits,
+                    summary.stats.loaded,
+                    summary.stats.evictions,
+                    coord.shard_count(),
+                    summary.stats.total_opt_time.as_secs_f64() * 1e3
+                );
+                if let Some(path) = args.flags.get("cache-save") {
+                    std::fs::write(path, coord.save_cache())?;
+                    eprintln!("serve: saved {} cache entries to {path}", coord.cache_len());
+                }
+                return Ok(());
+            }
+            if args.flags.contains_key("listen") {
+                bail!("--listen requires --socket (the TCP listener is server-mode only)");
             }
             let stdout = std::io::stdout();
             let mut out = std::io::BufWriter::new(stdout.lock());

@@ -1,0 +1,463 @@
+//! Per-connection plumbing for the socket server: a line reader over a
+//! reused byte buffer, and the ordered reply pipeline.
+//!
+//! [`LineReader`] follows the bytes-backed-value idiom the streaming
+//! JSON layer is built on: one rolling `Vec<u8>` per connection,
+//! newline scanning in place, and `&[u8]` line slices handed straight
+//! to [`crate::serve::Request::from_json_bytes`] — a hot connection
+//! never allocates a line `String`. Oversized lines (no newline within
+//! the configured bound) are detected without buffering them.
+//!
+//! [`Conn`] is the reply side: jobs from one connection may complete
+//! out of order on the shared worker pool, so the reader stamps every
+//! accepted line with a monotonically increasing sequence number and
+//! [`Conn::complete`] buffers out-of-order replies until their turn,
+//! writing each client's replies in its own submission order. The same
+//! structure carries the per-connection backpressure bound (the reader
+//! blocks in [`Conn::wait_capacity`] once too many of its jobs are in
+//! flight, which the kernel socket buffer turns into sender-side
+//! backpressure) and the per-client counters behind the `client_*`
+//! stats fields.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// What [`LineReader::next_line`] yielded.
+pub(crate) enum NextLine {
+    /// One complete line: index range into [`LineReader::slice`]
+    /// (trailing `\n`/`\r\n` stripped). Valid until the next call.
+    Line(Range<usize>),
+    /// A line exceeded the size bound. The offending bytes were
+    /// discarded (the reader keeps consuming until the newline); the
+    /// caller decides whether to keep reading or tear down.
+    Oversized,
+    /// End of stream (a final unterminated line, if any, was yielded
+    /// as a `Line` first).
+    Eof,
+}
+
+/// A newline-delimited reader over one reused, rolling byte buffer.
+pub(crate) struct LineReader<R> {
+    inner: R,
+    buf: Vec<u8>,
+    /// Start of the unconsumed region in `buf`.
+    start: usize,
+    /// End of the valid region in `buf`.
+    end: usize,
+    max_line: usize,
+    /// Mid-discard of an oversized line: drop bytes until its newline.
+    discarding: bool,
+}
+
+const READ_CHUNK: usize = 8 * 1024;
+
+impl<R: Read> LineReader<R> {
+    pub(crate) fn new(inner: R, max_line: usize) -> Self {
+        Self {
+            inner,
+            buf: vec![0u8; READ_CHUNK],
+            start: 0,
+            end: 0,
+            max_line: max_line.max(1),
+            discarding: false,
+        }
+    }
+
+    /// The bytes of a [`NextLine::Line`] range.
+    pub(crate) fn slice(&self, range: Range<usize>) -> &[u8] {
+        &self.buf[range]
+    }
+
+    /// Pull the next complete line (or EOF / oversized marker). Blocks
+    /// on the underlying read.
+    pub(crate) fn next_line(&mut self) -> std::io::Result<NextLine> {
+        loop {
+            // Scan the unconsumed region for a newline.
+            if let Some(pos) = self.buf[self.start..self.end].iter().position(|&b| b == b'\n') {
+                let line_start = self.start;
+                let mut line_end = line_start + pos;
+                self.start = line_end + 1;
+                if self.discarding {
+                    // Tail end of an already-reported oversized line.
+                    self.discarding = false;
+                    continue;
+                }
+                if line_end - line_start > self.max_line {
+                    // The whole line arrived in one read but is still
+                    // over the bound (already consumed, so no discard
+                    // protocol needed).
+                    return Ok(NextLine::Oversized);
+                }
+                if line_end > line_start && self.buf[line_end - 1] == b'\r' {
+                    line_end -= 1;
+                }
+                return Ok(NextLine::Line(line_start..line_end));
+            }
+            let pending = self.end - self.start;
+            if pending > self.max_line {
+                // No newline within the bound: discard what is
+                // buffered and keep discarding until the newline.
+                self.start = self.end;
+                if self.discarding {
+                    continue;
+                }
+                self.discarding = true;
+                return Ok(NextLine::Oversized);
+            }
+            // Compact the partial line to the front, then refill.
+            if self.start > 0 {
+                self.buf.copy_within(self.start..self.end, 0);
+                self.end -= self.start;
+                self.start = 0;
+            }
+            if self.end == self.buf.len() {
+                // Linear growth is enough: the oversized check above
+                // fires before the buffer can exceed
+                // `max_line + READ_CHUNK` bytes of pending data.
+                let grown = self.buf.len() + READ_CHUNK;
+                self.buf.resize(grown, 0);
+            }
+            let n = match self.inner.read(&mut self.buf[self.end..]) {
+                Ok(n) => n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            if n == 0 {
+                if self.discarding {
+                    self.discarding = false;
+                    self.start = self.end;
+                    return Ok(NextLine::Eof);
+                }
+                if pending == 0 {
+                    return Ok(NextLine::Eof);
+                }
+                // Final unterminated line: yield it, EOF on next call.
+                let range = self.start..self.end;
+                self.start = self.end;
+                return Ok(NextLine::Line(range));
+            }
+            self.end += n;
+        }
+    }
+}
+
+/// How a reply line should be counted — the one place the per-client
+/// and global accounting can't drift apart.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ReplyKind {
+    /// A `result`/`explore` reply; `cache_hit` feeds the per-client
+    /// cache-hit counter.
+    Result { cache_hit: bool },
+    /// An error reply for a job that executed and failed.
+    JobError,
+    /// An error reply for a line that never became a job (malformed,
+    /// non-UTF-8, oversized).
+    WireError,
+    /// A `busy` rejection from global admission control.
+    Busy,
+    /// A `shutting_down` rejection while draining.
+    ShuttingDown,
+    /// A control acknowledgement (stats line): not counted as a reply.
+    Control,
+}
+
+/// Per-client reply counters (snapshot for the stats line).
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct ConnCounters {
+    pub jobs: u64,
+    pub replies: u64,
+    pub errors: u64,
+    pub rejected_busy: u64,
+    pub cache_hits: u64,
+}
+
+struct ConnInner {
+    /// Write half of the socket. `None` once the connection is dead.
+    writer: Option<Box<dyn Write + Send>>,
+    /// Next sequence number whose reply goes on the wire.
+    next_write: u64,
+    /// Replies that completed ahead of their turn.
+    pending: BTreeMap<u64, String>,
+    /// This connection's accepted-but-unanswered jobs.
+    inflight: usize,
+    counters: ConnCounters,
+}
+
+/// The shared reply side of one connection (reader thread + workers).
+pub(crate) struct Conn {
+    /// Client label on stats lines: `client-<n>` in accept order.
+    pub(crate) name: String,
+    inner: Mutex<ConnInner>,
+    cv: Condvar,
+    dead: AtomicBool,
+}
+
+impl Conn {
+    pub(crate) fn new(name: String, writer: Box<dyn Write + Send>) -> Self {
+        Self {
+            name,
+            inner: Mutex::new(ConnInner {
+                writer: Some(writer),
+                next_write: 0,
+                pending: BTreeMap::new(),
+                inflight: 0,
+                counters: ConnCounters::default(),
+            }),
+            cv: Condvar::new(),
+            dead: AtomicBool::new(false),
+        }
+    }
+
+    /// A dead connection stops reading and writing; its remaining
+    /// replies are discarded (but still accounted, so the shared queue
+    /// and global inflight never wedge).
+    pub(crate) fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Mark dead and wake every waiter. Idempotent.
+    pub(crate) fn mark_dead(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+        let mut g = self.inner.lock().unwrap();
+        g.writer = None;
+        g.pending.clear();
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Reader side: block until this connection has capacity for one
+    /// more in-flight job, the server starts draining, or the
+    /// connection dies. Returns `true` when the job may be enqueued.
+    pub(crate) fn wait_capacity(&self, cap: usize, draining: &AtomicBool) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        while g.inflight >= cap.max(1)
+            && !self.is_dead()
+            && !draining.load(Ordering::SeqCst)
+        {
+            g = self.cv.wait(g).unwrap();
+        }
+        !self.is_dead() && !draining.load(Ordering::SeqCst)
+    }
+
+    /// Reader side: account one accepted job before enqueueing it.
+    pub(crate) fn begin_job(&self) {
+        self.inner.lock().unwrap().inflight += 1;
+    }
+
+    /// Worker side: account one finished job (its reply already went
+    /// through [`Conn::complete`]).
+    pub(crate) fn job_done(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.inflight = g.inflight.saturating_sub(1);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Deliver the reply for sequence number `seq`. Out-of-order
+    /// completions are buffered; everything consecutive from the next
+    /// expected sequence number is written in one pass, so each
+    /// client's replies leave in its own submission order. Returns the
+    /// number of sequenced lines drained to the wire in this pass
+    /// (the `--stats-every` cadence counter).
+    pub(crate) fn complete(&self, seq: u64, line: String, kind: ReplyKind) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        match kind {
+            ReplyKind::Result { cache_hit } => {
+                g.counters.jobs += 1;
+                if cache_hit {
+                    g.counters.cache_hits += 1;
+                }
+            }
+            ReplyKind::JobError => {
+                g.counters.jobs += 1;
+                g.counters.errors += 1;
+            }
+            ReplyKind::WireError => g.counters.errors += 1,
+            ReplyKind::Busy => {
+                g.counters.errors += 1;
+                g.counters.rejected_busy += 1;
+            }
+            ReplyKind::ShuttingDown => g.counters.errors += 1,
+            ReplyKind::Control => {}
+        }
+        g.pending.insert(seq, line);
+        let mut wrote = 0u64;
+        while let Some(line) = g.pending.remove(&g.next_write) {
+            g.next_write += 1;
+            // The reply is drained whether or not the socket is still
+            // writable: the job was accepted and answered, and the
+            // accounting must not depend on the client sticking around.
+            wrote += 1;
+            let mut failed = false;
+            if let Some(w) = g.writer.as_mut() {
+                if writeln!(w, "{line}").and_then(|()| w.flush()).is_err() {
+                    failed = true;
+                }
+            }
+            if failed {
+                g.writer = None;
+                g.pending.clear();
+                self.dead.store(true, Ordering::SeqCst);
+            }
+        }
+        // `replies` counts countable lines only; `wrote` above may
+        // include buffered control acks drained in the same pass, so
+        // recount from the kind of *this* completion plus what drained.
+        if kind != ReplyKind::Control {
+            g.counters.replies += 1;
+        }
+        drop(g);
+        if wrote > 0 {
+            self.cv.notify_all();
+        }
+        wrote
+    }
+
+    /// Direct, unsequenced write (periodic and final stats lines).
+    /// Returns `false` if the connection is no longer writable.
+    pub(crate) fn write_line(&self, line: &str) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let Some(w) = g.writer.as_mut() else { return false };
+        if writeln!(w, "{line}").and_then(|()| w.flush()).is_err() {
+            g.writer = None;
+            g.pending.clear();
+            self.dead.store(true, Ordering::SeqCst);
+            drop(g);
+            self.cv.notify_all();
+            return false;
+        }
+        true
+    }
+
+    /// Reader side at teardown: block until every accepted job has
+    /// been answered (or the connection died).
+    pub(crate) fn wait_idle(&self) {
+        let mut g = self.inner.lock().unwrap();
+        while (g.inflight > 0 || !g.pending.is_empty()) && !self.is_dead() {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Wake any thread blocked in [`Conn::wait_capacity`] /
+    /// [`Conn::wait_idle`] so it re-checks external state (the server
+    /// calls this on every live connection when a drain starts).
+    pub(crate) fn notify(&self) {
+        self.cv.notify_all();
+    }
+
+    /// Snapshot the per-client counters for a stats line.
+    pub(crate) fn counters(&self) -> ConnCounters {
+        self.inner.lock().unwrap().counters
+    }
+
+    /// Close the write half (the final stats line has been written).
+    pub(crate) fn close_writer(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.writer = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+    use std::sync::Arc;
+
+    fn lines_of(reader: &mut LineReader<Cursor<Vec<u8>>>) -> Vec<String> {
+        let mut out = Vec::new();
+        loop {
+            match reader.next_line().unwrap() {
+                NextLine::Line(r) => {
+                    out.push(String::from_utf8_lossy(reader.slice(r)).into_owned())
+                }
+                NextLine::Oversized => out.push("<oversized>".into()),
+                NextLine::Eof => return out,
+            }
+        }
+    }
+
+    #[test]
+    fn line_reader_splits_reuses_and_handles_partials() {
+        let data = b"alpha\nbeta\r\n\ngamma".to_vec();
+        let mut r = LineReader::new(Cursor::new(data), 1 << 20);
+        assert_eq!(lines_of(&mut r), vec!["alpha", "beta", "", "gamma"]);
+    }
+
+    #[test]
+    fn line_reader_detects_oversized_lines_without_buffering_them() {
+        let mut data = vec![b'x'; 4096];
+        data.push(b'\n');
+        data.extend_from_slice(b"ok\n");
+        let mut r = LineReader::new(Cursor::new(data), 64);
+        assert_eq!(lines_of(&mut r), vec!["<oversized>", "ok"]);
+    }
+
+    #[test]
+    fn line_reader_oversized_at_eof_without_newline() {
+        let data = vec![b'y'; 4096];
+        let mut r = LineReader::new(Cursor::new(data), 64);
+        assert_eq!(lines_of(&mut r), vec!["<oversized>"]);
+    }
+
+    /// Out-of-order completions leave in submission order, with the
+    /// counters attributing each kind correctly.
+    #[test]
+    fn conn_orders_replies_and_counts_kinds() {
+        let sink = Arc::new(Mutex::new(Vec::<u8>::new()));
+        struct SharedSink(Arc<Mutex<Vec<u8>>>);
+        impl Write for SharedSink {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let conn = Conn::new("client-0".into(), Box::new(SharedSink(sink.clone())));
+        for _ in 0..3 {
+            conn.begin_job();
+        }
+        conn.complete(2, "r2".into(), ReplyKind::Result { cache_hit: true });
+        conn.job_done();
+        assert_eq!(sink.lock().unwrap().len(), 0, "seq 2 must wait for 0 and 1");
+        conn.complete(0, "r0".into(), ReplyKind::Result { cache_hit: false });
+        conn.job_done();
+        conn.complete(1, "e1".into(), ReplyKind::JobError);
+        conn.job_done();
+        conn.wait_idle();
+        let text = String::from_utf8(sink.lock().unwrap().clone()).unwrap();
+        assert_eq!(text, "r0\ne1\nr2\n");
+        let c = conn.counters();
+        assert_eq!((c.jobs, c.replies, c.errors, c.cache_hits), (3, 3, 1, 1));
+    }
+
+    /// A failing writer marks the connection dead; later completions
+    /// still drain (keeping global accounting honest) but write nothing.
+    #[test]
+    fn conn_write_failure_is_clean_death_not_a_wedge() {
+        struct FailingSink;
+        impl Write for FailingSink {
+            fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "gone"))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let conn = Conn::new("client-0".into(), Box::new(FailingSink));
+        conn.begin_job();
+        conn.begin_job();
+        conn.complete(0, "r0".into(), ReplyKind::Result { cache_hit: false });
+        conn.job_done();
+        assert!(conn.is_dead());
+        // The second completion must not block or panic.
+        conn.complete(1, "r1".into(), ReplyKind::Result { cache_hit: false });
+        conn.job_done();
+        conn.wait_idle();
+        assert!(!conn.write_line("stats"));
+    }
+}

@@ -1,0 +1,483 @@
+//! The transport-independent serve engine.
+//!
+//! Everything both transports share lives here: lowering one wire line
+//! into work ([`lower_line`] / [`lower_line_bytes`]), executing a
+//! lowered payload against the shared [`Coordinator`]
+//! ([`run_payload`]), building the reply objects (`result` / `explore`
+//! / `error`), and rendering the cumulative `stats` line. The stdin
+//! JSONL loop ([`serve`] / [`serve_with`]) is a thin batched client of
+//! this core; the socket server ([`crate::serve::server`]) is a
+//! concurrent one. Because both funnel through the same lowering and
+//! reply builders, the two transports produce byte-identical
+//! `result`/`error` reply lines for the same job stream — pinned by
+//! `rust/tests/serve_jsonl.rs`.
+
+use super::{ControlOp, EmitLang, Request, ServeConfig, ServeSummary};
+use crate::cmvm::CmvmSolution;
+use crate::coordinator::{CompileJob, Coordinator};
+use crate::estimate;
+use crate::explore::{self, ExploreConfig, ExploreTarget, Objective, SpaceConfig};
+use crate::json::{self, Value};
+use crate::Result;
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+use std::sync::Arc;
+
+/// One unit of executable work lowered from a wire line: a compile job
+/// or a validated design-space exploration.
+pub(crate) enum WorkPayload {
+    /// A CMVM compile (plus optional RTL emission).
+    Job {
+        job: CompileJob,
+        emit: Option<EmitLang>,
+    },
+    /// A validated explore job, executed against the shared coordinator.
+    Explore {
+        target: ExploreTarget,
+        space: SpaceConfig,
+        objective: Option<Objective>,
+    },
+}
+
+/// One lowered wire line: executable work, a control request, or an
+/// immediate error reply.
+pub(crate) enum Lowered {
+    /// A job to execute (reply built by [`run_payload`]).
+    Work { id: String, payload: WorkPayload },
+    /// A control line (`shutdown` / `stats`): transport-level, answered
+    /// by the transport itself.
+    Control { id: Option<String>, op: ControlOp },
+    /// A malformed line or invalid job: an immediate error reply.
+    Bad { id: Option<String>, error: String },
+}
+
+/// Lower one wire line. Validation happens here — not at execution
+/// time — so a malformed job becomes an immediate error reply with
+/// uniform accounting on every transport.
+pub(crate) fn lower_line(line: &str, line_no: u64, default_dc: i32) -> Lowered {
+    match Request::from_json(line) {
+        Ok(Request::Compile(req)) => {
+            let id = req.id.clone().unwrap_or_else(|| format!("job-{line_no}"));
+            let lowered = req
+                .to_compile_job(id.clone(), default_dc)
+                .and_then(|job| Ok((job, req.emit_lang()?)));
+            match lowered {
+                Ok((job, emit)) => Lowered::Work { id, payload: WorkPayload::Job { job, emit } },
+                Err(e) => Lowered::Bad { id: Some(id), error: format!("{e:#}") },
+            }
+        }
+        Ok(Request::Explore(req)) => {
+            let id = req.id.clone().unwrap_or_else(|| format!("job-{line_no}"));
+            match req.validate() {
+                Ok((target, space, objective)) => Lowered::Work {
+                    id,
+                    payload: WorkPayload::Explore { target, space, objective },
+                },
+                Err(e) => Lowered::Bad { id: Some(id), error: format!("{e:#}") },
+            }
+        }
+        Ok(Request::Control(ctl)) => Lowered::Control { id: ctl.id, op: ctl.op },
+        Err(e) => Lowered::Bad { id: None, error: format!("{e:#}") },
+    }
+}
+
+/// [`lower_line`] over raw bytes (the socket transport reads lines out
+/// of a reused byte buffer). A non-UTF-8 line becomes an error reply,
+/// mirroring the stdin transport's `InvalidData` handling.
+pub(crate) fn lower_line_bytes(bytes: &[u8], line_no: u64, default_dc: i32) -> Lowered {
+    match std::str::from_utf8(bytes) {
+        Ok(text) => lower_line(text, line_no, default_dc),
+        Err(e) => Lowered::Bad {
+            id: None,
+            error: format!("reading input line {line_no}: invalid UTF-8: {e}"),
+        },
+    }
+}
+
+/// The outcome of executing one [`WorkPayload`].
+pub(crate) struct RunOutcome {
+    /// The reply object (a `result`, `explore`, or `error` line).
+    pub reply: Value,
+    /// `true` when the reply is an error reply.
+    pub is_err: bool,
+    /// `true` when a compile job was answered from the solution cache.
+    pub cache_hit: bool,
+}
+
+/// Execute one lowered payload against the shared coordinator and
+/// build its reply. Failures become error replies — never panics, never
+/// tears down the transport.
+pub(crate) fn run_payload(
+    coord: &Coordinator,
+    id: &str,
+    payload: WorkPayload,
+    cfg: &ServeConfig,
+) -> RunOutcome {
+    match payload {
+        WorkPayload::Job { job, emit } => match coord.compile_cached(&job) {
+            Ok((sol, cached)) => match result_reply(id, &sol, cached, emit, cfg) {
+                Ok(reply) => RunOutcome { reply, is_err: false, cache_hit: cached },
+                Err(e) => RunOutcome {
+                    reply: error_reply(Some(id), &format!("{e:#}")),
+                    is_err: true,
+                    cache_hit: cached,
+                },
+            },
+            Err(e) => RunOutcome {
+                reply: error_reply(Some(id), &format!("{e:#}")),
+                is_err: true,
+                cache_hit: false,
+            },
+        },
+        WorkPayload::Explore { target, space, objective } => {
+            match explore_reply(coord, id, &target, space, objective, cfg) {
+                Ok(reply) => RunOutcome { reply, is_err: false, cache_hit: false },
+                Err(e) => RunOutcome {
+                    reply: error_reply(Some(id), &format!("{e:#}")),
+                    is_err: true,
+                    cache_hit: false,
+                },
+            }
+        }
+    }
+}
+
+/// RTL module names come from job ids, which are arbitrary strings:
+/// sanitize to a legal Verilog/VHDL identifier.
+pub(crate) fn module_name(id: &str) -> String {
+    let mut s: String = id
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    match s.chars().next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => s.insert_str(0, "m_"),
+    }
+    s
+}
+
+/// Build one `"type": "result"` reply (including the optional RTL
+/// text). RTL emission failures bubble up and become an error reply.
+pub(crate) fn result_reply(
+    id: &str,
+    sol: &CmvmSolution,
+    cached: bool,
+    emit: Option<EmitLang>,
+    cfg: &ServeConfig,
+) -> Result<Value> {
+    let rep = estimate::combinational(&sol.program, &cfg.model);
+    let mut o = BTreeMap::new();
+    o.insert("type".into(), Value::Str("result".into()));
+    o.insert("id".into(), Value::Str(id.into()));
+    o.insert("adders".into(), Value::Int(sol.adders as i64));
+    o.insert("depth".into(), Value::Int(sol.depth as i64));
+    o.insert("lut".into(), Value::Int(rep.lut as i64));
+    o.insert("ff".into(), Value::Int(rep.ff as i64));
+    o.insert("latency_ns".into(), Value::Float(rep.latency_ns));
+    o.insert("cached".into(), Value::Bool(cached));
+    o.insert("opt_ms".into(), Value::Float(sol.opt_time.as_secs_f64() * 1e3));
+    if let Some(lang) = emit {
+        let module = module_name(id);
+        let text = match lang {
+            EmitLang::Verilog => crate::rtl::emit_verilog(&sol.program, &module, None)?,
+            EmitLang::Vhdl => crate::rtl::emit_vhdl(&sol.program, &module, None)?,
+        };
+        o.insert("rtl".into(), Value::Str(text));
+    }
+    Ok(Value::Object(o))
+}
+
+/// Run one validated explore job against the shared coordinator (so
+/// CMVM candidates hit the same solution cache as compile jobs) and
+/// build its `"type": "explore"` reply. A compile failure bubbles up
+/// into an error reply.
+pub(crate) fn explore_reply(
+    coord: &Coordinator,
+    id: &str,
+    target: &ExploreTarget,
+    space: SpaceConfig,
+    objective: Option<Objective>,
+    cfg: &ServeConfig,
+) -> Result<Value> {
+    let ecfg = ExploreConfig { space, jobs: cfg.threads, model: cfg.model };
+    let report = explore::explore(target, coord, &ecfg)?;
+    let mut o = BTreeMap::new();
+    o.insert("type".into(), Value::Str("explore".into()));
+    o.insert("id".into(), Value::Str(id.into()));
+    o.insert("target".into(), Value::Str(report.target.clone()));
+    o.insert(
+        "schema_version".into(),
+        Value::Int(report.schema_version as i64),
+    );
+    o.insert(
+        "front".into(),
+        Value::Array(report.front.iter().map(explore::schema::point_value).collect()),
+    );
+    o.insert(
+        "dominated".into(),
+        Value::Array(report.dominated.iter().map(explore::schema::point_value).collect()),
+    );
+    o.insert(
+        "skipped".into(),
+        Value::Array(
+            report
+                .skipped
+                .iter()
+                .map(|s| {
+                    let mut sk = BTreeMap::new();
+                    sk.insert("id".into(), Value::Str(s.id.clone()));
+                    sk.insert("reason".into(), Value::Str(s.reason.clone()));
+                    Value::Object(sk)
+                })
+                .collect(),
+        ),
+    );
+    if let Some(obj) = objective {
+        if let Some(picked) = explore::pick(&report.front, obj) {
+            o.insert("objective".into(), Value::Str(obj.name().into()));
+            o.insert("picked".into(), explore::schema::point_value(picked));
+        }
+    }
+    Ok(Value::Object(o))
+}
+
+/// Build one `"type": "error"` reply (`id` is `null` when the line was
+/// not correlatable).
+pub(crate) fn error_reply(id: Option<&str>, error: &str) -> Value {
+    let mut o = BTreeMap::new();
+    o.insert("type".into(), Value::Str("error".into()));
+    o.insert(
+        "id".into(),
+        match id {
+            Some(id) => Value::Str(id.into()),
+            None => Value::Null,
+        },
+    );
+    o.insert("error".into(), Value::Str(error.into()));
+    Value::Object(o)
+}
+
+/// Build a cumulative `"type": "stats"` line: the coordinator-wide base
+/// fields plus transport-specific `extra` key/value pairs (the stdin
+/// transport adds `batch`/`jobs`; the socket transport adds the
+/// global + per-client breakdown).
+pub(crate) fn stats_value(coord: &Coordinator, extra: &[(&str, Value)]) -> Value {
+    let stats = coord.stats();
+    let mut o = BTreeMap::new();
+    o.insert("type".into(), Value::Str("stats".into()));
+    o.insert("submitted".into(), Value::Int(stats.submitted as i64));
+    o.insert("cache_hits".into(), Value::Int(stats.cache_hits as i64));
+    o.insert("cache_size".into(), Value::Int(coord.cache_len() as i64));
+    o.insert("cache_evictions".into(), Value::Int(stats.evictions as i64));
+    // Deployment-shape keys: how many independently locked shards the
+    // cache runs on, and how many solutions this process inherited from
+    // a persisted cache file (`serve --cache-load`) rather than
+    // computing or receiving over the wire.
+    o.insert("cache_shards".into(), Value::Int(coord.shard_count() as i64));
+    o.insert("cache_loaded".into(), Value::Int(stats.loaded as i64));
+    o.insert("total_opt_ms".into(), Value::Float(stats.total_opt_time.as_secs_f64() * 1e3));
+    // Optimizer work proxies (cumulative, executed jobs only — cache
+    // hits add nothing): lets clients watch perf per batch the same way
+    // the perf suite does per case.
+    o.insert("cse_steps".into(), Value::Int(stats.total_cse_steps as i64));
+    o.insert("heap_pops".into(), Value::Int(stats.total_heap_pops as i64));
+    for (k, v) in extra {
+        o.insert((*k).into(), v.clone());
+    }
+    Value::Object(o)
+}
+
+/// One batch entry on the stdin transport: a lowered compile job, a
+/// validated explore job, or an immediate error reply.
+enum Pending {
+    Job { id: String, job: CompileJob, emit: Option<EmitLang> },
+    Explore { id: String, target: ExploreTarget, space: SpaceConfig, objective: Option<Objective> },
+    Bad { id: Option<String>, error: String },
+}
+
+/// Run the serve loop: read JSONL jobs from `input` until EOF, stream
+/// JSONL replies to `output`. Never returns early on malformed or
+/// failing jobs — only on I/O errors writing `output`.
+pub fn serve<R: BufRead, W: Write>(
+    input: R,
+    output: &mut W,
+    cfg: &ServeConfig,
+) -> Result<ServeSummary> {
+    let coord = Coordinator::with_shards(cfg.cache_shards);
+    coord.set_cache_cap(cfg.cache_cap);
+    serve_with(&coord, input, output, cfg)
+}
+
+/// [`serve`] against a caller-owned [`Coordinator`]. This is the warm
+/// restart surface: the CLI loads a persisted cache into the
+/// coordinator first (`serve --cache-load`), serves, then saves the
+/// final cache after EOF (`--cache-save`). The coordinator's own
+/// sharding/cap configuration wins — [`ServeConfig::cache_shards`] and
+/// [`ServeConfig::cache_cap`] are applied only by [`serve`], which owns
+/// its coordinator.
+pub fn serve_with<R: BufRead, W: Write>(
+    coord: &Coordinator,
+    input: R,
+    output: &mut W,
+    cfg: &ServeConfig,
+) -> Result<ServeSummary> {
+    let mut summary = ServeSummary::default();
+    let mut batch: Vec<Pending> = Vec::new();
+    let batch_size = cfg.batch_size.max(1);
+    let mut line_no = 0u64;
+    for line in input.lines() {
+        // Count every input line (blank ones too) so the default
+        // `job-<line#>` id matches the caller's 1-based file line.
+        line_no += 1;
+        let entry = match line {
+            Ok(line) if line.trim().is_empty() => continue,
+            Ok(line) => match lower_line(&line, line_no, cfg.default_dc) {
+                Lowered::Work { id, payload: WorkPayload::Job { job, emit } } => {
+                    Pending::Job { id, job, emit }
+                }
+                Lowered::Work { id, payload: WorkPayload::Explore { target, space, objective } } => {
+                    Pending::Explore { id, target, space, objective }
+                }
+                Lowered::Bad { id, error } => Pending::Bad { id, error },
+                Lowered::Control { op: ControlOp::Stats, .. } => {
+                    // On-demand stats: flush buffered jobs first (their
+                    // batch emits its own stats line), then answer with
+                    // a fresh cumulative stats line.
+                    flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
+                    emit_stats_line(coord, output, &summary)?;
+                    continue;
+                }
+                Lowered::Control { op: ControlOp::Shutdown, .. } => {
+                    // Graceful drain: flush buffered jobs, emit the
+                    // final stats line, stop reading (like EOF).
+                    flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
+                    emit_stats_line(coord, output, &summary)?;
+                    summary.stats = coord.stats();
+                    return Ok(summary);
+                }
+            },
+            // A non-UTF-8 line is one more malformed request, not a
+            // reason to tear down the service and drop buffered jobs
+            // (`lines()` has already consumed the offending bytes).
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                Pending::Bad { id: None, error: format!("reading input line {line_no}: {e}") }
+            }
+            // A genuine I/O failure: answer what we have, then stop.
+            Err(e) => {
+                flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
+                summary.stats = coord.stats();
+                return Err(e.into());
+            }
+        };
+        batch.push(entry);
+        if batch.len() >= batch_size {
+            flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
+        }
+    }
+    flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
+    summary.stats = coord.stats();
+    Ok(summary)
+}
+
+/// One reply slot after the jobs have been moved out for compilation:
+/// correlation metadata only (the job itself is not cloned). Explore
+/// jobs (already validated) are executed at reply time against the
+/// shared coordinator.
+enum Slot {
+    Job { id: String, idx: usize, emit: Option<EmitLang> },
+    Explore { id: String, target: ExploreTarget, space: SpaceConfig, objective: Option<Objective> },
+    Bad { id: Option<String>, error: String },
+}
+
+/// Write the cumulative stdin-transport stats line (`batch` counter +
+/// `jobs` reply count on top of the shared base fields).
+fn emit_stats_line<W: Write>(
+    coord: &Coordinator,
+    output: &mut W,
+    summary: &ServeSummary,
+) -> Result<()> {
+    let v = stats_value(
+        coord,
+        &[
+            ("batch", Value::Int(summary.batches as i64)),
+            ("jobs", Value::Int(summary.replies as i64)),
+        ],
+    );
+    writeln!(output, "{}", json::to_string(&v))?;
+    output.flush()?;
+    Ok(())
+}
+
+/// Compile the batched jobs through the coordinator and stream one
+/// reply line per entry (input order), then the batch stats line.
+/// No-op on an empty batch.
+fn flush_batch<W: Write>(
+    coord: &Coordinator,
+    batch: &mut Vec<Pending>,
+    output: &mut W,
+    cfg: &ServeConfig,
+    summary: &mut ServeSummary,
+) -> Result<()> {
+    if batch.is_empty() {
+        return Ok(());
+    }
+    summary.batches += 1;
+    // Move the jobs out for the worker pool; keep only correlation
+    // metadata (id, original position) on this side.
+    let mut jobs = Vec::new();
+    let mut slots = Vec::with_capacity(batch.len());
+    for entry in std::mem::take(batch) {
+        match entry {
+            Pending::Job { id, job, emit } => {
+                slots.push(Slot::Job { id, idx: jobs.len(), emit });
+                jobs.push(job);
+            }
+            Pending::Explore { id, target, space, objective } => {
+                slots.push(Slot::Explore { id, target, space, objective })
+            }
+            Pending::Bad { id, error } => slots.push(Slot::Bad { id, error }),
+        }
+    }
+    let mut results: Vec<Option<Result<(Arc<CmvmSolution>, bool)>>> =
+        coord.compile_batch(jobs, cfg.threads).into_iter().map(Some).collect();
+    for slot in slots {
+        let reply = match slot {
+            Slot::Bad { id, error } => {
+                summary.errors += 1;
+                error_reply(id.as_deref(), &error)
+            }
+            Slot::Explore { id, target, space, objective } => {
+                summary.jobs += 1;
+                match explore_reply(coord, &id, &target, space, objective, cfg) {
+                    Ok(reply) => reply,
+                    Err(e) => {
+                        summary.errors += 1;
+                        error_reply(Some(id.as_str()), &format!("{e:#}"))
+                    }
+                }
+            }
+            Slot::Job { id, idx, emit } => {
+                summary.jobs += 1;
+                match results[idx].take().expect("one result per job") {
+                    Ok((sol, cached)) => {
+                        match result_reply(&id, &sol, cached, emit, cfg) {
+                            Ok(reply) => reply,
+                            Err(e) => {
+                                summary.errors += 1;
+                                error_reply(Some(id.as_str()), &format!("{e:#}"))
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        summary.errors += 1;
+                        error_reply(Some(id.as_str()), &format!("{e:#}"))
+                    }
+                }
+            }
+        };
+        summary.replies += 1;
+        writeln!(output, "{}", json::to_string(&reply))?;
+    }
+    emit_stats_line(coord, output, summary)?;
+    Ok(())
+}

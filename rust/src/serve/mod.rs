@@ -1,12 +1,24 @@
 //! The long-lived JSONL compile service (`da4ml serve`).
 //!
 //! The paper's pitch is a CMVM compiler fast enough to sit inside a
-//! design loop; this module is the first multi-request serving surface
-//! on top of it. The loop reads one compile job per input line (JSON
-//! object), accumulates them into batches, drives the
-//! [`Coordinator`]'s cache + worker pool, and streams one JSON reply
-//! line per job (plus a stats line per batch) back out — wire format
-//! documented in `docs/serve.md`.
+//! design loop; this module is the multi-request serving surface on
+//! top of it, in two transports over one engine:
+//!
+//! * **stdin/stdout** ([`serve`] / [`serve_with`]) — one JSONL stream,
+//!   jobs batched through the [`crate::coordinator::Coordinator`]'s
+//!   cache + worker pool, one reply line per job plus a stats line per
+//!   batch.
+//! * **socket server** ([`server`]) — a long-lived Unix-domain (plus
+//!   optional TCP) listener serving many concurrent connections over a
+//!   shared bounded job queue and worker pool, with per-connection
+//!   backpressure, global admission control, and graceful drain.
+//!
+//! Both transports lower lines and build replies through the same
+//! engine (the private `core` submodule), so for the same job stream
+//! they produce
+//! byte-identical `result`/`error` reply lines — pinned by
+//! `rust/tests/serve_jsonl.rs`. Wire format documented in
+//! `docs/serve.md`.
 //!
 //! Requests are decoded with the zero-copy pull parser
 //! ([`crate::json::decode::Decoder`]), so a hot serving loop never
@@ -19,17 +31,22 @@
 //! network `spec`): the [`crate::explore`] subsystem sweeps the
 //! strategy × dc × pipeline space on the shared coordinator and the
 //! reply carries the Pareto `front`, the `dominated` points, and —
-//! when an `objective` was posted — the `picked` configuration. For
-//! long-lived deployments the solution cache can be bounded with
+//! when an `objective` was posted — the `picked` configuration. Two
+//! **control lines** round out the wire: `{"type": "stats"}` answers
+//! with an on-demand cumulative stats line, and `{"type": "shutdown"}`
+//! drains the service gracefully (on the socket transport: stop
+//! accepting, answer everything in flight, emit final stats).
+//!
+//! For long-lived deployments the solution cache can be bounded with
 //! [`ServeConfig::cache_cap`] (`serve --cache-cap`); evictions are
 //! visible on the stats line. The cache itself can be sharded across
 //! independent locks ([`ServeConfig::cache_shards`], `serve
-//! --cache-shards`) so concurrent batches stop contending on one
-//! mutex, and a deployment can restart warm: the CLI loads a baked
-//! cache file into the coordinator before serving and saves it after
-//! EOF (`serve --cache-load/--cache-save`, wired through
-//! [`serve_with`]). The stats line reports both knobs
-//! (`cache_shards`, `cache_loaded`).
+//! --cache-shards`) so concurrent batches — and the socket server's
+//! concurrent workers — stop contending on one mutex, and a deployment
+//! can restart warm: the CLI loads a baked cache file into the
+//! coordinator before serving and saves it after EOF (`serve
+//! --cache-load/--cache-save`, wired through [`serve_with`]). The
+//! stats line reports both knobs (`cache_shards`, `cache_loaded`).
 //!
 //! ```
 //! use da4ml::serve::{serve, ServeConfig};
@@ -51,22 +68,27 @@
 //! assert!(text.contains("\"cached\":true"));
 //! ```
 
+mod conn;
+mod core;
+pub mod server;
+
+pub use self::core::{serve, serve_with};
+
 use crate::cmvm::{CmvmProblem, Strategy};
-use crate::coordinator::{CompileJob, Coordinator, CoordinatorStats};
-use crate::estimate::{self, FpgaModel};
-use crate::explore::{self, ExploreConfig, ExploreTarget, Objective, SpaceConfig};
+use crate::coordinator::{CompileJob, CoordinatorStats};
+use crate::estimate::FpgaModel;
+use crate::explore::{ExploreTarget, Objective, SpaceConfig};
 use crate::json::decode::Decoder;
-use crate::json::{self, Value};
 use crate::nn::NetworkSpec;
 use crate::Result;
 use anyhow::{bail, ensure};
-use std::collections::BTreeMap;
-use std::io::{BufRead, Write};
 
 /// Serving knobs (all have CLI flags, see `da4ml serve --help` text).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Jobs per coordinator batch (replies stream after each batch).
+    /// The socket transport has no batches; it streams jobs one at a
+    /// time through the shared worker pool.
     pub batch_size: usize,
     /// Worker threads per batch (`0` = hardware parallelism).
     pub threads: usize,
@@ -107,7 +129,8 @@ pub struct ServeSummary {
     pub jobs: u64,
     /// Error replies emitted (malformed lines + failed jobs).
     pub errors: u64,
-    /// Reply lines written (every input job/line yields exactly one).
+    /// Reply lines written (every input job/line yields exactly one;
+    /// control lines and stats lines are not counted).
     pub replies: u64,
     /// Batches flushed.
     pub batches: u64,
@@ -145,14 +168,41 @@ pub enum EmitLang {
     Vhdl,
 }
 
-/// One decoded request line: a compile job (the default) or a
-/// design-space exploration (`"type": "explore"`, see `docs/serve.md`).
+/// One decoded request line: a compile job (the default), a
+/// design-space exploration (`"type": "explore"`), or a control line
+/// (`"type": "shutdown"` / `"type": "stats"`) — see `docs/serve.md`.
 #[derive(Debug, Clone)]
 pub enum Request {
     /// A CMVM compile job.
     Compile(JobRequest),
     /// A design-space exploration job.
     Explore(ExploreRequest),
+    /// A transport control line (graceful drain / on-demand stats).
+    Control(ControlRequest),
+}
+
+/// One decoded control line: not a job, but an instruction to the
+/// transport itself.
+#[derive(Debug, Clone)]
+pub struct ControlRequest {
+    /// Optional correlation id (echoed nowhere — the answer is a stats
+    /// line — but accepted so clients can keep uniform line shapes).
+    pub id: Option<String>,
+    /// Which control operation was posted.
+    pub op: ControlOp,
+}
+
+/// The control operations of the wire (`"type"` values beyond the job
+/// types).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlOp {
+    /// `{"type": "shutdown"}` — drain gracefully: stop reading (stdin)
+    /// or stop accepting and flush all in-flight work (socket), then
+    /// emit a final stats line.
+    Shutdown,
+    /// `{"type": "stats"}` — answer with an on-demand cumulative stats
+    /// line.
+    Stats,
 }
 
 /// One decoded explore request (`"type": "explore"`): sweep the
@@ -214,10 +264,21 @@ impl ExploreRequest {
 impl Request {
     /// Streaming-decode one request line (no `Value` tree). The
     /// `"type"` discriminator may appear anywhere on the line; fields
-    /// belonging to the *other* request type are rejected (strict wire:
+    /// belonging to *other* request types are rejected (strict wire:
     /// a silently ignored field would hide caller bugs).
     pub fn from_json(line: &str) -> Result<Self> {
-        let mut d = Decoder::new(line);
+        Self::decode_request(Decoder::new(line))
+    }
+
+    /// [`Request::from_json`] over raw bytes: the socket transport's
+    /// per-connection line reader hands out `&[u8]` slices of a reused
+    /// buffer, so the wire decodes without ever allocating a line
+    /// `String`. Non-UTF-8 bytes are a decode error, never a panic.
+    pub fn from_json_bytes(line: &[u8]) -> Result<Self> {
+        Self::decode_request(Decoder::from_bytes(line)?)
+    }
+
+    fn decode_request(mut d: Decoder<'_>) -> Result<Self> {
         let mut ty: Option<String> = None;
         let mut id = None;
         let mut matrix = None;
@@ -268,19 +329,38 @@ impl Request {
                 }
                 Ok(Request::Explore(ExploreRequest { id, matrix, spec, bits, space, objective }))
             }
-            Some(other) => bail!("unknown job type '{other}' (expected compile|explore)"),
+            Some(ty @ ("shutdown" | "stats")) => {
+                for (field, present) in [
+                    ("matrix", matrix.is_some()),
+                    ("bits", bits.is_some()),
+                    ("strategy", strategy.is_some()),
+                    ("dc", dc.is_some()),
+                    ("emit", emit.is_some()),
+                    ("spec", spec.is_some()),
+                    ("space", space.is_some()),
+                    ("objective", objective.is_some()),
+                ] {
+                    ensure!(!present, "field '{field}' does not apply to control lines");
+                }
+                let op = if ty == "shutdown" { ControlOp::Shutdown } else { ControlOp::Stats };
+                Ok(Request::Control(ControlRequest { id, op }))
+            }
+            Some(other) => {
+                bail!("unknown job type '{other}' (expected compile|explore|shutdown|stats)")
+            }
         }
     }
 }
 
 impl JobRequest {
     /// Streaming-decode one compile request line (no `Value` tree).
-    /// Explore lines are an error here — use [`Request::from_json`] for
-    /// the full wire.
+    /// Explore and control lines are an error here — use
+    /// [`Request::from_json`] for the full wire.
     pub fn from_json(line: &str) -> Result<Self> {
         match Request::from_json(line)? {
             Request::Compile(req) => Ok(req),
             Request::Explore(_) => bail!("explore job where a compile job was expected"),
+            Request::Control(_) => bail!("control line where a compile job was expected"),
         }
     }
 
@@ -346,317 +426,14 @@ pub fn parse_strategy(name: &str, dc: i32) -> Result<Strategy> {
     })
 }
 
-/// One batch entry: a lowered compile job, a validated explore job, or
-/// an immediate error reply.
-enum Pending {
-    Job { id: String, job: CompileJob, emit: Option<EmitLang> },
-    Explore { id: String, target: ExploreTarget, space: SpaceConfig, objective: Option<Objective> },
-    Bad { id: Option<String>, error: String },
-}
-
-/// Run the serve loop: read JSONL jobs from `input` until EOF, stream
-/// JSONL replies to `output`. Never returns early on malformed or
-/// failing jobs — only on I/O errors writing `output`.
-pub fn serve<R: BufRead, W: Write>(
-    input: R,
-    output: &mut W,
-    cfg: &ServeConfig,
-) -> Result<ServeSummary> {
-    let coord = Coordinator::with_shards(cfg.cache_shards);
-    coord.set_cache_cap(cfg.cache_cap);
-    serve_with(&coord, input, output, cfg)
-}
-
-/// [`serve`] against a caller-owned [`Coordinator`]. This is the warm
-/// restart surface: the CLI loads a persisted cache into the
-/// coordinator first (`serve --cache-load`), serves, then saves the
-/// final cache after EOF (`--cache-save`). The coordinator's own
-/// sharding/cap configuration wins — [`ServeConfig::cache_shards`] and
-/// [`ServeConfig::cache_cap`] are applied only by [`serve`], which owns
-/// its coordinator.
-pub fn serve_with<R: BufRead, W: Write>(
-    coord: &Coordinator,
-    input: R,
-    output: &mut W,
-    cfg: &ServeConfig,
-) -> Result<ServeSummary> {
-    let mut summary = ServeSummary::default();
-    let mut batch: Vec<Pending> = Vec::new();
-    let batch_size = cfg.batch_size.max(1);
-    let mut line_no = 0u64;
-    for line in input.lines() {
-        // Count every input line (blank ones too) so the default
-        // `job-<line#>` id matches the caller's 1-based file line.
-        line_no += 1;
-        let entry = match line {
-            Ok(line) if line.trim().is_empty() => continue,
-            Ok(line) => match Request::from_json(&line) {
-                Ok(Request::Compile(req)) => {
-                    let id = req.id.clone().unwrap_or_else(|| format!("job-{line_no}"));
-                    let lowered = req
-                        .to_compile_job(id.clone(), cfg.default_dc)
-                        .and_then(|job| Ok((job, req.emit_lang()?)));
-                    match lowered {
-                        Ok((job, emit)) => Pending::Job { id, job, emit },
-                        Err(e) => Pending::Bad { id: Some(id), error: format!("{e:#}") },
-                    }
-                }
-                Ok(Request::Explore(req)) => {
-                    let id = req.id.clone().unwrap_or_else(|| format!("job-{line_no}"));
-                    match req.validate() {
-                        Ok((target, space, objective)) => {
-                            Pending::Explore { id, target, space, objective }
-                        }
-                        Err(e) => Pending::Bad { id: Some(id), error: format!("{e:#}") },
-                    }
-                }
-                Err(e) => Pending::Bad { id: None, error: format!("{e:#}") },
-            },
-            // A non-UTF-8 line is one more malformed request, not a
-            // reason to tear down the service and drop buffered jobs
-            // (`lines()` has already consumed the offending bytes).
-            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
-                Pending::Bad { id: None, error: format!("reading input line {line_no}: {e}") }
-            }
-            // A genuine I/O failure: answer what we have, then stop.
-            Err(e) => {
-                flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
-                summary.stats = coord.stats();
-                return Err(e.into());
-            }
-        };
-        batch.push(entry);
-        if batch.len() >= batch_size {
-            flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
-        }
-    }
-    flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
-    summary.stats = coord.stats();
-    Ok(summary)
-}
-
-/// One reply slot after the jobs have been moved out for compilation:
-/// correlation metadata only (the job itself is not cloned). Explore
-/// jobs (already validated) are executed at reply time against the
-/// shared coordinator.
-enum Slot {
-    Job { id: String, idx: usize, emit: Option<EmitLang> },
-    Explore { id: String, target: ExploreTarget, space: SpaceConfig, objective: Option<Objective> },
-    Bad { id: Option<String>, error: String },
-}
-
-/// RTL module names come from job ids, which are arbitrary strings:
-/// sanitize to a legal Verilog/VHDL identifier.
-fn module_name(id: &str) -> String {
-    let mut s: String = id
-        .chars()
-        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
-        .collect();
-    match s.chars().next() {
-        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
-        _ => s.insert_str(0, "m_"),
-    }
-    s
-}
-
-/// Build one `"type": "result"` reply (including the optional RTL
-/// text). RTL emission failures bubble up and become an error reply.
-fn result_reply(
-    id: &str,
-    sol: &crate::cmvm::CmvmSolution,
-    cached: bool,
-    emit: Option<EmitLang>,
-    cfg: &ServeConfig,
-) -> Result<Value> {
-    let rep = estimate::combinational(&sol.program, &cfg.model);
-    let mut o = BTreeMap::new();
-    o.insert("type".into(), Value::Str("result".into()));
-    o.insert("id".into(), Value::Str(id.into()));
-    o.insert("adders".into(), Value::Int(sol.adders as i64));
-    o.insert("depth".into(), Value::Int(sol.depth as i64));
-    o.insert("lut".into(), Value::Int(rep.lut as i64));
-    o.insert("ff".into(), Value::Int(rep.ff as i64));
-    o.insert("latency_ns".into(), Value::Float(rep.latency_ns));
-    o.insert("cached".into(), Value::Bool(cached));
-    o.insert("opt_ms".into(), Value::Float(sol.opt_time.as_secs_f64() * 1e3));
-    if let Some(lang) = emit {
-        let module = module_name(id);
-        let text = match lang {
-            EmitLang::Verilog => crate::rtl::emit_verilog(&sol.program, &module, None)?,
-            EmitLang::Vhdl => crate::rtl::emit_vhdl(&sol.program, &module, None)?,
-        };
-        o.insert("rtl".into(), Value::Str(text));
-    }
-    Ok(Value::Object(o))
-}
-
-/// Run one validated explore job against the shared coordinator (so
-/// CMVM candidates hit the same solution cache as compile jobs) and
-/// build its `"type": "explore"` reply. A compile failure bubbles up
-/// into an error reply.
-fn explore_reply(
-    coord: &Coordinator,
-    id: &str,
-    target: &ExploreTarget,
-    space: SpaceConfig,
-    objective: Option<Objective>,
-    cfg: &ServeConfig,
-) -> Result<Value> {
-    let ecfg = ExploreConfig { space, jobs: cfg.threads, model: cfg.model };
-    let report = explore::explore(target, coord, &ecfg)?;
-    let mut o = BTreeMap::new();
-    o.insert("type".into(), Value::Str("explore".into()));
-    o.insert("id".into(), Value::Str(id.into()));
-    o.insert("target".into(), Value::Str(report.target.clone()));
-    o.insert(
-        "schema_version".into(),
-        Value::Int(report.schema_version as i64),
-    );
-    o.insert(
-        "front".into(),
-        Value::Array(report.front.iter().map(explore::schema::point_value).collect()),
-    );
-    o.insert(
-        "dominated".into(),
-        Value::Array(report.dominated.iter().map(explore::schema::point_value).collect()),
-    );
-    o.insert(
-        "skipped".into(),
-        Value::Array(
-            report
-                .skipped
-                .iter()
-                .map(|s| {
-                    let mut sk = BTreeMap::new();
-                    sk.insert("id".into(), Value::Str(s.id.clone()));
-                    sk.insert("reason".into(), Value::Str(s.reason.clone()));
-                    Value::Object(sk)
-                })
-                .collect(),
-        ),
-    );
-    if let Some(obj) = objective {
-        if let Some(picked) = explore::pick(&report.front, obj) {
-            o.insert("objective".into(), Value::Str(obj.name().into()));
-            o.insert("picked".into(), explore::schema::point_value(picked));
-        }
-    }
-    Ok(Value::Object(o))
-}
-
-/// Compile the batched jobs through the coordinator and stream one
-/// reply line per entry (input order), then the batch stats line.
-/// No-op on an empty batch.
-fn flush_batch<W: Write>(
-    coord: &Coordinator,
-    batch: &mut Vec<Pending>,
-    output: &mut W,
-    cfg: &ServeConfig,
-    summary: &mut ServeSummary,
-) -> Result<()> {
-    if batch.is_empty() {
-        return Ok(());
-    }
-    summary.batches += 1;
-    // Move the jobs out for the worker pool; keep only correlation
-    // metadata (id, original position) on this side.
-    let mut jobs = Vec::new();
-    let mut slots = Vec::with_capacity(batch.len());
-    for entry in std::mem::take(batch) {
-        match entry {
-            Pending::Job { id, job, emit } => {
-                slots.push(Slot::Job { id, idx: jobs.len(), emit });
-                jobs.push(job);
-            }
-            Pending::Explore { id, target, space, objective } => {
-                slots.push(Slot::Explore { id, target, space, objective })
-            }
-            Pending::Bad { id, error } => slots.push(Slot::Bad { id, error }),
-        }
-    }
-    let mut results: Vec<Option<Result<(std::sync::Arc<crate::cmvm::CmvmSolution>, bool)>>> =
-        coord.compile_batch(jobs, cfg.threads).into_iter().map(Some).collect();
-    for slot in slots {
-        let reply = match slot {
-            Slot::Bad { id, error } => {
-                summary.errors += 1;
-                error_reply(id.as_deref(), &error)
-            }
-            Slot::Explore { id, target, space, objective } => {
-                summary.jobs += 1;
-                match explore_reply(coord, &id, &target, space, objective, cfg) {
-                    Ok(reply) => reply,
-                    Err(e) => {
-                        summary.errors += 1;
-                        error_reply(Some(id.as_str()), &format!("{e:#}"))
-                    }
-                }
-            }
-            Slot::Job { id, idx, emit } => {
-                summary.jobs += 1;
-                match results[idx].take().expect("one result per job") {
-                    Ok((sol, cached)) => {
-                        match result_reply(&id, &sol, cached, emit, cfg) {
-                            Ok(reply) => reply,
-                            Err(e) => {
-                                summary.errors += 1;
-                                error_reply(Some(id.as_str()), &format!("{e:#}"))
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        summary.errors += 1;
-                        error_reply(Some(id.as_str()), &format!("{e:#}"))
-                    }
-                }
-            }
-        };
-        summary.replies += 1;
-        writeln!(output, "{}", json::to_string(&reply))?;
-    }
-    let stats = coord.stats();
-    let mut o = BTreeMap::new();
-    o.insert("type".into(), Value::Str("stats".into()));
-    o.insert("batch".into(), Value::Int(summary.batches as i64));
-    o.insert("jobs".into(), Value::Int(summary.replies as i64));
-    o.insert("submitted".into(), Value::Int(stats.submitted as i64));
-    o.insert("cache_hits".into(), Value::Int(stats.cache_hits as i64));
-    o.insert("cache_size".into(), Value::Int(coord.cache_len() as i64));
-    o.insert("cache_evictions".into(), Value::Int(stats.evictions as i64));
-    // Deployment-shape keys: how many independently locked shards the
-    // cache runs on, and how many solutions this process inherited from
-    // a persisted cache file (`serve --cache-load`) rather than
-    // computing or receiving over the wire.
-    o.insert("cache_shards".into(), Value::Int(coord.shard_count() as i64));
-    o.insert("cache_loaded".into(), Value::Int(stats.loaded as i64));
-    o.insert("total_opt_ms".into(), Value::Float(stats.total_opt_time.as_secs_f64() * 1e3));
-    // Optimizer work proxies (cumulative, executed jobs only — cache
-    // hits add nothing): lets clients watch perf per batch the same way
-    // the perf suite does per case.
-    o.insert("cse_steps".into(), Value::Int(stats.total_cse_steps as i64));
-    o.insert("heap_pops".into(), Value::Int(stats.total_heap_pops as i64));
-    writeln!(output, "{}", json::to_string(&Value::Object(o)))?;
-    output.flush()?;
-    Ok(())
-}
-
-fn error_reply(id: Option<&str>, error: &str) -> Value {
-    let mut o = BTreeMap::new();
-    o.insert("type".into(), Value::Str("error".into()));
-    o.insert(
-        "id".into(),
-        match id {
-            Some(id) => Value::Str(id.into()),
-            None => Value::Null,
-        },
-    );
-    o.insert("error".into(), Value::Str(error.into()));
-    Value::Object(o)
-}
-
 #[cfg(test)]
 mod tests {
+    use super::core::module_name;
     use super::*;
+    use crate::coordinator::Coordinator;
+    use crate::json::{self, Value};
+    use crate::util::Rng;
+    use std::collections::BTreeMap;
     use std::io::Cursor;
 
     fn run(input: &str, cfg: &ServeConfig) -> (ServeSummary, Vec<Value>) {
@@ -689,6 +466,85 @@ mod tests {
         // dc must fit i32 — no silent wrap-around on the wire.
         let bad_dc = JobRequest::from_json(r#"{"matrix": [[1]], "dc": 4294967296}"#).unwrap();
         assert!(bad_dc.to_compile_job("j".into(), -1).is_err());
+    }
+
+    /// Control lines decode on the shared wire; job fields on a control
+    /// line are strict errors (same policy as cross-type job fields).
+    #[test]
+    fn control_lines_decode_and_are_strict() {
+        match Request::from_json(r#"{"type": "shutdown"}"#).unwrap() {
+            Request::Control(c) => {
+                assert_eq!(c.op, ControlOp::Shutdown);
+                assert!(c.id.is_none());
+            }
+            other => panic!("expected control line, got {other:?}"),
+        }
+        match Request::from_json(r#"{"type": "stats", "id": "s1"}"#).unwrap() {
+            Request::Control(c) => {
+                assert_eq!(c.op, ControlOp::Stats);
+                assert_eq!(c.id.as_deref(), Some("s1"));
+            }
+            other => panic!("expected control line, got {other:?}"),
+        }
+        assert!(Request::from_json(r#"{"type": "shutdown", "matrix": [[1]]}"#).is_err());
+        assert!(Request::from_json(r#"{"type": "stats", "objective": "knee"}"#).is_err());
+        assert!(Request::from_json(r#"{"type": "restart"}"#).is_err());
+        // A control line is not a compile job.
+        assert!(JobRequest::from_json(r#"{"type": "shutdown"}"#).is_err());
+    }
+
+    /// The byte-slice decode path is the same wire: identical requests,
+    /// identical errors.
+    #[test]
+    fn from_json_bytes_matches_from_json() {
+        let lines = [
+            r#"{"id": "a", "matrix": [[3, 5], [-7, 9]], "dc": -1}"#,
+            r#"{"type": "explore", "matrix": [[1]], "objective": "knee"}"#,
+            r#"{"type": "shutdown"}"#,
+            r#"{"matrix": 5}"#,
+        ];
+        for line in lines {
+            let s = Request::from_json(line).map(|r| format!("{r:?}"));
+            let b = Request::from_json_bytes(line.as_bytes()).map(|r| format!("{r:?}"));
+            match (s, b) {
+                (Ok(s), Ok(b)) => assert_eq!(s, b),
+                (Err(_), Err(_)) => {}
+                (s, b) => panic!("decode paths disagree on {line}: {s:?} vs {b:?}"),
+            }
+        }
+        assert!(Request::from_json_bytes(&[0xFF, 0xFE, b'{']).is_err());
+    }
+
+    /// Stdin-transport control lines: `stats` answers with an on-demand
+    /// stats line (after flushing the pending batch), `shutdown` flushes
+    /// and stops reading — lines after it are never answered.
+    #[test]
+    fn stdin_control_lines_stats_and_shutdown() {
+        let input = "\
+{\"id\": \"a\", \"matrix\": [[3, 5], [-7, 9]], \"dc\": -1}\n\
+{\"type\": \"stats\"}\n\
+{\"id\": \"b\", \"matrix\": [[2, 3], [5, 7]], \"dc\": -1}\n\
+{\"type\": \"shutdown\"}\n\
+{\"id\": \"never\", \"matrix\": [[1]], \"dc\": -1}\n";
+        let (summary, lines) = run(input, &ServeConfig::default());
+        assert_eq!(summary.jobs, 2);
+        assert_eq!(summary.replies, 2);
+        assert_eq!(summary.batches, 2);
+        // result a, batch stats, on-demand stats, result b, batch
+        // stats, final (shutdown) stats — and nothing for "never".
+        assert_eq!(lines.len(), 6);
+        assert_eq!(lines[0].get("id").unwrap().as_str().unwrap(), "a");
+        assert_eq!(lines[1].get("type").unwrap().as_str().unwrap(), "stats");
+        assert_eq!(lines[2].get("type").unwrap().as_str().unwrap(), "stats");
+        assert_eq!(lines[3].get("id").unwrap().as_str().unwrap(), "b");
+        assert_eq!(lines[4].get("type").unwrap().as_str().unwrap(), "stats");
+        assert_eq!(lines[5].get("type").unwrap().as_str().unwrap(), "stats");
+        assert_eq!(lines[5].get("submitted").unwrap().as_i64().unwrap(), 2);
+        for line in &lines {
+            if let Ok(id) = line.get("id") {
+                assert_ne!(id.as_str().unwrap_or(""), "never");
+            }
+        }
     }
 
     /// A non-UTF-8 input line becomes one more error reply; the jobs
@@ -1077,5 +933,263 @@ not even json
             .map(|l| l.get("cached").unwrap().as_bool().unwrap())
             .collect();
         assert_eq!(cached, vec![false, true, true]);
+    }
+
+    // ---- wire round-trip property: streaming decoder vs the legacy
+    // DOM parser (the differential idiom from `json/legacy.rs`, lifted
+    // to the serve wire). A request encoded to JSONL must decode to the
+    // identical `Request` through `Request::from_json`,
+    // `Request::from_json_bytes`, and a DOM-walking reference decoder
+    // built on `json::legacy::parse`. ----
+
+    fn rand_id(rng: &mut Rng) -> String {
+        let stems = ["job", "fc-1", "layer.0/dense", "ünïcode ✓", "quo\"te\\slash", "nl\nnl", ""];
+        let stem = stems[rng.below(stems.len())];
+        format!("{stem}{}", rng.below(100))
+    }
+
+    fn rand_matrix(rng: &mut Rng) -> Vec<Vec<i64>> {
+        let rows = 1 + rng.below(3);
+        let cols = 1 + rng.below(3);
+        (0..rows)
+            .map(|_| (0..cols).map(|_| rng.range_i64(-255, 255)).collect())
+            .collect()
+    }
+
+    fn mat_value(matrix: &[Vec<i64>]) -> Value {
+        Value::Array(
+            matrix
+                .iter()
+                .map(|row| Value::Array(row.iter().map(|&w| Value::Int(w)).collect()))
+                .collect(),
+        )
+    }
+
+    /// Generate one random request: the JSONL line and the `Request`
+    /// its decode must produce. Field values are drawn beyond the
+    /// *valid* sets on purpose (unknown strategies, out-of-range bits):
+    /// decoding keeps them verbatim — validation is a lowering-time
+    /// concern, and the round trip must not depend on it.
+    fn random_request_line(rng: &mut Rng) -> (String, Request) {
+        let mut o: BTreeMap<String, Value> = BTreeMap::new();
+        let id = if rng.chance(0.7) { Some(rand_id(rng)) } else { None };
+        if let Some(id) = &id {
+            o.insert("id".into(), Value::Str(id.clone()));
+        }
+        if rng.chance(0.3) {
+            // Unknown fields are skipped by every decoder on the wire.
+            o.insert(
+                "x-trace".into(),
+                Value::Array(vec![Value::Int(1), Value::Null, Value::Str("t".into())]),
+            );
+        }
+        let expected = match rng.below(4) {
+            kind @ (0 | 1) => {
+                if kind == 1 {
+                    o.insert("type".into(), Value::Str("compile".into()));
+                }
+                let matrix = rand_matrix(rng);
+                o.insert("matrix".into(), mat_value(&matrix));
+                let bits = if rng.chance(0.5) { Some(rng.range_i64(-2, 70)) } else { None };
+                if let Some(b) = bits {
+                    o.insert("bits".into(), Value::Int(b));
+                }
+                let strategy = if rng.chance(0.4) {
+                    let names = ["da", "latency", "naive-da", "cse-only", "lookahead", "hls"];
+                    Some(names[rng.below(names.len())].to_string())
+                } else {
+                    None
+                };
+                if let Some(s) = &strategy {
+                    o.insert("strategy".into(), Value::Str(s.clone()));
+                }
+                let dc = if rng.chance(0.4) { Some(rng.range_i64(-1, 8)) } else { None };
+                if let Some(dc) = dc {
+                    o.insert("dc".into(), Value::Int(dc));
+                }
+                let emit = if rng.chance(0.3) {
+                    let langs = ["verilog", "vhdl", "systemverilog"];
+                    Some(langs[rng.below(langs.len())].to_string())
+                } else {
+                    None
+                };
+                if let Some(e) = &emit {
+                    o.insert("emit".into(), Value::Str(e.clone()));
+                }
+                Request::Compile(JobRequest {
+                    id,
+                    matrix,
+                    bits: bits.unwrap_or(8),
+                    strategy,
+                    dc,
+                    emit,
+                })
+            }
+            2 => {
+                o.insert("type".into(), Value::Str("explore".into()));
+                // Matrix targets only: an inline network spec has its
+                // own decoder with its own differential tests, and the
+                // DOM reference below deliberately stays spec-free.
+                let matrix = rand_matrix(rng);
+                o.insert("matrix".into(), mat_value(&matrix));
+                let bits = if rng.chance(0.4) { Some(rng.range_i64(1, 63)) } else { None };
+                if let Some(b) = bits {
+                    o.insert("bits".into(), Value::Int(b));
+                }
+                let space = if rng.chance(0.5) {
+                    let names = ["smoke", "full", "galaxy"];
+                    Some(names[rng.below(names.len())].to_string())
+                } else {
+                    None
+                };
+                if let Some(s) = &space {
+                    o.insert("space".into(), Value::Str(s.clone()));
+                }
+                let objective = if rng.chance(0.5) {
+                    let names = ["min-lut", "min-latency", "knee", "fastest"];
+                    Some(names[rng.below(names.len())].to_string())
+                } else {
+                    None
+                };
+                if let Some(obj) = &objective {
+                    o.insert("objective".into(), Value::Str(obj.clone()));
+                }
+                Request::Explore(ExploreRequest {
+                    id,
+                    matrix: Some(matrix),
+                    spec: None,
+                    bits,
+                    space,
+                    objective,
+                })
+            }
+            _ => {
+                let op = if rng.chance(0.5) { ControlOp::Shutdown } else { ControlOp::Stats };
+                let ty = match op {
+                    ControlOp::Shutdown => "shutdown",
+                    ControlOp::Stats => "stats",
+                };
+                o.insert("type".into(), Value::Str(ty.into()));
+                Request::Control(ControlRequest { id, op })
+            }
+        };
+        (json::to_string(&Value::Object(o)), expected)
+    }
+
+    /// Reference decoder: the same wire semantics, written against the
+    /// retained recursive-descent DOM parser instead of the streaming
+    /// pull decoder. Test-only, matrix targets only (no inline specs).
+    fn request_from_dom(line: &str) -> Result<Request> {
+        let v = crate::json::legacy::parse(line)?;
+        let obj = match &v {
+            Value::Object(o) => o,
+            other => bail!("request line must be a JSON object, got {other:?}"),
+        };
+        ensure!(obj.get("spec").is_none(), "inline specs are outside the DOM reference");
+        let get_str = |key: &str| -> Result<Option<String>> {
+            match obj.get(key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(v.as_str()?.to_string())),
+            }
+        };
+        let get_i64 = |key: &str| -> Result<Option<i64>> {
+            match obj.get(key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(v.as_i64()?)),
+            }
+        };
+        let ty = get_str("type")?;
+        let id = get_str("id")?;
+        let matrix = match obj.get("matrix") {
+            None => None,
+            Some(v) => Some(v.to_i64_mat()?),
+        };
+        let bits = get_i64("bits")?;
+        let strategy = get_str("strategy")?;
+        let dc = get_i64("dc")?;
+        let emit = get_str("emit")?;
+        let space = get_str("space")?;
+        let objective = get_str("objective")?;
+        match ty.as_deref() {
+            None | Some("compile") => {
+                ensure!(space.is_none() && objective.is_none(), "explore-only field");
+                let matrix = matrix.ok_or_else(|| anyhow::anyhow!("missing field 'matrix'"))?;
+                Ok(Request::Compile(JobRequest {
+                    id,
+                    matrix,
+                    bits: bits.unwrap_or(8),
+                    strategy,
+                    dc,
+                    emit,
+                }))
+            }
+            Some("explore") => {
+                ensure!(
+                    strategy.is_none() && dc.is_none() && emit.is_none(),
+                    "compile-only field"
+                );
+                Ok(Request::Explore(ExploreRequest {
+                    id,
+                    matrix,
+                    spec: None,
+                    bits,
+                    space,
+                    objective,
+                }))
+            }
+            Some(ty @ ("shutdown" | "stats")) => {
+                ensure!(
+                    matrix.is_none()
+                        && bits.is_none()
+                        && strategy.is_none()
+                        && dc.is_none()
+                        && emit.is_none()
+                        && space.is_none()
+                        && objective.is_none(),
+                    "job field on a control line"
+                );
+                let op = if ty == "shutdown" { ControlOp::Shutdown } else { ControlOp::Stats };
+                Ok(Request::Control(ControlRequest { id, op }))
+            }
+            Some(other) => bail!("unknown job type '{other}'"),
+        }
+    }
+
+    #[test]
+    fn wire_round_trip_matches_legacy_dom_decoder() {
+        crate::util::property("serve wire round trip", 128, |rng| {
+            let (line, expected) = random_request_line(rng);
+            let expected = format!("{expected:?}");
+            let streamed = Request::from_json(&line)
+                .unwrap_or_else(|e| panic!("streaming decode failed on {line}: {e:#}"));
+            assert_eq!(format!("{streamed:?}"), expected, "streaming decode of {line}");
+            let bytes = Request::from_json_bytes(line.as_bytes())
+                .unwrap_or_else(|e| panic!("byte decode failed on {line}: {e:#}"));
+            assert_eq!(format!("{bytes:?}"), expected, "byte decode of {line}");
+            let dom = request_from_dom(&line)
+                .unwrap_or_else(|e| panic!("DOM decode failed on {line}: {e:#}"));
+            assert_eq!(format!("{dom:?}"), expected, "DOM decode of {line}");
+        });
+    }
+
+    /// The two decoders must also agree on *rejection*: a line one
+    /// refuses, the other must refuse too (messages may differ — the
+    /// contract is the accept set, not the prose).
+    #[test]
+    fn wire_rejections_match_legacy_dom_decoder() {
+        let fixtures = [
+            r#"{"matrix": [[1]], "space": "smoke"}"#,
+            r#"{"type": "explore", "matrix": [[1]], "dc": 2}"#,
+            r#"{"type": "shutdown", "matrix": [[1]]}"#,
+            r#"{"type": "warmup"}"#,
+            r#"{"matrix": [[1]], "bits": "eight"}"#,
+            r#"{}"#,
+            r#"[1, 2]"#,
+            r#"not even json"#,
+        ];
+        for line in fixtures {
+            assert!(Request::from_json(line).is_err(), "streaming accepted {line}");
+            assert!(request_from_dom(line).is_err(), "DOM accepted {line}");
+        }
     }
 }

@@ -1,0 +1,737 @@
+//! The long-lived socket compile server (`da4ml serve --socket`).
+//!
+//! A [`Server`] listens on a Unix domain socket (always) and optionally
+//! a TCP address (`--listen host:port`), serving many concurrent JSONL
+//! connections over one shared [`Coordinator`]:
+//!
+//! * **One reader thread per connection** pulls newline-delimited
+//!   requests out of a reused byte buffer (the private `conn`
+//!   submodule's line reader), lowers them through the shared serve
+//!   core, and enqueues executable jobs on the shared queue.
+//! * **A fixed worker pool** ([`ServerConfig::workers`]) pops jobs and
+//!   runs them against the coordinator — the sharded solution cache
+//!   makes concurrent clients each other's cache warmers.
+//! * **Backpressure** is two-level: each connection may only have
+//!   [`ServerConfig::conn_inflight`] jobs in flight (its reader blocks,
+//!   which the kernel socket buffer turns into sender-side
+//!   backpressure), and past the global [`ServerConfig::max_inflight`]
+//!   cap new jobs are rejected immediately with a `busy` error reply
+//!   (admission control — the client is told, never silently stalled).
+//! * **Graceful drain**: a `{"type": "shutdown"}` control line from any
+//!   client, [`ServerHandle::shutdown`], or a poll-positive
+//!   [`ServerConfig::drain_when`] (the CLI wires SIGTERM/SIGINT to it)
+//!   stops accepting, closes the read half of every connection, answers
+//!   everything already accepted, writes each client a final stats
+//!   line, and returns. Every accepted job is answered exactly once;
+//!   job lines read after the drain started get a `shutting_down`
+//!   error reply.
+//!
+//! Replies per connection leave in that connection's submission order
+//! (out-of-order completions are resequenced per connection),
+//! and the reply lines themselves are byte-identical to the stdin
+//! transport's — both are rendered by the same core. Wire format and
+//! stats fields: `docs/serve.md`.
+
+use super::conn::{Conn, LineReader, NextLine, ReplyKind};
+use super::core::{self, Lowered, WorkPayload};
+use super::{ControlOp, ServeConfig};
+use crate::coordinator::{Coordinator, CoordinatorStats};
+use crate::json::{self, Value};
+use crate::Result;
+use anyhow::{bail, Context};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufWriter, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Socket-server knobs on top of the shared [`ServeConfig`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// The shared serving knobs (model, default dc, cache shape). The
+    /// socket transport ignores `batch_size` — jobs stream through the
+    /// worker pool one at a time.
+    pub serve: ServeConfig,
+    /// Worker threads executing jobs (`0` = hardware parallelism).
+    pub workers: usize,
+    /// Global admission cap: with this many jobs accepted and
+    /// unanswered, further job lines get an immediate `busy` error
+    /// reply instead of queueing.
+    pub max_inflight: usize,
+    /// Per-connection in-flight bound: a connection's reader stops
+    /// pulling lines once this many of its jobs are unanswered
+    /// (sender-side backpressure through the socket buffer).
+    pub conn_inflight: usize,
+    /// Emit a cumulative stats line to the active client every N
+    /// replies (`0` = only the per-connection final stats line).
+    pub stats_every: u64,
+    /// Reject request lines longer than this many bytes (the offending
+    /// connection gets one error reply and a clean teardown).
+    pub max_line_bytes: usize,
+    /// Socket write timeout in milliseconds (`0` = none): a client
+    /// that stops reading past the kernel buffer is declared dead
+    /// instead of wedging a worker forever.
+    pub write_timeout_ms: u64,
+    /// External drain poll (the CLI passes a SIGTERM/SIGINT flag
+    /// check); polled by the accept loop a few times per second.
+    pub drain_when: Option<fn() -> bool>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            serve: ServeConfig::default(),
+            workers: 0,
+            max_inflight: 256,
+            conn_inflight: 32,
+            stats_every: 0,
+            max_line_bytes: 8 * 1024 * 1024,
+            write_timeout_ms: 30_000,
+            drain_when: None,
+        }
+    }
+}
+
+/// End-of-run accounting returned by [`Server::run`] (the CLI prints
+/// it to stderr; sockets carry pure JSONL).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerSummary {
+    /// Connections accepted over the server's lifetime.
+    pub clients: u64,
+    /// Jobs executed (successfully or not) across all clients.
+    pub jobs: u64,
+    /// Reply lines answered (results + errors; stats lines excluded).
+    pub replies: u64,
+    /// Error replies (malformed lines, failed jobs, `busy`,
+    /// `shutting_down`).
+    pub errors: u64,
+    /// Jobs rejected by global admission control.
+    pub rejected_busy: u64,
+    /// Accepted jobs left unanswered at exit. The drain protocol
+    /// guarantees this is zero; it is measured, not assumed.
+    pub dropped_jobs: u64,
+    /// Final coordinator statistics (shared across all clients).
+    pub stats: CoordinatorStats,
+}
+
+/// One accepted byte stream, Unix or TCP.
+pub(crate) enum Stream {
+    /// A Unix-domain connection.
+    Unix(UnixStream),
+    /// A TCP connection.
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> std::io::Result<Stream> {
+        Ok(match self {
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+        })
+    }
+
+    fn shutdown(&self, how: Shutdown) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.shutdown(how),
+            Stream::Tcp(s) => s.shutdown(how),
+        }
+    }
+
+    fn set_write_timeout(&self, dur: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_write_timeout(dur),
+            Stream::Tcp(s) => s.set_write_timeout(dur),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_nonblocking(nb),
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// One bound listener, Unix or TCP.
+enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Unix(l) => l.set_nonblocking(nb),
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    /// Non-blocking accept: `Ok(None)` when no connection is pending.
+    fn accept_stream(&self) -> std::io::Result<Option<Stream>> {
+        let res = match self {
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+        };
+        match res {
+            Ok(s) => Ok(Some(s)),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// Global reply counters (mirrors of the per-connection counters, kept
+/// with atomics so the stats path never takes the queue lock).
+#[derive(Default)]
+struct Totals {
+    clients: AtomicU64,
+    jobs: AtomicU64,
+    replies: AtomicU64,
+    errors: AtomicU64,
+    rejected_busy: AtomicU64,
+}
+
+/// One accepted job on the shared queue.
+struct Work {
+    conn: Arc<Conn>,
+    seq: u64,
+    id: String,
+    payload: WorkPayload,
+}
+
+/// State shared by the accept loop, reader threads, and worker pool.
+struct Shared {
+    cfg: ServerConfig,
+    coord: Coordinator,
+    queue: Mutex<VecDeque<Work>>,
+    qcv: Condvar,
+    /// Set after all readers exited: workers drain the queue and stop.
+    pool_closed: AtomicBool,
+    /// Set when the drain starts: no new jobs are accepted anywhere.
+    draining: AtomicBool,
+    /// Globally accepted-but-unanswered jobs (admission control).
+    inflight: AtomicUsize,
+    /// Live connections (+ a stream handle so the drain can close
+    /// read halves and teardown can close sockets).
+    conns: Mutex<Vec<(Arc<Conn>, Stream)>>,
+    totals: Totals,
+}
+
+impl Shared {
+    fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Idempotent drain trigger: stop admissions, then close the read
+    /// half of every live connection so blocked readers see EOF and
+    /// enter their teardown path.
+    fn start_drain(&self) {
+        if self.draining.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let conns = self.conns.lock().unwrap();
+        for (conn, stream) in conns.iter() {
+            let _ = stream.shutdown(Shutdown::Read);
+            conn.notify();
+        }
+    }
+
+    fn register(&self, conn: Arc<Conn>, stream: Stream) {
+        let mut conns = self.conns.lock().unwrap();
+        // A connection accepted in the same instant the drain started:
+        // close its read half here, under the same lock the drain
+        // iterates under, so no connection can slip past the drain.
+        if self.draining() {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        conns.push((conn, stream));
+        self.totals.clients.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn unregister(&self, conn: &Conn) {
+        let mut conns = self.conns.lock().unwrap();
+        if let Some(i) = conns.iter().position(|(c, _)| std::ptr::eq(c.as_ref(), conn)) {
+            let (_, stream) = conns.swap_remove(i);
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+
+    fn live_clients(&self) -> usize {
+        self.conns.lock().unwrap().len()
+    }
+
+    /// Claim one global in-flight slot, or fail if the cap is reached.
+    fn try_admit(&self) -> bool {
+        let cap = self.cfg.max_inflight.max(1);
+        let mut cur = self.inflight.load(Ordering::SeqCst);
+        loop {
+            if cur >= cap {
+                return false;
+            }
+            match self.inflight.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+/// Which occasion a stats line marks (they differ only in one flag).
+enum StatsFlavor {
+    /// `--stats-every` cadence or an on-demand `{"type": "stats"}`.
+    Cumulative,
+    /// Acknowledging a `{"type": "shutdown"}`: carries `"draining"`.
+    DrainAck,
+    /// The last line of a connection: carries `"final"`.
+    Final,
+}
+
+/// Render one socket-transport stats line: the shared coordinator base
+/// fields plus the global and per-client breakdown.
+fn stats_line(shared: &Shared, conn: &Conn, flavor: StatsFlavor) -> String {
+    let c = conn.counters();
+    let t = &shared.totals;
+    let mut extra = vec![
+        ("clients", Value::Int(shared.live_clients() as i64)),
+        ("clients_total", Value::Int(t.clients.load(Ordering::SeqCst) as i64)),
+        ("replies", Value::Int(t.replies.load(Ordering::SeqCst) as i64)),
+        ("rejected_busy", Value::Int(t.rejected_busy.load(Ordering::SeqCst) as i64)),
+        ("client", Value::Str(conn.name.clone())),
+        ("client_jobs", Value::Int(c.jobs as i64)),
+        ("client_replies", Value::Int(c.replies as i64)),
+        ("client_errors", Value::Int(c.errors as i64)),
+        ("client_rejected_busy", Value::Int(c.rejected_busy as i64)),
+        ("client_cache_hits", Value::Int(c.cache_hits as i64)),
+    ];
+    match flavor {
+        StatsFlavor::Cumulative => {}
+        StatsFlavor::DrainAck => extra.push(("draining", Value::Bool(true))),
+        StatsFlavor::Final => extra.push(("final", Value::Bool(true))),
+    }
+    json::to_string(&core::stats_value(&shared.coord, &extra))
+}
+
+/// Sequence a reply onto its connection and mirror its accounting into
+/// the global totals; emits the periodic stats line on cadence.
+fn deliver(shared: &Shared, conn: &Conn, seq: u64, reply: String, kind: ReplyKind) {
+    conn.complete(seq, reply, kind);
+    let t = &shared.totals;
+    match kind {
+        ReplyKind::Result { .. } => {
+            t.jobs.fetch_add(1, Ordering::SeqCst);
+        }
+        ReplyKind::JobError => {
+            t.jobs.fetch_add(1, Ordering::SeqCst);
+            t.errors.fetch_add(1, Ordering::SeqCst);
+        }
+        ReplyKind::WireError | ReplyKind::ShuttingDown => {
+            t.errors.fetch_add(1, Ordering::SeqCst);
+        }
+        ReplyKind::Busy => {
+            t.errors.fetch_add(1, Ordering::SeqCst);
+            t.rejected_busy.fetch_add(1, Ordering::SeqCst);
+        }
+        ReplyKind::Control => {}
+    }
+    if !matches!(kind, ReplyKind::Control) {
+        let n = t.replies.fetch_add(1, Ordering::SeqCst) + 1;
+        if shared.cfg.stats_every > 0 && n % shared.cfg.stats_every == 0 {
+            conn.write_line(&stats_line(shared, conn, StatsFlavor::Cumulative));
+        }
+    }
+}
+
+/// The worker pool body: pop, execute, sequence the reply, release the
+/// in-flight slot. Exits when the pool is closed and the queue empty.
+fn worker_loop(shared: &Arc<Shared>) {
+    loop {
+        let work = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(w) = q.pop_front() {
+                    break Some(w);
+                }
+                if shared.pool_closed.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.qcv.wait(q).unwrap();
+            }
+        };
+        let Some(w) = work else { return };
+        let outcome = core::run_payload(&shared.coord, &w.id, w.payload, &shared.cfg.serve);
+        let kind = if outcome.is_err {
+            ReplyKind::JobError
+        } else {
+            ReplyKind::Result { cache_hit: outcome.cache_hit }
+        };
+        deliver(shared, &w.conn, w.seq, json::to_string(&outcome.reply), kind);
+        w.conn.job_done();
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The per-connection reader body: pull lines, lower them, enqueue or
+/// answer immediately; on EOF/teardown answer everything in flight,
+/// write the final stats line, and close.
+fn reader_loop(shared: &Arc<Shared>, conn: &Arc<Conn>, stream: Stream) {
+    let mut reader = LineReader::new(stream, shared.cfg.max_line_bytes);
+    let mut next_seq = 0u64;
+    let mut line_no = 0u64;
+    loop {
+        if conn.is_dead() {
+            break;
+        }
+        let item = match reader.next_line() {
+            Ok(item) => item,
+            Err(_) => break,
+        };
+        let range = match item {
+            NextLine::Eof => break,
+            NextLine::Oversized => {
+                line_no += 1;
+                let seq = next_seq;
+                next_seq += 1;
+                let reply = core::error_reply(
+                    None,
+                    &format!(
+                        "input line {line_no} exceeds the {} byte limit",
+                        shared.cfg.max_line_bytes
+                    ),
+                );
+                deliver(shared, conn, seq, json::to_string(&reply), ReplyKind::WireError);
+                // An unframed client is not a client we can keep
+                // decoding for: answer, then tear the connection down.
+                break;
+            }
+            NextLine::Line(range) => range,
+        };
+        line_no += 1;
+        let bytes = reader.slice(range);
+        if bytes.iter().all(|b| b.is_ascii_whitespace()) {
+            continue;
+        }
+        match core::lower_line_bytes(bytes, line_no, shared.cfg.serve.default_dc) {
+            Lowered::Bad { id, error } => {
+                let seq = next_seq;
+                next_seq += 1;
+                let reply = core::error_reply(id.as_deref(), &error);
+                deliver(shared, conn, seq, json::to_string(&reply), ReplyKind::WireError);
+            }
+            Lowered::Control { op: ControlOp::Stats, .. } => {
+                let seq = next_seq;
+                next_seq += 1;
+                let line = stats_line(shared, conn, StatsFlavor::Cumulative);
+                deliver(shared, conn, seq, line, ReplyKind::Control);
+            }
+            Lowered::Control { op: ControlOp::Shutdown, .. } => {
+                shared.start_drain();
+                let seq = next_seq;
+                next_seq += 1;
+                let line = stats_line(shared, conn, StatsFlavor::DrainAck);
+                deliver(shared, conn, seq, line, ReplyKind::Control);
+            }
+            Lowered::Work { id, payload } => {
+                let seq = next_seq;
+                next_seq += 1;
+                if shared.draining()
+                    || !conn.wait_capacity(shared.cfg.conn_inflight, &shared.draining)
+                {
+                    if conn.is_dead() {
+                        break;
+                    }
+                    let reply = core::error_reply(
+                        Some(&id),
+                        "shutting_down: server is draining, job not accepted",
+                    );
+                    deliver(shared, conn, seq, json::to_string(&reply), ReplyKind::ShuttingDown);
+                } else if !shared.try_admit() {
+                    let reply = core::error_reply(
+                        Some(&id),
+                        &format!(
+                            "busy: server at its global in-flight cap ({}), retry later",
+                            shared.cfg.max_inflight.max(1)
+                        ),
+                    );
+                    deliver(shared, conn, seq, json::to_string(&reply), ReplyKind::Busy);
+                } else {
+                    conn.begin_job();
+                    let mut q = shared.queue.lock().unwrap();
+                    q.push_back(Work { conn: Arc::clone(conn), seq, id, payload });
+                    drop(q);
+                    shared.qcv.notify_one();
+                }
+            }
+        }
+    }
+    // Teardown: every accepted job is answered before the connection
+    // closes (dead connections skip straight through — their replies
+    // are discarded but still accounted by the workers).
+    conn.wait_idle();
+    conn.write_line(&stats_line(shared, conn, StatsFlavor::Final));
+    conn.close_writer();
+    conn.mark_dead();
+    shared.unregister(conn);
+}
+
+/// A drain trigger usable from another thread (tests, embedders).
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServerHandle {
+    /// Start the graceful drain (idempotent): equivalent to a
+    /// `{"type": "shutdown"}` control line.
+    pub fn shutdown(&self) {
+        self.shared.start_drain();
+    }
+
+    /// Whether the drain has started.
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining()
+    }
+}
+
+/// A bound (but not yet running) socket server.
+pub struct Server {
+    shared: Arc<Shared>,
+    listeners: Vec<Listener>,
+    uds_path: PathBuf,
+}
+
+impl Server {
+    /// Bind the Unix socket at `socket` (replacing a stale socket file
+    /// left by a dead server; refusing one owned by a live server) and
+    /// optionally a TCP listener at `listen` (`host:port`). The
+    /// coordinator is caller-owned — load a persisted cache first for
+    /// a warm start, save it after [`Server::run`] returns.
+    pub fn bind(
+        coord: Coordinator,
+        cfg: ServerConfig,
+        socket: &Path,
+        listen: Option<&str>,
+    ) -> Result<Server> {
+        let unix = match UnixListener::bind(socket) {
+            Ok(l) => l,
+            Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+                if UnixStream::connect(socket).is_ok() {
+                    bail!("socket {} is in use by a live server", socket.display());
+                }
+                std::fs::remove_file(socket)
+                    .with_context(|| format!("replacing stale socket {}", socket.display()))?;
+                UnixListener::bind(socket)
+                    .with_context(|| format!("binding socket {}", socket.display()))?
+            }
+            Err(e) => {
+                return Err(anyhow::Error::new(e)
+                    .context(format!("binding socket {}", socket.display())))
+            }
+        };
+        let mut listeners = vec![Listener::Unix(unix)];
+        if let Some(addr) = listen {
+            let tcp = TcpListener::bind(addr)
+                .with_context(|| format!("binding TCP listener on {addr}"))?;
+            listeners.push(Listener::Tcp(tcp));
+        }
+        let shared = Arc::new(Shared {
+            cfg,
+            coord,
+            queue: Mutex::new(VecDeque::new()),
+            qcv: Condvar::new(),
+            pool_closed: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            conns: Mutex::new(Vec::new()),
+            totals: Totals::default(),
+        });
+        Ok(Server { shared, listeners, uds_path: socket.to_path_buf() })
+    }
+
+    /// A drain handle usable while [`Server::run`] owns the server.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Accept and serve until a drain is triggered (control line,
+    /// [`ServerHandle::shutdown`], or [`ServerConfig::drain_when`]),
+    /// then drain gracefully and return the accounting.
+    pub fn run(self) -> Result<ServerSummary> {
+        let shared = self.shared;
+        let workers = match shared.cfg.workers {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            n => n,
+        };
+        let worker_handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        for listener in &self.listeners {
+            listener.set_nonblocking(true)?;
+        }
+        let mut reader_handles = Vec::new();
+        let mut client_no = 0u64;
+        while !shared.draining() {
+            if let Some(drain_when) = shared.cfg.drain_when {
+                if drain_when() {
+                    break;
+                }
+            }
+            let mut accepted_any = false;
+            for listener in &self.listeners {
+                // Drain the whole backlog before sleeping again.
+                while let Ok(Some(stream)) = listener.accept_stream() {
+                    accepted_any = true;
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    if shared.cfg.write_timeout_ms > 0 {
+                        let dur = Duration::from_millis(shared.cfg.write_timeout_ms);
+                        let _ = stream.set_write_timeout(Some(dur));
+                    }
+                    let (registry, writer) = match (stream.try_clone(), stream.try_clone()) {
+                        (Ok(r), Ok(w)) => (r, w),
+                        _ => continue,
+                    };
+                    let conn = Arc::new(Conn::new(
+                        format!("client-{client_no}"),
+                        Box::new(BufWriter::new(writer)),
+                    ));
+                    client_no += 1;
+                    shared.register(Arc::clone(&conn), registry);
+                    let shared = Arc::clone(&shared);
+                    reader_handles.push(std::thread::spawn(move || {
+                        reader_loop(&shared, &conn, stream)
+                    }));
+                }
+            }
+            if !accepted_any {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+        // Drain: stop listening, close read halves, answer everything
+        // accepted, then let the workers run the queue dry.
+        shared.start_drain();
+        drop(self.listeners);
+        let _ = std::fs::remove_file(&self.uds_path);
+        for h in reader_handles {
+            let _ = h.join();
+        }
+        shared.pool_closed.store(true, Ordering::SeqCst);
+        shared.qcv.notify_all();
+        for h in worker_handles {
+            let _ = h.join();
+        }
+        let leftover = shared.queue.lock().unwrap().len() as u64;
+        let t = &shared.totals;
+        Ok(ServerSummary {
+            clients: t.clients.load(Ordering::SeqCst),
+            jobs: t.jobs.load(Ordering::SeqCst),
+            replies: t.replies.load(Ordering::SeqCst),
+            errors: t.errors.load(Ordering::SeqCst),
+            rejected_busy: t.rejected_busy.load(Ordering::SeqCst),
+            dropped_jobs: leftover + shared.inflight.load(Ordering::SeqCst) as u64,
+            stats: shared.coord.stats(),
+        })
+    }
+}
+
+/// Connect to a serve socket: a Unix socket path, or `host:port` when
+/// the target parses as one and no such path exists.
+fn connect(target: &str) -> Result<Stream> {
+    let path = Path::new(target);
+    if target.contains('/') || path.exists() {
+        return Ok(Stream::Unix(
+            UnixStream::connect(path)
+                .with_context(|| format!("connecting to socket {target}"))?,
+        ));
+    }
+    if target.contains(':') {
+        return Ok(Stream::Tcp(
+            TcpStream::connect(target).with_context(|| format!("connecting to {target}"))?,
+        ));
+    }
+    Ok(Stream::Unix(
+        UnixStream::connect(path).with_context(|| format!("connecting to socket {target}"))?,
+    ))
+}
+
+/// The thin socket client behind `da4ml serve --connect`: stream
+/// `input` lines to the server, stream reply lines to `output` until
+/// the server closes the connection (which it does after its final
+/// per-connection stats line — so this returns when the server is done
+/// with us, not merely when input runs out).
+pub fn run_client<R, W>(target: &str, input: R, output: &mut W) -> Result<()>
+where
+    R: BufRead + Send,
+    W: Write,
+{
+    let mut rx = connect(target)?;
+    let tx = rx.try_clone()?;
+    std::thread::scope(|scope| -> Result<()> {
+        let sender = scope.spawn(move || {
+            let mut input = input;
+            let mut tx = BufWriter::new(tx);
+            let mut line = String::new();
+            loop {
+                line.clear();
+                match input.read_line(&mut line) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {
+                        if !line.ends_with('\n') {
+                            line.push('\n');
+                        }
+                        // A send failure means the server tore us down
+                        // (e.g. drain); keep reading its replies.
+                        if tx.write_all(line.as_bytes()).and_then(|()| tx.flush()).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            let _ = tx.flush();
+            // Half-close: the server sees EOF, answers everything,
+            // sends its final stats line, then closes the other half.
+            let _ = tx.get_ref().shutdown(Shutdown::Write);
+        });
+        let copy = std::io::copy(&mut rx, output);
+        let _ = sender.join();
+        copy?;
+        output.flush()?;
+        Ok(())
+    })
+}

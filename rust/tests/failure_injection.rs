@@ -136,6 +136,199 @@ fn interp_checked_catches_spec_input_violation() {
     assert!(result.is_err());
 }
 
+// ---------------------------------------------------------------------------
+// Socket-path failure injection: hostile or broken clients must each
+// produce a clean per-connection teardown — the shared queue, worker
+// pool, and coordinator stats keep serving everyone else.
+// ---------------------------------------------------------------------------
+
+mod socket {
+    use da4ml::coordinator::Coordinator;
+    use da4ml::json;
+    use da4ml::serve::server::{Server, ServerConfig, ServerHandle, ServerSummary};
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::os::unix::net::UnixStream;
+    use std::path::{Path, PathBuf};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::thread;
+    use std::time::Duration;
+
+    fn socket_path(tag: &str) -> PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let n = N.fetch_add(1, Ordering::SeqCst);
+        std::env::temp_dir().join(format!("da4ml-fi-{tag}-{}-{n}.sock", std::process::id()))
+    }
+
+    fn start(
+        cfg: ServerConfig,
+        tag: &str,
+    ) -> (PathBuf, ServerHandle, thread::JoinHandle<ServerSummary>) {
+        let path = socket_path(tag);
+        let server = Server::bind(Coordinator::new(), cfg, &path, None).expect("bind");
+        let handle = server.handle();
+        let join = thread::spawn(move || server.run().expect("server run"));
+        (path, handle, join)
+    }
+
+    /// A well-formed 2x2 job round trip: the liveness probe run after
+    /// every injected failure.
+    fn assert_still_serving(path: &Path, id: &str) {
+        let mut tx = UnixStream::connect(path).expect("connect");
+        let rx = tx.try_clone().expect("clone");
+        tx.write_all(
+            format!("{{\"id\": \"{id}\", \"matrix\": [[2, 3], [5, 7]], \"dc\": -1}}\n")
+                .as_bytes(),
+        )
+        .expect("send");
+        tx.shutdown(std::net::Shutdown::Write).expect("half-close");
+        let lines: Vec<String> =
+            BufReader::new(rx).lines().map(|l| l.expect("reply")).collect();
+        assert_eq!(lines.len(), 2, "result + final stats: {lines:?}");
+        let v = json::parse(&lines[0]).unwrap();
+        assert_eq!(v.get("type").unwrap().as_str().unwrap(), "result");
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), id);
+        assert!(v.get("adders").unwrap().as_i64().unwrap() > 0);
+    }
+
+    /// A client that dies mid-line (connection drop with a half-written
+    /// frame on the wire) is answered as far as correlatable and torn
+    /// down cleanly; a client that half-closes after a partial frame
+    /// gets the decode error spelled out.
+    #[test]
+    fn mid_line_disconnect_and_half_frames_tear_down_cleanly() {
+        let (path, handle, join) = start(ServerConfig::default(), "midline");
+
+        // Drop mid-line: no newline ever arrives, then the socket dies.
+        let mut dropper = UnixStream::connect(&path).expect("connect");
+        dropper.write_all(b"{\"id\": \"x\", \"matr").expect("send partial");
+        drop(dropper);
+
+        // Half-written frame, but the client keeps reading: the final
+        // unterminated line is decoded and rejected with a real error.
+        let mut tx = UnixStream::connect(&path).expect("connect");
+        let rx = tx.try_clone().expect("clone");
+        tx.write_all(b"{\"id\": \"y\", \"matrix\": [[1").expect("send partial");
+        tx.shutdown(std::net::Shutdown::Write).expect("half-close");
+        let lines: Vec<String> =
+            BufReader::new(rx).lines().map(|l| l.expect("reply")).collect();
+        assert!(lines.len() >= 2, "error + final stats: {lines:?}");
+        let err = json::parse(&lines[0]).unwrap();
+        assert_eq!(err.get("type").unwrap().as_str().unwrap(), "error");
+
+        assert_still_serving(&path, "after-midline");
+        handle.shutdown();
+        let summary = join.join().expect("server thread");
+        assert_eq!(summary.dropped_jobs, 0);
+        assert_eq!(summary.jobs, 1, "only the probe executed");
+        assert!(summary.errors >= 1, "the half frame was rejected");
+        assert_eq!(summary.stats.submitted, 1, "coordinator stats unpoisoned");
+    }
+
+    /// An unframed line past the byte bound gets exactly one error
+    /// reply, then the connection is torn down — without the server
+    /// ever buffering the oversized payload.
+    #[test]
+    fn oversized_line_is_rejected_then_torn_down() {
+        let cfg = ServerConfig { max_line_bytes: 256, ..ServerConfig::default() };
+        let (path, handle, join) = start(cfg, "oversized");
+
+        let mut tx = UnixStream::connect(&path).expect("connect");
+        let rx = tx.try_clone().expect("clone");
+        let mut big = vec![b'z'; 4096];
+        big.push(b'\n');
+        tx.write_all(&big).expect("send oversized");
+        // A valid job after the oversized line: the teardown means it
+        // must NOT be answered (the connection is gone, not limping).
+        let _ = tx.write_all(b"{\"id\": \"late\", \"matrix\": [[1]]}\n");
+        let lines: Vec<String> =
+            BufReader::new(rx).lines().map(|l| l.expect("reply")).collect();
+        assert_eq!(lines.len(), 2, "one error + final stats: {lines:?}");
+        let err = json::parse(&lines[0]).unwrap();
+        assert_eq!(err.get("type").unwrap().as_str().unwrap(), "error");
+        assert!(
+            err.get("error").unwrap().as_str().unwrap().contains("exceeds"),
+            "got: {}",
+            lines[0]
+        );
+        let stats = json::parse(&lines[1]).unwrap();
+        assert_eq!(stats.get("type").unwrap().as_str().unwrap(), "stats");
+        assert!(stats.get("final").unwrap().as_bool().unwrap());
+
+        assert_still_serving(&path, "after-oversized");
+        handle.shutdown();
+        let summary = join.join().expect("server thread");
+        assert_eq!(summary.dropped_jobs, 0);
+        assert_eq!(summary.jobs, 1, "the late job must not execute");
+    }
+
+    /// A client that stops reading while big replies pile up trips the
+    /// write timeout: that connection alone is declared dead; its
+    /// accepted jobs still execute and are accounted (never wedging a
+    /// worker or the queue), and other clients keep being served.
+    #[test]
+    fn slow_reader_write_timeout_is_a_clean_death() {
+        // One worker: strictly sequential execution, so exactly one
+        // compile of the recurring matrix reaches the optimizer and the
+        // cache accounting below is deterministic.
+        let cfg =
+            ServerConfig { write_timeout_ms: 100, workers: 1, ..ServerConfig::default() };
+        let (path, handle, join) = start(cfg, "slowreader");
+
+        let mut tx = UnixStream::connect(&path).expect("connect");
+        let rx = tx.try_clone().expect("clone");
+        // One 12x12 compile, then cached re-emissions: every reply
+        // carries the full Verilog text, overflowing the socket buffer
+        // of a reader that never reads.
+        let row: Vec<String> = (0..12).map(|i| (17 * i % 201 - 100).to_string()).collect();
+        let mat = format!(
+            "[{}]",
+            (0..12).map(|_| format!("[{}]", row.join(","))).collect::<Vec<_>>().join(",")
+        );
+        const JOBS: usize = 64;
+        for j in 0..JOBS {
+            let line =
+                format!("{{\"id\": \"big-{j}\", \"matrix\": {mat}, \"dc\": 2, \"emit\": \"verilog\"}}\n");
+            if tx.write_all(line.as_bytes()).is_err() {
+                break; // reader side already torn down: also a clean death
+            }
+        }
+        // Never read. Give the server time to fill the buffer and trip
+        // the timeout, then vanish.
+        thread::sleep(Duration::from_millis(600));
+        drop(tx);
+        drop(rx);
+
+        assert_still_serving(&path, "after-slow-reader");
+        handle.shutdown();
+        let summary = join.join().expect("server thread");
+        assert_eq!(summary.dropped_jobs, 0, "discarded replies are still accounted");
+        assert!(summary.jobs >= 1, "the probe executed");
+        // The shared cache is intact: at most one compile of the big
+        // matrix plus the probe actually ran the optimizer.
+        assert!(summary.stats.cache_hits + 2 >= summary.jobs, "cache poisoned: {summary:?}");
+    }
+
+    /// A connection that never sends anything must not block the
+    /// drain: it is released with a final stats line and EOF.
+    #[test]
+    fn idle_connection_does_not_block_drain() {
+        let (path, handle, join) = start(ServerConfig::default(), "idle");
+        let mut idle = UnixStream::connect(&path).expect("connect");
+        assert_still_serving(&path, "with-idler");
+        handle.shutdown();
+        let summary = join.join().expect("server thread");
+        assert_eq!(summary.clients, 2);
+        assert_eq!(summary.dropped_jobs, 0);
+        // The idler was released with a final stats line and EOF.
+        let mut text = String::new();
+        idle.read_to_string(&mut text).expect("drain released the idler");
+        let last = text.lines().last().expect("final stats line");
+        let v = json::parse(last).unwrap();
+        assert_eq!(v.get("type").unwrap().as_str().unwrap(), "stats");
+        assert!(v.get("final").unwrap().as_bool().unwrap());
+    }
+}
+
 #[test]
 fn conv1d_alias_decodes_and_runs() {
     // Paper §5.1 lists Conv1D among the supported layers; the frontend

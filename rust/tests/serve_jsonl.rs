@@ -3,8 +3,10 @@
 //! trips through the [`da4ml::coordinator::Coordinator`] and streams
 //! back per-job reports plus batch stats with the cache hits visible.
 
+use da4ml::coordinator::Coordinator;
 use da4ml::json::{self, Value};
-use da4ml::serve::{serve, ServeConfig};
+use da4ml::serve::server::{run_client, Server, ServerConfig};
+use da4ml::serve::{serve, serve_with, ServeConfig};
 use da4ml::util::Rng;
 use std::io::Cursor;
 
@@ -137,6 +139,138 @@ fn serve_emits_rtl_on_request() {
         let y = da4ml::netlist::sim::evaluate(&nl, &x);
         assert_eq!(y, vec![2 * x[0] + 5 * x[1], 3 * x[0] + 7 * x[1]]);
     }
+}
+
+/// A deterministic mixed job stream: compile jobs (one recurring
+/// matrix for a cache hit, one RTL emission, one default id), a blank
+/// line, a malformed line, and an invalid job — every reply class both
+/// transports must render identically.
+fn transport_fixture() -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{{\"id\": \"a\", \"matrix\": {}, \"bits\": 8, \"dc\": 2}}\n",
+        matrix_json(41, 4, 4)
+    ));
+    s.push('\n'); // blank: skipped, but still counted for line numbers
+    s.push_str(&format!(
+        "{{\"id\": \"b\", \"matrix\": {}, \"dc\": -1, \"emit\": \"verilog\"}}\n",
+        matrix_json(42, 3, 3)
+    ));
+    s.push_str("this is not json\n");
+    s.push_str(&format!(
+        "{{\"matrix\": {}, \"dc\": 2}}\n", // no id: defaults to job-5
+        matrix_json(43, 4, 4)
+    ));
+    s.push_str("{\"id\": \"bad\", \"matrix\": [[1]], \"strategy\": \"hls\"}\n");
+    s.push_str(&format!(
+        "{{\"id\": \"a2\", \"matrix\": {}, \"bits\": 8, \"dc\": 2}}\n", // repeat of "a"
+        matrix_json(41, 4, 4)
+    ));
+    s
+}
+
+/// The reply lines both transports must agree on: everything except
+/// the stats lines (their extra fields are transport bookkeeping —
+/// batches on stdin, clients on the socket).
+fn non_stats_lines(out: &[u8]) -> Vec<String> {
+    String::from_utf8(out.to_vec())
+        .unwrap()
+        .lines()
+        .filter(|l| {
+            json::parse(l).expect("reply line is JSON").get("type").unwrap().as_str().unwrap()
+                != "stats"
+        })
+        .map(|l| l.to_string())
+        .collect()
+}
+
+/// Run the fixture through the socket transport: a real server on a
+/// Unix socket, driven by the same thin client the CLI uses.
+fn socket_transport_run(coord: Coordinator, cfg: &ServeConfig, input: &str) -> Vec<u8> {
+    let sock = std::env::temp_dir().join(format!(
+        "da4ml-xport-{}-{}.sock",
+        std::process::id(),
+        coord.shard_count()
+    ));
+    let _ = std::fs::remove_file(&sock);
+    // One worker: jobs execute strictly in submission order, so the
+    // recurring matrix is a deterministic cache hit on both transports.
+    let scfg = ServerConfig { serve: cfg.clone(), workers: 1, ..ServerConfig::default() };
+    let server = Server::bind(coord, scfg, &sock, None).expect("bind");
+    let handle = server.handle();
+    let join = std::thread::spawn(move || server.run().expect("server run"));
+    let mut out = Vec::new();
+    run_client(&sock.to_string_lossy(), Cursor::new(input.to_string()), &mut out)
+        .expect("client run");
+    handle.shutdown();
+    join.join().expect("server thread");
+    out
+}
+
+/// The tentpole contract: stdin mode and socket mode are thin clients
+/// of one core, so the same job file yields byte-identical reply lines
+/// on both transports. Cold runs agree after masking the one
+/// wall-clock field (`opt_ms`); warm runs from the same baked cache
+/// agree byte-for-byte with no masking at all.
+#[test]
+fn stdin_and_socket_transports_are_byte_identical() {
+    let input = transport_fixture();
+    let cfg = ServeConfig { batch_size: 1, ..ServeConfig::default() };
+
+    // Cold: fresh coordinator per transport, wall-clock masked.
+    let mut stdin_cold = Vec::new();
+    serve_with(&Coordinator::new(), Cursor::new(input.clone()), &mut stdin_cold, &cfg).unwrap();
+    let socket_cold = socket_transport_run(Coordinator::new(), &cfg, &input);
+    let mask = |lines: Vec<String>| -> Vec<Value> {
+        lines
+            .iter()
+            .map(|l| match json::parse(l).unwrap() {
+                Value::Object(mut o) => {
+                    if o.contains_key("opt_ms") {
+                        o.insert("opt_ms".into(), Value::Int(0));
+                    }
+                    Value::Object(o)
+                }
+                v => v,
+            })
+            .collect()
+    };
+    assert_eq!(
+        mask(non_stats_lines(&stdin_cold)),
+        mask(non_stats_lines(&socket_cold)),
+        "cold replies must agree up to wall-clock timing"
+    );
+
+    // Warm: bake a cache once, load the identical cache into both
+    // transports — every reply byte (timing included) round-trips.
+    let baker = Coordinator::new();
+    let mut sink = Vec::new();
+    serve_with(&baker, Cursor::new(input.clone()), &mut sink, &cfg).unwrap();
+    let cache = baker.save_cache();
+
+    let warm_stdin_coord = Coordinator::new();
+    warm_stdin_coord.load_cache(&cache).unwrap();
+    let mut stdin_warm = Vec::new();
+    serve_with(&warm_stdin_coord, Cursor::new(input.clone()), &mut stdin_warm, &cfg).unwrap();
+
+    let warm_socket_coord = Coordinator::new();
+    warm_socket_coord.load_cache(&cache).unwrap();
+    let socket_warm = socket_transport_run(warm_socket_coord, &cfg, &input);
+
+    let stdin_lines = non_stats_lines(&stdin_warm);
+    let socket_lines = non_stats_lines(&socket_warm);
+    assert_eq!(stdin_lines, socket_lines, "warm replies must be byte-identical");
+    assert_eq!(stdin_lines.len(), 6, "4 results + 2 error replies");
+    // Sanity on the classes covered: cache hits, RTL, errors, default id.
+    let vals: Vec<Value> = stdin_lines.iter().map(|l| json::parse(l).unwrap()).collect();
+    assert!(vals.iter().all(|v| {
+        v.get("type").unwrap().as_str().unwrap() != "result"
+            || v.get("cached").unwrap().as_bool().unwrap()
+    }));
+    assert!(vals[1].get("rtl").unwrap().as_str().unwrap().contains("module b ("));
+    assert!(matches!(vals[2].get("id").unwrap(), Value::Null));
+    assert_eq!(vals[3].get("id").unwrap().as_str().unwrap(), "job-5");
+    assert_eq!(vals[4].get("type").unwrap().as_str().unwrap(), "error");
 }
 
 /// Larger batches still answer every job and keep reply order. Every

@@ -1,0 +1,339 @@
+//! Integration hammer for the socket compile server: many concurrent
+//! clients over one Unix socket must each get their own replies, in
+//! their own submission order, with cross-client cache hits visible in
+//! the final stats — and a drain under load must answer every accepted
+//! job exactly once (a result, a `busy` rejection, or a
+//! `shutting_down` rejection; never silence, never a duplicate).
+
+use da4ml::coordinator::Coordinator;
+use da4ml::json::{self, Value};
+use da4ml::serve::server::{Server, ServerConfig, ServerHandle, ServerSummary};
+use da4ml::util::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::thread;
+use std::time::Duration;
+
+/// A collision-free socket path in the test temp dir.
+fn socket_path(tag: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let n = N.fetch_add(1, Ordering::SeqCst);
+    std::env::temp_dir().join(format!("da4ml-{tag}-{}-{n}.sock", std::process::id()))
+}
+
+/// Bind + run a server on a background thread.
+fn start(
+    cfg: ServerConfig,
+    tag: &str,
+) -> (PathBuf, ServerHandle, thread::JoinHandle<ServerSummary>) {
+    let path = socket_path(tag);
+    let coord = Coordinator::with_shards(cfg.serve.cache_shards);
+    let server = Server::bind(coord, cfg, &path, None).expect("bind");
+    let handle = server.handle();
+    let join = thread::spawn(move || server.run().expect("server run"));
+    (path, handle, join)
+}
+
+fn matrix_json(seed: u64, d_in: usize, d_out: usize) -> String {
+    let mut rng = Rng::seed_from(seed);
+    let rows: Vec<String> = (0..d_in)
+        .map(|_| {
+            let row: Vec<String> =
+                (0..d_out).map(|_| rng.range_i64(-127, 127).to_string()).collect();
+            format!("[{}]", row.join(","))
+        })
+        .collect();
+    format!("[{}]", rows.join(","))
+}
+
+fn job_line(id: &str, seed: u64, dim: usize) -> String {
+    format!(
+        "{{\"id\": \"{id}\", \"matrix\": {}, \"bits\": 8, \"dc\": 2}}\n",
+        matrix_json(seed, dim, dim)
+    )
+}
+
+/// Write every line, half-close, read every reply line until EOF.
+fn round_trip(path: &std::path::Path, input: &str) -> Vec<String> {
+    let mut tx = UnixStream::connect(path).expect("connect");
+    let rx = tx.try_clone().expect("clone");
+    tx.write_all(input.as_bytes()).expect("send");
+    tx.shutdown(std::net::Shutdown::Write).expect("half-close");
+    BufReader::new(rx).lines().map(|l| l.expect("reply line")).collect()
+}
+
+fn parsed(lines: &[String]) -> Vec<Value> {
+    lines.iter().map(|l| json::parse(l).expect("reply is JSON")).collect()
+}
+
+fn type_of(v: &Value) -> &str {
+    v.get("type").unwrap().as_str().unwrap()
+}
+
+/// N clients × M jobs drawn from a small shared matrix pool: every
+/// reply reaches the client that asked, in that client's submission
+/// order, and (after a pre-warm pass) every hammer job is a cache hit
+/// visible both per client and in the final server summary.
+#[test]
+fn multi_client_hammer_routes_and_orders_replies() {
+    const CLIENTS: usize = 4;
+    const JOBS: usize = 12;
+    const POOL: usize = 6;
+    let (path, handle, join) = start(ServerConfig::default(), "hammer");
+
+    // Pre-warm: compile the whole matrix pool once, sequentially, so
+    // the hammer phase is deterministic (every job a cache hit — no
+    // same-matrix compile races to account for).
+    let warm: String = (0..POOL).map(|m| job_line(&format!("warm-{m}"), 7 + m as u64, 4)).collect();
+    let warm_replies = round_trip(&path, &warm);
+    let warm_vals = parsed(&warm_replies);
+    assert_eq!(warm_vals.len(), POOL + 1, "pool results + final stats");
+    for v in &warm_vals[..POOL] {
+        assert_eq!(type_of(v), "result");
+        assert!(!v.get("cached").unwrap().as_bool().unwrap());
+    }
+
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let path = path.clone();
+            thread::spawn(move || {
+                let input: String = (0..JOBS)
+                    .map(|j| job_line(&format!("c{c}-j{j}"), 7 + ((c + j) % POOL) as u64, 4))
+                    .collect();
+                (c, round_trip(&path, &input))
+            })
+        })
+        .collect();
+    for w in workers {
+        let (c, lines) = w.join().expect("client thread");
+        let vals = parsed(&lines);
+        assert_eq!(vals.len(), JOBS + 1, "client {c}: {lines:?}");
+        for (j, v) in vals[..JOBS].iter().enumerate() {
+            assert_eq!(type_of(v), "result");
+            // Routing + ordering: my id, my order.
+            assert_eq!(v.get("id").unwrap().as_str().unwrap(), format!("c{c}-j{j}"));
+            assert!(v.get("cached").unwrap().as_bool().unwrap(), "c{c}-j{j} not cached");
+        }
+        let stats = &vals[JOBS];
+        assert_eq!(type_of(stats), "stats");
+        assert!(stats.get("final").unwrap().as_bool().unwrap());
+        assert_eq!(stats.get("client_jobs").unwrap().as_i64().unwrap(), JOBS as i64);
+        assert_eq!(stats.get("client_replies").unwrap().as_i64().unwrap(), JOBS as i64);
+        assert_eq!(stats.get("client_errors").unwrap().as_i64().unwrap(), 0);
+        assert_eq!(
+            stats.get("client_cache_hits").unwrap().as_i64().unwrap(),
+            JOBS as i64,
+            "cross-client hits: client {c} compiled nothing itself"
+        );
+    }
+
+    handle.shutdown();
+    let summary = join.join().expect("server thread");
+    assert_eq!(summary.clients, 1 + CLIENTS as u64);
+    assert_eq!(summary.jobs, (POOL + CLIENTS * JOBS) as u64);
+    assert_eq!(summary.errors, 0);
+    assert_eq!(summary.rejected_busy, 0);
+    assert_eq!(summary.dropped_jobs, 0, "every accepted job answered");
+    assert_eq!(summary.stats.submitted, (POOL + CLIENTS * JOBS) as u64);
+    assert_eq!(summary.stats.cache_hits, (CLIENTS * JOBS) as u64);
+}
+
+/// Global admission control: with the cap at 2 and a deliberately
+/// heavy job holding a worker, excess jobs are rejected immediately
+/// with a `busy` error reply — in order, never silently dropped.
+#[test]
+fn admission_control_rejects_past_the_global_cap() {
+    let cfg = ServerConfig {
+        workers: 1,
+        max_inflight: 2,
+        conn_inflight: 16,
+        ..ServerConfig::default()
+    };
+    let (path, handle, join) = start(cfg, "busy");
+    // One heavy job (lookahead on a 12x12) to pin the single worker,
+    // then a burst of trivial jobs faster than it can possibly finish.
+    let mut input = format!(
+        "{{\"id\": \"heavy\", \"matrix\": {}, \"bits\": 8, \"strategy\": \"lookahead\", \
+         \"dc\": 3}}\n",
+        matrix_json(99, 12, 12)
+    );
+    for j in 0..6 {
+        input.push_str(&job_line(&format!("t{j}"), 1, 2));
+    }
+    let lines = round_trip(&path, &input);
+    let vals = parsed(&lines);
+    assert_eq!(vals.len(), 8, "7 replies + final stats: {lines:?}");
+    assert_eq!(type_of(&vals[0]), "result");
+    assert_eq!(vals[0].get("id").unwrap().as_str().unwrap(), "heavy");
+    let mut results = 0u64;
+    let mut busy = 0u64;
+    for (j, v) in vals[1..7].iter().enumerate() {
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), format!("t{j}"));
+        match type_of(v) {
+            "result" => results += 1,
+            "error" => {
+                busy += 1;
+                assert!(
+                    v.get("error").unwrap().as_str().unwrap().contains("busy"),
+                    "unexpected error: {v:?}"
+                );
+            }
+            other => panic!("unexpected reply type {other}"),
+        }
+    }
+    assert_eq!(results + busy, 6);
+    assert!(busy >= 1, "the burst must overrun a cap of 2 behind a pinned worker");
+    let stats = &vals[7];
+    assert!(stats.get("final").unwrap().as_bool().unwrap());
+    assert_eq!(stats.get("client_rejected_busy").unwrap().as_i64().unwrap(), busy as i64);
+    handle.shutdown();
+    let summary = join.join().expect("server thread");
+    assert_eq!(summary.rejected_busy, busy);
+    assert_eq!(summary.dropped_jobs, 0);
+}
+
+/// A `shutdown` control line from one client drains the whole server:
+/// the sender gets a draining-stats acknowledgement, every connection
+/// gets its final stats line, and the server run returns.
+#[test]
+fn shutdown_control_line_drains_all_connections() {
+    let (path, _handle, join) = start(ServerConfig::default(), "ctl");
+    // An idle second client: it must be released by the drain too.
+    let idle = UnixStream::connect(&path).expect("idle connect");
+
+    let mut tx = UnixStream::connect(&path).expect("connect");
+    let rx = tx.try_clone().expect("clone");
+    let mut replies = BufReader::new(rx);
+    tx.write_all(job_line("one", 5, 4).as_bytes()).expect("send job");
+    let mut line = String::new();
+    replies.read_line(&mut line).expect("result line");
+    let v = json::parse(&line).unwrap();
+    assert_eq!(type_of(&v), "result");
+    assert_eq!(v.get("id").unwrap().as_str().unwrap(), "one");
+
+    tx.write_all(b"{\"type\": \"shutdown\"}\n").expect("send shutdown");
+    line.clear();
+    replies.read_line(&mut line).expect("drain ack");
+    let ack = json::parse(&line).unwrap();
+    assert_eq!(type_of(&ack), "stats");
+    assert!(ack.get("draining").unwrap().as_bool().unwrap());
+
+    // Everything after the ack until EOF is stats-typed (the final
+    // stats line; the exact count is transport bookkeeping).
+    let rest: Vec<String> = replies.lines().map(|l| l.unwrap()).collect();
+    assert!(!rest.is_empty(), "final stats line expected");
+    for l in &rest {
+        let v = json::parse(l).unwrap();
+        assert_eq!(type_of(&v), "stats");
+    }
+
+    // The idle client is released with its own final stats line.
+    let idle_lines: Vec<String> =
+        BufReader::new(idle).lines().map(|l| l.unwrap()).collect();
+    assert_eq!(idle_lines.len(), 1, "idle client: final stats then EOF");
+    let v = json::parse(&idle_lines[0]).unwrap();
+    assert_eq!(type_of(&v), "stats");
+    assert!(v.get("final").unwrap().as_bool().unwrap());
+    assert_eq!(v.get("client_jobs").unwrap().as_i64().unwrap(), 0);
+
+    let summary = join.join().expect("server thread");
+    assert_eq!(summary.clients, 2);
+    assert_eq!(summary.jobs, 1);
+    assert_eq!(summary.dropped_jobs, 0);
+}
+
+/// Drain under load: clients are mid-stream when the drain hits. Every
+/// client's replies must be a duplicate-free prefix of its submission
+/// order, each either a result or an explicit rejection — and the
+/// server's own accounting must show zero dropped jobs.
+#[test]
+fn drain_under_load_answers_every_accepted_job_exactly_once() {
+    let cfg = ServerConfig {
+        workers: 2,
+        max_inflight: 8,
+        conn_inflight: 4,
+        ..ServerConfig::default()
+    };
+    let (path, handle, join) = start(cfg, "drain");
+    const CLIENTS: usize = 3;
+    const JOBS: usize = 40;
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let path = path.clone();
+            thread::spawn(move || {
+                let mut tx = UnixStream::connect(&path).expect("connect");
+                let rx = tx.try_clone().expect("clone");
+                let reader = thread::spawn(move || {
+                    BufReader::new(rx)
+                        .lines()
+                        .map(|l| l.expect("reply line"))
+                        .collect::<Vec<_>>()
+                });
+                let mut sent = Vec::new();
+                for j in 0..JOBS {
+                    let id = format!("c{c}-j{j}");
+                    // Distinct 8x8 matrices: real work, so the queue
+                    // and both backpressure bounds are actually live
+                    // when the drain lands.
+                    let line = job_line(&id, (1000 + c * JOBS + j) as u64, 8);
+                    if tx.write_all(line.as_bytes()).is_err() {
+                        break; // server shut our read half mid-drain
+                    }
+                    sent.push(id);
+                }
+                let _ = tx.shutdown(std::net::Shutdown::Write);
+                (sent, reader.join().expect("reader thread"))
+            })
+        })
+        .collect();
+    thread::sleep(Duration::from_millis(60));
+    handle.shutdown();
+
+    let mut answered_total = 0u64;
+    for client in clients {
+        let (sent, lines) = client.join().expect("client thread");
+        let vals = parsed(&lines);
+        let (replies, trailers): (Vec<_>, Vec<_>) =
+            vals.iter().partition(|v| type_of(v) != "stats");
+        for t in &trailers {
+            assert!(t.get("final").is_ok() || t.get("draining").is_ok());
+        }
+        // Exactly-once, in order: the replied ids are a prefix of the
+        // submission order — no gap, no duplicate, no reordering.
+        let ids: Vec<String> = replies
+            .iter()
+            .map(|v| v.get("id").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert!(ids.len() <= sent.len());
+        assert_eq!(ids[..], sent[..ids.len()], "replies must prefix submission order");
+        for v in &replies {
+            match type_of(v) {
+                "result" => {}
+                "error" => {
+                    let msg = v.get("error").unwrap().as_str().unwrap();
+                    assert!(
+                        msg.contains("shutting_down") || msg.contains("busy"),
+                        "drain-phase errors must be explicit rejections: {msg}"
+                    );
+                }
+                other => panic!("unexpected reply type {other}"),
+            }
+        }
+        answered_total += ids.len() as u64;
+    }
+
+    let summary = join.join().expect("server thread");
+    assert_eq!(summary.clients, CLIENTS as u64);
+    assert_eq!(summary.dropped_jobs, 0, "drain must answer every accepted job");
+    assert_eq!(summary.replies, answered_total, "wire replies match server accounting");
+    assert_eq!(summary.jobs + summary.rejected_busy + drain_rejections(&summary), answered_total);
+}
+
+/// Errors that are not busy rejections and not job failures are the
+/// drain rejections (this workload has no malformed lines and no
+/// failing jobs).
+fn drain_rejections(summary: &ServerSummary) -> u64 {
+    summary.errors - summary.rejected_busy
+}
