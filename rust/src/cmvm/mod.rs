@@ -179,6 +179,8 @@ pub fn optimize_terms_stats(
     problem: &CmvmProblem,
     strategy: Strategy,
 ) -> Result<(Vec<OutTerm>, CseStats)> {
+    let mut span = crate::obs::span("cmvm", "cmvm.optimize_terms");
+    span.arg_str("strategy", || strategy.name().to_string());
     Ok(match strategy {
         Strategy::Latency | Strategy::NaiveDa => {
             // The latency strategy's *functional* model is the naive DA
@@ -208,6 +210,10 @@ pub fn optimize_terms_stats(
 /// Optimize a CMVM problem with the given strategy, producing a
 /// self-contained DAIS program (inputs 0..d_in, outputs 0..d_out).
 pub fn optimize(problem: &CmvmProblem, strategy: Strategy) -> Result<CmvmSolution> {
+    let mut span = crate::obs::span("cmvm", "cmvm.optimize");
+    span.arg_str("strategy", || strategy.name().to_string());
+    span.arg("d_in", problem.d_in as i64);
+    span.arg("d_out", problem.d_out as i64);
     let t0 = std::time::Instant::now();
     let mut builder = DaisBuilder::new();
     let inputs: Vec<InputTerm> = (0..problem.d_in)
@@ -220,6 +226,12 @@ pub fn optimize(problem: &CmvmProblem, strategy: Strategy) -> Result<CmvmSolutio
     let (outs, cse_stats) = optimize_terms_stats(&mut builder, &inputs, problem, strategy)?;
     bind_outputs(&mut builder, &outs);
     let program = builder.finish();
+    // The deterministic result counters ride on the span; wall-clock
+    // stays in `opt_time` only (timing never enters cached replies).
+    span.arg("adders", program.adder_count() as i64);
+    span.arg("depth", program.adder_depth() as i64);
+    span.arg("cse_steps", cse_stats.steps as i64);
+    span.arg("heap_pops", cse_stats.heap_pops as i64);
     Ok(CmvmSolution {
         adders: program.adder_count(),
         depth: program.adder_depth(),
@@ -239,7 +251,10 @@ fn two_stage(
     problem: &CmvmProblem,
     dc: i32,
 ) -> Result<(Vec<OutTerm>, CseStats)> {
-    let decomp = graph::decompose(&problem.matrix, problem.d_in, problem.d_out, dc);
+    let decomp = {
+        let _span = crate::obs::span("cmvm", "cmvm.stage1.decompose");
+        graph::decompose(&problem.matrix, problem.d_in, problem.d_out, dc)
+    };
     let cfg = CseConfig { dc, ..CseConfig::default() };
 
     if decomp.is_trivial() {
@@ -256,14 +271,10 @@ fn two_stage(
     }
 
     // Stage 2a: CSE over M1 (d_in × k).
-    let (mids, mut stats) = cse::optimize_into_stats(
-        builder,
-        inputs,
-        &decomp.m1,
-        problem.d_in,
-        decomp.k,
-        &cfg,
-    );
+    let (mids, mut stats) = {
+        let _span = crate::obs::span("cmvm", "cmvm.stage2a");
+        cse::optimize_into_stats(builder, inputs, &decomp.m1, problem.d_in, decomp.k, &cfg)
+    };
 
     // Fold each intermediate's wiring shift/sign into the M2 entries so
     // stage 2b consumes plain nodes. A negative stage-1 shift cannot be
@@ -298,8 +309,10 @@ fn two_stage(
         }
     }
 
-    let (outs, stage2) =
-        cse::optimize_into_stats(builder, &mid_inputs, &m2, decomp.k, problem.d_out, &cfg);
+    let (outs, stage2) = {
+        let _span = crate::obs::span("cmvm", "cmvm.stage2b");
+        cse::optimize_into_stats(builder, &mid_inputs, &m2, decomp.k, problem.d_out, &cfg)
+    };
     stats.absorb(&stage2);
     Ok((outs, stats))
 }

@@ -173,6 +173,31 @@ struct CacheEntry {
     last_used: u64,
 }
 
+/// Per-shard observability handles in the global metrics registry
+/// (`coordinator.shard.<i>.*`). These are an additive side channel for
+/// the `obs` snapshot — [`CoordinatorStats`] stays the accounting
+/// source of truth and is never derived from them.
+struct ShardObs {
+    hits: crate::obs::Counter,
+    misses: crate::obs::Counter,
+    evictions: crate::obs::Counter,
+    /// Time spent waiting on this shard's lock (only recorded while
+    /// tracing is enabled — the clock read is the cost being gated).
+    lock_wait_us: crate::obs::Histogram,
+}
+
+impl ShardObs {
+    fn new(index: usize) -> Self {
+        let reg = crate::obs::metrics();
+        ShardObs {
+            hits: reg.counter(&format!("coordinator.shard.{index}.hits")),
+            misses: reg.counter(&format!("coordinator.shard.{index}.misses")),
+            evictions: reg.counter(&format!("coordinator.shard.{index}.evictions")),
+            lock_wait_us: reg.histogram(&format!("coordinator.shard.{index}.lock_wait_us")),
+        }
+    }
+}
+
 /// One cache shard: entries, the recency index, and shard-local stats,
 /// all behind a single shard lock. The key is `Arc`-shared between the
 /// entry map and the recency index so the two stay one allocation.
@@ -189,6 +214,8 @@ struct Shard<S> {
     /// Monotone access clock; every `compile_cached` call gets a fresh
     /// tick under the lock, so `last_used` stamps are unique.
     tick: u64,
+    /// Metrics-registry handles for this shard.
+    obs: ShardObs,
 }
 
 impl<S: BuildHasher> Shard<S> {
@@ -205,6 +232,7 @@ impl<S: BuildHasher> Shard<S> {
         let key = self.by_tick.remove(&oldest).expect("tick observed in index");
         self.cache.remove(key.as_ref());
         self.stats.evictions += 1;
+        self.obs.evictions.inc();
         true
     }
 
@@ -294,13 +322,14 @@ impl<S: BuildHasher + Default> Coordinator<S> {
     pub fn sharded(shards: usize) -> Self {
         let shards = shards.max(1);
         let shards = (0..shards)
-            .map(|_| {
+            .map(|i| {
                 Mutex::new(Shard {
                     cache: HashMap::with_hasher(S::default()),
                     by_tick: BTreeMap::new(),
                     stats: CoordinatorStats::default(),
                     cap: None,
                     tick: 0,
+                    obs: ShardObs::new(i),
                 })
             })
             .collect();
@@ -322,7 +351,14 @@ impl<S: BuildHasher + Default> Coordinator<S> {
         let key = job_key(&job.problem, job.strategy);
         let idx = self.inner.shard_index(&key);
         {
+            // Clock reads are the gated cost: lock-wait is only timed
+            // while tracing is on; the hit/miss counters below are plain
+            // relaxed atomics and stay on unconditionally.
+            let lock_t0 = crate::obs::enabled().then(std::time::Instant::now);
             let mut shard = self.inner.shards[idx].lock().unwrap();
+            if let Some(t0) = lock_t0 {
+                shard.obs.lock_wait_us.record(t0.elapsed().as_micros() as u64);
+            }
             shard.stats.submitted += 1;
             shard.tick += 1;
             let tick = shard.tick;
@@ -334,11 +370,17 @@ impl<S: BuildHasher + Default> Coordinator<S> {
             if let Some((prev, sol)) = hit {
                 shard.retick(prev, tick);
                 shard.stats.cache_hits += 1;
+                shard.obs.hits.inc();
                 return Ok((sol, true));
             }
+            shard.obs.misses.inc();
         }
         let sol = Arc::new(optimize(&job.problem, job.strategy)?);
+        let lock_t0 = crate::obs::enabled().then(std::time::Instant::now);
         let mut shard = self.inner.shards[idx].lock().unwrap();
+        if let Some(t0) = lock_t0 {
+            shard.obs.lock_wait_us.record(t0.elapsed().as_micros() as u64);
+        }
         shard.stats.total_opt_time += sol.opt_time;
         shard.stats.total_cse_steps += sol.cse.steps as u64;
         shard.stats.total_heap_pops += sol.cse.heap_pops as u64;

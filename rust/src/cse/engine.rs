@@ -586,6 +586,11 @@ pub fn optimize_into_stats(
     assert_eq!(matrix.len(), d_in * d_out, "matrix shape mismatch");
     assert_eq!(inputs.len(), d_in, "input arity mismatch");
 
+    let mut span = crate::obs::span("cse", "cse.optimize");
+    span.arg("d_in", d_in as i64);
+    span.arg("d_out", d_out as i64);
+    span.arg("dc", cfg.dc as i64);
+
     let rows: Vec<RowInfo> = inputs
         .iter()
         .map(|t| RowInfo {
@@ -695,6 +700,14 @@ pub fn optimize_into_stats(
     let stats = engine.stats;
     let builder = engine.builder;
     let out = term_lists.into_iter().map(|terms| tree::combine(builder, terms)).collect();
+    // Attach the deterministic work counters to the span (they are the
+    // same counters the perf baseline pins).
+    span.arg("steps", stats.steps as i64);
+    span.arg("heap_pops", stats.heap_pops as i64);
+    span.arg("stale_pops", stats.stale_pops as i64);
+    span.arg("depth_rejections", stats.depth_rejections as i64);
+    span.arg("occ_cols_scanned", stats.occ_cols_scanned as i64);
+    span.arg("occ_digits_scanned", stats.occ_digits_scanned as i64);
     (out, stats)
 }
 

@@ -453,6 +453,11 @@ pub fn explore(
     }
     let strategies = compile_axis(&cfg.space);
     let results = pool::ordered_fan_out(strategies, cfg.jobs, |s| {
+        let mut span = crate::obs::span("explore", "explore.candidate");
+        span.arg_str("strategy", || s.name().to_string());
+        if let Strategy::Da { dc } | Strategy::CseOnly { dc } | Strategy::Lookahead { dc } = s {
+            span.arg("dc", dc as i64);
+        }
         explore_one(target, coord, s, &cfg.space, &cfg.model)
     });
     let mut points = Vec::new();

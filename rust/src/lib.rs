@@ -80,6 +80,7 @@ pub mod graph;
 pub mod json;
 pub mod netlist;
 pub mod nn;
+pub mod obs;
 pub mod perf;
 pub mod pipeline;
 pub mod report;

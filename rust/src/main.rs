@@ -111,6 +111,23 @@ fn load_spec(path: &str) -> Result<NetworkSpec> {
     NetworkSpec::from_json(&runtime::load_text(path)?)
 }
 
+/// Start a trace session when `--trace-out <file>` was passed (perf /
+/// explore / serve). Tracing stays fully disabled — one relaxed atomic
+/// check per would-be span — without the flag.
+fn begin_trace(args: &Args) -> Option<da4ml::obs::TraceSession> {
+    args.flags.get("trace-out").map(|path| da4ml::obs::begin_trace(path))
+}
+
+/// Finish a `--trace-out` session: export the Chrome trace (or JSONL
+/// event log, by extension) plus the metrics snapshot sibling.
+fn finish_trace(session: Option<da4ml::obs::TraceSession>) -> Result<()> {
+    if let Some(session) = session {
+        let (trace, metrics) = session.finish()?;
+        eprintln!("trace: wrote {trace} (events) and {metrics} (metrics snapshot)");
+    }
+    Ok(())
+}
+
 fn load_vectors(path: &str) -> Result<TestVectors> {
     TestVectors::from_json(&runtime::load_text(path)?)
 }
@@ -127,6 +144,7 @@ const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|se
   dot <spec.weights.json> <out.dot> [--dc D]  (Graphviz adder graph)
   serve [--input jobs.jsonl] [--batch N] [--dc D] [--threads T] [--cache-cap N]
         [--cache-shards N] [--cache-load cache.json] [--cache-save cache.json]
+        [--trace-out trace.json]
         [--socket /path.sock [--listen host:port] [--workers N]
          [--stats-every N] [--max-inflight N] [--conn-inflight N]]
         [--connect /path.sock|host:port]
@@ -139,15 +157,17 @@ const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|se
          to a running server and prints its replies; --cache-cap bounds
          the solution cache with LRU eviction, --cache-shards splits it
          across independently locked shards, --cache-load/--cache-save
-         restart the service warm; wire format in docs/serve.md)
-  perf [--smoke] [--runs N] [--out BENCH_cmvm.json]
+         restart the service warm; --trace-out records a Chrome trace +
+         metrics snapshot, see docs/observability.md; wire format in
+         docs/serve.md)
+  perf [--smoke] [--runs N] [--out BENCH_cmvm.json] [--trace-out trace.json]
        [--baseline ci/bench_baseline.json] [--bless file] [--with-times]
        (fixed benchmark suite over optimize/lower/emit + the CSE engine
         A/B; writes the schema-versioned BENCH_cmvm.json, --baseline
         diffs against a committed baseline and exits nonzero on
         regression, --bless writes a new baseline; docs/perf.md)
   explore [<spec.weights.json>] [--smoke] [--jobs N] [--out EXPLORE_report.json]
-          [--objective min-lut|min-latency|knee]
+          [--objective min-lut|min-latency|knee] [--trace-out trace.json]
           [--cmvm [--d-in N] [--d-out N] [--bits B] [--seed S]]
           [--cache-load cache.json] [--cache-save cache.json]
           (design-space exploration: sweeps strategy x dc x pipeline
@@ -399,6 +419,7 @@ fn main() -> Result<()> {
             println!("wrote {out} ({} nodes)", prog.nodes.len());
         }
         "perf" => {
+            let trace = begin_trace(&args);
             let base = if args.flags.contains_key("smoke") {
                 da4ml::perf::PerfConfig::smoke()
             } else {
@@ -409,6 +430,7 @@ fn main() -> Result<()> {
                 ..base
             };
             let report = da4ml::perf::run_suite(&cfg)?;
+            finish_trace(trace)?;
             println!("{}", da4ml::perf::render_table(&report));
             let out = args.flag::<String>("out", "BENCH_cmvm.json".into());
             std::fs::write(&out, da4ml::perf::schema::render(&report))?;
@@ -483,7 +505,9 @@ fn main() -> Result<()> {
                     .map_err(|e| anyhow::anyhow!("loading cache {path}: {e:#}"))?;
                 println!("explore: warm start: loaded {n} solutions from {path}");
             }
+            let trace = begin_trace(&args);
             let report = da4ml::explore::explore(&target, &coord, &cfg)?;
+            finish_trace(trace)?;
             if let Some(path) = args.flags.get("cache-save") {
                 std::fs::write(path, coord.save_cache())?;
                 println!(
@@ -566,6 +590,7 @@ fn main() -> Result<()> {
                     .map_err(|e| anyhow::anyhow!("loading cache {path}: {e:#}"))?;
                 eprintln!("serve: warm start: loaded {n} solutions from {path}");
             }
+            let trace = begin_trace(&args);
             // Socket server mode: many concurrent clients over the
             // same coordinator; drained gracefully by SIGTERM/SIGINT
             // or a shutdown control line from any client.
@@ -614,6 +639,7 @@ fn main() -> Result<()> {
                     std::fs::write(path, coord.save_cache())?;
                     eprintln!("serve: saved {} cache entries to {path}", coord.cache_len());
                 }
+                finish_trace(trace)?;
                 return Ok(());
             }
             if args.flags.contains_key("listen") {
@@ -656,6 +682,7 @@ fn main() -> Result<()> {
                     coord.cache_len()
                 );
             }
+            finish_trace(trace)?;
         }
         "cache" => {
             match args.pos(0, "cache subcommand (bake|info|merge)")? {

@@ -145,6 +145,9 @@ pub fn fuse_with_stats(spec: &NetworkSpec, strategy: Strategy) -> Result<(DaisPr
     let mut saved: FxHashMap<String, NodeState> = FxHashMap::default();
 
     for (li, layer) in spec.layers.iter().enumerate() {
+        let mut layer_span = crate::obs::span("nn", "nn.layer");
+        layer_span.arg("index", li as i64);
+        layer_span.arg_str("kind", || layer_kind(layer).to_string());
         state = match layer {
             LayerSpec::Dense { w, b: bias, relu, shift, clip_min, clip_max } => {
                 let x = state.flatten();
@@ -254,6 +257,20 @@ pub fn fuse_with_stats(spec: &NetworkSpec, strategy: Strategy) -> Result<(DaisPr
         b.output(n, 0);
     }
     Ok((b.finish(), cse_stats))
+}
+
+/// Short layer-kind label attached to the per-layer trace span.
+fn layer_kind(layer: &LayerSpec) -> &'static str {
+    match layer {
+        LayerSpec::Dense { .. } => "dense",
+        LayerSpec::EinsumDense { .. } => "einsum_dense",
+        LayerSpec::Flatten => "flatten",
+        LayerSpec::Save { .. } => "save",
+        LayerSpec::AddSaved { .. } => "add_saved",
+        LayerSpec::Conv2D { .. } => "conv2d",
+        LayerSpec::MaxPool2D => "max_pool2d",
+        LayerSpec::AvgPool2D => "avg_pool2d",
+    }
 }
 
 /// Per-layer resource accounting for one strategy.

@@ -1,0 +1,132 @@
+//! Trace exporters: Chrome trace-event JSON (the
+//! [Trace Event Format] consumed by Perfetto and `chrome://tracing`)
+//! and a line-oriented JSONL event log for ad-hoc tooling (`grep`,
+//! `jq`). Both are pure functions of a drained event list — see
+//! [`super::drain_events`].
+//!
+//! [Trace Event Format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use super::{ArgValue, Event};
+use crate::json::Value;
+
+fn obj(entries: Vec<(&str, Value)>) -> Value {
+    Value::Object(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn event_args(event: &Event) -> Value {
+    let mut args: Vec<(&str, Value)> = event
+        .args
+        .iter()
+        .map(|(k, v)| {
+            let v = match v {
+                ArgValue::Int(i) => Value::Int(*i),
+                ArgValue::Str(s) => Value::Str(s.clone()),
+            };
+            (*k, v)
+        })
+        .collect();
+    // Span identity rides in args: the trace-event format has no
+    // first-class span ids for complete ("X") events.
+    args.push(("span_id", Value::Int(event.span_id as i64)));
+    args.push(("parent", Value::Int(event.parent as i64)));
+    obj(args)
+}
+
+fn chrome_event(event: &Event) -> Value {
+    obj(vec![
+        ("ph", Value::Str("X".into())),
+        ("name", Value::Str(event.name.into())),
+        ("cat", Value::Str(event.cat.into())),
+        ("pid", Value::Int(1)),
+        ("tid", Value::Int(event.tid as i64)),
+        ("ts", Value::Int(event.ts_us as i64)),
+        ("dur", Value::Int(event.dur_us as i64)),
+        ("args", event_args(event)),
+    ])
+}
+
+/// The Chrome trace document: every event as a complete ("X") event —
+/// begin timestamp plus duration — so no begin/end pairing can ever be
+/// unbalanced; nesting is implied by time containment per `tid`.
+pub fn chrome_value(events: &[Event]) -> Value {
+    obj(vec![
+        ("displayTimeUnit", Value::Str("ms".into())),
+        ("traceEvents", Value::Array(events.iter().map(chrome_event).collect())),
+    ])
+}
+
+/// The JSONL event log: one compact JSON object per event, one per
+/// line, in drain order (sorted by timestamp then span id).
+pub fn jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    for event in events {
+        let line = obj(vec![
+            ("name", Value::Str(event.name.into())),
+            ("cat", Value::Str(event.cat.into())),
+            ("tid", Value::Int(event.tid as i64)),
+            ("ts_us", Value::Int(event.ts_us as i64)),
+            ("dur_us", Value::Int(event.dur_us as i64)),
+            ("span_id", Value::Int(event.span_id as i64)),
+            ("parent", Value::Int(event.parent as i64)),
+            ("args", event_args(event)),
+        ]);
+        out.push_str(&crate::json::to_string(&line));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Event> {
+        vec![
+            Event {
+                name: "outer",
+                cat: "test",
+                span_id: 1,
+                parent: 0,
+                tid: 3,
+                ts_us: 100,
+                dur_us: 50,
+                args: vec![("steps", ArgValue::Int(12))],
+            },
+            Event {
+                name: "inner",
+                cat: "test",
+                span_id: 2,
+                parent: 1,
+                tid: 3,
+                ts_us: 110,
+                dur_us: 20,
+                args: vec![("id", ArgValue::Str("j1".into()))],
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_events_carry_identity_in_args() {
+        let v = chrome_value(&sample());
+        let events = v.get("traceEvents").unwrap().as_array().unwrap();
+        assert_eq!(events.len(), 2);
+        let inner = &events[1];
+        assert_eq!(inner.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(inner.get("tid").unwrap().as_i64().unwrap(), 3);
+        let args = inner.get("args").unwrap();
+        assert_eq!(args.get("parent").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(args.get("id").unwrap().as_str().unwrap(), "j1");
+    }
+
+    #[test]
+    fn jsonl_is_one_object_per_line_in_order() {
+        let log = jsonl(&sample());
+        let lines: Vec<&str> = log.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = crate::json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("name").unwrap().as_str().unwrap(), "outer");
+        assert_eq!(first.get("dur_us").unwrap().as_i64().unwrap(), 50);
+        let second = crate::json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("parent").unwrap().as_i64().unwrap(), 1);
+    }
+}

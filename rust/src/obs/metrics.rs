@@ -1,0 +1,385 @@
+//! The metrics registry: named counters, gauges, and fixed-log2-bucket
+//! histograms behind cheap cloneable handles.
+//!
+//! Handles are `Arc`-shared atomics — recording is a relaxed atomic
+//! operation with no lock and no allocation, so metrics stay on
+//! unconditionally (unlike spans, which gate on [`super::enabled`]).
+//! The registry itself is process-global and only locked at
+//! registration and snapshot time.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Histogram bucket count: bucket 0 holds exact zeros, bucket `i`
+/// (1..=64) holds values in `[2^(i-1), 2^i - 1]`.
+pub const HIST_BUCKETS: usize = 65;
+
+/// A monotonically increasing counter.
+#[derive(Clone)]
+pub struct Counter {
+    inner: Arc<AtomicU64>,
+}
+
+impl Counter {
+    fn new() -> Self {
+        Counter { inner: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Add `delta` to the counter.
+    pub fn add(&self, delta: u64) {
+        self.inner.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.inner.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time signed value (queue depth, busy workers, …).
+#[derive(Clone)]
+pub struct Gauge {
+    inner: Arc<AtomicI64>,
+}
+
+impl Gauge {
+    fn new() -> Self {
+        Gauge { inner: Arc::new(AtomicI64::new(0)) }
+    }
+
+    /// Set the gauge to an absolute value.
+    pub fn set(&self, value: i64) {
+        self.inner.store(value, Ordering::Relaxed);
+    }
+
+    /// Add a (possibly negative) delta.
+    pub fn add(&self, delta: i64) {
+        self.inner.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.inner.load(Ordering::Relaxed)
+    }
+}
+
+struct HistCore {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    /// `u64::MAX` until the first record (lets `fetch_min` work).
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+/// A fixed-log2-bucket histogram of `u64` samples (typically
+/// microseconds). Bucket boundaries are powers of two, so recording is
+/// a `leading_zeros` plus three atomic adds — no allocation, no lock.
+#[derive(Clone)]
+pub struct Histogram {
+    inner: Arc<HistCore>,
+}
+
+/// A consistent-enough copy of a histogram's state (individual atomics
+/// are read without a global lock; totals can lag by in-flight records).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    /// Smallest recorded value (0 when empty).
+    pub min: u64,
+    /// Largest recorded value (0 when empty).
+    pub max: u64,
+    /// Estimated 50th percentile (bucket upper bound, clamped to
+    /// `[min, max]`; exact when all samples share a bucket).
+    pub p50: u64,
+    /// Estimated 99th percentile, same convention.
+    pub p99: u64,
+    /// Non-empty buckets as `(log2_index, count)` pairs, ascending.
+    pub buckets: Vec<(u32, u64)>,
+}
+
+fn bucket_index(value: u64) -> usize {
+    if value == 0 {
+        0
+    } else {
+        (64 - value.leading_zeros()) as usize
+    }
+}
+
+/// Inclusive upper bound of a bucket: the largest value it can hold.
+fn bucket_upper(index: usize) -> u64 {
+    match index {
+        0 => 0,
+        64 => u64::MAX,
+        i => (1u64 << i) - 1,
+    }
+}
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram {
+            inner: Arc::new(HistCore {
+                buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+                count: AtomicU64::new(0),
+                sum: AtomicU64::new(0),
+                min: AtomicU64::new(u64::MAX),
+                max: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&self, value: u64) {
+        let core = &*self.inner;
+        core.buckets[bucket_index(value)].fetch_add(1, Ordering::Relaxed);
+        core.count.fetch_add(1, Ordering::Relaxed);
+        core.sum.fetch_add(value, Ordering::Relaxed);
+        core.min.fetch_min(value, Ordering::Relaxed);
+        core.max.fetch_max(value, Ordering::Relaxed);
+    }
+
+    /// Snapshot counts and derive the percentile estimates.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let core = &*self.inner;
+        let mut buckets = Vec::new();
+        let mut count = 0u64;
+        for (i, b) in core.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                buckets.push((i as u32, n));
+                count += n;
+            }
+        }
+        if count == 0 {
+            return HistSnapshot::default();
+        }
+        let min = core.min.load(Ordering::Relaxed);
+        let max = core.max.load(Ordering::Relaxed);
+        let percentile = |q_num: u64, q_den: u64| -> u64 {
+            // Rank of the q-quantile sample, 1-based, ceil(q * count).
+            let rank = (count * q_num).div_ceil(q_den).clamp(1, count);
+            let mut seen = 0u64;
+            for &(i, n) in &buckets {
+                seen += n;
+                if seen >= rank {
+                    return bucket_upper(i as usize).clamp(min, max);
+                }
+            }
+            max
+        };
+        HistSnapshot {
+            count,
+            sum: core.sum.load(Ordering::Relaxed),
+            min,
+            max,
+            p50: percentile(50, 100),
+            p99: percentile(99, 100),
+            buckets,
+        }
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// The process-global name → metric map. Names are sorted (BTreeMap) so
+/// every snapshot is deterministically ordered.
+pub struct MetricsRegistry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+/// Everything the registry knows, sorted by name within each kind.
+#[derive(Debug, Clone, Default)]
+pub struct RegistrySnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub histograms: Vec<(String, HistSnapshot)>,
+}
+
+/// The process-global registry.
+pub fn metrics() -> &'static MetricsRegistry {
+    static REGISTRY: OnceLock<MetricsRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(|| MetricsRegistry { inner: Mutex::new(BTreeMap::new()) })
+}
+
+impl MetricsRegistry {
+    fn entry<T, F, G>(&self, name: &str, make: F, pick: G) -> T
+    where
+        F: FnOnce() -> Metric,
+        G: FnOnce(&Metric) -> Option<T>,
+    {
+        let mut map = self.inner.lock().unwrap();
+        let metric = map.entry(name.to_string()).or_insert_with(make);
+        pick(metric).unwrap_or_else(|| {
+            panic!("metric '{name}' already registered as a {}", metric.kind())
+        })
+    }
+
+    /// Get or create the counter `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different kind.
+    pub fn counter(&self, name: &str) -> Counter {
+        self.entry(
+            name,
+            || Metric::Counter(Counter::new()),
+            |m| match m {
+                Metric::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get or create the gauge `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different kind.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.entry(
+            name,
+            || Metric::Gauge(Gauge::new()),
+            |m| match m {
+                Metric::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get or create the histogram `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different kind.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.entry(
+            name,
+            || Metric::Histogram(Histogram::new()),
+            |m| match m {
+                Metric::Histogram(h) => Some(h.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Snapshot every registered metric, sorted by name.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let map = self.inner.lock().unwrap();
+        let mut snap = RegistrySnapshot::default();
+        for (name, metric) in map.iter() {
+            match metric {
+                Metric::Counter(c) => snap.counters.push((name.clone(), c.get())),
+                Metric::Gauge(g) => snap.gauges.push((name.clone(), g.get())),
+                Metric::Histogram(h) => snap.histograms.push((name.clone(), h.snapshot())),
+            }
+        }
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_log2() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(2), 3);
+        assert_eq!(bucket_upper(64), u64::MAX);
+    }
+
+    #[test]
+    fn empty_histogram_snapshot_is_zeroed() {
+        let h = Histogram::new();
+        assert_eq!(h.snapshot(), HistSnapshot::default());
+    }
+
+    #[test]
+    fn histogram_percentiles_track_the_tail() {
+        let h = Histogram::new();
+        // 99 fast samples and one slow outlier: p50 stays in the fast
+        // bucket, p99 reaches the outlier's bucket.
+        for _ in 0..99 {
+            h.record(10);
+        }
+        h.record(5_000);
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.sum, 99 * 10 + 5_000);
+        assert_eq!((s.min, s.max), (10, 5_000));
+        assert_eq!(s.p50, 15, "upper bound of the [8, 15] bucket");
+        assert_eq!(s.p99, 5_000, "outlier bucket bound clamped to max");
+        assert_eq!(s.buckets, vec![(4, 99), (13, 1)]);
+    }
+
+    #[test]
+    fn single_value_histogram_pins_both_percentiles() {
+        let h = Histogram::new();
+        h.record(7);
+        let s = h.snapshot();
+        assert_eq!((s.p50, s.p99), (7, 7), "clamped to [min, max]");
+    }
+
+    #[test]
+    fn zero_samples_live_in_bucket_zero() {
+        let h = Histogram::new();
+        h.record(0);
+        h.record(0);
+        let s = h.snapshot();
+        assert_eq!(s.buckets, vec![(0, 2)]);
+        assert_eq!((s.p50, s.p99), (0, 0));
+    }
+
+    #[test]
+    fn registry_handles_share_state_and_snapshot_sorts() {
+        let reg = MetricsRegistry { inner: Mutex::new(BTreeMap::new()) };
+        let c1 = reg.counter("b.count");
+        let c2 = reg.counter("b.count");
+        c1.add(2);
+        c2.inc();
+        let g = reg.gauge("a.depth");
+        g.set(5);
+        g.add(-2);
+        reg.histogram("c.wait").record(100);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters, vec![("b.count".to_string(), 3)]);
+        assert_eq!(snap.gauges, vec![("a.depth".to_string(), 3)]);
+        assert_eq!(snap.histograms.len(), 1);
+        assert_eq!(snap.histograms[0].0, "c.wait");
+        assert_eq!(snap.histograms[0].1.count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered as a counter")]
+    fn kind_mismatch_panics() {
+        let reg = MetricsRegistry { inner: Mutex::new(BTreeMap::new()) };
+        let _ = reg.counter("x");
+        let _ = reg.gauge("x");
+    }
+}

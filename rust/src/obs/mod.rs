@@ -1,0 +1,495 @@
+//! Structured observability: hierarchical spans + a metrics registry,
+//! dependency-free and thread-safe.
+//!
+//! The perf lab ([`crate::perf`]) answers "how fast is the optimizer on
+//! a fixed suite"; this module answers "where did *this* compile, *this*
+//! cache lookup, *this* served job spend its time" in a live process.
+//! Two facilities share the module:
+//!
+//! * **Spans** ([`span`]) — scoped RAII guards on the monotonic clock.
+//!   A span records one *complete* event (begin timestamp + duration)
+//!   when its guard drops, with parent/child nesting tracked per thread
+//!   and deterministic counters attached as args ([`Span::arg`]).
+//!   Events land in a bounded per-thread buffer; overflow is counted in
+//!   [`dropped_events`], never silently discarded. Tracing is **off by
+//!   default**: the disabled path is one relaxed atomic load and no
+//!   allocation ([`enabled`]), so instrumentation can live on hot paths.
+//! * **Metrics** ([`metrics`]) — a process-global registry of named
+//!   counters, gauges, and fixed-log2-bucket histograms ([`metrics::Counter`],
+//!   [`metrics::Gauge`], [`metrics::Histogram`]). Handles are plain
+//!   atomics (always on — recording is an atomic add), snapshotted into
+//!   the schema-versioned document of [`schema`].
+//!
+//! Exporters ([`export`]): Chrome trace-event JSON (loadable in
+//! Perfetto / `chrome://tracing`) and a JSONL event log. The CLI wires
+//! both through `--trace-out` on `perf` / `explore` / `serve`
+//! ([`begin_trace`] / [`TraceSession::finish`]); the serve wire exposes
+//! the metrics snapshot as a `{"type": "metrics"}` control line.
+//!
+//! **Determinism contract**: timing lives *beside* the deterministic
+//! surfaces, never inside them. Enabling tracing must not change a
+//! single reply byte of `da4ml serve` — pinned by
+//! `rust/tests/failure_injection.rs`. Full field reference:
+//! `docs/observability.md`.
+
+pub mod export;
+pub mod metrics;
+pub mod schema;
+
+pub use metrics::{metrics, Counter, Gauge, Histogram, MetricsRegistry};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-thread event-buffer bound: past it new events are dropped (and
+/// counted in [`dropped_events`]) instead of growing without bound.
+pub const MAX_EVENTS_PER_THREAD: usize = 1 << 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// The trace epoch: every timestamp is microseconds since the first
+/// clock access of the process (monotonic, never wall-clock).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the trace epoch (monotonic clock).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Whether span tracing is enabled — the *only* cost instrumentation
+/// pays when tracing is off (one relaxed atomic load).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on (idempotent). Pins the trace epoch first so
+/// the first span never sees a zero-initialized clock.
+pub fn enable() {
+    let _ = epoch();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn span recording off (idempotent). Spans already open finish
+/// recording; new ones become no-ops.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// One attached span argument value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    /// A deterministic counter (the common case).
+    Int(i64),
+    /// A label (job id, strategy name, …).
+    Str(String),
+}
+
+/// One recorded complete event: a closed span.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Span name (static — names are a closed vocabulary, args carry
+    /// the specifics).
+    pub name: &'static str,
+    /// Category (subsystem: `cmvm`, `cse`, `nn`, `serve`, `explore`).
+    pub cat: &'static str,
+    /// Unique span id (process-global).
+    pub span_id: u64,
+    /// Enclosing span id on the same thread (`0` = root).
+    pub parent: u64,
+    /// Recording thread (small stable integer, assigned on first use).
+    pub tid: u64,
+    /// Begin timestamp, microseconds since the trace epoch.
+    pub ts_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// Attached counters/labels, in attachment order.
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+/// One thread's bounded event buffer, registered globally so
+/// [`drain_events`] can collect from every thread.
+struct ThreadBuf {
+    events: Mutex<Vec<Event>>,
+}
+
+fn buffers() -> &'static Mutex<Vec<Arc<ThreadBuf>>> {
+    static BUFFERS: OnceLock<Mutex<Vec<Arc<ThreadBuf>>>> = OnceLock::new();
+    BUFFERS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    /// (tid, this thread's buffer) — registered on first use.
+    static LOCAL: (u64, Arc<ThreadBuf>) = {
+        let tid = NEXT_TID.fetch_add(1, Ordering::SeqCst);
+        let buf = Arc::new(ThreadBuf { events: Mutex::new(Vec::new()) });
+        buffers().lock().unwrap().push(Arc::clone(&buf));
+        (tid, buf)
+    };
+    /// Open-span stack (ids) for parent/child nesting.
+    static STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+fn thread_id() -> u64 {
+    LOCAL.with(|(tid, _)| *tid)
+}
+
+fn push_event(event: Event) {
+    LOCAL.with(|(_, buf)| {
+        let mut events = buf.events.lock().unwrap();
+        if events.len() < MAX_EVENTS_PER_THREAD {
+            events.push(event);
+        } else {
+            DROPPED.fetch_add(1, Ordering::SeqCst);
+        }
+    });
+}
+
+/// The RAII span guard: records one complete event when dropped. When
+/// tracing is disabled this is an inert `None` — no id, no clock read,
+/// no allocation.
+#[must_use = "a span records its duration when dropped; bind it to a variable"]
+pub struct Span {
+    meta: Option<Box<SpanMeta>>,
+}
+
+struct SpanMeta {
+    name: &'static str,
+    cat: &'static str,
+    id: u64,
+    parent: u64,
+    tid: u64,
+    start_us: u64,
+    args: Vec<(&'static str, ArgValue)>,
+}
+
+/// Open a span. The guard must be bound (`let _span = …` or a named
+/// binding when attaching args) — its drop point is the span end.
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    if !enabled() {
+        return Span { meta: None };
+    }
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    let tid = thread_id();
+    let parent = STACK.with(|stack| {
+        let mut stack = stack.borrow_mut();
+        let parent = stack.last().copied().unwrap_or(0);
+        stack.push(id);
+        parent
+    });
+    Span {
+        meta: Some(Box::new(SpanMeta {
+            name,
+            cat,
+            id,
+            parent,
+            tid,
+            start_us: now_us(),
+            args: Vec::new(),
+        })),
+    }
+}
+
+impl Span {
+    /// Whether this guard is recording (tracing was enabled when it
+    /// opened). Lets callers skip expensive arg computation.
+    pub fn is_active(&self) -> bool {
+        self.meta.is_some()
+    }
+
+    /// Attach a deterministic counter to the span.
+    pub fn arg(&mut self, key: &'static str, value: i64) {
+        if let Some(meta) = &mut self.meta {
+            meta.args.push((key, ArgValue::Int(value)));
+        }
+    }
+
+    /// Attach a label, computed lazily — the closure only runs when the
+    /// span is recording, so the disabled path never allocates.
+    pub fn arg_str<F: FnOnce() -> String>(&mut self, key: &'static str, value: F) {
+        if let Some(meta) = &mut self.meta {
+            meta.args.push((key, ArgValue::Str(value())));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(meta) = self.meta.take() else { return };
+        STACK.with(|stack| {
+            let mut stack = stack.borrow_mut();
+            // RAII guarantees LIFO per thread; tolerate surprises
+            // instead of corrupting the nesting of later spans.
+            if stack.last() == Some(&meta.id) {
+                stack.pop();
+            } else {
+                stack.retain(|&id| id != meta.id);
+            }
+        });
+        let end = now_us();
+        push_event(Event {
+            name: meta.name,
+            cat: meta.cat,
+            span_id: meta.id,
+            parent: meta.parent,
+            tid: meta.tid,
+            ts_us: meta.start_us,
+            dur_us: end.saturating_sub(meta.start_us),
+            args: meta.args,
+        });
+    }
+}
+
+/// Record a complete event with explicit timestamps — for intervals
+/// that cross threads and cannot be an RAII guard (e.g. a job's
+/// queue-wait, which begins on the reader thread and ends on a worker).
+/// No-op when tracing is disabled.
+pub fn complete_event(
+    cat: &'static str,
+    name: &'static str,
+    start_us: u64,
+    end_us: u64,
+    args: Vec<(&'static str, ArgValue)>,
+) {
+    if !enabled() {
+        return;
+    }
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    push_event(Event {
+        name,
+        cat,
+        span_id: id,
+        parent: 0,
+        tid: thread_id(),
+        ts_us: start_us,
+        dur_us: end_us.saturating_sub(start_us),
+        args,
+    });
+}
+
+/// Collect (and clear) every thread's recorded events, sorted by
+/// (timestamp, span id) so the export order is deterministic for a
+/// quiescent process.
+pub fn drain_events() -> Vec<Event> {
+    let bufs: Vec<Arc<ThreadBuf>> = buffers().lock().unwrap().clone();
+    let mut out = Vec::new();
+    for buf in bufs {
+        out.append(&mut buf.events.lock().unwrap());
+    }
+    out.sort_by_key(|e| (e.ts_us, e.span_id));
+    out
+}
+
+/// Events dropped by full per-thread buffers since the last
+/// [`take_dropped_events`].
+pub fn dropped_events() -> u64 {
+    DROPPED.load(Ordering::SeqCst)
+}
+
+/// Read and reset the dropped-event counter.
+pub fn take_dropped_events() -> u64 {
+    DROPPED.swap(0, Ordering::SeqCst)
+}
+
+/// An active `--trace-out` session: created by [`begin_trace`] (which
+/// enables tracing), finished by [`TraceSession::finish`] (which
+/// disables tracing, drains the buffers, and writes the artifacts).
+pub struct TraceSession {
+    path: String,
+}
+
+/// Enable tracing and bind the output path. A `.jsonl` path selects the
+/// JSONL event-log exporter; anything else gets Chrome trace-event
+/// JSON. The metrics snapshot is always written beside the trace (see
+/// [`metrics_sibling`]).
+pub fn begin_trace(path: &str) -> TraceSession {
+    enable();
+    TraceSession { path: path.to_string() }
+}
+
+/// The metrics-snapshot path derived from a trace path:
+/// `trace.json` → `trace.metrics.json`, `trace.jsonl` →
+/// `trace.metrics.json`, anything else gets `.metrics.json` appended.
+pub fn metrics_sibling(path: &str) -> String {
+    for suffix in [".jsonl", ".json"] {
+        if let Some(stem) = path.strip_suffix(suffix) {
+            return format!("{stem}.metrics.json");
+        }
+    }
+    format!("{path}.metrics.json")
+}
+
+impl TraceSession {
+    /// Disable tracing, drain every buffer, and write the trace plus
+    /// the metrics snapshot. Returns `(trace_path, metrics_path)`.
+    pub fn finish(self) -> crate::Result<(String, String)> {
+        disable();
+        let events = drain_events();
+        let body = if self.path.ends_with(".jsonl") {
+            export::jsonl(&events)
+        } else {
+            crate::json::to_string(&export::chrome_value(&events))
+        };
+        std::fs::write(&self.path, body)?;
+        let metrics_path = metrics_sibling(&self.path);
+        std::fs::write(&metrics_path, schema::render())?;
+        Ok((self.path, metrics_path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    /// Tests that flip the global enable flag and drain the shared
+    /// buffers serialize on this lock (unit tests share one process).
+    pub(crate) fn obs_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _guard = obs_lock();
+        disable();
+        let _ = drain_events();
+        {
+            let mut s = span("test", "disabled.span");
+            assert!(!s.is_active());
+            s.arg("n", 1);
+            s.arg_str("label", || panic!("must not evaluate when disabled"));
+        }
+        let events = drain_events();
+        assert!(
+            events.iter().all(|e| e.name != "disabled.span"),
+            "disabled span leaked an event"
+        );
+    }
+
+    #[test]
+    fn spans_nest_and_attach_args() {
+        let _guard = obs_lock();
+        disable();
+        let _ = drain_events();
+        enable();
+        {
+            let mut outer = span("test", "nest.outer");
+            outer.arg("depth", 0);
+            {
+                let mut inner = span("test", "nest.inner");
+                inner.arg("depth", 1);
+                inner.arg_str("label", || "leaf".into());
+            }
+        }
+        disable();
+        let events = drain_events();
+        let outer = events.iter().find(|e| e.name == "nest.outer").expect("outer recorded");
+        let inner = events.iter().find(|e| e.name == "nest.inner").expect("inner recorded");
+        assert_eq!(inner.parent, outer.span_id, "nesting tracked per thread");
+        assert_eq!(outer.parent, 0, "outer span is a root");
+        assert!(inner.ts_us >= outer.ts_us);
+        assert_eq!(inner.args.len(), 2);
+        assert_eq!(inner.args[1], ("label", ArgValue::Str("leaf".into())));
+    }
+
+    #[test]
+    fn complete_events_cross_threads() {
+        let _guard = obs_lock();
+        disable();
+        let _ = drain_events();
+        enable();
+        complete_event("test", "xthread.wait", 10, 35, vec![("seq", ArgValue::Int(7))]);
+        disable();
+        let events = drain_events();
+        let e = events.iter().find(|e| e.name == "xthread.wait").expect("recorded");
+        assert_eq!((e.ts_us, e.dur_us), (10, 25));
+        assert_eq!(e.parent, 0);
+    }
+
+    /// The trace-validity pin: the Chrome exporter's output must parse
+    /// back through the in-tree JSON layer, with the trace-event shape
+    /// Perfetto expects (`ph: "X"`, numeric ts/dur, args object).
+    #[test]
+    fn chrome_trace_round_trips_through_json_parse() {
+        let _guard = obs_lock();
+        disable();
+        let _ = drain_events();
+        enable();
+        {
+            let mut s = span("test", "chrome.case");
+            s.arg("steps", 42);
+            s.arg_str("id", || "job \"quoted\" ✓".into());
+        }
+        disable();
+        let events = drain_events();
+        let text = json::to_string(&export::chrome_value(&events));
+        let v = json::parse(&text).expect("chrome trace is valid JSON");
+        assert_eq!(v.get("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+        let traced = v.get("traceEvents").unwrap().as_array().unwrap();
+        let e = traced
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str().unwrap() == "chrome.case")
+            .expect("span exported");
+        assert_eq!(e.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(e.get("pid").unwrap().as_i64().unwrap(), 1);
+        assert!(e.get("ts").unwrap().as_i64().is_ok());
+        assert!(e.get("dur").unwrap().as_i64().is_ok());
+        let args = e.get("args").unwrap();
+        assert_eq!(args.get("steps").unwrap().as_i64().unwrap(), 42);
+        assert_eq!(args.get("id").unwrap().as_str().unwrap(), "job \"quoted\" ✓");
+
+        // The JSONL exporter: one valid JSON object per line.
+        let log = export::jsonl(&events);
+        for line in log.lines() {
+            let v = json::parse(line).expect("JSONL line is valid JSON");
+            assert!(v.get("name").unwrap().as_str().is_ok());
+        }
+    }
+
+    #[test]
+    fn metrics_sibling_naming() {
+        assert_eq!(metrics_sibling("trace.json"), "trace.metrics.json");
+        assert_eq!(metrics_sibling("a/b/trace.jsonl"), "a/b/trace.metrics.json");
+        assert_eq!(metrics_sibling("trace.out"), "trace.out.metrics.json");
+    }
+
+    #[test]
+    fn dropped_events_counter_accounts_overflow() {
+        let _guard = obs_lock();
+        disable();
+        let _ = drain_events();
+        let _ = take_dropped_events();
+        // Fill this thread's buffer to the cap directly, then record
+        // one span over it: the span must be dropped and counted.
+        LOCAL.with(|(_, buf)| {
+            let mut events = buf.events.lock().unwrap();
+            while events.len() < MAX_EVENTS_PER_THREAD {
+                events.push(Event {
+                    name: "fill",
+                    cat: "test",
+                    span_id: 0,
+                    parent: 0,
+                    tid: 0,
+                    ts_us: 0,
+                    dur_us: 0,
+                    args: Vec::new(),
+                });
+            }
+        });
+        enable();
+        drop(span("test", "over.cap"));
+        disable();
+        assert_eq!(take_dropped_events(), 1, "overflow must be counted, not silent");
+        let events = drain_events();
+        assert!(events.iter().all(|e| e.name != "over.cap"));
+    }
+}

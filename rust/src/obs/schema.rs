@@ -1,0 +1,118 @@
+//! The schema-versioned metrics snapshot (obs schema v1), in the
+//! [`crate::perf::schema`] style: a single JSON document built from
+//! sorted maps so the rendered bytes are deterministic for a given
+//! registry state.
+//!
+//! Shape (all maps sorted by name):
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "kind": "obs_metrics",
+//!   "dropped_events": 0,
+//!   "counters": {"coordinator.shard.0.hits": 8},
+//!   "gauges": {"serve.queue_depth": 0},
+//!   "histograms": {
+//!     "serve.queue_wait_us": {
+//!       "count": 4, "sum": 120, "min": 12, "max": 60,
+//!       "p50": 31, "p99": 60, "buckets": [[4, 1], [5, 2], [6, 1]]
+//!     }
+//!   }
+//! }
+//! ```
+//!
+//! `buckets` pairs are `[log2_index, count]`: bucket 0 holds exact
+//! zeros, bucket `i` holds `[2^(i-1), 2^i - 1]` (see
+//! [`super::metrics::HIST_BUCKETS`]).
+
+use super::metrics::HistSnapshot;
+use crate::json::Value;
+
+/// Version of the snapshot document layout. Bump on any breaking
+/// change to field names or shapes.
+pub const SCHEMA_VERSION: u32 = 1;
+
+fn obj(entries: Vec<(&str, Value)>) -> Value {
+    Value::Object(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn int(v: u64) -> Value {
+    Value::Int(v as i64)
+}
+
+/// One histogram as a JSON object.
+pub fn hist_value(h: &HistSnapshot) -> Value {
+    let buckets = h
+        .buckets
+        .iter()
+        .map(|&(i, n)| Value::Array(vec![int(i as u64), int(n)]))
+        .collect();
+    obj(vec![
+        ("count", int(h.count)),
+        ("sum", int(h.sum)),
+        ("min", int(h.min)),
+        ("max", int(h.max)),
+        ("p50", int(h.p50)),
+        ("p99", int(h.p99)),
+        ("buckets", Value::Array(buckets)),
+    ])
+}
+
+/// The full snapshot document for the current registry state.
+pub fn snapshot_value() -> Value {
+    let snap = super::metrics().snapshot();
+    let counters = Value::Object(snap.counters.into_iter().map(|(k, v)| (k, int(v))).collect());
+    let gauges = Value::Object(snap.gauges.into_iter().map(|(k, v)| (k, Value::Int(v))).collect());
+    let histograms =
+        Value::Object(snap.histograms.into_iter().map(|(k, h)| (k, hist_value(&h))).collect());
+    obj(vec![
+        ("schema_version", int(SCHEMA_VERSION as u64)),
+        ("kind", Value::Str("obs_metrics".into())),
+        ("dropped_events", int(super::dropped_events())),
+        ("counters", counters),
+        ("gauges", gauges),
+        ("histograms", histograms),
+    ])
+}
+
+/// The snapshot rendered as compact JSON.
+pub fn render() -> String {
+    crate::json::to_string(&snapshot_value())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    #[test]
+    fn snapshot_document_round_trips_and_is_versioned() {
+        // Register through the global registry under test-unique names
+        // (the registry is process-global and shared across tests).
+        let c = crate::obs::metrics().counter("test.schema.counter");
+        c.add(41);
+        c.inc();
+        crate::obs::metrics().gauge("test.schema.gauge").set(-3);
+        let h = crate::obs::metrics().histogram("test.schema.hist");
+        h.record(0);
+        h.record(9);
+
+        let v = json::parse(&render()).expect("snapshot is valid JSON");
+        assert_eq!(v.get("schema_version").unwrap().as_i64().unwrap(), SCHEMA_VERSION as i64);
+        assert_eq!(v.get("kind").unwrap().as_str().unwrap(), "obs_metrics");
+        assert!(v.get("dropped_events").unwrap().as_i64().is_ok());
+        assert_eq!(
+            v.get("counters").unwrap().get("test.schema.counter").unwrap().as_i64().unwrap(),
+            42
+        );
+        assert_eq!(v.get("gauges").unwrap().get("test.schema.gauge").unwrap().as_i64().unwrap(), -3);
+        let hist = v.get("histograms").unwrap().get("test.schema.hist").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(hist.get("min").unwrap().as_i64().unwrap(), 0);
+        assert_eq!(hist.get("max").unwrap().as_i64().unwrap(), 9);
+        let buckets = hist.get("buckets").unwrap().as_array().unwrap();
+        assert_eq!(buckets.len(), 2, "bucket 0 (zeros) and bucket 4 ([8,15])");
+        assert_eq!(buckets[0].as_array().unwrap()[0].as_i64().unwrap(), 0);
+        assert_eq!(buckets[1].as_array().unwrap()[0].as_i64().unwrap(), 4);
+    }
+}

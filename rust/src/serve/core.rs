@@ -12,7 +12,7 @@
 //! `result`/`error` reply lines for the same job stream — pinned by
 //! `rust/tests/serve_jsonl.rs`.
 
-use super::{ControlOp, EmitLang, Request, ServeConfig, ServeSummary};
+use super::{ControlOp, EmitLang, Request, ServeConfig, ServeSummary, StatsScope};
 use crate::cmvm::CmvmSolution;
 use crate::coordinator::{CompileJob, Coordinator};
 use crate::estimate;
@@ -44,8 +44,8 @@ pub(crate) enum WorkPayload {
 pub(crate) enum Lowered {
     /// A job to execute (reply built by [`run_payload`]).
     Work { id: String, payload: WorkPayload },
-    /// A control line (`shutdown` / `stats`): transport-level, answered
-    /// by the transport itself.
+    /// A control line (`shutdown` / `stats` / `metrics`):
+    /// transport-level, answered by the transport itself.
     Control { id: Option<String>, op: ControlOp },
     /// A malformed line or invalid job: an immediate error reply.
     Bad { id: Option<String>, error: String },
@@ -287,6 +287,25 @@ pub(crate) fn stats_value(coord: &Coordinator, extra: &[(&str, Value)]) -> Value
     Value::Object(o)
 }
 
+/// Build one `"type": "metrics"` reply: the schema-versioned
+/// [`crate::obs::schema`] snapshot document with the wire envelope
+/// (`type` + correlation `id`) layered on top. Both transports answer
+/// the `{"type": "metrics"}` control line with this object.
+pub(crate) fn metrics_value(id: Option<&str>) -> Value {
+    let mut v = crate::obs::schema::snapshot_value();
+    if let Value::Object(o) = &mut v {
+        o.insert("type".into(), Value::Str("metrics".into()));
+        o.insert(
+            "id".into(),
+            match id {
+                Some(id) => Value::Str(id.into()),
+                None => Value::Null,
+            },
+        );
+    }
+    v
+}
+
 /// One batch entry on the stdin transport: a lowered compile job, a
 /// validated explore job, or an immediate error reply.
 enum Pending {
@@ -339,12 +358,36 @@ pub fn serve_with<R: BufRead, W: Write>(
                     Pending::Explore { id, target, space, objective }
                 }
                 Lowered::Bad { id, error } => Pending::Bad { id, error },
-                Lowered::Control { op: ControlOp::Stats, .. } => {
+                Lowered::Control { op: ControlOp::Stats { scope }, .. } => {
                     // On-demand stats: flush buffered jobs first (their
                     // batch emits its own stats line), then answer with
-                    // a fresh cumulative stats line.
+                    // a fresh cumulative stats line. On stdin the
+                    // "connection" is the stream itself, so connection
+                    // scope answers with the stream-local counters only.
                     flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
-                    emit_stats_line(coord, output, &summary)?;
+                    match scope {
+                        StatsScope::Server => emit_stats_line(coord, output, &summary)?,
+                        StatsScope::Connection => {
+                            let mut o = BTreeMap::new();
+                            o.insert("type".into(), Value::Str("stats".into()));
+                            o.insert("scope".into(), Value::Str("connection".into()));
+                            o.insert("jobs".into(), Value::Int(summary.jobs as i64));
+                            o.insert("replies".into(), Value::Int(summary.replies as i64));
+                            o.insert("errors".into(), Value::Int(summary.errors as i64));
+                            o.insert("batches".into(), Value::Int(summary.batches as i64));
+                            writeln!(output, "{}", json::to_string(&Value::Object(o)))?;
+                            output.flush()?;
+                        }
+                    }
+                    continue;
+                }
+                Lowered::Control { id, op: ControlOp::Metrics } => {
+                    // Observability snapshot on demand: flush buffered
+                    // jobs so their counters land first, then answer
+                    // with the schema-versioned metrics document.
+                    flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
+                    writeln!(output, "{}", json::to_string(&metrics_value(id.as_deref())))?;
+                    output.flush()?;
                     continue;
                 }
                 Lowered::Control { op: ControlOp::Shutdown, .. } => {

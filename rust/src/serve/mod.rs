@@ -31,9 +31,12 @@
 //! network `spec`): the [`crate::explore`] subsystem sweeps the
 //! strategy × dc × pipeline space on the shared coordinator and the
 //! reply carries the Pareto `front`, the `dominated` points, and —
-//! when an `objective` was posted — the `picked` configuration. Two
+//! when an `objective` was posted — the `picked` configuration. Three
 //! **control lines** round out the wire: `{"type": "stats"}` answers
-//! with an on-demand cumulative stats line, and `{"type": "shutdown"}`
+//! with an on-demand cumulative stats line (or, with `"scope":
+//! "connection"`, the posting connection's own counters),
+//! `{"type": "metrics"}` answers with the observability metrics
+//! snapshot ([`crate::obs::schema`] v1), and `{"type": "shutdown"}`
 //! drains the service gracefully (on the socket transport: stop
 //! accepting, answer everything in flight, emit final stats).
 //!
@@ -200,9 +203,28 @@ pub enum ControlOp {
     /// or stop accepting and flush all in-flight work (socket), then
     /// emit a final stats line.
     Shutdown,
-    /// `{"type": "stats"}` — answer with an on-demand cumulative stats
+    /// `{"type": "stats"}` — answer with an on-demand stats line for
+    /// the requested scope.
+    Stats {
+        /// Which counters to report (`"scope"` field; default server).
+        scope: StatsScope,
+    },
+    /// `{"type": "metrics"}` — answer with the observability metrics
+    /// snapshot ([`crate::obs::schema`], schema v1) as a single reply
     /// line.
-    Stats,
+    Metrics,
+}
+
+/// Scope of a `{"type": "stats"}` control line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatsScope {
+    /// Cumulative server-wide counters (the default; the historical
+    /// stats line).
+    Server,
+    /// This connection's own counters (`"scope": "connection"`), so a
+    /// client can poll its share without reading server-wide totals —
+    /// previously only available as the final stats line on drain.
+    Connection,
 }
 
 /// One decoded explore request (`"type": "explore"`): sweep the
@@ -289,6 +311,7 @@ impl Request {
         let mut spec: Option<NetworkSpec> = None;
         let mut space = None;
         let mut objective = None;
+        let mut scope = None;
         d.object_start()?;
         while let Some(key) = d.next_key()? {
             match key.as_ref() {
@@ -302,6 +325,7 @@ impl Request {
                 "spec" => spec = Some(NetworkSpec::decode(&mut d)?),
                 "space" => space = Some(d.string()?),
                 "objective" => objective = Some(d.string()?),
+                "scope" => scope = Some(d.string()?),
                 _ => d.skip_value()?,
             }
         }
@@ -315,6 +339,7 @@ impl Request {
                 ] {
                     ensure!(!present, "field '{field}' requires \"type\": \"explore\"");
                 }
+                ensure!(scope.is_none(), "field 'scope' requires \"type\": \"stats\"");
                 let matrix = matrix.ok_or_else(|| anyhow::anyhow!("missing field 'matrix'"))?;
                 let bits = bits.unwrap_or(8);
                 Ok(Request::Compile(JobRequest { id, matrix, bits, strategy, dc, emit }))
@@ -327,9 +352,10 @@ impl Request {
                 ] {
                     ensure!(!present, "field '{field}' does not apply to explore jobs");
                 }
+                ensure!(scope.is_none(), "field 'scope' requires \"type\": \"stats\"");
                 Ok(Request::Explore(ExploreRequest { id, matrix, spec, bits, space, objective }))
             }
-            Some(ty @ ("shutdown" | "stats")) => {
+            Some(ty @ ("shutdown" | "stats" | "metrics")) => {
                 for (field, present) in [
                     ("matrix", matrix.is_some()),
                     ("bits", bits.is_some()),
@@ -342,11 +368,33 @@ impl Request {
                 ] {
                     ensure!(!present, "field '{field}' does not apply to control lines");
                 }
-                let op = if ty == "shutdown" { ControlOp::Shutdown } else { ControlOp::Stats };
+                let op = match ty {
+                    "stats" => {
+                        let scope = match scope.as_deref() {
+                            None | Some("server") => StatsScope::Server,
+                            Some("connection") => StatsScope::Connection,
+                            Some(other) => bail!(
+                                "unknown stats scope '{other}' (expected server|connection)"
+                            ),
+                        };
+                        ControlOp::Stats { scope }
+                    }
+                    other => {
+                        ensure!(scope.is_none(), "field 'scope' requires \"type\": \"stats\"");
+                        if other == "shutdown" {
+                            ControlOp::Shutdown
+                        } else {
+                            ControlOp::Metrics
+                        }
+                    }
+                };
                 Ok(Request::Control(ControlRequest { id, op }))
             }
             Some(other) => {
-                bail!("unknown job type '{other}' (expected compile|explore|shutdown|stats)")
+                bail!(
+                    "unknown job type '{other}' \
+                     (expected compile|explore|shutdown|stats|metrics)"
+                )
             }
         }
     }
@@ -481,11 +529,43 @@ mod tests {
         }
         match Request::from_json(r#"{"type": "stats", "id": "s1"}"#).unwrap() {
             Request::Control(c) => {
-                assert_eq!(c.op, ControlOp::Stats);
+                assert_eq!(c.op, ControlOp::Stats { scope: StatsScope::Server });
                 assert_eq!(c.id.as_deref(), Some("s1"));
             }
             other => panic!("expected control line, got {other:?}"),
         }
+        // The stats scope field: explicit server, connection, unknown.
+        match Request::from_json(r#"{"type": "stats", "scope": "server"}"#).unwrap() {
+            Request::Control(c) => {
+                assert_eq!(c.op, ControlOp::Stats { scope: StatsScope::Server })
+            }
+            other => panic!("expected control line, got {other:?}"),
+        }
+        match Request::from_json(r#"{"type": "stats", "scope": "connection"}"#).unwrap() {
+            Request::Control(c) => {
+                assert_eq!(c.op, ControlOp::Stats { scope: StatsScope::Connection })
+            }
+            other => panic!("expected control line, got {other:?}"),
+        }
+        assert!(Request::from_json(r#"{"type": "stats", "scope": "galaxy"}"#).is_err());
+        // The metrics control line returns the obs snapshot; scope (and
+        // every job field) is rejected on it.
+        match Request::from_json(r#"{"type": "metrics", "id": "m1"}"#).unwrap() {
+            Request::Control(c) => {
+                assert_eq!(c.op, ControlOp::Metrics);
+                assert_eq!(c.id.as_deref(), Some("m1"));
+            }
+            other => panic!("expected control line, got {other:?}"),
+        }
+        assert!(Request::from_json(r#"{"type": "metrics", "scope": "server"}"#).is_err());
+        assert!(Request::from_json(r#"{"type": "metrics", "matrix": [[1]]}"#).is_err());
+        assert!(Request::from_json(r#"{"type": "shutdown", "scope": "connection"}"#).is_err());
+        // Scope is stats-only: job lines must reject it too.
+        assert!(Request::from_json(r#"{"matrix": [[1]], "scope": "connection"}"#).is_err());
+        assert!(Request::from_json(
+            r#"{"type": "explore", "matrix": [[1]], "scope": "connection"}"#
+        )
+        .is_err());
         assert!(Request::from_json(r#"{"type": "shutdown", "matrix": [[1]]}"#).is_err());
         assert!(Request::from_json(r#"{"type": "stats", "objective": "knee"}"#).is_err());
         assert!(Request::from_json(r#"{"type": "restart"}"#).is_err());
@@ -545,6 +625,40 @@ mod tests {
                 assert_ne!(id.as_str().unwrap_or(""), "never");
             }
         }
+    }
+
+    /// The observability control lines on the stdin transport:
+    /// `{"type": "metrics"}` answers with the schema-versioned
+    /// snapshot, connection-scope stats with the stream's own counters.
+    #[test]
+    fn stdin_control_lines_metrics_and_connection_stats() {
+        let input = "\
+{\"id\": \"a\", \"matrix\": [[3, 5], [-7, 9]], \"dc\": -1}\n\
+{\"type\": \"stats\", \"scope\": \"connection\"}\n\
+{\"type\": \"metrics\", \"id\": \"snap\"}\n";
+        let (summary, lines) = run(input, &ServeConfig::default());
+        assert_eq!(summary.jobs, 1);
+        // result a, batch stats (control lines flush first), connection
+        // stats, metrics — EOF on an empty batch adds nothing.
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].get("id").unwrap().as_str().unwrap(), "a");
+        assert_eq!(lines[1].get("type").unwrap().as_str().unwrap(), "stats");
+        let conn = &lines[2];
+        assert_eq!(conn.get("type").unwrap().as_str().unwrap(), "stats");
+        assert_eq!(conn.get("scope").unwrap().as_str().unwrap(), "connection");
+        assert_eq!(conn.get("jobs").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(conn.get("errors").unwrap().as_i64().unwrap(), 0);
+        assert!(conn.get("submitted").is_err(), "server-wide field on a connection line");
+        let metrics = &lines[3];
+        assert_eq!(metrics.get("type").unwrap().as_str().unwrap(), "metrics");
+        assert_eq!(metrics.get("id").unwrap().as_str().unwrap(), "snap");
+        assert_eq!(metrics.get("kind").unwrap().as_str().unwrap(), "obs_metrics");
+        assert_eq!(
+            metrics.get("schema_version").unwrap().as_i64().unwrap(),
+            crate::obs::schema::SCHEMA_VERSION as i64
+        );
+        assert!(metrics.get("counters").unwrap().as_object().is_ok());
+        assert!(metrics.get("histograms").unwrap().as_object().is_ok());
     }
 
     /// A non-UTF-8 input line becomes one more error reply; the jobs
@@ -1064,10 +1178,25 @@ not even json
                 })
             }
             _ => {
-                let op = if rng.chance(0.5) { ControlOp::Shutdown } else { ControlOp::Stats };
-                let ty = match op {
-                    ControlOp::Shutdown => "shutdown",
-                    ControlOp::Stats => "stats",
+                let (ty, op) = match rng.below(4) {
+                    0 => ("shutdown", ControlOp::Shutdown),
+                    1 => ("metrics", ControlOp::Metrics),
+                    _ => {
+                        let scope = if rng.chance(0.5) {
+                            let names = ["server", "connection"];
+                            Some(names[rng.below(names.len())])
+                        } else {
+                            None
+                        };
+                        if let Some(s) = scope {
+                            o.insert("scope".into(), Value::Str(s.into()));
+                        }
+                        let scope = match scope {
+                            Some("connection") => StatsScope::Connection,
+                            _ => StatsScope::Server,
+                        };
+                        ("stats", ControlOp::Stats { scope })
+                    }
                 };
                 o.insert("type".into(), Value::Str(ty.into()));
                 Request::Control(ControlRequest { id, op })
@@ -1110,9 +1239,11 @@ not even json
         let emit = get_str("emit")?;
         let space = get_str("space")?;
         let objective = get_str("objective")?;
+        let scope = get_str("scope")?;
         match ty.as_deref() {
             None | Some("compile") => {
                 ensure!(space.is_none() && objective.is_none(), "explore-only field");
+                ensure!(scope.is_none(), "stats-only field");
                 let matrix = matrix.ok_or_else(|| anyhow::anyhow!("missing field 'matrix'"))?;
                 Ok(Request::Compile(JobRequest {
                     id,
@@ -1128,6 +1259,7 @@ not even json
                     strategy.is_none() && dc.is_none() && emit.is_none(),
                     "compile-only field"
                 );
+                ensure!(scope.is_none(), "stats-only field");
                 Ok(Request::Explore(ExploreRequest {
                     id,
                     matrix,
@@ -1137,7 +1269,7 @@ not even json
                     objective,
                 }))
             }
-            Some(ty @ ("shutdown" | "stats")) => {
+            Some(ty @ ("shutdown" | "stats" | "metrics")) => {
                 ensure!(
                     matrix.is_none()
                         && bits.is_none()
@@ -1148,7 +1280,20 @@ not even json
                         && objective.is_none(),
                     "job field on a control line"
                 );
-                let op = if ty == "shutdown" { ControlOp::Shutdown } else { ControlOp::Stats };
+                let op = match ty {
+                    "stats" => {
+                        let scope = match scope.as_deref() {
+                            None | Some("server") => StatsScope::Server,
+                            Some("connection") => StatsScope::Connection,
+                            Some(other) => bail!("unknown stats scope '{other}'"),
+                        };
+                        ControlOp::Stats { scope }
+                    }
+                    other => {
+                        ensure!(scope.is_none(), "stats-only field");
+                        if other == "shutdown" { ControlOp::Shutdown } else { ControlOp::Metrics }
+                    }
+                };
                 Ok(Request::Control(ControlRequest { id, op }))
             }
             Some(other) => bail!("unknown job type '{other}'"),
@@ -1181,6 +1326,12 @@ not even json
             r#"{"matrix": [[1]], "space": "smoke"}"#,
             r#"{"type": "explore", "matrix": [[1]], "dc": 2}"#,
             r#"{"type": "shutdown", "matrix": [[1]]}"#,
+            r#"{"type": "metrics", "matrix": [[1]]}"#,
+            r#"{"type": "metrics", "scope": "server"}"#,
+            r#"{"type": "shutdown", "scope": "connection"}"#,
+            r#"{"type": "stats", "scope": "galaxy"}"#,
+            r#"{"matrix": [[1]], "scope": "connection"}"#,
+            r#"{"type": "explore", "matrix": [[1]], "scope": "server"}"#,
             r#"{"type": "warmup"}"#,
             r#"{"matrix": [[1]], "bits": "eight"}"#,
             r#"{}"#,

@@ -34,12 +34,12 @@
 
 use super::conn::{Conn, LineReader, NextLine, ReplyKind};
 use super::core::{self, Lowered, WorkPayload};
-use super::{ControlOp, ServeConfig};
+use super::{ControlOp, ServeConfig, StatsScope};
 use crate::coordinator::{Coordinator, CoordinatorStats};
 use crate::json::{self, Value};
 use crate::Result;
 use anyhow::{bail, Context};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufWriter, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
@@ -219,12 +219,44 @@ struct Totals {
     rejected_busy: AtomicU64,
 }
 
+/// Metrics-registry handles for the socket transport's hot path. The
+/// counters and gauges are always-on relaxed atomics; only the clock
+/// reads feeding the latency histograms are gated on
+/// [`crate::obs::enabled`], so the disabled path costs one relaxed
+/// load per job and allocates nothing.
+struct ServerObs {
+    /// Microseconds a job sat on the shared queue (reader → worker).
+    queue_wait_us: crate::obs::Histogram,
+    /// Microseconds a worker spent executing a job.
+    exec_us: crate::obs::Histogram,
+    /// Jobs sitting on the shared queue right now.
+    queue_depth: crate::obs::Gauge,
+    /// Workers currently executing a job (utilization gauge).
+    workers_busy: crate::obs::Gauge,
+}
+
+impl ServerObs {
+    fn new() -> Self {
+        let m = crate::obs::metrics();
+        Self {
+            queue_wait_us: m.histogram("serve.queue_wait_us"),
+            exec_us: m.histogram("serve.exec_us"),
+            queue_depth: m.gauge("serve.queue_depth"),
+            workers_busy: m.gauge("serve.workers_busy"),
+        }
+    }
+}
+
 /// One accepted job on the shared queue.
 struct Work {
     conn: Arc<Conn>,
     seq: u64,
     id: String,
     payload: WorkPayload,
+    /// Enqueue timestamp ([`crate::obs::now_us`]); `None` when tracing
+    /// is disabled — the queue-wait histogram needs a clock read, which
+    /// is exactly the cost the disabled path avoids.
+    enqueued_us: Option<u64>,
 }
 
 /// State shared by the accept loop, reader threads, and worker pool.
@@ -243,6 +275,7 @@ struct Shared {
     /// read halves and teardown can close sockets).
     conns: Mutex<Vec<(Arc<Conn>, Stream)>>,
     totals: Totals,
+    obs: ServerObs,
 }
 
 impl Shared {
@@ -324,11 +357,20 @@ enum StatsFlavor {
 fn stats_line(shared: &Shared, conn: &Conn, flavor: StatsFlavor) -> String {
     let c = conn.counters();
     let t = &shared.totals;
+    // Latency digests from the obs histograms. They fill only while
+    // tracing is enabled (the clock reads are gated); untraced servers
+    // report zeros here — the fields stay so clients parse one shape.
+    let qw = shared.obs.queue_wait_us.snapshot();
+    let ex = shared.obs.exec_us.snapshot();
     let mut extra = vec![
         ("clients", Value::Int(shared.live_clients() as i64)),
         ("clients_total", Value::Int(t.clients.load(Ordering::SeqCst) as i64)),
         ("replies", Value::Int(t.replies.load(Ordering::SeqCst) as i64)),
         ("rejected_busy", Value::Int(t.rejected_busy.load(Ordering::SeqCst) as i64)),
+        ("queue_wait_us_p50", Value::Int(qw.p50 as i64)),
+        ("queue_wait_us_p99", Value::Int(qw.p99 as i64)),
+        ("exec_us_p50", Value::Int(ex.p50 as i64)),
+        ("exec_us_p99", Value::Int(ex.p99 as i64)),
         ("client", Value::Str(conn.name.clone())),
         ("client_jobs", Value::Int(c.jobs as i64)),
         ("client_replies", Value::Int(c.replies as i64)),
@@ -344,10 +386,34 @@ fn stats_line(shared: &Shared, conn: &Conn, flavor: StatsFlavor) -> String {
     json::to_string(&core::stats_value(&shared.coord, &extra))
 }
 
+/// Render the per-connection stats reply (`{"type": "stats", "scope":
+/// "connection"}`): this connection's own counters only — no
+/// coordinator scan, no server-wide fields — so one client can poll
+/// its own numbers cheaply without draining server state.
+fn conn_stats_line(conn: &Conn) -> String {
+    let c = conn.counters();
+    let mut o = BTreeMap::new();
+    o.insert("type".to_string(), Value::Str("stats".into()));
+    o.insert("scope".to_string(), Value::Str("connection".into()));
+    o.insert("client".to_string(), Value::Str(conn.name.clone()));
+    o.insert("jobs".to_string(), Value::Int(c.jobs as i64));
+    o.insert("replies".to_string(), Value::Int(c.replies as i64));
+    o.insert("errors".to_string(), Value::Int(c.errors as i64));
+    o.insert("rejected_busy".to_string(), Value::Int(c.rejected_busy as i64));
+    o.insert("cache_hits".to_string(), Value::Int(c.cache_hits as i64));
+    json::to_string(&Value::Object(o))
+}
+
 /// Sequence a reply onto its connection and mirror its accounting into
 /// the global totals; emits the periodic stats line on cadence.
 fn deliver(shared: &Shared, conn: &Conn, seq: u64, reply: String, kind: ReplyKind) {
-    conn.complete(seq, reply, kind);
+    {
+        // Resequence + write: `complete` buffers out-of-order replies
+        // and drains everything consecutive to the socket.
+        let mut span = crate::obs::span("serve", "serve.write");
+        span.arg("seq", seq as i64);
+        conn.complete(seq, reply, kind);
+    }
     let t = &shared.totals;
     match kind {
         ReplyKind::Result { .. } => {
@@ -382,6 +448,7 @@ fn worker_loop(shared: &Arc<Shared>) {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if let Some(w) = q.pop_front() {
+                    shared.obs.queue_depth.set(q.len() as i64);
                     break Some(w);
                 }
                 if shared.pool_closed.load(Ordering::SeqCst) {
@@ -391,7 +458,30 @@ fn worker_loop(shared: &Arc<Shared>) {
             }
         };
         let Some(w) = work else { return };
-        let outcome = core::run_payload(&shared.coord, &w.id, w.payload, &shared.cfg.serve);
+        // The queue-wait interval starts on the reader thread and ends
+        // here, so it is a complete event, not an RAII span.
+        if let Some(t0) = w.enqueued_us {
+            let now = crate::obs::now_us();
+            shared.obs.queue_wait_us.record(now.saturating_sub(t0));
+            crate::obs::complete_event(
+                "serve",
+                "serve.queue_wait",
+                t0,
+                now,
+                vec![("id", crate::obs::ArgValue::Str(w.id.clone()))],
+            );
+        }
+        shared.obs.workers_busy.add(1);
+        let exec_t0 = crate::obs::enabled().then(std::time::Instant::now);
+        let outcome = {
+            let mut span = crate::obs::span("serve", "serve.execute");
+            span.arg_str("id", || w.id.clone());
+            core::run_payload(&shared.coord, &w.id, w.payload, &shared.cfg.serve)
+        };
+        if let Some(t0) = exec_t0 {
+            shared.obs.exec_us.record(t0.elapsed().as_micros() as u64);
+        }
+        shared.obs.workers_busy.add(-1);
         let kind = if outcome.is_err {
             ReplyKind::JobError
         } else {
@@ -443,17 +533,33 @@ fn reader_loop(shared: &Arc<Shared>, conn: &Arc<Conn>, stream: Stream) {
         if bytes.iter().all(|b| b.is_ascii_whitespace()) {
             continue;
         }
-        match core::lower_line_bytes(bytes, line_no, shared.cfg.serve.default_dc) {
+        let lowered = {
+            let _span = crate::obs::span("serve", "serve.decode");
+            core::lower_line_bytes(bytes, line_no, shared.cfg.serve.default_dc)
+        };
+        match lowered {
             Lowered::Bad { id, error } => {
                 let seq = next_seq;
                 next_seq += 1;
                 let reply = core::error_reply(id.as_deref(), &error);
                 deliver(shared, conn, seq, json::to_string(&reply), ReplyKind::WireError);
             }
-            Lowered::Control { op: ControlOp::Stats, .. } => {
+            Lowered::Control { op: ControlOp::Stats { scope: StatsScope::Server }, .. } => {
                 let seq = next_seq;
                 next_seq += 1;
                 let line = stats_line(shared, conn, StatsFlavor::Cumulative);
+                deliver(shared, conn, seq, line, ReplyKind::Control);
+            }
+            Lowered::Control { op: ControlOp::Stats { scope: StatsScope::Connection }, .. } => {
+                let seq = next_seq;
+                next_seq += 1;
+                let line = conn_stats_line(conn);
+                deliver(shared, conn, seq, line, ReplyKind::Control);
+            }
+            Lowered::Control { id, op: ControlOp::Metrics } => {
+                let seq = next_seq;
+                next_seq += 1;
+                let line = json::to_string(&core::metrics_value(id.as_deref()));
                 deliver(shared, conn, seq, line, ReplyKind::Control);
             }
             Lowered::Control { op: ControlOp::Shutdown, .. } => {
@@ -488,8 +594,10 @@ fn reader_loop(shared: &Arc<Shared>, conn: &Arc<Conn>, stream: Stream) {
                     deliver(shared, conn, seq, json::to_string(&reply), ReplyKind::Busy);
                 } else {
                     conn.begin_job();
+                    let enqueued_us = crate::obs::enabled().then(crate::obs::now_us);
                     let mut q = shared.queue.lock().unwrap();
-                    q.push_back(Work { conn: Arc::clone(conn), seq, id, payload });
+                    q.push_back(Work { conn: Arc::clone(conn), seq, id, payload, enqueued_us });
+                    shared.obs.queue_depth.set(q.len() as i64);
                     drop(q);
                     shared.qcv.notify_one();
                 }
@@ -576,6 +684,7 @@ impl Server {
             inflight: AtomicUsize::new(0),
             conns: Mutex::new(Vec::new()),
             totals: Totals::default(),
+            obs: ServerObs::new(),
         });
         Ok(Server { shared, listeners, uds_path: socket.to_path_buf() })
     }
@@ -615,6 +724,7 @@ impl Server {
             for listener in &self.listeners {
                 // Drain the whole backlog before sleeping again.
                 while let Ok(Some(stream)) = listener.accept_stream() {
+                    let _span = crate::obs::span("serve", "serve.accept");
                     accepted_any = true;
                     if stream.set_nonblocking(false).is_err() {
                         continue;

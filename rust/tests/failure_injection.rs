@@ -308,6 +308,137 @@ mod socket {
         assert!(summary.stats.cache_hits + 2 >= summary.jobs, "cache poisoned: {summary:?}");
     }
 
+    /// Serializes the tests that flip the process-global tracing flag
+    /// (and drain the shared event buffers) against each other.
+    fn obs_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Hostile teardowns (mid-line disconnect, a client that vanishes
+    /// without reading its replies) must still close every accepted
+    /// job's execute span exactly once — no orphaned spans, no double
+    /// closes — and drop no events.
+    #[test]
+    fn disconnects_and_dead_readers_close_job_spans_exactly_once() {
+        let _obs = obs_lock();
+        let _ = da4ml::obs::take_dropped_events();
+        da4ml::obs::enable();
+        let cfg =
+            ServerConfig { write_timeout_ms: 100, workers: 1, ..ServerConfig::default() };
+        let (path, handle, join) = start(cfg, "spans");
+
+        // Mid-line disconnect: one accepted job, then a half-written
+        // frame and a dead socket. The accepted job still executes and
+        // its span closes on the worker.
+        let mut dropper = UnixStream::connect(&path).expect("connect");
+        dropper
+            .write_all(
+                b"{\"id\": \"span-mid\", \"matrix\": [[2, 3], [5, 7]]}\n{\"id\": \"x\", \"matr",
+            )
+            .expect("send");
+        drop(dropper);
+
+        // Dead reader: several accepted jobs, then the client vanishes
+        // without ever reading. Replies are discarded, spans still
+        // close exactly once each.
+        let tx = UnixStream::connect(&path).expect("connect");
+        let rx = tx.try_clone().expect("clone");
+        let mut tx = tx;
+        for j in 0..4 {
+            let line = format!("{{\"id\": \"span-slow-{j}\", \"matrix\": [[2, 3], [5, 7]]}}\n");
+            if tx.write_all(line.as_bytes()).is_err() {
+                break;
+            }
+        }
+        thread::sleep(Duration::from_millis(300));
+        drop(tx);
+        drop(rx);
+
+        assert_still_serving(&path, "span-probe");
+        handle.shutdown();
+        let summary = join.join().expect("server thread");
+        da4ml::obs::disable();
+        assert_eq!(summary.dropped_jobs, 0);
+
+        let events = da4ml::obs::drain_events();
+        let execute_count = |id: &str| {
+            events
+                .iter()
+                .filter(|e| e.name == "serve.execute")
+                .filter(|e| {
+                    e.args.iter().any(|(k, v)| {
+                        *k == "id"
+                            && matches!(v, da4ml::obs::ArgValue::Str(s) if s == id)
+                    })
+                })
+                .count()
+        };
+        assert_eq!(execute_count("span-mid"), 1, "mid-line disconnect span");
+        for j in 0..4 {
+            let id = format!("span-slow-{j}");
+            assert_eq!(execute_count(&id), 1, "dead-reader span {id}");
+        }
+        assert_eq!(execute_count("span-probe"), 1, "probe span");
+        assert_eq!(da4ml::obs::take_dropped_events(), 0, "events dropped");
+    }
+
+    /// The determinism contract of `docs/observability.md`: enabling
+    /// tracing must not change a single `result`/`error` reply byte.
+    /// Both runs serve from the same baked cache so `opt_ms` is the
+    /// persisted value, making the full reply lines comparable.
+    #[test]
+    fn traced_replies_are_byte_identical_to_untraced() {
+        let _obs = obs_lock();
+        let req = da4ml::serve::JobRequest::from_json(
+            r#"{"id": "a", "matrix": [[3, 5], [-7, 9]]}"#,
+        )
+        .expect("request");
+        let job = req.to_compile_job("a".into(), -1).expect("job");
+        let bake = Coordinator::new();
+        bake.compile_cached(&job).expect("bake");
+        let cache = bake.save_cache();
+
+        let jobs = "{\"id\": \"a\", \"matrix\": [[3, 5], [-7, 9]]}\n\
+                    {\"id\": \"b\", \"matrix\": [[3, 5], [-7, 9]]}\n\
+                    {\"id\": \"bad\", \"matrix\": \"nope\"}\n";
+        let run = |tag: &str| -> Vec<String> {
+            let coord = Coordinator::new();
+            coord.load_cache(&cache).expect("load cache");
+            let path = socket_path(tag);
+            let server =
+                Server::bind(coord, ServerConfig::default(), &path, None).expect("bind");
+            let handle = server.handle();
+            let join = thread::spawn(move || server.run().expect("server run"));
+            let mut tx = UnixStream::connect(&path).expect("connect");
+            let rx = tx.try_clone().expect("clone");
+            tx.write_all(jobs.as_bytes()).expect("send");
+            tx.shutdown(std::net::Shutdown::Write).expect("half-close");
+            let lines: Vec<String> =
+                BufReader::new(rx).lines().map(|l| l.expect("reply")).collect();
+            handle.shutdown();
+            join.join().expect("server thread");
+            // Stats lines carry live timing digests by design; the
+            // contract pins the job replies.
+            lines
+                .into_iter()
+                .filter(|l| {
+                    let v = json::parse(l).unwrap();
+                    let ty = v.get("type").unwrap().as_str().unwrap().to_string();
+                    ty == "result" || ty == "error"
+                })
+                .collect()
+        };
+
+        let untraced = run("untraced");
+        da4ml::obs::enable();
+        let traced = run("traced");
+        da4ml::obs::disable();
+        let _ = da4ml::obs::drain_events();
+        assert_eq!(untraced.len(), 3, "two results + one error: {untraced:?}");
+        assert_eq!(untraced, traced, "tracing changed reply bytes");
+    }
+
     /// A connection that never sends anything must not block the
     /// drain: it is released with a final stats line and EOF.
     #[test]

@@ -337,3 +337,79 @@ fn drain_under_load_answers_every_accepted_job_exactly_once() {
 fn drain_rejections(summary: &ServerSummary) -> u64 {
     summary.errors - summary.rejected_busy
 }
+
+/// The observability control lines on the socket wire: `metrics`
+/// answers with the schema-versioned snapshot, `stats` with
+/// `"scope": "connection"` answers with the posting connection's own
+/// counters — both sequenced into the reply stream like any other line.
+#[test]
+fn metrics_and_connection_scope_stats_control_lines() {
+    // One worker: the identical second job is deterministically a
+    // cache hit (no same-matrix compile race).
+    let cfg = ServerConfig { workers: 1, ..ServerConfig::default() };
+    let (path, handle, join) = start(cfg, "obsctl");
+
+    // Interactive exchange: read both job replies before posting the
+    // control lines — stats-line contents are rendered when the line
+    // is *read*, so the counters are only deterministic once the job
+    // replies have reached the client.
+    let mut tx = UnixStream::connect(&path).expect("connect");
+    let rx = tx.try_clone().expect("clone");
+    let mut rx = BufReader::new(rx);
+    let read_line = |rx: &mut BufReader<UnixStream>| -> String {
+        let mut line = String::new();
+        rx.read_line(&mut line).expect("reply line");
+        line.trim_end().to_string()
+    };
+    tx.write_all(job_line("m-a", 3, 4).as_bytes()).expect("send");
+    // Same matrix: a deterministic cache hit behind the single worker.
+    tx.write_all(job_line("m-b", 3, 4).as_bytes()).expect("send");
+    let mut lines = vec![read_line(&mut rx), read_line(&mut rx)];
+    tx.write_all(b"{\"type\": \"stats\", \"scope\": \"connection\"}\n").expect("send");
+    tx.write_all(b"{\"type\": \"metrics\", \"id\": \"snap\"}\n").expect("send");
+    tx.shutdown(std::net::Shutdown::Write).expect("half-close");
+    for l in rx.lines() {
+        lines.push(l.expect("reply line"));
+    }
+    let vals = parsed(&lines);
+    assert_eq!(vals.len(), 5, "2 results + conn stats + metrics + final stats: {lines:?}");
+    assert_eq!(type_of(&vals[0]), "result");
+    assert_eq!(type_of(&vals[1]), "result");
+    assert!(vals[1].get("cached").unwrap().as_bool().unwrap());
+
+    // Per-connection stats: this connection's counters only, no
+    // server-wide fields.
+    let conn = &vals[2];
+    assert_eq!(type_of(conn), "stats");
+    assert_eq!(conn.get("scope").unwrap().as_str().unwrap(), "connection");
+    assert_eq!(conn.get("jobs").unwrap().as_i64().unwrap(), 2);
+    assert_eq!(conn.get("cache_hits").unwrap().as_i64().unwrap(), 1);
+    assert_eq!(conn.get("errors").unwrap().as_i64().unwrap(), 0);
+    assert!(conn.get("submitted").is_err(), "server-wide field on a connection line");
+
+    // Metrics snapshot: schema-versioned, correlated by id, carrying
+    // the registry maps.
+    let metrics = &vals[3];
+    assert_eq!(type_of(metrics), "metrics");
+    assert_eq!(metrics.get("id").unwrap().as_str().unwrap(), "snap");
+    assert_eq!(metrics.get("kind").unwrap().as_str().unwrap(), "obs_metrics");
+    assert!(metrics.get("schema_version").unwrap().as_i64().unwrap() >= 1);
+    assert!(metrics.get("counters").unwrap().as_object().is_ok());
+    assert!(metrics.get("gauges").unwrap().as_object().is_ok());
+    assert!(metrics.get("histograms").unwrap().as_object().is_ok());
+
+    // The final stats line carries the latency digest fields (zeros
+    // while tracing is off — the shape is the contract).
+    let fin = &vals[4];
+    assert_eq!(type_of(fin), "stats");
+    assert!(fin.get("final").unwrap().as_bool().unwrap());
+    assert!(fin.get("queue_wait_us_p50").unwrap().as_i64().is_ok());
+    assert!(fin.get("queue_wait_us_p99").unwrap().as_i64().is_ok());
+    assert!(fin.get("exec_us_p50").unwrap().as_i64().is_ok());
+    assert!(fin.get("exec_us_p99").unwrap().as_i64().is_ok());
+
+    handle.shutdown();
+    let summary = join.join().expect("server thread");
+    assert_eq!(summary.jobs, 2, "control lines are not jobs");
+    assert_eq!(summary.errors, 0);
+}
