@@ -5,7 +5,7 @@
 //! cargo run --release --example h264
 //! ```
 
-use da4ml::cmvm::{optimize, CmvmProblem, Strategy};
+use da4ml::cmvm::{compile, CmvmProblem, OptimizeOptions, Strategy};
 use da4ml::dais::{interp, verify, DaisOp};
 use da4ml::rtl::emit_verilog;
 
@@ -19,10 +19,10 @@ fn main() {
         1, -1, -1, 2, //
         1, -2, 1, -1, //
     ];
-    let problem = CmvmProblem::new(4, 4, m.clone(), 8);
+    let problem = CmvmProblem::new(4, 4, m.clone(), 8).expect("valid bits");
 
-    let naive = optimize(&problem, Strategy::NaiveDa).expect("optimize");
-    let da = optimize(&problem, Strategy::Da { dc: -1 }).expect("optimize");
+    let naive = compile(&problem, &OptimizeOptions::new(Strategy::NaiveDa)).expect("compile");
+    let da = compile(&problem, &OptimizeOptions::new(Strategy::Da { dc: -1 })).expect("compile");
     verify::check_cmvm_equivalence(&da.program, &m, 4, 4).unwrap();
 
     println!("H.264 integer transform (paper Fig. 3/4):");

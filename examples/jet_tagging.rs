@@ -82,7 +82,8 @@ fn main() -> Result<()> {
     let golden = golden_outputs(&spec, &dir, &vecs.inputs)?;
 
     // --- da4ml compilation ----------------------------------------------
-    let program = nn::compile::fuse(&spec, Strategy::Da { dc: 2 })?;
+    let opts = nn::compile::CompileOptions::new(Strategy::Da { dc: 2 });
+    let program = nn::compile::compile(&spec, &opts)?.program;
     println!(
         "fused DAIS program: {} nodes, {} adders, depth {}",
         program.nodes.len(),

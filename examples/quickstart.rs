@@ -11,7 +11,7 @@
 //! distributed-arithmetic and latency-strategy baselines.
 
 use da4ml::baseline::mac::{mac_report, DspPolicy};
-use da4ml::cmvm::{optimize, CmvmProblem, Strategy};
+use da4ml::cmvm::{compile, CmvmProblem, OptimizeOptions, Strategy};
 use da4ml::dais::{interp, verify};
 use da4ml::estimate::{combinational, FpgaModel};
 use da4ml::report::Table;
@@ -23,7 +23,7 @@ fn main() {
     let lo = (1i64 << (bits - 1)) + 1;
     let hi = (1i64 << bits) - 1;
     let matrix: Vec<i64> = (0..d_in * d_out).map(|_| rng.range_i64(lo, hi)).collect();
-    let problem = CmvmProblem::new(d_in, d_out, matrix, 8);
+    let problem = CmvmProblem::new(d_in, d_out, matrix, 8).expect("valid bits");
     let model = FpgaModel::default();
 
     println!(
@@ -55,7 +55,7 @@ fn main() {
         (Strategy::Da { dc: 2 }, "2"),
         (Strategy::Da { dc: -1 }, "-1"),
     ] {
-        let sol = optimize(&problem, strategy).expect("optimize");
+        let sol = compile(&problem, &OptimizeOptions::new(strategy)).expect("compile");
         // Exactness: the whole point of non-approximate DA.
         verify::check_well_formed(&sol.program).expect("well-formed");
         verify::check_cmvm_equivalence(&sol.program, &problem.matrix, d_in, d_out)

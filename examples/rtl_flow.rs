@@ -22,7 +22,8 @@ fn main() -> Result<()> {
     let dir = runtime::artifacts_dir();
     let spec = NetworkSpec::from_json(&runtime::load_text(dir.join("jet_mlp.weights.json"))?)?;
     let vecs = TestVectors::from_json(&runtime::load_text(dir.join("jet_mlp.testvec.json"))?)?;
-    let prog = nn::compile::fuse(&spec, Strategy::Da { dc: 2 })?;
+    let opts = nn::compile::CompileOptions::new(Strategy::Da { dc: 2 });
+    let prog = nn::compile::compile(&spec, &opts)?.program;
     let model = FpgaModel::default();
 
     // The paper's two pipelining settings.

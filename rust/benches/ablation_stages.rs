@@ -8,8 +8,8 @@
 //! * and the correlated-columns case where stage 1 shines (the paper:
 //!   "useful for matrices with correlated columns").
 
-use da4ml::cmvm::{optimize, optimize_terms, CmvmProblem, Strategy};
-use da4ml::cse::{optimize_into, CseConfig, InputTerm};
+use da4ml::cmvm::{compile, compile_terms, CmvmProblem, OptimizeOptions, Strategy};
+use da4ml::cse::{self, CseConfig, InputTerm};
 use da4ml::dais::DaisBuilder;
 use da4ml::report::Table;
 use da4ml::util::Rng;
@@ -19,8 +19,8 @@ fn cse_only(p: &CmvmProblem, weighted: bool) -> usize {
     let inputs: Vec<InputTerm> = (0..p.d_in)
         .map(|j| InputTerm { node: b.input(j, p.input_qint[j], 0) })
         .collect();
-    let outs =
-        optimize_into(&mut b, &inputs, &p.matrix, p.d_in, p.d_out, &CseConfig { dc: -1, weighted });
+    let cfg = CseConfig { dc: -1, weighted };
+    let (outs, _) = cse::compile(&mut b, &inputs, &p.matrix, p.d_in, p.d_out, &cfg, None);
     for o in &outs {
         if let Some(n) = o.node {
             let n = if o.neg { b.neg(n) } else { n };
@@ -43,7 +43,7 @@ fn correlated(seed: u64, m: usize) -> CmvmProblem {
             mat[j * m + i] = sign * base[j] + noise;
         }
     }
-    CmvmProblem::new(m, m, mat, 8)
+    CmvmProblem::new(m, m, mat, 8).expect("valid bits")
 }
 
 fn main() {
@@ -59,10 +59,14 @@ fn main() {
         let mut sums = [0f64; 4];
         for t in 0..trials {
             let p = if gen { correlated(50 + t, 16) } else { CmvmProblem::random(50 + t, 16, 16, 8) };
-            sums[0] += optimize(&p, Strategy::NaiveDa).expect("optimize").adders as f64;
+            sums[0] += compile(&p, &OptimizeOptions::new(Strategy::NaiveDa))
+                .expect("compile")
+                .adders as f64;
             sums[1] += cse_only(&p, false) as f64;
             sums[2] += cse_only(&p, true) as f64;
-            sums[3] += optimize(&p, Strategy::Da { dc: -1 }).expect("optimize").adders as f64;
+            sums[3] += compile(&p, &OptimizeOptions::new(Strategy::Da { dc: -1 }))
+                .expect("compile")
+                .adders as f64;
         }
         let naive = sums[0] / trials as f64;
         for (name, s) in [
@@ -81,10 +85,11 @@ fn main() {
         println!("{}", table.render());
     }
 
-    // Ensure optimize_terms is exercised for the ablation doc example.
+    // Ensure compile_terms is exercised for the ablation doc example.
     let p = CmvmProblem::random(1, 4, 4, 4);
     let mut b = DaisBuilder::new();
     let inputs: Vec<InputTerm> =
         (0..4).map(|j| InputTerm { node: b.input(j, p.input_qint[j], 0) }).collect();
-    let _ = optimize_terms(&mut b, &inputs, &p, Strategy::Da { dc: 2 }).expect("optimize");
+    let _ = compile_terms(&mut b, &inputs, &p, &OptimizeOptions::new(Strategy::Da { dc: 2 }))
+        .expect("compile");
 }

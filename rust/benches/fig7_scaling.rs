@@ -2,7 +2,7 @@
 //! matrices up to 128×128, against the O(N² · log²N) asymptote
 //! (N = m² · bw), normalized at m = 16.
 
-use da4ml::cmvm::{optimize, CmvmProblem, Strategy};
+use da4ml::cmvm::{compile, CmvmProblem, OptimizeOptions, Strategy};
 use da4ml::report::{sci, Table};
 
 fn main() {
@@ -21,7 +21,7 @@ fn main() {
         let mut ms = 0f64;
         for t in 0..trials {
             let p = CmvmProblem::random(77 * m as u64 + t as u64, m, m, 8);
-            let sol = optimize(&p, Strategy::Da { dc: -1 }).expect("optimize");
+            let sol = compile(&p, &OptimizeOptions::new(Strategy::Da { dc: -1 })).expect("compile");
             ms += sol.opt_time.as_secs_f64() * 1e3;
         }
         ms /= trials as f64;

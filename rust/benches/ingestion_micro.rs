@@ -14,42 +14,17 @@ use da4ml::json;
 use da4ml::nn::{NetworkSpec, TestVectors};
 use da4ml::report::{sci, Table};
 use da4ml::runtime;
+use da4ml::util::alloc_count::{self, CountingAlloc};
 use da4ml::util::time_median;
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
-
-/// Pass-through allocator that counts allocations and bytes requested.
-struct Counting;
-
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-static BYTES: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for Counting {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-}
 
 #[global_allocator]
-static ALLOCATOR: Counting = Counting;
+static ALLOCATOR: CountingAlloc = CountingAlloc;
 
 /// Run `f`, returning its result plus (allocations, bytes) it made.
 fn count_allocs<T>(f: impl FnOnce() -> T) -> (T, u64, u64) {
-    let (a0, b0) = (ALLOCS.load(Ordering::Relaxed), BYTES.load(Ordering::Relaxed));
+    let (a0, b0) = (alloc_count::allocations(), alloc_count::bytes_requested());
     let out = f();
-    let (a1, b1) = (ALLOCS.load(Ordering::Relaxed), BYTES.load(Ordering::Relaxed));
+    let (a1, b1) = (alloc_count::allocations(), alloc_count::bytes_requested());
     (out, a1 - a0, b1 - b0)
 }
 

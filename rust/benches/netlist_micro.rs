@@ -28,7 +28,8 @@ fn main() {
         ),
         Err(_) => ("synthetic jet_mlp (16-64-32-32-5)".into(), synthetic_jet_spec()),
     };
-    let prog = nn::compile::fuse(&spec, Strategy::Da { dc: 2 }).expect("fuse");
+    let opts = nn::compile::CompileOptions::new(Strategy::Da { dc: 2 });
+    let prog = nn::compile::compile(&spec, &opts).expect("compile").program;
     println!(
         "source: {source} — {} DAIS nodes, {} adders, depth {}\n",
         prog.nodes.len(),

@@ -9,7 +9,7 @@
 //! magnitude less CPU time; the in-tree O(N³) comparator reproduces the
 //! runtime blow-up on the sizes where it is feasible to run.
 
-use da4ml::cmvm::{optimize, CmvmProblem, Strategy};
+use da4ml::cmvm::{compile, CmvmProblem, OptimizeOptions, Strategy};
 use da4ml::report::{sci, Table};
 
 /// Paper Table 2 H_cmvm reference rows: (m, dc, depth, adders, cpu_ms).
@@ -60,12 +60,13 @@ fn main() {
             let mut la_runs = 0usize;
             for t in 0..trials {
                 let p = CmvmProblem::random(1000 * m as u64 + t as u64, m, m, 8);
-                let sol = optimize(&p, Strategy::Da { dc }).expect("optimize");
+                let sol = compile(&p, &OptimizeOptions::new(Strategy::Da { dc })).expect("compile");
                 da.0 += sol.depth as f64;
                 da.1 += sol.adders as f64;
                 da.2 += sol.opt_time.as_secs_f64() * 1e3;
                 if m <= lookahead_max_m {
-                    let sol = optimize(&p, Strategy::Lookahead { dc }).expect("optimize");
+                    let sol = compile(&p, &OptimizeOptions::new(Strategy::Lookahead { dc }))
+                        .expect("compile");
                     la.0 += sol.depth as f64;
                     la.1 += sol.adders as f64;
                     la.2 += sol.opt_time.as_secs_f64() * 1e3;

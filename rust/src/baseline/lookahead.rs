@@ -118,7 +118,7 @@ impl State {
 }
 
 /// Run the look-ahead CSE into `builder`. Used by
-/// [`crate::cmvm::optimize`] for [`Strategy::Lookahead`].
+/// [`crate::cmvm::compile`] for [`Strategy::Lookahead`].
 pub fn optimize_into(
     builder: &mut DaisBuilder,
     inputs: &[InputTerm],
@@ -259,9 +259,10 @@ pub fn optimize_into(
         .collect()
 }
 
-/// Standalone entry matching [`crate::cmvm::optimize`]'s output shape.
+/// Standalone entry matching [`crate::cmvm::compile`]'s output shape.
 pub fn optimize_lookahead(problem: &CmvmProblem, dc: i32) -> crate::Result<CmvmSolution> {
-    crate::cmvm::optimize(problem, Strategy::Lookahead { dc })
+    let opts = crate::cmvm::OptimizeOptions::new(Strategy::Lookahead { dc });
+    crate::cmvm::compile(problem, &opts)
 }
 
 /// The naive-DA functional reference, re-exported for bench symmetry.
@@ -275,7 +276,11 @@ pub fn naive_reference(
 
 #[cfg(test)]
 mod tests {
-    use crate::cmvm::{optimize, CmvmProblem, Strategy};
+    use crate::cmvm::{compile, CmvmProblem, OptimizeOptions, Strategy};
+
+    fn optimize(p: &CmvmProblem, s: Strategy) -> crate::Result<crate::cmvm::CmvmSolution> {
+        compile(p, &OptimizeOptions::new(s))
+    }
     use crate::dais::verify;
     use crate::util::Rng;
 
@@ -284,7 +289,7 @@ mod tests {
         let mut rng = Rng::seed_from(21);
         for _ in 0..3 {
             let m: Vec<i64> = (0..36).map(|_| rng.range_i64(-255, 255)).collect();
-            let p = CmvmProblem::new(6, 6, m.clone(), 8);
+            let p = CmvmProblem::new(6, 6, m.clone(), 8).unwrap();
             let la = optimize(&p, Strategy::Lookahead { dc: -1 }).unwrap();
             verify::check_cmvm_equivalence(&la.program, &m, 6, 6).unwrap();
             let da = optimize(&p, Strategy::Da { dc: -1 }).unwrap();
@@ -298,7 +303,7 @@ mod tests {
     fn lookahead_depth_constraint() {
         let mut rng = Rng::seed_from(8);
         let m: Vec<i64> = (0..36).map(|_| rng.range_i64(129, 255)).collect();
-        let p = CmvmProblem::new(6, 6, m.clone(), 8);
+        let p = CmvmProblem::new(6, 6, m.clone(), 8).unwrap();
         let s0 = optimize(&p, Strategy::Lookahead { dc: 0 }).unwrap();
         let sf = optimize(&p, Strategy::Lookahead { dc: -1 }).unwrap();
         verify::check_cmvm_equivalence(&s0.program, &m, 6, 6).unwrap();
@@ -311,7 +316,7 @@ mod tests {
         // look-ahead recount loop is measurably slower.
         let mut rng = Rng::seed_from(30);
         let m: Vec<i64> = (0..100).map(|_| rng.range_i64(129, 255)).collect();
-        let p = CmvmProblem::new(10, 10, m, 8);
+        let p = CmvmProblem::new(10, 10, m, 8).unwrap();
         let la = optimize(&p, Strategy::Lookahead { dc: -1 }).unwrap();
         let da = optimize(&p, Strategy::Da { dc: -1 }).unwrap();
         assert!(la.opt_time > da.opt_time, "{:?} <= {:?}", la.opt_time, da.opt_time);

@@ -1,7 +1,7 @@
 //! Shared generators for the paper-table benches.
 
 use crate::baseline::mac::{mac_report, DspPolicy};
-use crate::cmvm::{optimize, CmvmProblem, Strategy};
+use crate::cmvm::{self, CmvmProblem, OptimizeOptions, Strategy};
 use crate::estimate::{combinational, FpgaModel};
 use crate::nn::{self, LayerSpec, NetworkSpec, TestVectors};
 use crate::pipeline::PipelineConfig;
@@ -89,7 +89,8 @@ pub fn resource_table(title: &str, bw: u32) {
             format!("({})", macr.adders),
         ]);
         for dc in [0i32, 2, -1] {
-            let sol = optimize(&p, Strategy::Da { dc }).expect("optimize");
+            let opts = OptimizeOptions::new(Strategy::Da { dc });
+            let sol = cmvm::compile(&p, &opts).expect("compile");
             let rep = combinational(&sol.program, &model);
             table.push(vec![
                 "DA".into(),

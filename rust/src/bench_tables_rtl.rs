@@ -42,7 +42,8 @@ pub fn rtl_table(title: &str, name: &str, every: u32) -> Result<()> {
         let spec = load_level(name, w, a)?;
         let acc = metric(name, w, a, "accuracy").unwrap_or(f64::NAN);
         let t0 = std::time::Instant::now();
-        let prog = nn::compile::fuse(&spec, Strategy::Da { dc: 2 })?;
+        let opts = nn::compile::CompileOptions::new(Strategy::Da { dc: 2 });
+        let prog = nn::compile::compile(&spec, &opts)?.program;
         let stages = assign_stages(&prog, &pipe);
         let verilog = emit_verilog(&prog, &spec.name, Some(&stages))?;
         let gen_ms = t0.elapsed().as_secs_f64() * 1e3;

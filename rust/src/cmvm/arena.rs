@@ -1,0 +1,92 @@
+//! Per-compile allocation arenas and the [`ArenaMode`] policy knob on
+//! [`OptimizeOptions`](super::OptimizeOptions).
+//!
+//! A [`CompileArena`] bundles the two recyclable slabs a CMVM compile
+//! touches: the CSE engine's container storage
+//! ([`cse::EngineArena`](crate::cse::EngineArena)) and the DAIS
+//! builder's consing-map/capacity storage
+//! ([`dais::BuilderStorage`](crate::dais::BuilderStorage)). Reusing one
+//! arena across compiles (the coordinator worker loop, the perf suite's
+//! repeat loop) replaces per-compile allocation churn with
+//! clear-and-reuse; the emitted programs are bit-identical either way —
+//! the differential sweep in `cse::tests` proves it.
+
+use crate::cse::EngineArena;
+use crate::dais::BuilderStorage;
+use std::cell::RefCell;
+
+/// Reusable allocation slabs for one compile pipeline. Not `Sync` —
+/// hold one per thread (or use [`ArenaMode::ThreadLocal`], which does
+/// exactly that).
+#[derive(Debug, Default)]
+pub struct CompileArena {
+    engine: EngineArena,
+    builder: RefCell<Option<BuilderStorage>>,
+}
+
+impl CompileArena {
+    /// New empty arena; the first compile through it allocates, later
+    /// ones reuse.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The CSE engine's storage handle.
+    pub fn engine(&self) -> &EngineArena {
+        &self.engine
+    }
+
+    /// Take the builder storage (fresh default when absent — first use
+    /// or a reentrant compile already holding it).
+    pub fn take_builder(&self) -> BuilderStorage {
+        self.builder.borrow_mut().take().unwrap_or_default()
+    }
+
+    /// Return builder storage after a compile.
+    pub fn put_builder(&self, storage: BuilderStorage) {
+        *self.builder.borrow_mut() = Some(storage);
+    }
+}
+
+/// Where a compile gets its allocation arena from.
+///
+/// The default reuses a per-thread arena — the right call for compile
+/// loops (coordinator workers, batch sweeps) with zero setup. `Fresh`
+/// opts out entirely (cold allocations, e.g. for A/B measurement);
+/// `Local` pins an explicit arena, for callers that manage lifetimes
+/// themselves (tests, single-shot tools).
+#[derive(Debug, Clone, Copy, Default)]
+pub enum ArenaMode<'a> {
+    /// Reuse a per-thread [`CompileArena`] (the default).
+    #[default]
+    ThreadLocal,
+    /// Fresh allocations, no reuse.
+    Fresh,
+    /// Use this specific arena.
+    Local(&'a CompileArena),
+}
+
+thread_local! {
+    static TLS_ARENA: CompileArena = CompileArena::default();
+}
+
+/// Resolve an [`ArenaMode`] to an optional arena reference for the
+/// duration of `f`.
+pub(super) fn with_arena<R>(mode: ArenaMode<'_>, f: impl FnOnce(Option<&CompileArena>) -> R) -> R {
+    match mode {
+        ArenaMode::ThreadLocal => TLS_ARENA.with(|a| f(Some(a))),
+        ArenaMode::Fresh => f(None),
+        ArenaMode::Local(a) => f(Some(a)),
+    }
+}
+
+impl ArenaMode<'_> {
+    /// Short name for observability args.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArenaMode::ThreadLocal => "thread-local",
+            ArenaMode::Fresh => "fresh",
+            ArenaMode::Local(_) => "local",
+        }
+    }
+}

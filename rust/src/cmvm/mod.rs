@@ -5,18 +5,27 @@
 //! output `i`). The optimizer turns it into a multiplierless DAIS adder
 //! graph under a delay constraint `dc` (extra adder depth allowed beyond
 //! the minimal achievable depth; `dc = -1` disables the constraint).
+//!
+//! The single entry point is [`compile`] (self-contained program) /
+//! [`compile_terms`] (into a caller-owned builder, the NN frontend's
+//! composition point), both driven by [`OptimizeOptions`]: the strategy
+//! plus the [`ArenaMode`] allocation-reuse policy. The pre-redesign
+//! free functions (`optimize`, `optimize_terms`, `optimize_terms_stats`)
+//! remain as deprecated shims delegating to the new surface.
 
+mod arena;
 mod normalize;
 
+pub use arena::{ArenaMode, CompileArena};
 pub use normalize::{denormalize_check, normalize, Normalization};
 
 use crate::csd;
-use crate::cse::{self, CseConfig, CseStats, InputTerm, OutTerm};
+use crate::cse::{self, CseConfig, CseStats, EngineArena, InputTerm, OutTerm};
 use crate::dais::{DaisBuilder, DaisProgram};
 use crate::fixed::QInterval;
 use crate::graph;
 use crate::Result;
-use anyhow::bail;
+use anyhow::{bail, ensure};
 
 /// Which CMVM implementation strategy to use (mirrors the hls4ml
 /// `strategy` knob: `latency` vs `distributed_arithmetic`). The derived
@@ -79,22 +88,26 @@ pub struct CmvmProblem {
 
 impl CmvmProblem {
     /// Build a problem with uniform signed `input_bits`-bit inputs at
-    /// depth 0. `input_bits` must be in `[1, 63]`: 0 would underflow the
-    /// `input_bits - 1` sign-bit split below, 64+ the i64 shifts.
-    pub fn new(d_in: usize, d_out: usize, matrix: Vec<i64>, input_bits: u32) -> Self {
+    /// depth 0.
+    ///
+    /// Errors when `input_bits` is outside `[1, 63]`: 0 would underflow
+    /// the `input_bits - 1` sign-bit split below, 64+ the i64 shifts.
+    /// (The shape check stays an assert — a mismatched matrix length is
+    /// a caller bug, not an input-validation question.)
+    pub fn new(d_in: usize, d_out: usize, matrix: Vec<i64>, input_bits: u32) -> Result<Self> {
         assert_eq!(matrix.len(), d_in * d_out, "matrix shape mismatch");
-        assert!(
+        ensure!(
             (1..=63).contains(&input_bits),
             "input_bits must be in [1, 63], got {input_bits}"
         );
         let q = QInterval::new(-(1i64 << (input_bits - 1)), (1i64 << (input_bits - 1)) - 1, 0);
-        Self {
+        Ok(Self {
             d_in,
             d_out,
             matrix,
             input_qint: vec![q; d_in],
             input_depth: vec![0; d_in],
-        }
+        })
     }
 
     /// Random problem in the paper's Table-2 convention: a `bw`-bit
@@ -105,7 +118,7 @@ impl CmvmProblem {
         let lo = (1i64 << (bw - 1)) + 1;
         let hi = (1i64 << bw) - 1;
         let m: Vec<i64> = (0..d_in * d_out).map(|_| rng.range_i64(lo, hi)).collect();
-        Self::new(d_in, d_out, m, 8)
+        Self::new(d_in, d_out, m, 8).expect("random problems use valid input_bits")
     }
 
     /// Entry `(j, i)`.
@@ -153,33 +166,113 @@ pub struct CmvmSolution {
     pub cse: CseStats,
 }
 
+/// Options for [`compile`] / [`compile_terms`]: the strategy (which
+/// carries its own `dc`) plus the allocation-arena policy.
+#[derive(Debug, Clone, Copy)]
+pub struct OptimizeOptions<'a> {
+    /// The implementation strategy (carries the delay constraint).
+    pub strategy: Strategy,
+    /// Allocation reuse policy (default: per-thread arena).
+    pub arena: ArenaMode<'a>,
+}
+
+impl OptimizeOptions<'_> {
+    /// Options for `strategy` with the default thread-local arena.
+    pub fn new(strategy: Strategy) -> Self {
+        Self { strategy, arena: ArenaMode::ThreadLocal }
+    }
+}
+
+impl<'a> OptimizeOptions<'a> {
+    /// Override the arena policy.
+    pub fn with_arena(self, arena: ArenaMode<'a>) -> Self {
+        Self { arena, ..self }
+    }
+}
+
+/// Optimize a CMVM problem into a self-contained DAIS program (inputs
+/// 0..d_in, outputs 0..d_out). The single compile entry point: strategy
+/// and arena policy ride in [`OptimizeOptions`], and the solution always
+/// carries the engine work counters.
+pub fn compile(problem: &CmvmProblem, opts: &OptimizeOptions) -> Result<CmvmSolution> {
+    let mut span = crate::obs::span("cmvm", "cmvm.compile");
+    span.arg_str("strategy", || opts.strategy.name().to_string());
+    span.arg_str("arena", || opts.arena.name().to_string());
+    span.arg("d_in", problem.d_in as i64);
+    span.arg("d_out", problem.d_out as i64);
+    let t0 = std::time::Instant::now();
+    let strategy = opts.strategy;
+    arena::with_arena(opts.arena, |arena| {
+        let mut builder = match arena {
+            Some(a) => DaisBuilder::with_storage(a.take_builder()),
+            None => DaisBuilder::new(),
+        };
+        let inputs: Vec<InputTerm> = (0..problem.d_in)
+            .map(|j| {
+                let node = builder.input(j, problem.input_qint[j], problem.input_depth[j]);
+                InputTerm { node }
+            })
+            .collect();
+
+        let engine_arena = arena.map(|a| a.engine());
+        let (outs, cse_stats) =
+            compile_terms_inner(&mut builder, &inputs, problem, strategy, engine_arena)?;
+        bind_outputs(&mut builder, &outs);
+        let program = match arena {
+            Some(a) => {
+                let (program, storage) = builder.finish_reuse();
+                a.put_builder(storage);
+                program
+            }
+            None => builder.finish(),
+        };
+        // The deterministic result counters ride on the span; wall-clock
+        // stays in `opt_time` only (timing never enters cached replies).
+        span.arg("adders", program.adder_count() as i64);
+        span.arg("depth", program.adder_depth() as i64);
+        span.arg("cse_steps", cse_stats.steps as i64);
+        span.arg("heap_pops", cse_stats.heap_pops as i64);
+        Ok(CmvmSolution {
+            adders: program.adder_count(),
+            depth: program.adder_depth(),
+            program,
+            opt_time: t0.elapsed(),
+            strategy,
+            cse: cse_stats,
+        })
+    })
+}
+
 /// Run a strategy into an existing builder with caller-provided input
-/// terms; returns the raw output terms (no output binding). This is the
-/// composition point used by the NN frontend to chain CMVMs.
+/// terms; returns the raw output terms (no output binding) plus the
+/// engine work counters. This is the composition point used by the NN
+/// frontend to chain CMVMs (the engine arena from `opts.arena` is used;
+/// builder storage stays the caller's concern since the builder is
+/// theirs).
 ///
 /// Errors when an optimizer invariant is violated (e.g. a stage-1
 /// decomposition output with a negative shift) instead of silently
 /// producing a wrong graph.
-pub fn optimize_terms(
+pub fn compile_terms(
     builder: &mut DaisBuilder,
     inputs: &[InputTerm],
     problem: &CmvmProblem,
-    strategy: Strategy,
-) -> Result<Vec<OutTerm>> {
-    optimize_terms_stats(builder, inputs, problem, strategy).map(|(outs, _)| outs)
+    opts: &OptimizeOptions,
+) -> Result<(Vec<OutTerm>, CseStats)> {
+    arena::with_arena(opts.arena, |arena| {
+        compile_terms_inner(builder, inputs, problem, opts.strategy, arena.map(|a| a.engine()))
+    })
 }
 
-/// Like [`optimize_terms`] but also returns the CSE engine work
-/// counters accumulated across every engine invocation the strategy
-/// made. Strategies that never run the engine (latency / naive-da /
-/// lookahead) report zeroed counters.
-pub fn optimize_terms_stats(
+/// Strategy dispatch with the engine arena resolved.
+fn compile_terms_inner(
     builder: &mut DaisBuilder,
     inputs: &[InputTerm],
     problem: &CmvmProblem,
     strategy: Strategy,
+    engine_arena: Option<&EngineArena>,
 ) -> Result<(Vec<OutTerm>, CseStats)> {
-    let mut span = crate::obs::span("cmvm", "cmvm.optimize_terms");
+    let mut span = crate::obs::span("cmvm", "cmvm.compile_terms");
     span.arg_str("strategy", || strategy.name().to_string());
     Ok(match strategy {
         Strategy::Latency | Strategy::NaiveDa => {
@@ -191,15 +284,16 @@ pub fn optimize_terms_stats(
                 CseStats::default(),
             )
         }
-        Strategy::CseOnly { dc } => cse::optimize_into_stats(
+        Strategy::CseOnly { dc } => cse::compile(
             builder,
             inputs,
             &problem.matrix,
             problem.d_in,
             problem.d_out,
             &CseConfig { dc, ..CseConfig::default() },
+            engine_arena,
         ),
-        Strategy::Da { dc } => two_stage(builder, inputs, problem, dc)?,
+        Strategy::Da { dc } => two_stage(builder, inputs, problem, dc, engine_arena)?,
         Strategy::Lookahead { dc } => (
             crate::baseline::lookahead::optimize_into(builder, inputs, problem, dc),
             CseStats::default(),
@@ -207,39 +301,35 @@ pub fn optimize_terms_stats(
     })
 }
 
-/// Optimize a CMVM problem with the given strategy, producing a
-/// self-contained DAIS program (inputs 0..d_in, outputs 0..d_out).
-pub fn optimize(problem: &CmvmProblem, strategy: Strategy) -> Result<CmvmSolution> {
-    let mut span = crate::obs::span("cmvm", "cmvm.optimize");
-    span.arg_str("strategy", || strategy.name().to_string());
-    span.arg("d_in", problem.d_in as i64);
-    span.arg("d_out", problem.d_out as i64);
-    let t0 = std::time::Instant::now();
-    let mut builder = DaisBuilder::new();
-    let inputs: Vec<InputTerm> = (0..problem.d_in)
-        .map(|j| {
-            let node = builder.input(j, problem.input_qint[j], problem.input_depth[j]);
-            InputTerm { node }
-        })
-        .collect();
+/// Deprecated pre-redesign entry point; equivalent to
+/// [`compile_terms`] with [`ArenaMode::Fresh`].
+#[deprecated(note = "use cmvm::compile_terms with OptimizeOptions")]
+pub fn optimize_terms(
+    builder: &mut DaisBuilder,
+    inputs: &[InputTerm],
+    problem: &CmvmProblem,
+    strategy: Strategy,
+) -> Result<Vec<OutTerm>> {
+    compile_terms_inner(builder, inputs, problem, strategy, None).map(|(outs, _)| outs)
+}
 
-    let (outs, cse_stats) = optimize_terms_stats(&mut builder, &inputs, problem, strategy)?;
-    bind_outputs(&mut builder, &outs);
-    let program = builder.finish();
-    // The deterministic result counters ride on the span; wall-clock
-    // stays in `opt_time` only (timing never enters cached replies).
-    span.arg("adders", program.adder_count() as i64);
-    span.arg("depth", program.adder_depth() as i64);
-    span.arg("cse_steps", cse_stats.steps as i64);
-    span.arg("heap_pops", cse_stats.heap_pops as i64);
-    Ok(CmvmSolution {
-        adders: program.adder_count(),
-        depth: program.adder_depth(),
-        program,
-        opt_time: t0.elapsed(),
-        strategy,
-        cse: cse_stats,
-    })
+/// Deprecated pre-redesign entry point; equivalent to
+/// [`compile_terms`] with [`ArenaMode::Fresh`].
+#[deprecated(note = "use cmvm::compile_terms with OptimizeOptions")]
+pub fn optimize_terms_stats(
+    builder: &mut DaisBuilder,
+    inputs: &[InputTerm],
+    problem: &CmvmProblem,
+    strategy: Strategy,
+) -> Result<(Vec<OutTerm>, CseStats)> {
+    compile_terms_inner(builder, inputs, problem, strategy, None)
+}
+
+/// Deprecated pre-redesign entry point; equivalent to [`compile`] with
+/// [`ArenaMode::Fresh`].
+#[deprecated(note = "use cmvm::compile with OptimizeOptions")]
+pub fn optimize(problem: &CmvmProblem, strategy: Strategy) -> Result<CmvmSolution> {
+    compile(problem, &OptimizeOptions::new(strategy).with_arena(ArenaMode::Fresh))
 }
 
 /// The full two-stage da4ml flow: MST decomposition `M = M1 · M2`
@@ -250,6 +340,7 @@ fn two_stage(
     inputs: &[InputTerm],
     problem: &CmvmProblem,
     dc: i32,
+    engine_arena: Option<&EngineArena>,
 ) -> Result<(Vec<OutTerm>, CseStats)> {
     let decomp = {
         let _span = crate::obs::span("cmvm", "cmvm.stage1.decompose");
@@ -260,20 +351,21 @@ fn two_stage(
     if decomp.is_trivial() {
         // No cross-column structure found: stage 1 degenerates to the
         // identity and we run CSE on M directly.
-        return Ok(cse::optimize_into_stats(
+        return Ok(cse::compile(
             builder,
             inputs,
             &problem.matrix,
             problem.d_in,
             problem.d_out,
             &cfg,
+            engine_arena,
         ));
     }
 
     // Stage 2a: CSE over M1 (d_in × k).
     let (mids, mut stats) = {
         let _span = crate::obs::span("cmvm", "cmvm.stage2a");
-        cse::optimize_into_stats(builder, inputs, &decomp.m1, problem.d_in, decomp.k, &cfg)
+        cse::compile(builder, inputs, &decomp.m1, problem.d_in, decomp.k, &cfg, engine_arena)
     };
 
     // Fold each intermediate's wiring shift/sign into the M2 entries so
@@ -311,7 +403,7 @@ fn two_stage(
 
     let (outs, stage2) = {
         let _span = crate::obs::span("cmvm", "cmvm.stage2b");
-        cse::optimize_into_stats(builder, &mid_inputs, &m2, decomp.k, problem.d_out, &cfg)
+        cse::compile(builder, &mid_inputs, &m2, decomp.k, problem.d_out, &cfg, engine_arena)
     };
     stats.absorb(&stage2);
     Ok((outs, stats))
@@ -353,8 +445,8 @@ mod tests {
     }
 
     fn check_strategy(matrix: Vec<i64>, d_in: usize, d_out: usize, s: Strategy) {
-        let p = CmvmProblem::new(d_in, d_out, matrix, 8);
-        let sol = optimize(&p, s).unwrap();
+        let p = CmvmProblem::new(d_in, d_out, matrix, 8).unwrap();
+        let sol = compile(&p, &OptimizeOptions::new(s)).unwrap();
         verify::check_well_formed(&sol.program).unwrap();
         verify::check_cmvm_equivalence(&sol.program, &p.matrix, d_in, d_out).unwrap();
         // Numeric spot check.
@@ -411,8 +503,8 @@ mod tests {
     #[test]
     fn zero_column_outputs_zero() {
         let m = vec![1, 0, 2, 0]; // d_in=2, d_out=2, second column all-zero
-        let p = CmvmProblem::new(2, 2, m, 8);
-        let sol = optimize(&p, Strategy::Da { dc: -1 }).unwrap();
+        let p = CmvmProblem::new(2, 2, m, 8).unwrap();
+        let sol = compile(&p, &OptimizeOptions::new(Strategy::Da { dc: -1 })).unwrap();
         let got = interp::evaluate(&sol.program, &[5, 9]);
         assert_eq!(got, vec![5 + 18, 0]);
     }
@@ -424,9 +516,9 @@ mod tests {
             let (d_in, d_out) = (8, 8);
             let m: Vec<i64> =
                 (0..d_in * d_out).map(|_| rng.range_i64(-127, 127)).collect();
-            let p = CmvmProblem::new(d_in, d_out, m, 8);
-            let naive = optimize(&p, Strategy::NaiveDa).unwrap();
-            let da = optimize(&p, Strategy::Da { dc: -1 }).unwrap();
+            let p = CmvmProblem::new(d_in, d_out, m, 8).unwrap();
+            let naive = compile(&p, &OptimizeOptions::new(Strategy::NaiveDa)).unwrap();
+            let da = compile(&p, &OptimizeOptions::new(Strategy::Da { dc: -1 })).unwrap();
             assert!(
                 da.adders <= naive.adders,
                 "da {} > naive {}",
@@ -441,19 +533,96 @@ mod tests {
     #[test]
     fn cse_stats_flow_through_solutions() {
         let p = CmvmProblem::random(5, 8, 8, 8);
-        let da = optimize(&p, Strategy::Da { dc: -1 }).unwrap();
+        let da = compile(&p, &OptimizeOptions::new(Strategy::Da { dc: -1 })).unwrap();
         assert!(da.cse.steps > 0, "8x8 8-bit CMVM must share something");
         assert!(da.cse.heap_pops >= da.cse.steps);
         assert!(da.cse.occ_cols_scanned > 0);
-        let naive = optimize(&p, Strategy::NaiveDa).unwrap();
+        let naive = compile(&p, &OptimizeOptions::new(Strategy::NaiveDa)).unwrap();
         assert_eq!(naive.cse, CseStats::default(), "naive-da bypasses the engine");
     }
 
+    /// `input_bits` validation is a proper `Err` (API-consistency
+    /// satellite): 0 used to underflow `input_bits - 1` and panic with a
+    /// shift overflow deep inside QInterval.
     #[test]
-    #[should_panic(expected = "input_bits")]
-    fn zero_input_bits_rejected() {
-        // Used to underflow `input_bits - 1` and panic with a shift
-        // overflow deep inside QInterval; now rejected up front.
-        let _ = CmvmProblem::new(1, 1, vec![3], 0);
+    fn out_of_range_input_bits_rejected() {
+        for bits in [0u32, 64, 65] {
+            let err = CmvmProblem::new(1, 1, vec![3], bits).unwrap_err();
+            assert!(err.to_string().contains("input_bits"), "unhelpful error: {err}");
+        }
+        for bits in [1u32, 8, 63] {
+            assert!(CmvmProblem::new(1, 1, vec![3], bits).is_ok());
+        }
+    }
+
+    /// All three arena modes must emit bit-identical solutions, warm or
+    /// cold — the arena is an allocation policy, never a behavior knob.
+    #[test]
+    fn arena_modes_are_bit_identical() {
+        let p = CmvmProblem::random(11, 10, 10, 8);
+        let s = Strategy::Da { dc: 1 };
+        let fresh = compile(&p, &OptimizeOptions::new(s).with_arena(ArenaMode::Fresh)).unwrap();
+        let local_arena = CompileArena::new();
+        let local_opts = OptimizeOptions::new(s).with_arena(ArenaMode::Local(&local_arena));
+        let local_cold = compile(&p, &local_opts).unwrap();
+        let local_warm = compile(&p, &local_opts).unwrap();
+        let tls_a = compile(&p, &OptimizeOptions::new(s)).unwrap();
+        let tls_b = compile(&p, &OptimizeOptions::new(s)).unwrap();
+        for sol in [&local_cold, &local_warm, &tls_a, &tls_b] {
+            assert_eq!(fresh.program, sol.program);
+            assert_eq!(fresh.cse, sol.cse);
+            assert_eq!(fresh.adders, sol.adders);
+            assert_eq!(fresh.depth, sol.depth);
+        }
+        // A different problem through the now-warm arena carries nothing
+        // over from the previous compile.
+        let p2 = CmvmProblem::random(12, 6, 13, 8);
+        let warm2 = compile(&p2, &local_opts).unwrap();
+        let fresh2 =
+            compile(&p2, &OptimizeOptions::new(s).with_arena(ArenaMode::Fresh)).unwrap();
+        assert_eq!(fresh2.program, warm2.program);
+        assert_eq!(fresh2.cse, warm2.cse);
+    }
+
+    /// The deprecated shims stay byte-identical to the new entry points
+    /// (they delegate, so this pins the delegation, not a copy).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_new_api() {
+        let p = CmvmProblem::random(21, 9, 9, 8);
+        for s in all_strategies(1) {
+            let old = optimize(&p, s).unwrap();
+            let new =
+                compile(&p, &OptimizeOptions::new(s).with_arena(ArenaMode::Fresh)).unwrap();
+            assert_eq!(old.program, new.program, "shim diverged under {s:?}");
+            assert_eq!(old.cse, new.cse);
+
+            // Terms-level shims against compile_terms.
+            let run_terms = |use_old: bool| {
+                let mut b = DaisBuilder::new();
+                let inputs: Vec<InputTerm> = (0..p.d_in)
+                    .map(|j| InputTerm {
+                        node: b.input(j, p.input_qint[j], p.input_depth[j]),
+                    })
+                    .collect();
+                let (outs, stats) = if use_old {
+                    optimize_terms_stats(&mut b, &inputs, &p, s).unwrap()
+                } else {
+                    compile_terms(
+                        &mut b,
+                        &inputs,
+                        &p,
+                        &OptimizeOptions::new(s).with_arena(ArenaMode::Fresh),
+                    )
+                    .unwrap()
+                };
+                bind_outputs(&mut b, &outs);
+                (b.finish(), stats)
+            };
+            let (old_p, old_s) = run_terms(true);
+            let (new_p, new_s) = run_terms(false);
+            assert_eq!(old_p, new_p);
+            assert_eq!(old_s, new_s);
+        }
     }
 }

@@ -60,7 +60,7 @@
 //! let coord = Coordinator::new();
 //! let job = CompileJob {
 //!     name: "layer0".into(),
-//!     problem: CmvmProblem::new(2, 2, vec![3, 5, -7, 9], 8),
+//!     problem: CmvmProblem::new(2, 2, vec![3, 5, -7, 9], 8).unwrap(),
 //!     strategy: Strategy::Da { dc: -1 },
 //! };
 //! let (first, hit) = coord.compile_cached(&job).unwrap();
@@ -73,7 +73,7 @@
 
 pub mod persist;
 
-use crate::cmvm::{optimize, CmvmProblem, CmvmSolution, Strategy};
+use crate::cmvm::{self, CmvmProblem, CmvmSolution, OptimizeOptions, Strategy};
 use crate::fixed::QInterval;
 use crate::util::fxhash::FxBuildHasher;
 use crate::Result;
@@ -375,7 +375,9 @@ impl<S: BuildHasher + Default> Coordinator<S> {
             }
             shard.obs.misses.inc();
         }
-        let sol = Arc::new(optimize(&job.problem, job.strategy)?);
+        // Thread-local arena: each worker thread reuses its engine and
+        // builder slabs across jobs instead of reallocating per compile.
+        let sol = Arc::new(cmvm::compile(&job.problem, &OptimizeOptions::new(job.strategy))?);
         let lock_t0 = crate::obs::enabled().then(std::time::Instant::now);
         let mut shard = self.inner.shards[idx].lock().unwrap();
         if let Some(t0) = lock_t0 {
@@ -495,7 +497,7 @@ mod tests {
         let m: Vec<i64> = (0..16).map(|_| rng.range_i64(-127, 127)).collect();
         CompileJob {
             name: format!("job{seed}"),
-            problem: CmvmProblem::new(4, 4, m, 8),
+            problem: CmvmProblem::new(4, 4, m, 8).unwrap(),
             strategy: Strategy::Da { dc: 2 },
         }
     }
@@ -507,7 +509,7 @@ mod tests {
         let m: Vec<i64> = (0..4).map(|_| rng.range_i64(-127, 127)).collect();
         CompileJob {
             name: format!("small{seed}"),
-            problem: CmvmProblem::new(2, 2, m, 8),
+            problem: CmvmProblem::new(2, 2, m, 8).unwrap(),
             strategy: Strategy::Da { dc: -1 },
         }
     }
@@ -796,7 +798,10 @@ mod tests {
         let keys = 6u64;
         // Sequential ground truth: one program per key.
         let reference: Vec<CmvmSolution> = (0..keys)
-            .map(|s| optimize(&small_job(s).problem, small_job(s).strategy).unwrap())
+            .map(|s| {
+                let job = small_job(s);
+                cmvm::compile(&job.problem, &OptimizeOptions::new(job.strategy)).unwrap()
+            })
             .collect();
         let per_key_steps: Vec<u64> = reference.iter().map(|r| r.cse.steps as u64).collect();
         let per_key_pops: Vec<u64> = reference.iter().map(|r| r.cse.heap_pops as u64).collect();

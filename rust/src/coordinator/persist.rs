@@ -483,7 +483,7 @@ mod tests {
         let m: Vec<i64> = (0..6).map(|_| rng.range_i64(-127, 127)).collect();
         CompileJob {
             name: format!("p{seed}"),
-            problem: CmvmProblem::new(2, 3, m, 8),
+            problem: CmvmProblem::new(2, 3, m, 8).unwrap(),
             strategy,
         }
     }

@@ -3,20 +3,26 @@
 //!
 //! Hot-path layout (tracked by the `perf` suite and the
 //! `optimizer_micro` bench): occurrence matching is driven by two
-//! incremental indices maintained differentially in `add_digit` /
-//! `kill` alongside the pattern frequency table —
+//! word-parallel bitset indices maintained differentially in
+//! `add_digit` / `kill` alongside the pattern frequency table —
 //!
-//! * a per-pattern **column index** (`PatEntry::cols`): the columns that
-//!   currently contain at least one digit pair of the pattern, with the
-//!   per-column pair count. `match_occurrences` walks exactly these
-//!   columns (ascending), instead of rescanning every column of the
-//!   tensor on every heap pop;
-//! * a per-column **row index** (`Column::row_digits`): the alive digit
-//!   indices of each row, so a pattern's a-side digits are read off
-//!   directly instead of filtering a full column scan.
+//! * a per-pattern **column bitset** (`PatEntry::cols`): the columns
+//!   that may contain digit pairs of the pattern. Set on every `+1`
+//!   bump; *lazily* cleared — a `-1` bump only decrements the totals,
+//!   and `match_occurrences` clears the bit of any visited column that
+//!   yields no occurrence (a column holds ≥ 1 alive pair of a pattern
+//!   iff greedy matching finds ≥ 1 occurrence in it, so a cleared bit
+//!   never hides work and a stale bit only costs a cheap revisit);
+//! * a per-column **alive bitset** (`Column::alive`): digit slots are
+//!   append-only and never compacted; liveness is one bit, so a-side
+//!   collection and pair enumeration are word-parallel ascending scans
+//!   instead of flag-filtered vector walks.
 //!
-//! Scratch buffers (`scratch`, `a_side`, `used`) are engine fields,
-//! reserved once and reused across the hot loop.
+//! All engine containers live in a recyclable [`EngineStorage`] slab:
+//! hand [`compile`] an [`EngineArena`] and the digit vectors, hash-map
+//! buckets, heap storage, and pattern bitset words are reset and reused
+//! across compiles (the coordinator holds one per worker thread), so a
+//! warm compile allocates almost nothing beyond the program it emits.
 //!
 //! The pre-index engine is retained verbatim in `reference.rs`; the
 //! seeded differential sweep in `tests.rs` proves both emit
@@ -26,8 +32,9 @@ use super::tree;
 use crate::csd::Csd;
 use crate::dais::{DaisBuilder, NodeId};
 use crate::fixed::QInterval;
+use crate::util::bits::BitSet;
 use crate::util::fxhash::FxHashMap;
-use std::collections::{BTreeMap, BinaryHeap};
+use std::collections::BinaryHeap;
 
 /// An input to the CSE stage: a node already present in the builder.
 #[derive(Debug, Clone, Copy)]
@@ -70,7 +77,10 @@ impl Default for CseConfig {
 ///
 /// The engine is fully deterministic, so every counter is an exact
 /// function of the problem — the perf baseline pins them exactly, and
-/// any drift is a behavior change, not noise.
+/// any drift is a behavior change, not noise. (One documented
+/// exception: `occ_cols_scanned` includes lazily-cleared stale column
+/// visits, so it is an exact function of the problem *per engine
+/// layout* and is compared engine-vs-reference only as a bound.)
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CseStats {
     /// Number of CSE update steps (implemented subexpressions).
@@ -82,12 +92,13 @@ pub struct CseStats {
     /// Heap pops discarded as stale (count changed since push, below
     /// the pair threshold, or parked).
     pub stale_pops: usize,
-    /// Columns visited by occurrence matching.
+    /// Columns visited by occurrence matching (including stale pattern
+    /// bitset columns that turn out to hold no occurrence).
     pub occ_cols_scanned: usize,
     /// Digits examined by occurrence matching — the work the pattern
-    /// column index and per-row digit lists bound. The reference engine
-    /// counts every digit slot its full column scans walk; the indexed
-    /// engine counts only the a-side digits it materializes.
+    /// column bitset and per-column alive bitset bound. The reference
+    /// engine counts every digit slot its full column scans walk; the
+    /// indexed engine counts only the a-side digits it materializes.
     pub occ_digits_scanned: usize,
 }
 
@@ -105,71 +116,47 @@ impl CseStats {
     }
 }
 
-/// One signed digit of the tensor, located in a column.
+/// One signed digit of the tensor, located in a column. Liveness lives
+/// in the column's `alive` bitset, not here.
 #[derive(Debug, Clone, Copy)]
 struct ColDigit {
     row: u32,
     power: i32,
     sign: i8,
-    alive: bool,
 }
 
-/// A column of `M_expr` with a (row, power) index for O(1) partner
-/// lookup, per-row alive-digit lists for O(row) a-side collection, and
-/// the Kraft sum for the depth-feasibility check.
+/// A column of `M_expr`: an append-only digit slab with an alive
+/// bitset, a (row, power) index for O(1) partner lookup, and the Kraft
+/// sum for the depth-feasibility check.
+///
+/// Digit slots are never compacted — indices are stable for the whole
+/// compile, and no engine decision reads an index *value* (the
+/// `(row, power)` key is unique per column, so every canonical
+/// tie-break resolves before the index component). The slab and bitset
+/// are recycled across compiles via [`EngineStorage`].
 #[derive(Debug, Default)]
 struct Column {
     digits: Vec<ColDigit>,
     index: FxHashMap<(u32, i32), u32>,
+    /// Alive digit slots, word-parallel. Ascending bit order equals
+    /// ascending creation order — the same relative order the
+    /// compacting reference layout preserves.
+    alive: BitSet,
     /// Σ 2^depth(row) over alive digits (u128; depths are budget-bounded).
     kraft: u128,
-    /// Dead entries in `digits` (compaction trigger).
-    dead: u32,
-    /// Alive digit indices per row, indexed by row id. Occurrence
-    /// matching reads a pattern's a-side digits straight off this list
-    /// instead of filtering a full column scan.
-    row_digits: Vec<Vec<u32>>,
 }
 
 impl Column {
-    /// Drop dead digits and rebuild the indices. Pattern counts are
-    /// index-independent, so this is safe between update steps; it keeps
-    /// the alive() scans O(live) instead of O(all-ever-created).
-    fn compact(&mut self) {
-        if (self.dead as usize) * 2 < self.digits.len() {
-            return;
-        }
-        self.digits.retain(|d| d.alive);
+    fn alive_digits(&self) -> impl Iterator<Item = (u32, &ColDigit)> + '_ {
+        self.alive.iter().map(move |i| (i, &self.digits[i as usize]))
+    }
+
+    /// Reset for reuse, keeping every allocation.
+    fn reset(&mut self) {
+        self.digits.clear();
         self.index.clear();
-        for list in &mut self.row_digits {
-            list.clear();
-        }
-        for (i, d) in self.digits.iter().enumerate() {
-            self.index.insert((d.row, d.power), i as u32);
-            self.row_digits[d.row as usize].push(i as u32);
-        }
-        self.dead = 0;
-    }
-
-    fn row_add(&mut self, row: u32, idx: u32) {
-        let r = row as usize;
-        if r >= self.row_digits.len() {
-            self.row_digits.resize_with(r + 1, Vec::new);
-        }
-        self.row_digits[r].push(idx);
-    }
-
-    fn row_remove(&mut self, row: u32, idx: u32) {
-        let list = &mut self.row_digits[row as usize];
-        let pos = list
-            .iter()
-            .position(|&i| i == idx)
-            .expect("killed digit present in its row list");
-        list.swap_remove(pos);
-    }
-
-    fn alive(&self) -> impl Iterator<Item = (u32, &ColDigit)> {
-        self.digits.iter().enumerate().filter(|(_, d)| d.alive).map(|(i, d)| (i as u32, d))
+        self.alive.clear();
+        self.kraft = 0;
     }
 }
 
@@ -229,7 +216,7 @@ fn canon(d1: (u32, &ColDigit), d2: (u32, &ColDigit)) -> Option<(Pattern, u32, u3
 /// Entries that compare equal are bit-identical (the pattern is part of
 /// the key), so heap-internal tie handling can never influence which
 /// pattern is selected.
-#[derive(PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 struct HeapEntry {
     score: i64,
     count: u32,
@@ -255,13 +242,65 @@ impl PartialOrd for HeapEntry {
 struct PatEntry {
     /// Total pair count across all columns — exactly the counter the
     /// pre-index reference engine maintains; it drives scoring and
-    /// parking, so heap behavior is unchanged by the index.
+    /// parking, so heap behavior is unchanged by the index. Entries
+    /// are kept at `total == 0` (every read site treats 0 as absent);
+    /// their bitset words are recycled at end of compile.
     total: u32,
-    /// Pair count per column. A `BTreeMap` so occurrence matching
-    /// visits columns in ascending order — the order the reference
-    /// engine's full scan visits them, which the bit-identical
-    /// differential sweep relies on.
-    cols: BTreeMap<u32, u32>,
+    /// Columns that may hold pairs: set on `+1` bumps, lazily cleared
+    /// by `match_occurrences`. Ascending bit iteration visits columns
+    /// in the order the reference engine's full scan does; stale bits
+    /// are a superset that contributes zero occurrences, so matching
+    /// output is unchanged.
+    cols: BitSet,
+}
+
+/// Recyclable slab backing one engine run: every container the hot
+/// loop touches, reset (not freed) between compiles.
+#[derive(Debug, Default)]
+struct EngineStorage {
+    cols: Vec<Column>,
+    rows: Vec<RowInfo>,
+    counts: FxHashMap<Pattern, PatEntry>,
+    /// Zeroed word vectors recycled from drained `PatEntry` bitsets.
+    bits_pool: Vec<Vec<u64>>,
+    parked: FxHashMap<Pattern, u32>,
+    heap: Vec<HeapEntry>,
+    budget: Vec<u32>,
+    scratch: Vec<Pattern>,
+    a_side: Vec<(u32, ColDigit)>,
+    used: Vec<u32>,
+    col_scratch: Vec<u32>,
+    patterns: Vec<Pattern>,
+}
+
+/// Reusable engine storage for [`compile`]: hold one per worker thread
+/// (or per compile loop) and warm compiles reuse the previous run's
+/// digit slabs, hash buckets, heap and bitset words instead of
+/// reallocating them.
+///
+/// Interior mutability keeps the handle shareable by `&`; the storage
+/// is taken out for the duration of a compile, so nested/reentrant use
+/// (an outer compile triggering an inner one on the same arena) safely
+/// degrades to a fresh allocation for the inner run.
+#[derive(Debug, Default)]
+pub struct EngineArena {
+    storage: std::cell::RefCell<EngineStorage>,
+}
+
+impl EngineArena {
+    /// New empty arena (first compile through it allocates, later ones
+    /// reuse).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn take(&self) -> EngineStorage {
+        std::mem::take(&mut *self.storage.borrow_mut())
+    }
+
+    fn put(&self, st: EngineStorage) {
+        *self.storage.borrow_mut() = st;
+    }
 }
 
 struct Engine<'a> {
@@ -272,6 +311,8 @@ struct Engine<'a> {
     rows: Vec<RowInfo>,
     cols: Vec<Column>,
     counts: FxHashMap<Pattern, PatEntry>,
+    /// Zeroed word vectors for new `PatEntry` bitsets.
+    bits_pool: Vec<Vec<u64>>,
     heap: BinaryHeap<HeapEntry>,
     /// Patterns parked at a given count (depth-infeasible or
     /// insufficient disjoint occurrences); re-eligible when count moves.
@@ -284,6 +325,8 @@ struct Engine<'a> {
     a_side: Vec<(u32, ColDigit)>,
     /// Reusable matched-digit buffer (hot path: match_occurrences).
     used: Vec<u32>,
+    /// Reusable column-id buffer (hot path: match_occurrences).
+    col_scratch: Vec<u32>,
     stats: CseStats,
 }
 
@@ -319,30 +362,21 @@ impl<'a> Engine<'a> {
 
     /// Adjust the pair count of `p` in column `c` by ±1 and refresh
     /// heap/parking state. The heap interaction depends only on the
-    /// cross-column total, matching the reference engine exactly.
+    /// cross-column total, matching the reference engine exactly; the
+    /// column bitset is only ever *set* here (lazy clearing happens in
+    /// `match_occurrences`).
     fn bump(&mut self, p: Pattern, c: usize, delta: i32) {
-        let total = {
-            let e = self.counts.entry(p).or_default();
-            e.total = (e.total as i32 + delta) as u32;
-            match e.cols.entry(c as u32) {
-                std::collections::btree_map::Entry::Occupied(mut o) => {
-                    let v = (*o.get() as i32 + delta) as u32;
-                    if v == 0 {
-                        o.remove();
-                    } else {
-                        *o.get_mut() = v;
-                    }
-                }
-                std::collections::btree_map::Entry::Vacant(v) => {
-                    debug_assert!(delta > 0, "negative bump on column without pairs");
-                    v.insert(delta as u32);
-                }
-            }
-            e.total
-        };
-        if total == 0 {
-            self.counts.remove(&p);
+        if !self.counts.contains_key(&p) {
+            debug_assert!(delta > 0, "negative bump on untracked pattern");
+            let words = self.bits_pool.pop().unwrap_or_default();
+            self.counts.insert(p, PatEntry { total: 0, cols: BitSet::from_words(words) });
         }
+        let e = self.counts.get_mut(&p).expect("entry ensured above");
+        e.total = (e.total as i32 + delta) as u32;
+        if delta > 0 {
+            e.cols.set(c as u32);
+        }
+        let total = e.total;
         if let Some(&parked_at) = self.parked.get(&p) {
             if parked_at != total {
                 self.parked.remove(&p);
@@ -361,19 +395,18 @@ impl<'a> Engine<'a> {
     /// Kraft sum.
     fn kill(&mut self, c: usize, idx: u32) {
         let d = self.cols[c].digits[idx as usize];
-        debug_assert!(d.alive);
-        self.cols[c].digits[idx as usize].alive = false;
-        self.cols[c].dead += 1;
-        self.cols[c].row_remove(d.row, idx);
+        debug_assert!(self.cols[c].alive.get(idx));
+        self.cols[c].alive.unset(idx);
         self.cols[c].index.remove(&(d.row, d.power));
         self.cols[c].kraft -= 1u128 << self.rows[d.row as usize].depth;
         let mut pairs = std::mem::take(&mut self.scratch);
         pairs.clear();
-        pairs.extend(
-            self.cols[c]
-                .alive()
-                .filter_map(|e| canon((idx, &d), e).map(|(p, _, _)| p)),
-        );
+        {
+            let col = &self.cols[c];
+            pairs.extend(
+                col.alive_digits().filter_map(|e| canon((idx, &d), e).map(|(p, _, _)| p)),
+            );
+        }
         for p in &pairs {
             self.bump(*p, c, -1);
         }
@@ -383,22 +416,24 @@ impl<'a> Engine<'a> {
     /// Add a digit to column `c`, updating counts, indices and the
     /// Kraft sum.
     fn add_digit(&mut self, c: usize, row: u32, power: i32, sign: i8) {
-        let digit = ColDigit { row, power, sign, alive: true };
+        let digit = ColDigit { row, power, sign };
         let mut pairs = std::mem::take(&mut self.scratch);
         pairs.clear();
-        pairs.extend(
-            self.cols[c]
-                .alive()
-                .filter_map(|e| canon((u32::MAX, &digit), e).map(|(p, _, _)| p)),
-        );
+        {
+            let col = &self.cols[c];
+            pairs.extend(
+                col.alive_digits()
+                    .filter_map(|e| canon((u32::MAX, &digit), e).map(|(p, _, _)| p)),
+            );
+        }
         let idx = self.cols[c].digits.len() as u32;
         debug_assert!(
             !self.cols[c].index.contains_key(&(row, power)),
             "duplicate (row, power) digit in column {c}"
         );
         self.cols[c].digits.push(digit);
+        self.cols[c].alive.set(idx);
         self.cols[c].index.insert((row, power), idx);
-        self.cols[c].row_add(row, idx);
         self.cols[c].kraft += 1u128 << self.rows[row as usize].depth;
         for p in &pairs {
             self.bump(*p, c, 1);
@@ -407,38 +442,55 @@ impl<'a> Engine<'a> {
     }
 
     /// Greedily match disjoint occurrences of `p`, visiting only the
-    /// columns the pattern index lists (ascending — the same order the
+    /// columns the pattern bitset lists (ascending — the same order the
     /// reference engine's full scan yields them in). Returns
     /// (column, a-digit-idx, b-digit-idx) triples.
     ///
-    /// A column appears in the index iff it holds at least one digit
-    /// pair canonicalizing to `p`, so no occurrence can hide in a
-    /// skipped column; a listed column's greedy matching depends only
-    /// on the column contents, which evolve identically in both
-    /// engines — hence bit-identical output.
+    /// Every column holding a pair has its bit set (bumps only add
+    /// bits), so no occurrence can hide in a skipped column. The bitset
+    /// may also carry *stale* bits for columns whose pairs have since
+    /// died; a column holds ≥ 1 alive pair iff greedy matching (which
+    /// starts from an empty used-set) finds ≥ 1 occurrence there, so a
+    /// zero-occurrence visit proves the column stale and its bit is
+    /// cleared here. Stale visits contribute nothing to the occurrence
+    /// list, so matching output is identical to an exact column index.
     fn match_occurrences(&mut self, p: &Pattern) -> Vec<(usize, u32, u32)> {
         let mut occ = Vec::new();
-        let Some(entry) = self.counts.get(p) else { return occ };
+        let mut cols_list = std::mem::take(&mut self.col_scratch);
+        cols_list.clear();
+        match self.counts.get(p) {
+            Some(e) if e.total > 0 => cols_list.extend(e.cols.iter()),
+            _ => {
+                self.col_scratch = cols_list;
+                return occ;
+            }
+        }
         let mut a_side = std::mem::take(&mut self.a_side);
         let mut used = std::mem::take(&mut self.used);
         let mut cols_scanned = 0usize;
         let mut digits_scanned = 0usize;
-        for &c_id in entry.cols.keys() {
+        // Stale column ids compact into the front of `cols_list` (each
+        // slot is written only after it has been read).
+        let mut n_stale = 0usize;
+        for k in 0..cols_list.len() {
+            let c_id = cols_list[k];
             let c = c_id as usize;
             let col = &self.cols[c];
             cols_scanned += 1;
             used.clear();
             a_side.clear();
-            // Read the a-side digits straight off the per-row index, in
-            // power order for maximal greedy matching of chain patterns
+            // Collect the a-side digits off the alive bitset, in power
+            // order for maximal greedy matching of chain patterns
             // (same-row, shifted).
-            if let Some(list) = col.row_digits.get(p.ra as usize) {
-                a_side.extend(list.iter().map(|&i| (i, col.digits[i as usize])));
+            for (i, d) in col.alive_digits() {
+                if d.row == p.ra {
+                    a_side.push((i, *d));
+                }
             }
             a_side.sort_by_key(|(_, d)| d.power);
             digits_scanned += a_side.len();
+            let occ_before = occ.len();
             for &(ia, da) in a_side.iter() {
-                debug_assert!(da.alive);
                 if used.contains(&ia) {
                     continue;
                 }
@@ -447,8 +499,8 @@ impl<'a> Engine<'a> {
                     if ib == ia || used.contains(&ib) {
                         continue;
                     }
+                    debug_assert!(col.alive.get(ib), "index entry for dead digit");
                     let db = &col.digits[ib as usize];
-                    debug_assert!(db.alive);
                     // Sign relation must match the canonical pattern…
                     let sub = da.sign != db.sign;
                     if sub != p.sub {
@@ -465,9 +517,20 @@ impl<'a> Engine<'a> {
                     }
                 }
             }
+            if occ.len() == occ_before {
+                cols_list[n_stale] = c_id;
+                n_stale += 1;
+            }
+        }
+        if n_stale > 0 {
+            let e = self.counts.get_mut(p).expect("entry checked above");
+            for &c_id in &cols_list[..n_stale] {
+                e.cols.unset(c_id);
+            }
         }
         self.a_side = a_side;
         self.used = used;
+        self.col_scratch = cols_list;
         self.stats.occ_cols_scanned += cols_scanned;
         self.stats.occ_digits_scanned += digits_scanned;
         occ
@@ -529,7 +592,6 @@ impl<'a> Engine<'a> {
                 qint: self.builder.qint(node),
                 depth: self.builder.depth(node),
             });
-            let mut touched: Vec<usize> = Vec::with_capacity(occ.len());
             for (c, ia, ib) in occ {
                 // The occurrence's contribution is sign(a-digit) · w << p_a.
                 let (pa, sa) = {
@@ -539,10 +601,6 @@ impl<'a> Engine<'a> {
                 self.kill(c, ia);
                 self.kill(c, ib);
                 self.add_digit(c, row, pa, sa);
-                touched.push(c);
-            }
-            for c in touched {
-                self.cols[c].compact();
             }
             self.stats.steps += 1;
             return true;
@@ -550,29 +608,23 @@ impl<'a> Engine<'a> {
     }
 }
 
-/// Expand the matrix into the digit tensor, run the CSE loop, and sum the
-/// residual digits of each column with depth-minimal trees. The adder
-/// nodes are appended to `builder`; the returned terms describe each
-/// output column.
-pub fn optimize_into(
+/// Expand the matrix into the digit tensor, run the CSE loop, and sum
+/// the residual digits of each column with depth-minimal trees. The
+/// adder nodes are appended to `builder`; the returned terms describe
+/// each output column.
+///
+/// `arena` is the allocation-reuse handle: `None` runs on fresh
+/// storage (identical behavior, cold allocations); `Some` reuses the
+/// arena's slabs and returns them reset afterwards. The emitted
+/// program is bit-identical either way.
+pub fn compile(
     builder: &mut DaisBuilder,
     inputs: &[InputTerm],
     matrix: &[i64],
     d_in: usize,
     d_out: usize,
     cfg: &CseConfig,
-) -> Vec<OutTerm> {
-    optimize_into_stats(builder, inputs, matrix, d_in, d_out, cfg).0
-}
-
-/// Like [`optimize_into`] but also returns engine statistics.
-pub fn optimize_into_stats(
-    builder: &mut DaisBuilder,
-    inputs: &[InputTerm],
-    matrix: &[i64],
-    d_in: usize,
-    d_out: usize,
-    cfg: &CseConfig,
+    arena: Option<&EngineArena>,
 ) -> (Vec<OutTerm>, CseStats) {
     #[cfg(test)]
     {
@@ -582,7 +634,61 @@ pub fn optimize_into_stats(
             );
         }
     }
+    match arena {
+        Some(a) => {
+            let st = a.take();
+            let (out, stats, st) = run(builder, inputs, matrix, d_in, d_out, cfg, st);
+            a.put(st);
+            (out, stats)
+        }
+        None => {
+            let (out, stats, _) =
+                run(builder, inputs, matrix, d_in, d_out, cfg, EngineStorage::default());
+            (out, stats)
+        }
+    }
+}
 
+/// Deprecated pre-arena entry point; byte-identical to
+/// [`compile`]`(…, None)`.
+#[deprecated(note = "use cse::compile, which takes an optional EngineArena")]
+pub fn optimize_into(
+    builder: &mut DaisBuilder,
+    inputs: &[InputTerm],
+    matrix: &[i64],
+    d_in: usize,
+    d_out: usize,
+    cfg: &CseConfig,
+) -> Vec<OutTerm> {
+    compile(builder, inputs, matrix, d_in, d_out, cfg, None).0
+}
+
+/// Deprecated pre-arena entry point; byte-identical to
+/// [`compile`]`(…, None)`.
+#[deprecated(note = "use cse::compile, which takes an optional EngineArena")]
+pub fn optimize_into_stats(
+    builder: &mut DaisBuilder,
+    inputs: &[InputTerm],
+    matrix: &[i64],
+    d_in: usize,
+    d_out: usize,
+    cfg: &CseConfig,
+) -> (Vec<OutTerm>, CseStats) {
+    compile(builder, inputs, matrix, d_in, d_out, cfg, None)
+}
+
+/// The engine run proper, threading the storage slab through setup,
+/// the greedy loop, and teardown. Returns the storage reset and ready
+/// for the next compile.
+fn run(
+    builder: &mut DaisBuilder,
+    inputs: &[InputTerm],
+    matrix: &[i64],
+    d_in: usize,
+    d_out: usize,
+    cfg: &CseConfig,
+    mut st: EngineStorage,
+) -> (Vec<OutTerm>, CseStats, EngineStorage) {
     assert_eq!(matrix.len(), d_in * d_out, "matrix shape mismatch");
     assert_eq!(inputs.len(), d_in, "input arity mismatch");
 
@@ -591,30 +697,29 @@ pub fn optimize_into_stats(
     span.arg("d_out", d_out as i64);
     span.arg("dc", cfg.dc as i64);
 
-    let rows: Vec<RowInfo> = inputs
-        .iter()
-        .map(|t| RowInfo {
-            node: t.node,
-            qint: builder.qint(t.node),
-            depth: builder.depth(t.node),
-        })
-        .collect();
+    let mut rows = std::mem::take(&mut st.rows);
+    rows.clear();
+    rows.extend(inputs.iter().map(|t| RowInfo {
+        node: t.node,
+        qint: builder.qint(t.node),
+        depth: builder.depth(t.node),
+    }));
 
-    // Build the digit tensor column by column.
-    let mut cols: Vec<Column> = (0..d_out).map(|_| Column::default()).collect();
+    // Build the digit tensor column by column, into recycled columns
+    // (put-back resets them; resize covers shape changes).
+    let mut cols = std::mem::take(&mut st.cols);
+    cols.resize_with(d_out, Column::default);
+    for col in &mut cols {
+        col.reset();
+    }
     for (c, col) in cols.iter_mut().enumerate() {
         for j in 0..d_in {
             let w = matrix[j * d_out + c];
             for digit in Csd::encode(w).digits() {
                 let idx = col.digits.len() as u32;
-                col.digits.push(ColDigit {
-                    row: j as u32,
-                    power: digit.power,
-                    sign: digit.sign,
-                    alive: true,
-                });
+                col.digits.push(ColDigit { row: j as u32, power: digit.power, sign: digit.sign });
                 col.index.insert((j as u32, digit.power), idx);
-                col.row_add(j as u32, idx);
+                col.alive.set(idx);
                 col.kraft += 1u128 << rows[j].depth;
             }
         }
@@ -625,33 +730,36 @@ pub fn optimize_into_stats(
     // columns (the paper's ceil(log2 d_in) generalized to digit counts
     // and non-zero input depths). Budget = depth_min + dc, floored at
     // each column's own minimum so the constraint is always satisfiable.
-    let budget = if cfg.dc >= 0 {
-        let col_min: Vec<u32> = cols
-            .iter()
-            .map(|c| min_feasible_depth(c.kraft))
-            .collect();
-        let depth_min = col_min.iter().copied().max().unwrap_or(0);
-        Some(
-            col_min
-                .iter()
-                .map(|&m| m.max(depth_min + cfg.dc as u32))
-                .collect::<Vec<u32>>(),
-        )
+    let mut budget_pool = std::mem::take(&mut st.budget);
+    budget_pool.clear();
+    let (budget, spare_budget) = if cfg.dc >= 0 {
+        budget_pool.extend(cols.iter().map(|c| min_feasible_depth(c.kraft)));
+        let depth_min = budget_pool.iter().copied().max().unwrap_or(0);
+        for m in &mut budget_pool {
+            *m = (*m).max(depth_min + cfg.dc as u32);
+        }
+        (Some(budget_pool), Vec::new())
     } else {
-        None
+        (None, budget_pool)
     };
 
     // Initial pattern counts: all digit pairs within each column, into
-    // both the cross-column total and the per-column index.
-    let mut counts: FxHashMap<Pattern, PatEntry> = FxHashMap::default();
+    // both the cross-column total and the per-column bitset.
+    let mut counts = std::mem::take(&mut st.counts);
+    let mut bits_pool = std::mem::take(&mut st.bits_pool);
     for (c, col) in cols.iter().enumerate() {
-        let alive: Vec<(u32, &ColDigit)> = col.alive().collect();
-        for i in 0..alive.len() {
-            for j in (i + 1)..alive.len() {
-                if let Some((p, _, _)) = canon(alive[i], alive[j]) {
-                    let e = counts.entry(p).or_default();
+        let n = col.digits.len();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let pair = canon((i as u32, &col.digits[i]), (j as u32, &col.digits[j]));
+                if let Some((p, _, _)) = pair {
+                    if !counts.contains_key(&p) {
+                        let words = bits_pool.pop().unwrap_or_default();
+                        counts.insert(p, PatEntry { total: 0, cols: BitSet::from_words(words) });
+                    }
+                    let e = counts.get_mut(&p).expect("entry ensured above");
                     e.total += 1;
-                    *e.cols.entry(c as u32).or_insert(0) += 1;
+                    e.cols.set(c as u32);
                 }
             }
         }
@@ -664,21 +772,25 @@ pub fn optimize_into_stats(
         rows,
         cols,
         counts,
-        heap: BinaryHeap::new(),
-        parked: FxHashMap::default(),
+        bits_pool,
+        heap: BinaryHeap::from(std::mem::take(&mut st.heap)),
+        parked: std::mem::take(&mut st.parked),
         budget,
-        scratch: Vec::new(),
-        a_side: Vec::new(),
-        used: Vec::new(),
+        scratch: std::mem::take(&mut st.scratch),
+        a_side: std::mem::take(&mut st.a_side),
+        used: std::mem::take(&mut st.used),
+        col_scratch: std::mem::take(&mut st.col_scratch),
         stats: CseStats::default(),
     };
     // Seed the heap in sorted pattern order. Pop order is a multiset
     // property of the heap's total order, so hash-map iteration order
     // can never matter — but an explicitly sorted seed keeps that
     // platform-determinism argument local and obvious.
-    let mut patterns: Vec<Pattern> = engine.counts.keys().copied().collect();
+    let mut patterns = std::mem::take(&mut st.patterns);
+    patterns.clear();
+    patterns.extend(engine.counts.keys().copied());
     patterns.sort_unstable();
-    for p in patterns {
+    for &p in &patterns {
         engine.push_heap(p);
     }
 
@@ -688,7 +800,7 @@ pub fn optimize_into_stats(
     let term_lists: Vec<Vec<tree::Term>> = (0..engine.d_out)
         .map(|c| {
             engine.cols[c]
-                .alive()
+                .alive_digits()
                 .map(|(_, d)| tree::Term {
                     node: engine.rows[d.row as usize].node,
                     shift: d.power,
@@ -708,7 +820,55 @@ pub fn optimize_into_stats(
     span.arg("depth_rejections", stats.depth_rejections as i64);
     span.arg("occ_cols_scanned", stats.occ_cols_scanned as i64);
     span.arg("occ_digits_scanned", stats.occ_digits_scanned as i64);
-    (out, stats)
+
+    // Tear down into reset storage: clear everything, keep every
+    // allocation, and recycle pattern bitset words into the pool.
+    let mut cols = engine.cols;
+    for col in &mut cols {
+        col.reset();
+    }
+    let mut rows = engine.rows;
+    rows.clear();
+    let mut counts = engine.counts;
+    let mut bits_pool = engine.bits_pool;
+    for (_, e) in counts.drain() {
+        let mut words = e.cols.take_words();
+        words.fill(0);
+        bits_pool.push(words);
+    }
+    let mut parked = engine.parked;
+    parked.clear();
+    let mut heap = engine.heap.into_vec();
+    heap.clear();
+    let mut budget = match engine.budget {
+        Some(b) => b,
+        None => spare_budget,
+    };
+    budget.clear();
+    let mut scratch = engine.scratch;
+    scratch.clear();
+    let mut a_side = engine.a_side;
+    a_side.clear();
+    let mut used = engine.used;
+    used.clear();
+    let mut col_scratch = engine.col_scratch;
+    col_scratch.clear();
+    patterns.clear();
+    let st = EngineStorage {
+        cols,
+        rows,
+        counts,
+        bits_pool,
+        parked,
+        heap,
+        budget,
+        scratch,
+        a_side,
+        used,
+        col_scratch,
+        patterns,
+    };
+    (out, stats, st)
 }
 
 /// Smallest tree depth `D` such that terms with the given Kraft sum
@@ -721,11 +881,10 @@ pub(super) fn min_feasible_depth(kraft: u128) -> u32 {
     128 - (kraft - 1).leading_zeros()
 }
 
-/// Test-only switch routing [`optimize_into_stats`] through the
-/// pre-index reference engine on the current thread, so the
-/// differential sweep can drive identical full strategy flows
-/// (`crate::cmvm::optimize`) through both engines without duplicating
-/// the two-stage plumbing.
+/// Test-only switch routing [`compile`] through the pre-index
+/// reference engine on the current thread, so the differential sweep
+/// can drive identical full strategy flows (`crate::cmvm::compile`)
+/// through both engines without duplicating the two-stage plumbing.
 #[cfg(test)]
 pub(crate) mod test_hooks {
     use std::cell::Cell;
@@ -785,5 +944,36 @@ mod unit {
             order,
             vec![(7, 2, p_big), (5, 3, p_big), (5, 2, p_small), (5, 2, p_big)]
         );
+    }
+
+    /// The same problem compiled cold, arena-cold, and arena-warm (the
+    /// second run through the same arena reuses every slab) must emit
+    /// identical terms and counters.
+    #[test]
+    fn arena_reuse_is_bit_identical() {
+        let matrix: Vec<i64> = vec![3, 5, -7, 9, 11, 13, -3, 5, 7, 23, 0, 45];
+        let (d_in, d_out) = (4, 3);
+        let run_with = |arena: Option<&EngineArena>| {
+            let mut b = DaisBuilder::new();
+            let inputs: Vec<InputTerm> = (0..d_in)
+                .map(|i| InputTerm { node: b.input(i, QInterval::new(-128, 127, 0), 0) })
+                .collect();
+            let (terms, stats) =
+                compile(&mut b, &inputs, &matrix, d_in, d_out, &CseConfig::default(), arena);
+            for t in &terms {
+                b.output(t.node.expect("every column of this matrix is non-zero"), t.shift);
+            }
+            (b.finish(), terms.len(), stats)
+        };
+        let cold = run_with(None);
+        let arena = EngineArena::new();
+        let arena_cold = run_with(Some(&arena));
+        let arena_warm = run_with(Some(&arena));
+        assert_eq!(cold.0, arena_cold.0);
+        assert_eq!(cold.0, arena_warm.0);
+        assert_eq!(cold.2, arena_cold.2);
+        assert_eq!(cold.2, arena_warm.2);
+        assert_eq!(cold.1, d_out);
+        assert!(cold.2.steps > 0, "matrix has shareable patterns");
     }
 }

@@ -18,18 +18,22 @@
 //! admitted only if each affected column stays feasible for its depth
 //! budget.
 //!
-//! The engine's occurrence matching is index-driven (per-pattern column
-//! index + per-column row lists, maintained differentially — see
-//! `engine.rs`); the pre-index implementation is retained in
-//! [`reference`] as the differential/perf baseline, proven bit-identical
-//! by the seeded sweep in `tests.rs` and timed head-to-head by
-//! [`crate::perf`].
+//! The engine's occurrence matching is bitset-driven (per-pattern
+//! column bitsets + per-column alive bitsets, maintained differentially
+//! — see `engine.rs`), and every engine container lives in a recyclable
+//! arena ([`EngineArena`]) so warm compiles reuse the previous run's
+//! allocations. The entry point is [`compile`]; the pre-index
+//! implementation is retained in [`reference`] as the differential/perf
+//! baseline, proven bit-identical by the seeded sweep in `tests.rs` and
+//! timed head-to-head by [`crate::perf`].
 
 mod engine;
 pub mod reference;
 pub mod tree;
 
-pub use engine::{optimize_into, optimize_into_stats, CseConfig, CseStats, InputTerm, OutTerm};
+pub use engine::{compile, CseConfig, CseStats, EngineArena, InputTerm, OutTerm};
+#[allow(deprecated)]
+pub use engine::{optimize_into, optimize_into_stats};
 pub use tree::naive_da;
 
 #[cfg(test)]

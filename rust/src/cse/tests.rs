@@ -4,7 +4,7 @@
 
 use super::engine::test_hooks;
 use super::*;
-use crate::cmvm::{self, CmvmProblem, Strategy};
+use crate::cmvm::{self, CmvmProblem, OptimizeOptions, Strategy};
 use crate::dais::{interp, verify, DaisBuilder};
 use crate::fixed::QInterval;
 use crate::util::{property, Rng};
@@ -14,10 +14,15 @@ fn run_cse(matrix: &[i64], d_in: usize, d_out: usize, dc: i32) -> crate::dais::D
     let q = QInterval::new(-128, 127, 0);
     let inputs: Vec<InputTerm> =
         (0..d_in).map(|j| InputTerm { node: b.input(j, q, 0) }).collect();
-    let outs = optimize_into(&mut b, &inputs, matrix, d_in, d_out, &CseConfig {
-        dc,
-        ..CseConfig::default()
-    });
+    let (outs, _) = compile(
+        &mut b,
+        &inputs,
+        matrix,
+        d_in,
+        d_out,
+        &CseConfig { dc, ..CseConfig::default() },
+        None,
+    );
     for o in &outs {
         match o.node {
             Some(n) => {
@@ -162,8 +167,8 @@ fn weighting_ablation_both_exact() {
         let q = QInterval::new(-128, 127, 0);
         let inputs: Vec<InputTerm> =
             (0..d_in).map(|j| InputTerm { node: b.input(j, q, 0) }).collect();
-        let outs =
-            optimize_into(&mut b, &inputs, &m, d_in, d_out, &CseConfig { dc: -1, weighted });
+        let (outs, _) =
+            compile(&mut b, &inputs, &m, d_in, d_out, &CseConfig { dc: -1, weighted }, None);
         for o in &outs {
             match o.node {
                 Some(n) => {
@@ -227,20 +232,22 @@ fn bind_outs(b: &mut DaisBuilder, outs: &[OutTerm]) {
 }
 
 /// The engine-overhaul acceptance sweep: on random matrices × all five
-/// strategy variants × depth constraints, the indexed engine must emit
-/// a **bit-identical** `DaisProgram` to the pre-refactor reference
-/// (driven through the full `cmvm::optimize` flow — decomposition,
-/// two-stage folding and output binding included — via the test-only
-/// engine switch).
+/// strategy variants × the full dc ∈ [-1, 4] ladder, the arena/bitset
+/// engine must emit a **bit-identical** `DaisProgram` to the
+/// pre-refactor reference (driven through the full `cmvm::compile`
+/// flow — decomposition, two-stage folding and output binding included
+/// — via the test-only engine switch). The indexed side runs through
+/// the default thread-local arena, so warm-arena reuse is covered by
+/// the same sweep.
 #[test]
 fn prop_strategies_bit_identical_to_reference_engine() {
     property("cse_indexed_vs_reference_strategies", 12, |rng| {
         let d_in = rng.below(6) + 1;
         let d_out = rng.below(6) + 1;
-        let dc = rng.range_i64(-1, 3) as i32;
+        let dc = rng.range_i64(-1, 4) as i32;
         let m: Vec<i64> =
             (0..d_in * d_out).map(|_| rng.range_i64(-255, 255)).collect();
-        let p = CmvmProblem::new(d_in, d_out, m, 8);
+        let p = CmvmProblem::new(d_in, d_out, m, 8).unwrap();
         for s in [
             Strategy::Latency,
             Strategy::NaiveDa,
@@ -248,9 +255,10 @@ fn prop_strategies_bit_identical_to_reference_engine() {
             Strategy::Da { dc },
             Strategy::Lookahead { dc },
         ] {
-            let indexed = cmvm::optimize(&p, s).unwrap();
-            let reference =
-                test_hooks::with_reference_engine(|| cmvm::optimize(&p, s).unwrap());
+            let indexed = cmvm::compile(&p, &OptimizeOptions::new(s)).unwrap();
+            let reference = test_hooks::with_reference_engine(|| {
+                cmvm::compile(&p, &OptimizeOptions::new(s)).unwrap()
+            });
             assert_eq!(
                 indexed.program, reference.program,
                 "engines diverged under {s:?} (dc={dc}, {d_in}x{d_out})"
@@ -262,9 +270,12 @@ fn prop_strategies_bit_identical_to_reference_engine() {
 }
 
 /// Engine-level differential on larger tensors than the strategy sweep
-/// (no decomposition in front, so the engine sees the raw matrix).
+/// (no decomposition in front, so the engine sees the raw matrix). The
+/// indexed side reuses one arena across every property case, so the
+/// sweep also proves warm storage carries nothing between problems.
 #[test]
 fn prop_optimize_into_bit_identical_to_reference() {
+    let arena = EngineArena::new();
     property("cse_indexed_vs_reference_direct", 10, |rng| {
         let d_in = rng.below(10) + 1;
         let d_out = rng.below(10) + 1;
@@ -278,7 +289,7 @@ fn prop_optimize_into_bit_identical_to_reference() {
         let mut bi = DaisBuilder::new();
         let inputs: Vec<InputTerm> =
             (0..d_in).map(|j| InputTerm { node: bi.input(j, q, 0) }).collect();
-        let (outs, _) = optimize_into_stats(&mut bi, &inputs, &m, d_in, d_out, &cfg);
+        let (outs, _) = compile(&mut bi, &inputs, &m, d_in, d_out, &cfg, Some(&arena));
         bind_outs(&mut bi, &outs);
         let indexed = bi.finish();
 
@@ -304,14 +315,17 @@ fn prop_optimize_into_bit_identical_to_reference() {
 #[test]
 fn repeated_runs_are_bit_identical() {
     let p = CmvmProblem::random(77, 12, 12, 8);
-    let first = cmvm::optimize(&p, Strategy::Da { dc: 2 }).unwrap();
-    let again = cmvm::optimize(&p, Strategy::Da { dc: 2 }).unwrap();
+    let opts = OptimizeOptions::new(Strategy::Da { dc: 2 });
+    let first = cmvm::compile(&p, &opts).unwrap();
+    let again = cmvm::compile(&p, &opts).unwrap();
     assert_eq!(first.program, again.program);
     assert_eq!(first.cse, again.cse);
     let p2 = p.clone();
-    let other = std::thread::spawn(move || cmvm::optimize(&p2, Strategy::Da { dc: 2 }).unwrap())
-        .join()
-        .unwrap();
+    let other = std::thread::spawn(move || {
+        cmvm::compile(&p2, &OptimizeOptions::new(Strategy::Da { dc: 2 })).unwrap()
+    })
+    .join()
+    .unwrap();
     assert_eq!(first.program, other.program);
     assert_eq!(first.cse, other.cse);
 }

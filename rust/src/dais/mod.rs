@@ -143,6 +143,22 @@ impl DaisProgram {
     }
 }
 
+/// Reusable builder storage: the hash-consing table plus capacity hints
+/// for the node/output slabs.
+///
+/// The node and output vectors themselves transfer into the finished
+/// [`DaisProgram`] (programs outlive the compile — the coordinator
+/// caches them), so what carries across compiles is the consing map's
+/// buckets and right-sized initial capacities for the slabs. Obtain one
+/// from [`DaisBuilder::finish_reuse`] and hand it back to
+/// [`DaisBuilder::with_storage`] for the next compile.
+#[derive(Debug, Default)]
+pub struct BuilderStorage {
+    cache: FxHashMap<DaisOp, NodeId>,
+    nodes_hint: usize,
+    outputs_hint: usize,
+}
+
 /// Incremental builder for [`DaisProgram`] with structural hash-consing:
 /// emitting the same op twice returns the same node.
 #[derive(Debug, Default)]
@@ -157,6 +173,21 @@ impl DaisBuilder {
     /// New empty builder.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// New builder reusing [`BuilderStorage`] from a previous compile:
+    /// the consing map keeps its buckets and the slabs start at the
+    /// previous program's sizes. Behaviorally identical to [`new`].
+    ///
+    /// [`new`]: DaisBuilder::new
+    pub fn with_storage(mut storage: BuilderStorage) -> Self {
+        storage.cache.clear();
+        Self {
+            nodes: Vec::with_capacity(storage.nodes_hint),
+            cache: storage.cache,
+            outputs: Vec::with_capacity(storage.outputs_hint),
+            num_inputs: 0,
+        }
     }
 
     fn push(&mut self, op: DaisOp, qint: QInterval, depth: u32) -> NodeId {
@@ -259,6 +290,25 @@ impl DaisBuilder {
     pub fn finish(self) -> DaisProgram {
         DaisProgram { nodes: self.nodes, outputs: self.outputs, num_inputs: self.num_inputs }
     }
+
+    /// Finish building and return the reusable storage alongside the
+    /// program (see [`BuilderStorage`]). The program is byte-identical
+    /// to what [`finish`] returns.
+    ///
+    /// [`finish`]: DaisBuilder::finish
+    pub fn finish_reuse(mut self) -> (DaisProgram, BuilderStorage) {
+        let storage = BuilderStorage {
+            nodes_hint: self.nodes.len(),
+            outputs_hint: self.outputs.len(),
+            cache: {
+                self.cache.clear();
+                self.cache
+            },
+        };
+        let program =
+            DaisProgram { nodes: self.nodes, outputs: self.outputs, num_inputs: self.num_inputs };
+        (program, storage)
+    }
 }
 
 #[cfg(test)]
@@ -317,6 +367,24 @@ mod tests {
         assert_eq!((b.qint(r).min, b.qint(r).max), (0, 5));
         // ReLU adds no adder depth.
         assert_eq!(b.depth(r), 0);
+    }
+
+    #[test]
+    fn storage_reuse_is_behavior_free() {
+        let build = |mut b: DaisBuilder| {
+            let x = b.input(0, q8(), 0);
+            let y = b.input(1, q8(), 0);
+            let s = b.add_shift(x, y, 1, false);
+            let t = b.add_shift(s, x, 0, true);
+            // consing must still hit through a reused cache map
+            assert_eq!(b.add_shift(x, y, 1, false), s);
+            b.output(t, 2);
+            b
+        };
+        let (fresh, storage) = build(DaisBuilder::new()).finish_reuse();
+        let reused = build(DaisBuilder::with_storage(storage)).finish();
+        assert_eq!(fresh, reused);
+        assert_eq!(fresh.num_inputs, 2);
     }
 
     #[test]

@@ -30,14 +30,14 @@
 //! table), the `"type": "explore"` serve job ([`crate::serve`],
 //! `docs/serve.md`), and the [`pick`] helper that auto-selects a front
 //! point for an [`Objective`] (used by
-//! [`crate::nn::compile::fuse_auto`]).
+//! [`crate::nn::compile::compile`] with an objective).
 //!
 //! ```
 //! use da4ml::cmvm::CmvmProblem;
 //! use da4ml::explore::{self, ExploreConfig, ExploreTarget, Objective};
 //! use da4ml::coordinator::Coordinator;
 //!
-//! let problem = CmvmProblem::new(2, 2, vec![3, 5, -7, 9], 8);
+//! let problem = CmvmProblem::new(2, 2, vec![3, 5, -7, 9], 8).unwrap();
 //! let cfg = ExploreConfig { jobs: 1, ..ExploreConfig::smoke() };
 //! let report =
 //!     explore::explore(&ExploreTarget::Cmvm(problem), &Coordinator::new(), &cfg).unwrap();
@@ -134,7 +134,7 @@ pub enum ExploreTarget {
     /// One constant matrix–vector multiplication.
     Cmvm(CmvmProblem),
     /// A whole network, fused end to end per strategy
-    /// ([`nn::compile::fuse_with_stats`]) — dense/einsum/residual
+    /// ([`nn::compile::compile`]) — dense/einsum/residual
     /// layers only (conv networks use the HLS-flow path and are not
     /// fusible).
     Network(NetworkSpec),
@@ -383,7 +383,9 @@ fn explore_one(
             let (sol, _cached) = coord.compile_cached(&job)?;
             sol.program.clone()
         }
-        ExploreTarget::Network(spec) => nn::compile::fuse_with_stats(spec, strategy)?.0,
+        ExploreTarget::Network(spec) => {
+            nn::compile::compile(spec, &nn::compile::CompileOptions::new(strategy))?.program
+        }
     };
 
     for &pipe in &space.pipes {
@@ -661,7 +663,7 @@ mod tests {
             let d_in = rng.below(3) + 2;
             let d_out = rng.below(3) + 2;
             let m: Vec<i64> = (0..d_in * d_out).map(|_| rng.range_i64(-127, 127)).collect();
-            let problem = CmvmProblem::new(d_in, d_out, m, 8);
+            let problem = CmvmProblem::new(d_in, d_out, m, 8).unwrap();
             let cfg = ExploreConfig { jobs: 2, ..ExploreConfig::smoke() };
             let report = explore_cmvm(&problem, &cfg).unwrap();
             assert!(!report.front.is_empty(), "front can never be empty");

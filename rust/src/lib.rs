@@ -97,18 +97,21 @@ pub type Result<T> = anyhow::Result<T>;
 /// ```
 /// use da4ml::prelude::*;
 ///
-/// // Optimize one 2x2 CMVM into a multiplierless adder graph and cost
+/// // Compile one 2x2 CMVM into a multiplierless adder graph and cost
 /// // it on the analytic FPGA model.
-/// let problem = CmvmProblem::new(2, 2, vec![3, 5, -7, 9], 8);
-/// let sol = da4ml::cmvm::optimize(&problem, Strategy::Da { dc: -1 }).unwrap();
+/// let problem = CmvmProblem::new(2, 2, vec![3, 5, -7, 9], 8).unwrap();
+/// let opts = OptimizeOptions::new(Strategy::Da { dc: -1 });
+/// let sol = da4ml::cmvm::compile(&problem, &opts).unwrap();
 /// let report = da4ml::estimate::combinational(&sol.program, &FpgaModel::default());
 /// assert!(sol.adders > 0 && report.lut > 0);
 /// ```
 pub mod prelude {
-    pub use crate::cmvm::{CmvmProblem, CmvmSolution, Strategy};
+    pub use crate::cmvm::{
+        compile, ArenaMode, CmvmProblem, CmvmSolution, CompileArena, OptimizeOptions, Strategy,
+    };
     pub use crate::coordinator::{CompileJob, Coordinator};
     pub use crate::csd::Csd;
-    pub use crate::cse::{optimize_into, CseConfig};
+    pub use crate::cse::CseConfig;
     pub use crate::dais::{DaisOp, DaisProgram};
     pub use crate::estimate::{FpgaModel, ResourceReport};
     pub use crate::fixed::QInterval;

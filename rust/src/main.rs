@@ -21,12 +21,19 @@
 //!   `--jobs` value (`docs/explore.md`).
 
 use anyhow::{bail, Result};
-use da4ml::cmvm::{optimize, CmvmProblem, Strategy};
+use da4ml::cmvm::{self, CmvmProblem, OptimizeOptions, Strategy};
 use da4ml::estimate::{self, FpgaModel};
 use da4ml::nn::{self, NetworkSpec, TestVectors};
 use da4ml::pipeline::{self, PipelineConfig};
 use da4ml::runtime;
+use da4ml::util::alloc_count::CountingAlloc;
 use da4ml::util::Rng;
+
+/// Count every heap allocation so `perf` can report and gate
+/// `allocs_per_compile` (a passthrough to the system allocator with a
+/// relaxed atomic bump — negligible overhead on the other subcommands).
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
 
 /// Minimal flag parser: `--key value` pairs after positional args.
 struct Args {
@@ -205,8 +212,8 @@ fn main() -> Result<()> {
             let lo = (1i64 << (bits - 1)) + 1;
             let hi = (1i64 << bits) - 1;
             let m: Vec<i64> = (0..d_in * d_out).map(|_| rng.range_i64(lo, hi)).collect();
-            let p = CmvmProblem::new(d_in, d_out, m, 8);
-            let sol = optimize(&p, Strategy::Da { dc })?;
+            let p = CmvmProblem::new(d_in, d_out, m, 8)?;
+            let sol = cmvm::compile(&p, &OptimizeOptions::new(Strategy::Da { dc }))?;
             let rep = estimate::combinational(&sol.program, &FpgaModel::default());
             println!(
                 "CMVM {d_in}x{d_out} {bits}-bit dc={dc}: adders={} depth={} lut={} \
@@ -254,7 +261,8 @@ fn main() -> Result<()> {
             let out = args.pos(1, "output path")?;
             let pipe: u32 = args.flag("pipe", 5);
             let dc: i32 = args.flag("dc", 2);
-            let prog = nn::compile::fuse(&spec, Strategy::Da { dc })?;
+            let opts = nn::compile::CompileOptions::new(Strategy::Da { dc });
+            let prog = nn::compile::compile(&spec, &opts)?.program;
             // Both backends are netlist walks now, so VHDL pipelines
             // too; lower once and reuse for emission, stats and the
             // testbench.
@@ -390,7 +398,8 @@ fn main() -> Result<()> {
         "verify" => {
             let spec = load_spec(args.pos(0, "spec path")?)?;
             let dc: i32 = args.flag("dc", 2);
-            let prog = nn::compile::fuse(&spec, Strategy::Da { dc })?;
+            let opts = nn::compile::CompileOptions::new(Strategy::Da { dc });
+            let prog = nn::compile::compile(&spec, &opts)?.program;
             da4ml::dais::verify::check_well_formed(&prog)?;
             // Cross-check DAIS vs the bit-exact host simulator on random
             // in-range inputs.
@@ -414,7 +423,8 @@ fn main() -> Result<()> {
             let spec = load_spec(args.pos(0, "spec path")?)?;
             let out = args.pos(1, "output path")?;
             let dc: i32 = args.flag("dc", 2);
-            let prog = nn::compile::fuse(&spec, Strategy::Da { dc })?;
+            let opts = nn::compile::CompileOptions::new(Strategy::Da { dc });
+            let prog = nn::compile::compile(&spec, &opts)?.program;
             std::fs::write(out, da4ml::dais::dot::to_dot(&prog, &spec.name))?;
             println!("wrote {out} ({} nodes)", prog.nodes.len());
         }

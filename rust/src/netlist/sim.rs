@@ -257,9 +257,9 @@ mod tests {
             let (d_in, d_out) = (rng.below(4) + 2, rng.below(4) + 2);
             let m: Vec<i64> =
                 (0..d_in * d_out).map(|_| rng.range_i64(-127, 127)).collect();
-            let prob = crate::cmvm::CmvmProblem::new(d_in, d_out, m, 8);
-            let sol =
-                crate::cmvm::optimize(&prob, crate::cmvm::Strategy::Da { dc: -1 }).unwrap();
+            let prob = crate::cmvm::CmvmProblem::new(d_in, d_out, m, 8).unwrap();
+            let opts = crate::cmvm::OptimizeOptions::new(crate::cmvm::Strategy::Da { dc: -1 });
+            let sol = crate::cmvm::compile(&prob, &opts).unwrap();
             let every = rng.below(3) as u32 + 1;
             let stages =
                 assign_stages(&sol.program, &PipelineConfig::every_n_adders(every));

@@ -1,21 +1,24 @@
 //! Lowering a [`NetworkSpec`] to DAIS.
 //!
-//! The fully-unrolled path ([`fuse`]) builds one DAIS program for the
-//! whole network: every CMVM is optimized once as a *template* (by the
-//! selected strategy, with the per-layer delay constraint) and then
+//! The fully-unrolled path ([`compile`]) builds one DAIS program for
+//! the whole network: every CMVM is optimized once as a *template* (by
+//! the selected strategy, with the per-layer delay constraint) and then
 //! inlined per spatial instance — exactly the replication a fully
-//! unrolled II=1 design performs. The HLS-flow path
+//! unrolled II=1 design performs. With an objective in
+//! [`CompileOptions`], the strategy × dc × pipeline space is explored
+//! first and the objective's Pareto pick is compiled. The HLS-flow path
 //! ([`layer_reports`]) keeps convolutional layers time-multiplexed
 //! (one CMVM instance, as the paper's SVHN network) and reports
 //! per-layer resources for both the DA and the latency strategies.
 
 use super::spec::{LayerSpec, NetworkSpec};
 use crate::baseline::mac::{mac_report, DspPolicy};
-use crate::cmvm::{optimize, optimize_terms, optimize_terms_stats, CmvmProblem, Strategy};
+use crate::cmvm::{self, CmvmProblem, OptimizeOptions, Strategy};
 use crate::coordinator::CompileJob;
 use crate::cse::{CseStats, InputTerm};
 use crate::dais::{DaisBuilder, DaisOp, DaisProgram, NodeId, RoundMode};
 use crate::estimate::{self, FpgaModel, ResourceReport};
+use crate::explore::{DesignPoint, ExploreConfig, Objective};
 use crate::fixed::QInterval;
 use crate::pipeline::{self, PipelineConfig};
 use crate::Result;
@@ -114,23 +117,102 @@ fn template_for(
     let d_in = w.len();
     let d_out = w.first().map(|r| r.len()).unwrap_or(0);
     let matrix: Vec<i64> = w.iter().flat_map(|r| r.iter().copied()).collect();
-    let mut problem = CmvmProblem::new(d_in, d_out, matrix, 8);
+    let mut problem = CmvmProblem::new(d_in, d_out, matrix, 8)?;
     problem.input_qint = vec![in_qint; d_in];
-    let sol = optimize(&problem, strategy)?;
+    let sol = cmvm::compile(&problem, &OptimizeOptions::new(strategy))?;
     Ok((problem, sol.program, sol.cse))
 }
 
-/// Fuse a dense / einsum / residual network into one DAIS program
-/// (fails on conv/pool layers — those use the HLS-flow path).
-pub fn fuse(spec: &NetworkSpec, strategy: Strategy) -> Result<DaisProgram> {
-    fuse_with_stats(spec, strategy).map(|(prog, _)| prog)
+/// Options for [`compile`] (this module's single entry point).
+#[derive(Debug, Clone, Copy)]
+pub struct CompileOptions<'a> {
+    /// CMVM strategy for every layer template. Ignored when
+    /// `objective` is set — exploration picks the strategy then.
+    pub strategy: Strategy,
+    /// When set, explore the strategy × dc × pipeline space first and
+    /// compile the configuration this objective picks from the Pareto
+    /// front (the old `fuse_auto` behavior).
+    pub objective: Option<(Objective, &'a ExploreConfig)>,
 }
 
-/// Like [`fuse`] but also accumulates the CSE engine work counters over
-/// every layer template the strategy optimized (one engine run per
-/// dense layer, one per einsum template — not per spatial instance).
-/// The perf suite reports these per network case.
+impl CompileOptions<'_> {
+    /// Compile with a fixed strategy, no design-space exploration.
+    pub fn new(strategy: Strategy) -> Self {
+        Self { strategy, objective: None }
+    }
+}
+
+impl<'a> CompileOptions<'a> {
+    /// Explore first and compile the objective's Pareto pick.
+    pub fn with_objective(self, objective: Objective, cfg: &'a ExploreConfig) -> Self {
+        Self { objective: Some((objective, cfg)), ..self }
+    }
+}
+
+/// A fused network program plus everything the compile learned.
+#[derive(Debug, Clone)]
+pub struct CompiledNetwork {
+    /// The fully-unrolled DAIS program (II = 1).
+    pub program: DaisProgram,
+    /// CSE engine work counters accumulated over every layer template
+    /// the strategy optimized (one engine run per dense layer, one per
+    /// einsum template — not per spatial instance).
+    pub cse: CseStats,
+    /// The design point exploration picked (objective compiles only).
+    pub point: Option<DesignPoint>,
+    /// Pipeline stage assignment for the picked point (`None` =
+    /// combinational, or a fixed-strategy compile).
+    pub stages: Option<Vec<u32>>,
+}
+
+/// Fuse a dense / einsum / residual network into one DAIS program
+/// (fails on conv/pool layers — those use the HLS-flow path
+/// [`layer_reports`]).
+///
+/// With [`CompileOptions::with_objective`], the strategy × dc ×
+/// pipeline space is explored first ([`crate::explore`]) and the
+/// objective's Pareto pick is compiled; the chosen point and its stage
+/// assignment come back on [`CompiledNetwork`]. The MAC-modeled latency
+/// baseline can win an objective; its *functional* program is the
+/// naive-DA fuse (the resource numbers on the returned point still
+/// come from [`crate::baseline::mac`]).
+pub fn compile(spec: &NetworkSpec, opts: &CompileOptions) -> Result<CompiledNetwork> {
+    match opts.objective {
+        None => {
+            let (program, cse) = fuse_inner(spec, opts.strategy)?;
+            Ok(CompiledNetwork { program, cse, point: None, stages: None })
+        }
+        Some((objective, cfg)) => {
+            let report = crate::explore::explore_network(spec, cfg)?;
+            let point = crate::explore::pick(&report.front, objective)
+                .ok_or_else(|| anyhow!("explore: empty Pareto front for '{}'", spec.name))?
+                .clone();
+            let strategy = match point.strategy {
+                Strategy::Latency => Strategy::NaiveDa,
+                s => s,
+            };
+            let (program, cse) = fuse_inner(spec, strategy)?;
+            let stages = point.pipe.map(|n| {
+                pipeline::assign_stages(&program, &PipelineConfig::every_n_adders(n))
+            });
+            Ok(CompiledNetwork { program, cse, point: Some(point), stages })
+        }
+    }
+}
+
+/// Old fixed-strategy entry point.
+#[deprecated(note = "use nn::compile::compile with CompileOptions")]
+pub fn fuse(spec: &NetworkSpec, strategy: Strategy) -> Result<DaisProgram> {
+    fuse_inner(spec, strategy).map(|(prog, _)| prog)
+}
+
+/// Old fixed-strategy entry point with engine counters.
+#[deprecated(note = "use nn::compile::compile with CompileOptions")]
 pub fn fuse_with_stats(spec: &NetworkSpec, strategy: Strategy) -> Result<(DaisProgram, CseStats)> {
+    fuse_inner(spec, strategy)
+}
+
+fn fuse_inner(spec: &NetworkSpec, strategy: Strategy) -> Result<(DaisProgram, CseStats)> {
     let mut cse_stats = CseStats::default();
     let mut b = DaisBuilder::new();
     let in_q = spec.input_qint();
@@ -155,11 +237,12 @@ pub fn fuse_with_stats(spec: &NetworkSpec, strategy: Strategy) -> Result<(DaisPr
                 anyhow::ensure!(x.len() == d_in, "layer {li}: dense arity");
                 let matrix: Vec<i64> = w.iter().flat_map(|r| r.iter().copied()).collect();
                 let d_out = bias.len();
-                let mut problem = CmvmProblem::new(d_in, d_out, matrix, 8);
+                let mut problem = CmvmProblem::new(d_in, d_out, matrix, 8)?;
                 problem.input_qint = vec![qint; d_in];
                 let inputs: Vec<InputTerm> =
                     x.iter().map(|&node| InputTerm { node }).collect();
-                let (outs, st) = optimize_terms_stats(&mut b, &inputs, &problem, strategy)?;
+                let opts = OptimizeOptions::new(strategy);
+                let (outs, st) = cmvm::compile_terms(&mut b, &inputs, &problem, &opts)?;
                 cse_stats.absorb(&st);
                 let ys: Vec<NodeId> = outs
                     .iter()
@@ -308,7 +391,7 @@ pub fn layer_reports(
                 let d_in = w.len();
                 let d_out = b.len();
                 let matrix: Vec<i64> = w.iter().flat_map(|r| r.iter().copied()).collect();
-                let mut problem = CmvmProblem::new(d_in, d_out, matrix, 8);
+                let mut problem = CmvmProblem::new(d_in, d_out, matrix, 8)?;
                 problem.input_qint = vec![qint; d_in];
 
                 let per_instance = match strategy {
@@ -321,7 +404,8 @@ pub fn layer_reports(
                         let inputs: Vec<InputTerm> = (0..d_in)
                             .map(|j| InputTerm { node: bb.input(j, qint, 0) })
                             .collect();
-                        let outs = optimize_terms(&mut bb, &inputs, &problem, s)?;
+                        let opts = OptimizeOptions::new(s);
+                        let (outs, _) = cmvm::compile_terms(&mut bb, &inputs, &problem, &opts)?;
                         for (i, o) in outs.iter().enumerate() {
                             let n = epilogue(
                                 &mut bb, o.node, o.shift, o.neg, b[i], *relu, *shift,
@@ -386,7 +470,7 @@ pub fn layer_problems(spec: &NetworkSpec) -> Result<Vec<CmvmProblem>> {
                 let d_in = w.len();
                 let d_out = b.len();
                 let matrix: Vec<i64> = w.iter().flat_map(|r| r.iter().copied()).collect();
-                let mut p = CmvmProblem::new(d_in, d_out, matrix, 8);
+                let mut p = CmvmProblem::new(d_in, d_out, matrix, 8)?;
                 p.input_qint = vec![qint; d_in];
                 out.push(p);
                 anyhow::ensure!(
@@ -466,7 +550,7 @@ pub fn network_report(
             // Timing/FF structure from the functionally identical
             // naive-DA unrolled graph (deeper than the DA graph, hence
             // the extra pipeline stages the paper's latency rows show).
-            let prog = fuse(spec, Strategy::NaiveDa)?;
+            let (prog, _) = fuse_inner(spec, Strategy::NaiveDa)?;
             let stages = pipeline::assign_stages(&prog, pipe);
             let rep = estimate::pipelined(&prog, &stages, model);
             // The HLS schedule pipelines the (DSP/LUT) multiplier stage
@@ -482,40 +566,24 @@ pub fn network_report(
             Ok(agg)
         }
         s => {
-            let prog = fuse(spec, s)?;
+            let (prog, _) = fuse_inner(spec, s)?;
             let stages = pipeline::assign_stages(&prog, pipe);
             Ok(estimate::pipelined(&prog, &stages, model))
         }
     }
 }
 
-/// Explore the strategy × dc × pipeline design space for a fusible
-/// network, pick the Pareto-front point the objective prefers
-/// ([`crate::explore::pick`]), and compile that configuration: returns
-/// the chosen point, the fused program, and its stage assignment
-/// (`None` = combinational).
-///
-/// The MAC-modeled latency baseline can win an objective; its
-/// *functional* program is the naive-DA fuse (the resource numbers on
-/// the returned point still come from [`crate::baseline::mac`]).
+/// Old explore-then-compile entry point.
+#[deprecated(note = "use nn::compile::compile with CompileOptions::with_objective")]
 pub fn fuse_auto(
     spec: &NetworkSpec,
-    objective: crate::explore::Objective,
-    cfg: &crate::explore::ExploreConfig,
-) -> Result<(crate::explore::DesignPoint, DaisProgram, Option<Vec<u32>>)> {
-    let report = crate::explore::explore_network(spec, cfg)?;
-    let point = crate::explore::pick(&report.front, objective)
-        .ok_or_else(|| anyhow!("explore: empty Pareto front for '{}'", spec.name))?
-        .clone();
-    let strategy = match point.strategy {
-        Strategy::Latency => Strategy::NaiveDa,
-        s => s,
-    };
-    let prog = fuse(spec, strategy)?;
-    let stages = point
-        .pipe
-        .map(|n| pipeline::assign_stages(&prog, &PipelineConfig::every_n_adders(n)));
-    Ok((point, prog, stages))
+    objective: Objective,
+    cfg: &ExploreConfig,
+) -> Result<(DesignPoint, DaisProgram, Option<Vec<u32>>)> {
+    let opts = CompileOptions::new(Strategy::NaiveDa).with_objective(objective, cfg);
+    let c = compile(spec, &opts)?;
+    let point = c.point.expect("objective compiles always carry a point");
+    Ok((point, c.program, c.stages))
 }
 
 /// Aggregate layer reports into one network-level report.

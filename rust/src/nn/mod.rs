@@ -10,7 +10,7 @@
 //!
 //! Two consumption paths, as in the paper:
 //!
-//! * [`compile::fuse`] — the fully-unrolled II=1 path (dense / einsum /
+//! * [`compile::compile`] — the fully-unrolled II=1 path (dense / einsum /
 //!   residual networks): one DAIS program for the whole network, usable
 //!   for RTL emission, pipelining and streaming simulation (paper §5.2).
 //! * [`sim`] + per-layer [`compile::layer_reports`] — the HLS-flow path

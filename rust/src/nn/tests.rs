@@ -1,7 +1,7 @@
 //! NN frontend tests: host simulation vs fused DAIS programs, layer
 //! shapes, accuracy metric.
 
-use super::compile::{aggregate, fuse, fuse_auto, layer_reports};
+use super::compile::{aggregate, compile, layer_reports, CompileOptions};
 use super::sim;
 use super::spec::{LayerSpec, NetworkSpec};
 use crate::cmvm::Strategy;
@@ -47,7 +47,7 @@ fn fused_dais_matches_host_sim_all_strategies() {
         .collect();
     let want = sim::forward_batch(&spec, &inputs);
     for s in [Strategy::NaiveDa, Strategy::Da { dc: 2 }, Strategy::Da { dc: -1 }] {
-        let prog = fuse(&spec, s).unwrap();
+        let prog = compile(&spec, &CompileOptions::new(s)).unwrap().program;
         for (x, w) in inputs.iter().zip(&want) {
             let got = interp::evaluate_checked(&prog, x);
             assert_eq!(&got, w, "strategy {s:?}");
@@ -55,32 +55,49 @@ fn fused_dais_matches_host_sim_all_strategies() {
     }
 }
 
-/// `fuse_auto` explores the space and compiles the objective's pick:
-/// the program is functionally identical to the host simulation, and
-/// the stage assignment matches the picked pipeline rung.
+/// An objective compile explores the space and compiles the
+/// objective's pick: the program is functionally identical to the host
+/// simulation, and the stage assignment matches the picked pipeline
+/// rung.
 #[test]
-fn fuse_auto_compiles_the_picked_configuration() {
+fn objective_compile_compiles_the_picked_configuration() {
     use crate::explore::{ExploreConfig, Objective};
     let spec = mlp(5);
     let cfg = ExploreConfig { jobs: 1, ..ExploreConfig::smoke() };
-    let (point, prog, stages) = fuse_auto(&spec, Objective::Knee, &cfg).unwrap();
-    assert_eq!(stages.is_some(), point.pipe.is_some());
-    if let Some(st) = &stages {
-        assert_eq!(st.len(), prog.nodes.len());
+    let opts = CompileOptions::new(Strategy::NaiveDa).with_objective(Objective::Knee, &cfg);
+    let c = compile(&spec, &opts).unwrap();
+    let point = c.point.expect("objective compile carries its pick");
+    assert_eq!(c.stages.is_some(), point.pipe.is_some());
+    if let Some(st) = &c.stages {
+        assert_eq!(st.len(), c.program.nodes.len());
     }
     // Whatever configuration won, the compiled program is bit-exact.
     let mut rng = Rng::seed_from(17);
     for _ in 0..8 {
         let x: Vec<i64> = (0..6).map(|_| rng.range_i64(-128, 127)).collect();
-        assert_eq!(interp::evaluate_checked(&prog, &x), sim::forward(&spec, &x));
+        assert_eq!(interp::evaluate_checked(&c.program, &x), sim::forward(&spec, &x));
     }
+}
+
+/// The deprecated free functions are exact shims over [`compile`].
+#[test]
+#[allow(deprecated)]
+fn deprecated_fuse_shims_match_compile() {
+    use super::compile::{fuse, fuse_with_stats};
+    let spec = mlp(13);
+    let s = Strategy::Da { dc: 1 };
+    let c = compile(&spec, &CompileOptions::new(s)).unwrap();
+    assert_eq!(fuse(&spec, s).unwrap(), c.program);
+    let (prog, stats) = fuse_with_stats(&spec, s).unwrap();
+    assert_eq!(prog, c.program);
+    assert_eq!(stats, c.cse);
 }
 
 #[test]
 fn fused_da_uses_fewer_adders_than_naive() {
     let spec = mlp(7);
-    let naive = fuse(&spec, Strategy::NaiveDa).unwrap();
-    let da = fuse(&spec, Strategy::Da { dc: 2 }).unwrap();
+    let naive = compile(&spec, &CompileOptions::new(Strategy::NaiveDa)).unwrap().program;
+    let da = compile(&spec, &CompileOptions::new(Strategy::Da { dc: 2 })).unwrap().program;
     assert!(
         da.adder_count() < naive.adder_count(),
         "da {} >= naive {}",
@@ -130,7 +147,7 @@ fn mixer_grid_fuse_matches_sim() {
         .map(|_| (0..12).map(|_| rng.range_i64(-32, 31)).collect())
         .collect();
     let want = sim::forward_batch(&spec, &inputs);
-    let prog = fuse(&spec, Strategy::Da { dc: 2 }).unwrap();
+    let prog = compile(&spec, &CompileOptions::new(Strategy::Da { dc: 2 })).unwrap().program;
     for (x, w) in inputs.iter().zip(&want) {
         assert_eq!(&interp::evaluate_checked(&prog, x), w);
     }

@@ -12,6 +12,10 @@
 //!   optimizer is deterministic, so any drift is a behavior change;
 //! * a time pinned by a baseline case may grow by at most
 //!   `time_tolerance` (relative), with a 1 ms absolute jitter floor;
+//! * `max_allocs_per_compile` (when the baseline carries it) is a
+//!   ceiling on every case's measured `allocs_per_compile` — it only
+//!   gates when the run actually measured allocations (the counting
+//!   allocator is installed and some case reported > 0);
 //! * a pinned case missing from the run is a regression (coverage
 //!   loss); a run case absent from the baseline is only a note.
 
@@ -117,6 +121,31 @@ pub fn against_baseline(report: &SuiteReport, baseline: &Baseline) -> DiffOutcom
                 report.engine_ab.reference_ms,
                 min
             ));
+        }
+    }
+    // Allocation ceiling: the arena overhaul's headline number. Gated
+    // only when this run measured allocations at all — a binary without
+    // the counting global allocator reports 0 everywhere, which must
+    // read as "not measured", never as "zero-allocation compile".
+    if let Some(cap) = baseline.max_allocs_per_compile {
+        let measured = report.cases.iter().any(|c| c.allocs_per_compile > 0);
+        if !measured {
+            out.notes.push(
+                "baseline pins max_allocs_per_compile but this run measured no \
+                 allocations (counting allocator not installed); ceiling skipped"
+                    .into(),
+            );
+        } else {
+            for c in &report.cases {
+                out.checked += 1;
+                if c.allocs_per_compile as i64 > cap {
+                    out.regressions.push(format!(
+                        "{}: allocs_per_compile {} exceeds the baseline ceiling {cap} — \
+                         allocation churn regressed (arena reuse lost?)",
+                        c.id, c.allocs_per_compile
+                    ));
+                }
+            }
         }
     }
     // Coordinator shard hammer: gated only when the baseline pins the
@@ -225,6 +254,7 @@ mod tests {
                     occ_cols_scanned: 70,
                     occ_digits_scanned: 300,
                 },
+                allocs_per_compile: 900,
             }],
             engine_ab: EngineAb {
                 case_id: "jet/cse-stage".into(),
@@ -330,6 +360,41 @@ mod tests {
         let stub = r#"{"schema_version": 1, "bootstrap": true, "cases": []}"#;
         let unpinned = parse_baseline(stub).unwrap();
         assert!(against_baseline(&slow, &unpinned).passed());
+    }
+
+    /// The allocation ceiling gates measured runs, skips unmeasured
+    /// ones (all-zero counts), and trips on churn above the cap.
+    #[test]
+    fn alloc_ceiling_gates_only_measured_runs() {
+        let r = report();
+        let b = parse_baseline(&render_baseline(&r, false)).unwrap();
+        assert_eq!(b.max_allocs_per_compile, Some(1800), "2x the measured 900");
+
+        // Within the ceiling: passes.
+        assert!(against_baseline(&r, &b).passed());
+
+        // Churn above the ceiling: regression.
+        let mut churny = r.clone();
+        churny.cases[0].allocs_per_compile = 5000;
+        let d = against_baseline(&churny, &b);
+        assert!(!d.passed());
+        assert!(
+            d.regressions[0].contains("allocs_per_compile"),
+            "{:?}",
+            d.regressions
+        );
+
+        // All-zero run (allocator not installed): skipped with a note,
+        // even though 0 < cap would trivially pass.
+        let mut unmeasured = r.clone();
+        unmeasured.cases[0].allocs_per_compile = 0;
+        let d = against_baseline(&unmeasured, &b);
+        assert!(d.passed());
+        assert!(
+            d.notes.iter().any(|n| n.contains("counting allocator")),
+            "{:?}",
+            d.notes
+        );
     }
 
     #[test]

@@ -42,7 +42,15 @@ pub const TIME_KEYS: &[&str] = &["optimize_ms", "lower_ms", "emit_ms"];
 /// Default engine A/B speedup floor written into blessed baselines —
 /// deliberately below the measured headline so CI jitter cannot flake
 /// the gate, while still catching a real regression of the overhaul.
-pub const DEFAULT_MIN_SPEEDUP: f64 = 1.25;
+/// Raised from 1.25 when the bitset-occupancy engine landed: the
+/// reference engine must now be strictly >1.4x slower.
+pub const DEFAULT_MIN_SPEEDUP: f64 = 1.4;
+
+/// Default ceiling on [`CaseReport::allocs_per_compile`] written into
+/// blessed baselines: 2x the worst measured case, so allocation-churn
+/// regressions (losing the arena, reintroducing per-node boxing) trip
+/// the gate while honest growth has headroom.
+pub const DEFAULT_ALLOC_HEADROOM: f64 = 2.0;
 
 /// Default relative tolerance for time metrics (+50 %).
 pub const DEFAULT_TIME_TOLERANCE: f64 = 0.5;
@@ -92,6 +100,7 @@ fn case_value(c: &CaseReport) -> Value {
         ("ff", int(c.ff)),
         ("stages", int(c.stages as u64)),
         ("worst_stage_ns", Value::Float(c.worst_stage_ns)),
+        ("allocs_per_compile", int(c.allocs_per_compile)),
     ];
     entries.extend(stats_entries(&c.cse));
     obj(entries)
@@ -160,9 +169,15 @@ pub fn render(r: &SuiteReport) -> String {
 }
 
 /// A blessed baseline document derived from a run: every deterministic
-/// counter of every case, the engine A/B floor, and — only with
-/// `with_times` — the phase timings of the blessing machine.
+/// counter of every case, the engine A/B floor, the allocation ceiling
+/// (when the blessing run measured allocations at all), and — only
+/// with `with_times` — the phase timings of the blessing machine.
 pub fn baseline_value(r: &SuiteReport, with_times: bool) -> Value {
+    // Suite-level ceiling, not a per-case pin: allocation counts are
+    // deterministic for a given allocator/libstd but shift across
+    // toolchains, so the gate bounds the worst case with headroom
+    // instead of pinning each case exactly.
+    let max_allocs = r.cases.iter().map(|c| c.allocs_per_compile).max().unwrap_or(0);
     let cases: Vec<Value> = r
         .cases
         .iter()
@@ -184,7 +199,7 @@ pub fn baseline_value(r: &SuiteReport, with_times: bool) -> Value {
             obj(entries)
         })
         .collect();
-    obj(vec![
+    let out = obj(vec![
         ("schema_version", int(r.schema_version as u64)),
         ("suite", Value::Str(r.suite.to_string())),
         // net/jet/* counters depend on which jet network the blessing
@@ -196,7 +211,15 @@ pub fn baseline_value(r: &SuiteReport, with_times: bool) -> Value {
         ("min_shard_speedup", Value::Float(DEFAULT_MIN_SHARD_SPEEDUP)),
         ("time_tolerance", Value::Float(DEFAULT_TIME_TOLERANCE)),
         ("cases", Value::Array(cases)),
-    ])
+    ]);
+    let Value::Object(mut m) = out else { unreachable!("obj returns an object") };
+    if max_allocs > 0 {
+        m.insert(
+            "max_allocs_per_compile".into(),
+            int((max_allocs as f64 * DEFAULT_ALLOC_HEADROOM).ceil() as u64),
+        );
+    }
+    Value::Object(m)
 }
 
 /// Serialize a blessed baseline (see [`baseline_value`]).
@@ -231,6 +254,10 @@ pub struct Baseline {
     /// single-core host cannot meaningfully exceed 1.0, so only
     /// multi-core CI baselines should pin this).
     pub min_shard_speedup: Option<f64>,
+    /// Ceiling on any case's `allocs_per_compile` (absent = not gated;
+    /// also skipped when the run measured all-zero, i.e. the counting
+    /// allocator was not installed).
+    pub max_allocs_per_compile: Option<i64>,
     /// Relative tolerance for time metrics.
     pub time_tolerance: f64,
     /// Pinned cases.
@@ -256,6 +283,10 @@ pub fn parse_baseline(text: &str) -> Result<Baseline> {
     };
     let min_shard_speedup = match v.get_opt("min_shard_speedup") {
         Some(x) => Some(x.as_f64()?),
+        None => None,
+    };
+    let max_allocs_per_compile = match v.get_opt("max_allocs_per_compile") {
+        Some(x) => Some(x.as_i64()?),
         None => None,
     };
     let time_tolerance = match v.get_opt("time_tolerance") {
@@ -288,6 +319,7 @@ pub fn parse_baseline(text: &str) -> Result<Baseline> {
         jet_source,
         min_speedup,
         min_shard_speedup,
+        max_allocs_per_compile,
         time_tolerance,
         cases,
     })
@@ -323,6 +355,7 @@ mod tests {
                     occ_cols_scanned: 7,
                     occ_digits_scanned: 21,
                 },
+                allocs_per_compile: 1200,
             }],
             engine_ab: EngineAb {
                 case_id: "jet/cse-stage".into(),
@@ -359,6 +392,10 @@ mod tests {
         assert_eq!(cases.len(), 1);
         assert_eq!(cases[0].get("id").unwrap().as_str().unwrap(), "cmvm/2x2/da");
         assert_eq!(cases[0].get("heap_pops").unwrap().as_i64().unwrap(), 11);
+        assert_eq!(
+            cases[0].get("allocs_per_compile").unwrap().as_i64().unwrap(),
+            1200
+        );
         assert!(
             (cases[0].get("optimize_ms").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-12
         );
@@ -382,6 +419,11 @@ mod tests {
         assert_eq!(b.jet_source.as_deref(), Some("synthetic"));
         assert_eq!(b.min_speedup, Some(DEFAULT_MIN_SPEEDUP));
         assert_eq!(b.min_shard_speedup, Some(DEFAULT_MIN_SHARD_SPEEDUP));
+        assert_eq!(
+            b.max_allocs_per_compile,
+            Some(2400),
+            "ceiling = 2x the worst measured case"
+        );
         assert_eq!(b.cases.len(), 1);
         let case = &b.cases[0];
         assert_eq!(case.id, "cmvm/2x2/da");
@@ -405,5 +447,6 @@ mod tests {
         assert_eq!(b.cases.len(), 0);
         assert_eq!(b.min_speedup, Some(1.25));
         assert_eq!(b.min_shard_speedup, None, "stub without the key does not gate it");
+        assert_eq!(b.max_allocs_per_compile, None);
     }
 }

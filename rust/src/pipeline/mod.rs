@@ -207,9 +207,9 @@ mod tests {
             let m: Vec<i64> = (0..d_in * d_out)
                 .map(|_| rng.range_i64(-127, 127))
                 .collect();
-            let prob = crate::cmvm::CmvmProblem::new(d_in, d_out, m, 8);
-            let sol =
-                crate::cmvm::optimize(&prob, crate::cmvm::Strategy::Da { dc: -1 }).unwrap();
+            let prob = crate::cmvm::CmvmProblem::new(d_in, d_out, m, 8).unwrap();
+            let opts = crate::cmvm::OptimizeOptions::new(crate::cmvm::Strategy::Da { dc: -1 });
+            let sol = crate::cmvm::compile(&prob, &opts).unwrap();
             let stages = assign_stages(&sol.program, &PipelineConfig::every_n_adders(n));
             let stream: Vec<Vec<i64>> = (0..12)
                 .map(|_| (0..d_in).map(|_| rng.range_i64(-128, 127)).collect())

@@ -423,8 +423,8 @@ impl JobRequest {
         }
     }
 
-    /// Validate and lower into a [`CompileJob`] (checked here — not in
-    /// `CmvmProblem::new`, whose assertions would panic the service).
+    /// Validate and lower into a [`CompileJob`] (shape checked here so
+    /// wire errors carry the serve-level context).
     pub fn to_compile_job(&self, name: String, default_dc: i32) -> Result<CompileJob> {
         let problem = matrix_to_problem(&self.matrix, self.bits)?;
         let dc = self.dc.unwrap_or(default_dc as i64);
@@ -455,7 +455,7 @@ fn matrix_to_problem(matrix: &[Vec<i64>], bits: i64) -> Result<CmvmProblem> {
     }
     ensure!((1..=63).contains(&bits), "bits must be in [1, 63], got {bits}");
     let flat: Vec<i64> = matrix.iter().flatten().copied().collect();
-    Ok(CmvmProblem::new(d_in, d_out, flat, bits as u32))
+    CmvmProblem::new(d_in, d_out, flat, bits as u32)
 }
 
 /// Strict strategy-name parser (the CLI's lenient fallback is wrong for
@@ -1000,7 +1000,7 @@ not even json
     fn loaded_cache_serves_byte_identical_replies() {
         let job = crate::coordinator::CompileJob {
             name: "warm".into(),
-            problem: CmvmProblem::new(2, 2, vec![3, 5, -7, 9], 8),
+            problem: CmvmProblem::new(2, 2, vec![3, 5, -7, 9], 8).unwrap(),
             strategy: Strategy::Da { dc: -1 },
         };
         let live = Coordinator::new();

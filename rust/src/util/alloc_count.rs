@@ -1,0 +1,66 @@
+//! Counting global allocator — the `ingestion_micro` technique, promoted
+//! to a shared type so the perf suite and the allocation-budget tests
+//! measure the same thing.
+//!
+//! The library only *defines* the pass-through allocator; a binary or
+//! integration test opts in with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static A: da4ml::util::alloc_count::CountingAlloc = da4ml::util::alloc_count::CountingAlloc;
+//! ```
+//!
+//! When no binary installs it, [`allocations`] stays at 0 — callers
+//! treat a zero reading as "allocator not installed" and skip their
+//! gate rather than comparing garbage.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Pass-through [`System`] allocator that counts allocations and bytes
+/// requested (allocs + reallocs; frees are not counted).
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total allocations counted so far (0 when [`CountingAlloc`] is not
+/// the process global allocator).
+pub fn allocations() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Total bytes requested so far (0 when not installed).
+pub fn bytes_requested() -> u64 {
+    BYTES.load(Ordering::Relaxed)
+}
+
+/// Run `f`, returning its result plus the (allocations, bytes) it made.
+/// Both deltas are 0 when the counting allocator is not installed.
+/// Process-global counters: concurrent allocations on other threads are
+/// attributed to whichever measurement window is open, so callers that
+/// need clean numbers measure single-threaded.
+pub fn count<T>(f: impl FnOnce() -> T) -> (T, u64, u64) {
+    let (a0, b0) = (allocations(), bytes_requested());
+    let out = f();
+    let (a1, b1) = (allocations(), bytes_requested());
+    (out, a1 - a0, b1 - b0)
+}

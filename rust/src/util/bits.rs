@@ -1,0 +1,174 @@
+//! Word-parallel bitsets for the optimizer hot path.
+//!
+//! The CSE engine tracks two kinds of occupancy: which digit slots of a
+//! column are alive, and which columns a pattern currently occurs in.
+//! Both were `bool` flags / `BTreeMap` keys before the allocation pass;
+//! a flat `Vec<u64>` bitset gives the same ascending-order iteration
+//! with word-parallel skips over empty regions and no per-entry heap
+//! churn. The backing words are recyclable: `take_words`/`from_words`
+//! let an arena pool zeroed word vectors across compiles.
+
+/// Growable bitset over `u32` indices backed by `Vec<u64>` words.
+#[derive(Debug, Default, Clone)]
+pub struct BitSet {
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    /// New empty bitset (no backing storage until the first `set`).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from a recycled word vector. The caller must pass
+    /// all-zero words (the arena pools zeroed vectors).
+    pub fn from_words(words: Vec<u64>) -> Self {
+        debug_assert!(words.iter().all(|&w| w == 0), "pooled words must be zeroed");
+        Self { words }
+    }
+
+    /// Surrender the backing words for pooling. NOT zeroed — the caller
+    /// zeroes before re-pooling (`fill(0)` is a word-parallel memset).
+    pub fn take_words(self) -> Vec<u64> {
+        self.words
+    }
+
+    /// Set bit `i`, growing the word vector as needed.
+    pub fn set(&mut self, i: u32) {
+        let word = (i / 64) as usize;
+        if word >= self.words.len() {
+            self.words.resize(word + 1, 0);
+        }
+        self.words[word] |= 1u64 << (i % 64);
+    }
+
+    /// Clear bit `i` (no-op when out of range).
+    pub fn unset(&mut self, i: u32) {
+        let word = (i / 64) as usize;
+        if word < self.words.len() {
+            self.words[word] &= !(1u64 << (i % 64));
+        }
+    }
+
+    /// Test bit `i`.
+    pub fn get(&self, i: u32) -> bool {
+        let word = (i / 64) as usize;
+        word < self.words.len() && self.words[word] & (1u64 << (i % 64)) != 0
+    }
+
+    /// Clear all bits, keeping capacity.
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// True when no bit is set.
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Iterate set bits in ascending order.
+    pub fn iter(&self) -> Bits<'_> {
+        Bits { words: &self.words, word_idx: 0, cur: 0 }
+    }
+}
+
+/// Ascending iterator over set bits; skips empty words whole.
+pub struct Bits<'a> {
+    words: &'a [u64],
+    word_idx: usize,
+    cur: u64,
+}
+
+impl Iterator for Bits<'_> {
+    type Item = u32;
+
+    fn next(&mut self) -> Option<u32> {
+        while self.cur == 0 {
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.cur = self.words[self.word_idx];
+            self.word_idx += 1;
+        }
+        let t = self.cur.trailing_zeros();
+        self.cur &= self.cur - 1;
+        Some((self.word_idx as u32 - 1) * 64 + t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_unset_roundtrip() {
+        let mut b = BitSet::new();
+        assert!(b.is_empty());
+        for i in [0u32, 1, 63, 64, 65, 127, 128, 1000] {
+            assert!(!b.get(i));
+            b.set(i);
+            assert!(b.get(i));
+        }
+        assert_eq!(b.count(), 8);
+        b.unset(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count(), 7);
+        // unset beyond capacity is a no-op
+        b.unset(100_000);
+    }
+
+    #[test]
+    fn iter_is_ascending_and_complete() {
+        let mut b = BitSet::new();
+        let bits = [5u32, 0, 200, 64, 63, 129];
+        for &i in &bits {
+            b.set(i);
+        }
+        let got: Vec<u32> = b.iter().collect();
+        let mut want = bits.to_vec();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn clear_keeps_capacity_and_pooling_roundtrip() {
+        let mut b = BitSet::new();
+        b.set(300);
+        b.clear();
+        assert!(b.is_empty());
+        let mut words = b.take_words();
+        assert!(!words.is_empty());
+        words.fill(0);
+        let mut b2 = BitSet::from_words(words);
+        assert!(b2.is_empty());
+        b2.set(3);
+        assert_eq!(b2.iter().collect::<Vec<_>>(), vec![3]);
+    }
+
+    #[test]
+    fn iter_matches_btreeset_on_random_bits() {
+        crate::util::property("bits vs btreeset", 32, |rng| {
+            let mut b = BitSet::new();
+            let mut model = std::collections::BTreeSet::new();
+            for _ in 0..100 {
+                let i = rng.range_i64(0, 500) as u32;
+                if rng.range_i64(0, 4) == 0 {
+                    b.unset(i);
+                    model.remove(&i);
+                } else {
+                    b.set(i);
+                    model.insert(i);
+                }
+            }
+            let got: Vec<u32> = b.iter().collect();
+            let want: Vec<u32> = model.iter().copied().collect();
+            assert_eq!(got, want);
+            assert_eq!(b.count() as usize, model.len());
+        });
+    }
+}

@@ -5,6 +5,8 @@
 //! `proptest`, `criterion`, `tokio`) are unavailable; these utilities
 //! provide the subset the system needs, built from scratch.
 
+pub mod alloc_count;
+pub mod bits;
 pub mod fxhash;
 mod rng;
 

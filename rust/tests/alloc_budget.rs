@@ -1,0 +1,80 @@
+//! Allocation-budget regression test for the arena-allocated optimizer
+//! core: an arena-warm compile must allocate strictly less than a cold
+//! one, stay under an absolute budget, and emit a bit-identical
+//! program either way.
+//!
+//! This binary installs the counting global allocator itself (the
+//! library never forces it on its consumers), so the counters here
+//! observe every heap allocation the compile makes.
+
+use da4ml::cmvm::{compile, ArenaMode, CmvmProblem, CompileArena, OptimizeOptions, Strategy};
+use da4ml::util::alloc_count::{count, CountingAlloc};
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Jet-MLP-shaped layer problems (16-64-32-32-5, 8-bit weights) — the
+/// same shape class the perf suite's `net/jet/*` cases compile.
+fn jet_layer_problems() -> Vec<CmvmProblem> {
+    [(16usize, 64usize), (64, 32), (32, 32), (32, 5)]
+        .iter()
+        .enumerate()
+        .map(|(i, &(d_in, d_out))| CmvmProblem::random(4200 + i as u64, d_in, d_out, 8))
+        .collect()
+}
+
+#[test]
+fn arena_warm_compile_allocates_less_and_stays_bit_identical() {
+    let problems = jet_layer_problems();
+    let strategy = Strategy::Da { dc: 2 };
+
+    // Cold: fresh allocations for every layer, no reuse anywhere.
+    let (cold_sols, cold_allocs, _) = count(|| {
+        problems
+            .iter()
+            .map(|p| {
+                let opts = OptimizeOptions::new(strategy).with_arena(ArenaMode::Fresh);
+                compile(p, &opts).expect("compile")
+            })
+            .collect::<Vec<_>>()
+    });
+
+    // Warm the arena on a full pass, then measure a second pass that
+    // reuses the slabs the first one grew.
+    let arena = CompileArena::new();
+    let run = |arena: &CompileArena| {
+        problems
+            .iter()
+            .map(|p| {
+                let opts = OptimizeOptions::new(strategy).with_arena(ArenaMode::Local(arena));
+                compile(p, &opts).expect("compile")
+            })
+            .collect::<Vec<_>>()
+    };
+    let warmup_sols = run(&arena);
+    let (warm_sols, warm_allocs, _) = count(|| run(&arena));
+
+    // Bit-identity: the arena is an allocation policy, not a behavior
+    // knob — all three passes must emit byte-identical programs.
+    for ((c, w0), w1) in cold_sols.iter().zip(&warmup_sols).zip(&warm_sols) {
+        assert_eq!(c.program, w0.program, "cold vs warmup program diverged");
+        assert_eq!(c.program, w1.program, "cold vs warm program diverged");
+        assert_eq!(c.cse, w1.cse, "engine counters diverged");
+    }
+
+    // The budget: warm passes recycle the engine containers, the
+    // pattern bitset words, and the builder's consing map, so they must
+    // allocate strictly less than cold ones — and fit an absolute
+    // ceiling generous enough to survive libstd/HashMap implementation
+    // drift while still catching a lost arena (which costs many
+    // thousands of allocations per layer on these sizes).
+    assert!(cold_allocs > 0, "counting allocator must be live in this binary");
+    assert!(
+        warm_allocs < cold_allocs,
+        "arena-warm pass must allocate less than cold: warm {warm_allocs} vs cold {cold_allocs}"
+    );
+    assert!(
+        warm_allocs < 1_000_000,
+        "warm allocs per 4-layer jet compile blew the absolute budget: {warm_allocs}"
+    );
+}

@@ -40,7 +40,7 @@ fn prop_report_bytes_independent_of_jobs() {
         let d_in = rng.below(4) + 2;
         let d_out = rng.below(4) + 2;
         let m: Vec<i64> = (0..d_in * d_out).map(|_| rng.range_i64(-127, 127)).collect();
-        let target = ExploreTarget::Cmvm(CmvmProblem::new(d_in, d_out, m, 8));
+        let target = ExploreTarget::Cmvm(CmvmProblem::new(d_in, d_out, m, 8).unwrap());
         let r1 = explore::explore(&target, &Coordinator::new(), &smoke(1)).unwrap();
         let r4 = explore::explore(&target, &Coordinator::new(), &smoke(4)).unwrap();
         assert_eq!(explore::schema::render(&r1), explore::schema::render(&r4));

@@ -54,7 +54,9 @@ fn fused_dais_matches_export() {
     for name in ["jet_mlp", "muon", "mixer"] {
         let (spec, vecs) = needs_artifacts!(name);
         for s in [Strategy::NaiveDa, Strategy::Da { dc: 2 }] {
-            let prog = nn::compile::fuse(&spec, s).expect("fuse");
+            let prog = nn::compile::compile(&spec, &nn::compile::CompileOptions::new(s))
+                .expect("compile")
+                .program;
             verify::check_well_formed(&prog).expect("well-formed");
             for (x, want) in vecs.inputs.iter().zip(&vecs.outputs).take(64) {
                 let got = interp::evaluate_checked(&prog, x);
@@ -68,7 +70,8 @@ fn fused_dais_matches_export() {
 #[test]
 fn pipelined_network_streams_at_ii1() {
     let (spec, vecs) = needs_artifacts!("jet_mlp");
-    let prog = nn::compile::fuse(&spec, Strategy::Da { dc: 2 }).unwrap();
+    let opts = nn::compile::CompileOptions::new(Strategy::Da { dc: 2 });
+    let prog = nn::compile::compile(&spec, &opts).unwrap().program;
     for every in [1, 5] {
         let stages = assign_stages(&prog, &PipelineConfig::every_n_adders(every));
         let stream: Vec<Vec<i64>> = vecs.inputs.iter().take(48).cloned().collect();
@@ -95,7 +98,7 @@ fn coordinator_compiles_all_artifact_layers() {
             {
                 let matrix: Vec<i64> = w.iter().flatten().copied().collect();
                 let mut problem =
-                    da4ml::cmvm::CmvmProblem::new(w.len(), b.len(), matrix, 8);
+                    da4ml::cmvm::CmvmProblem::new(w.len(), b.len(), matrix, 8).unwrap();
                 problem.input_qint = vec![qint; w.len()];
                 for strategy in [Strategy::NaiveDa, Strategy::Da { dc: 2 }] {
                     jobs.push(CompileJob {
@@ -126,7 +129,8 @@ fn coordinator_compiles_all_artifact_layers() {
 #[test]
 fn rtl_emission_structural_checks() {
     let (spec, _) = needs_artifacts!("jet_mlp");
-    let prog = nn::compile::fuse(&spec, Strategy::Da { dc: 2 }).unwrap();
+    let opts = nn::compile::CompileOptions::new(Strategy::Da { dc: 2 });
+    let prog = nn::compile::compile(&spec, &opts).unwrap().program;
     let comb = da4ml::rtl::emit_verilog(&prog, "jet", None).unwrap();
     assert_eq!(comb.matches("module ").count(), 1);
     assert!(comb.contains("endmodule"));
@@ -155,7 +159,8 @@ fn rtl_emission_structural_checks() {
 #[test]
 fn netlist_simulation_matches_export_jet() {
     let (spec, vecs) = needs_artifacts!("jet_mlp");
-    let prog = nn::compile::fuse(&spec, Strategy::Da { dc: 2 }).unwrap();
+    let opts = nn::compile::CompileOptions::new(Strategy::Da { dc: 2 });
+    let prog = nn::compile::compile(&spec, &opts).unwrap().program;
     let stream: Vec<Vec<i64>> = vecs.inputs.iter().take(24).cloned().collect();
     let want: Vec<Vec<i64>> = vecs.outputs.iter().take(24).cloned().collect();
     for every in [1, 5] {

@@ -130,8 +130,9 @@ fn serve_emits_rtl_on_request() {
     // Close the loop: the served Verilog is the lowering of the same
     // program the netlist simulator executes, so re-deriving the
     // solution locally and simulating must realize y = x^T M.
-    let prob = da4ml::cmvm::CmvmProblem::new(2, 2, vec![2, 3, 5, 7], 8);
-    let sol = da4ml::cmvm::optimize(&prob, da4ml::cmvm::Strategy::Da { dc: -1 }).unwrap();
+    let prob = da4ml::cmvm::CmvmProblem::new(2, 2, vec![2, 3, 5, 7], 8).unwrap();
+    let opts = da4ml::cmvm::OptimizeOptions::new(da4ml::cmvm::Strategy::Da { dc: -1 });
+    let sol = da4ml::cmvm::compile(&prob, &opts).unwrap();
     let local = da4ml::rtl::emit_verilog(&sol.program, "fc1", None).unwrap();
     assert_eq!(local, v1, "served RTL matches a local emission of the same job");
     let nl = da4ml::netlist::Netlist::lower(&sol.program, None).unwrap();
