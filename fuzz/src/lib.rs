@@ -151,6 +151,7 @@ const TOKENS: &[&[u8]] = &[
     b"\"emit\"",
     b"\"objective\"",
     b"\"verilog\"",
+    b"\"timing\"",
 ];
 
 /// Derive one mutated input: clone a random corpus seed, apply 1..=8

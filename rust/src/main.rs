@@ -135,11 +135,86 @@ fn finish_trace(session: Option<da4ml::obs::TraceSession>) -> Result<()> {
     Ok(())
 }
 
+/// An active `serve --trace-out` session, buffered or streaming.
+enum ServeTrace {
+    /// Chrome-trace (`.json`) output: events buffer in memory and are
+    /// written once at exit (same as every other subcommand).
+    Buffered(da4ml::obs::TraceSession),
+    /// JSONL (`.jsonl`) output: events stream to disk incrementally
+    /// with optional size rotation — the long-lived-server mode, where
+    /// buffering until exit is not an option.
+    Streaming(da4ml::obs::StreamingTraceSession),
+}
+
+/// Start a `serve` trace session when `--trace-out <file>` was passed:
+/// a `.jsonl` path streams (and honours `--trace-rotate-mb`), anything
+/// else buffers like [`begin_trace`].
+fn begin_serve_trace(args: &Args) -> Result<Option<ServeTrace>> {
+    let rotate_mb = match args.flags.get("trace-rotate-mb") {
+        Some(v) => {
+            Some(v.parse::<u64>().map_err(|e| anyhow::anyhow!("--trace-rotate-mb {v}: {e}"))?)
+        }
+        None => None,
+    };
+    let Some(path) = args.flags.get("trace-out") else {
+        anyhow::ensure!(rotate_mb.is_none(), "--trace-rotate-mb requires --trace-out");
+        return Ok(None);
+    };
+    if path.ends_with(".jsonl") {
+        let cfg = da4ml::obs::StreamConfig {
+            path: path.clone(),
+            rotate_bytes: rotate_mb.map(|mb| mb.max(1) * 1024 * 1024),
+        };
+        Ok(Some(ServeTrace::Streaming(da4ml::obs::StreamingTraceSession::begin(cfg)?)))
+    } else {
+        anyhow::ensure!(
+            rotate_mb.is_none(),
+            "--trace-rotate-mb needs a .jsonl --trace-out: rotation streams events \
+             incrementally, while a Chrome trace is buffered and written once at exit"
+        );
+        Ok(Some(ServeTrace::Buffered(da4ml::obs::begin_trace(path))))
+    }
+}
+
+/// Finish a `serve` trace session, reporting where the events went.
+fn finish_serve_trace(session: Option<ServeTrace>) -> Result<()> {
+    match session {
+        None => Ok(()),
+        Some(ServeTrace::Buffered(s)) => {
+            let (trace, metrics) = s.finish()?;
+            eprintln!("trace: wrote {trace} (events) and {metrics} (metrics snapshot)");
+            Ok(())
+        }
+        Some(ServeTrace::Streaming(s)) => {
+            let (trace, metrics) = s.finish()?;
+            eprintln!("trace: streamed {trace} (events) and wrote {metrics} (metrics snapshot)");
+            Ok(())
+        }
+    }
+}
+
+/// Parse one or more JSONL trace logs into a single event list. Files
+/// concatenate in argument order (pass a rotated `.1` file before its
+/// live sibling to keep timestamps monotonic); `dropped_events` is the
+/// max over the inputs, since the counter is cumulative per process.
+fn load_logs(paths: &[String]) -> Result<da4ml::obs::analyze::ParsedLog> {
+    anyhow::ensure!(!paths.is_empty(), "need at least one trace log (a .jsonl event file)");
+    let mut merged = da4ml::obs::analyze::ParsedLog::default();
+    for path in paths {
+        let text = runtime::load_text(path)?;
+        let log = da4ml::obs::analyze::parse_log(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: {e:#}"))?;
+        merged.events.extend(log.events);
+        merged.dropped_events = merged.dropped_events.max(log.dropped_events);
+    }
+    Ok(merged)
+}
+
 fn load_vectors(path: &str) -> Result<TestVectors> {
     TestVectors::from_json(&runtime::load_text(path)?)
 }
 
-const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|serve|perf|explore|cache>
+const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|serve|perf|explore|cache|obs>
   compile [--d-in N] [--d-out N] [--bits B] [--dc D] [--seed S]
   net <spec.weights.json> [--strategy da|latency|naive-da] [--dc D] [--pipe N]
   rtl <spec.weights.json> <out.v|out.vhd> [--pipe N] [--dc D] [--tb testvec.json]
@@ -151,7 +226,7 @@ const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|se
   dot <spec.weights.json> <out.dot> [--dc D]  (Graphviz adder graph)
   serve [--input jobs.jsonl] [--batch N] [--dc D] [--threads T] [--cache-cap N]
         [--cache-shards N] [--cache-load cache.json] [--cache-save cache.json]
-        [--trace-out trace.json]
+        [--trace-out trace.json|trace.jsonl [--trace-rotate-mb N]]
         [--socket /path.sock [--listen host:port] [--workers N]
          [--stats-every N] [--max-inflight N] [--conn-inflight N]]
         [--connect /path.sock|host:port]
@@ -165,8 +240,10 @@ const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|se
          the solution cache with LRU eviction, --cache-shards splits it
          across independently locked shards, --cache-load/--cache-save
          restart the service warm; --trace-out records a Chrome trace +
-         metrics snapshot, see docs/observability.md; wire format in
-         docs/serve.md)
+         metrics snapshot — a .jsonl path streams events incrementally
+         instead, with size rotation via --trace-rotate-mb (live file +
+         one rotated .1 predecessor), see docs/observability.md; wire
+         format in docs/serve.md)
   perf [--smoke] [--runs N] [--out BENCH_cmvm.json] [--trace-out trace.json]
        [--baseline ci/bench_baseline.json] [--bless file] [--with-times]
        (fixed benchmark suite over optimize/lower/emit + the CSE engine
@@ -192,7 +269,19 @@ const USAGE: &str = "usage: da4ml <compile|net|rtl|simulate|golden|verify|dot|se
   cache info <cache.json>            (validate + summarize a cache file)
   cache merge <out.json> <in.json...>
         (union of the inputs; earlier files win on key clashes;
-         persistence format + workflow in docs/cache.md)";
+         persistence format + workflow in docs/cache.md)
+  obs report <trace.jsonl...>        (per-span count/p50/p99/total table)
+  obs critical-path <trace.jsonl...>
+        (per-trace decode -> queue_wait -> execute -> write stage path,
+         one row per trace id; exits nonzero on structural problems)
+  obs diff <baseline.jsonl> <candidate.jsonl> [--time-tolerance F]
+        (compare two trace logs span-by-span with perf-gate tolerances;
+         exits nonzero on regression)
+  obs check <trace.jsonl...>         (structural validation: span ids,
+        parent links, interval containment; exits nonzero on errors)
+        (obs reads JSONL event logs from serve --trace-out x.jsonl;
+         multiple logs concatenate in argument order — list a rotated
+         .1 file before its live sibling; docs/observability.md)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -600,7 +689,7 @@ fn main() -> Result<()> {
                     .map_err(|e| anyhow::anyhow!("loading cache {path}: {e:#}"))?;
                 eprintln!("serve: warm start: loaded {n} solutions from {path}");
             }
-            let trace = begin_trace(&args);
+            let trace = begin_serve_trace(&args)?;
             // Socket server mode: many concurrent clients over the
             // same coordinator; drained gracefully by SIGTERM/SIGINT
             // or a shutdown control line from any client.
@@ -649,7 +738,7 @@ fn main() -> Result<()> {
                     std::fs::write(path, coord.save_cache())?;
                     eprintln!("serve: saved {} cache entries to {path}", coord.cache_len());
                 }
-                finish_trace(trace)?;
+                finish_serve_trace(trace)?;
                 return Ok(());
             }
             if args.flags.contains_key("listen") {
@@ -692,7 +781,81 @@ fn main() -> Result<()> {
                     coord.cache_len()
                 );
             }
-            finish_trace(trace)?;
+            finish_serve_trace(trace)?;
+        }
+        "obs" => {
+            let sub = args.pos(0, "obs subcommand (report|critical-path|diff|check)")?;
+            match sub {
+                "report" => {
+                    let log = load_logs(&args.positional[1..])?;
+                    println!("{}", da4ml::obs::analyze::report(&log.events).render());
+                    println!(
+                        "{} event(s), {} dropped at capture",
+                        log.events.len(),
+                        log.dropped_events
+                    );
+                }
+                "critical-path" => {
+                    let log = load_logs(&args.positional[1..])?;
+                    let cp = da4ml::obs::analyze::critical_path(&log.events);
+                    println!("{}", cp.table.render());
+                    println!("{} trace(s)", cp.traces);
+                    if !cp.problems.is_empty() {
+                        for p in &cp.problems {
+                            eprintln!("problem: {p}");
+                        }
+                        bail!("obs critical-path: {} problem(s)", cp.problems.len());
+                    }
+                }
+                "diff" => {
+                    let base_path = args.pos(1, "baseline trace log")?.to_string();
+                    let cand_path = args.pos(2, "candidate trace log")?.to_string();
+                    let base = load_logs(&[base_path.clone()])?;
+                    let cand = load_logs(&[cand_path.clone()])?;
+                    let default_tol = da4ml::obs::analyze::DEFAULT_TIME_TOLERANCE;
+                    let tol: f64 = args.flag("time-tolerance", default_tol);
+                    let d = da4ml::obs::analyze::diff(&base.events, &cand.events, tol);
+                    for n in &d.notes {
+                        println!("note: {n}");
+                    }
+                    if d.passed() {
+                        println!(
+                            "obs diff: OK ({} metrics checked, {base_path} vs {cand_path})",
+                            d.checked
+                        );
+                    } else {
+                        for r in &d.regressions {
+                            eprintln!("REGRESSION: {r}");
+                        }
+                        bail!(
+                            "obs diff: {} regression(s), {base_path} vs {cand_path}",
+                            d.regressions.len()
+                        );
+                    }
+                }
+                "check" => {
+                    let log = load_logs(&args.positional[1..])?;
+                    let rep = da4ml::obs::analyze::check(&log.events, log.dropped_events);
+                    for n in &rep.notes {
+                        println!("note: {n}");
+                    }
+                    if rep.passed() {
+                        println!(
+                            "obs check: OK ({} event(s), {} dropped at capture)",
+                            rep.events, log.dropped_events
+                        );
+                    } else {
+                        for e in &rep.errors {
+                            eprintln!("ERROR: {e}");
+                        }
+                        bail!("obs check: {} error(s)", rep.errors.len());
+                    }
+                }
+                other => bail!(
+                    "unknown obs subcommand '{other}' \
+                     (expected report|critical-path|diff|check)\n{USAGE}"
+                ),
+            }
         }
         "cache" => {
             match args.pos(0, "cache subcommand (bake|info|merge)")? {

@@ -1,0 +1,594 @@
+//! Offline analysis over JSONL trace logs — the engine behind
+//! `da4ml obs report|critical-path|diff|check`.
+//!
+//! Input is the JSONL event log written by [`super::export::jsonl`] or
+//! streamed by [`super::trace::StreamingTraceSession`] (whose
+//! `trace_meta` header lines are recognized and skipped, their
+//! `dropped_events` counters retained). Rotated generations are
+//! analyzed by passing both files — the caller concatenates
+//! `<path>.1` before `<path>`.
+//!
+//! Four analyses:
+//!
+//! * [`report`] — per-span-name aggregation (count / p50 / p99 /
+//!   total µs) as a [`crate::report::Table`]. Percentiles here are
+//!   *exact* (offline analysis holds every duration), unlike the
+//!   log2-bucket estimates of the live registry.
+//! * [`critical_path`] — per-trace phase reconstruction: every event
+//!   carrying a `trace_id` arg is grouped by it and ordered by begin
+//!   timestamp, yielding the decode → queue_wait → exec → write story
+//!   of each serve job. Jobs whose execution lacks a queue-wait
+//!   interval (or vice versa) are structural problems.
+//! * [`diff`] — two-log comparison with perf-lab semantics
+//!   ([`crate::perf::diff::DiffOutcome`]): a span name present in the
+//!   baseline but missing from the candidate is a regression; mean
+//!   and p99 per span may grow by the relative tolerance with a 1 ms
+//!   absolute jitter floor.
+//! * [`check`] — structural validation: span ids unique (exactly-once
+//!   closure), parents exist on the same thread and contain their
+//!   children in time, per-trace serve phases appear at most once.
+//!   Missing parents downgrade to notes when the log admits drops
+//!   (`dropped_events > 0`) — rotation and buffer overflow discard
+//!   events, not the invariant.
+
+use crate::json::Value;
+use crate::perf::diff::DiffOutcome;
+use crate::report::Table;
+use std::collections::BTreeMap;
+
+/// One parsed trace-log event (owned mirror of [`super::Event`]).
+#[derive(Debug, Clone)]
+pub struct LogEvent {
+    pub name: String,
+    pub cat: String,
+    pub tid: u64,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub span_id: u64,
+    pub parent: u64,
+    pub args: Vec<(String, Value)>,
+}
+
+impl LogEvent {
+    /// String arg by key (e.g. `trace_id`, `id`).
+    pub fn arg_str(&self, key: &str) -> Option<&str> {
+        self.args.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
+            Value::Str(s) => Some(s.as_str()),
+            _ => None,
+        })
+    }
+
+    fn end_us(&self) -> u64 {
+        self.ts_us.saturating_add(self.dur_us)
+    }
+}
+
+/// A parsed JSONL log: the events plus what the meta lines said.
+#[derive(Debug, Default)]
+pub struct ParsedLog {
+    pub events: Vec<LogEvent>,
+    /// Largest `dropped_events` any `trace_meta` line reported (the
+    /// counter is cumulative, so the max is the final value seen).
+    pub dropped_events: u64,
+}
+
+fn field_u64(v: &Value, key: &str) -> crate::Result<u64> {
+    let raw = v.get(key)?.as_i64()?;
+    anyhow::ensure!(raw >= 0, "field '{key}' is negative: {raw}");
+    Ok(raw as u64)
+}
+
+/// Parse a JSONL event log. Every non-blank line must be a JSON
+/// object: either an event (has `name`) or a `trace_meta` header from
+/// the streaming exporter. Anything else is a parse error carrying the
+/// 1-based line number.
+pub fn parse_log(text: &str) -> crate::Result<ParsedLog> {
+    let mut out = ParsedLog::default();
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let lineno = idx + 1;
+        let v = crate::json::parse(line)
+            .map_err(|e| anyhow::anyhow!("line {lineno}: not valid JSON: {e}"))?;
+        if let Some(kind) = v.get_opt("kind").and_then(|k| k.as_str().ok()) {
+            if kind == "trace_meta" {
+                let dropped = field_u64(&v, "dropped_events")
+                    .map_err(|e| anyhow::anyhow!("line {lineno}: bad trace_meta: {e}"))?;
+                out.dropped_events = out.dropped_events.max(dropped);
+                continue;
+            }
+        }
+        let parse_event = || -> crate::Result<LogEvent> {
+            let args = match v.get_opt("args") {
+                Some(Value::Object(map)) => {
+                    map.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+                }
+                _ => Vec::new(),
+            };
+            Ok(LogEvent {
+                name: v.get("name")?.as_str()?.to_string(),
+                cat: v.get("cat")?.as_str()?.to_string(),
+                tid: field_u64(&v, "tid")?,
+                ts_us: field_u64(&v, "ts_us")?,
+                dur_us: field_u64(&v, "dur_us")?,
+                span_id: field_u64(&v, "span_id")?,
+                parent: field_u64(&v, "parent")?,
+                args,
+            })
+        };
+        let event = parse_event()
+            .map_err(|e| anyhow::anyhow!("line {lineno}: not a trace event: {e}"))?;
+        out.events.push(event);
+    }
+    Ok(out)
+}
+
+/// Exact percentile of a *sorted* duration list, using the same rank
+/// convention as the live histograms (`ceil(count * q)`, 1-based,
+/// clamped to `[1, count]`) so the offline and online digests agree on
+/// which sample a percentile names.
+fn exact_percentile(sorted: &[u64], q_num: u64, q_den: u64) -> u64 {
+    let count = sorted.len() as u64;
+    if count == 0 {
+        return 0;
+    }
+    let rank = (count * q_num).div_ceil(q_den).clamp(1, count);
+    sorted[(rank - 1) as usize]
+}
+
+/// Per-span-name aggregate of one log.
+#[derive(Debug, Clone, Default)]
+pub struct SpanAggregate {
+    pub count: u64,
+    pub total_us: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+}
+
+/// Aggregate durations per span name, sorted by name.
+pub fn aggregate(events: &[LogEvent]) -> BTreeMap<String, SpanAggregate> {
+    let mut durs: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+    for e in events {
+        durs.entry(e.name.clone()).or_default().push(e.dur_us);
+    }
+    durs.into_iter()
+        .map(|(name, mut d)| {
+            d.sort_unstable();
+            let count = d.len() as u64;
+            let total: u64 = d.iter().sum();
+            let agg = SpanAggregate {
+                count,
+                total_us: total,
+                p50_us: exact_percentile(&d, 50, 100),
+                p99_us: exact_percentile(&d, 99, 100),
+                mean_us: total as f64 / count as f64,
+            };
+            (name, agg)
+        })
+        .collect()
+}
+
+/// The `obs report` table: one row per span name.
+pub fn report(events: &[LogEvent]) -> Table {
+    let mut table =
+        Table::new("Trace span report", &["span", "count", "p50_us", "p99_us", "total_us"]);
+    for (name, agg) in aggregate(events) {
+        table.push(vec![
+            name,
+            agg.count.to_string(),
+            agg.p50_us.to_string(),
+            agg.p99_us.to_string(),
+            agg.total_us.to_string(),
+        ]);
+    }
+    table
+}
+
+/// `obs critical-path` output: the per-trace table plus any structural
+/// problems (a problem list non-empty should exit nonzero).
+#[derive(Debug)]
+pub struct CriticalPaths {
+    pub table: Table,
+    /// Traces whose phase story is broken (execution without a
+    /// queue-wait, queue-wait without execution, out-of-order phases).
+    pub problems: Vec<String>,
+    pub traces: usize,
+}
+
+/// Group events by their `trace_id` arg and reconstruct each trace's
+/// phase sequence in begin-timestamp order. Events without a
+/// `trace_id` (compile internals, accept spans) are not part of any
+/// job's path and are ignored here.
+pub fn critical_path(events: &[LogEvent]) -> CriticalPaths {
+    let mut traces: BTreeMap<String, Vec<&LogEvent>> = BTreeMap::new();
+    for e in events {
+        if let Some(tid) = e.arg_str("trace_id") {
+            traces.entry(tid.to_string()).or_default().push(e);
+        }
+    }
+    let mut table =
+        Table::new("Per-trace critical path", &["trace_id", "path", "busy_us", "span_us"]);
+    let mut problems = Vec::new();
+    let trace_count = traces.len();
+    for (trace_id, mut evs) in traces {
+        evs.sort_by_key(|e| (e.ts_us, e.span_id));
+        let path: Vec<String> = evs
+            .iter()
+            .map(|e| {
+                let phase = e.name.strip_prefix("serve.").unwrap_or(&e.name);
+                format!("{phase}({}us)", e.dur_us)
+            })
+            .collect();
+        let busy: u64 = evs.iter().map(|e| e.dur_us).sum();
+        let first = evs.iter().map(|e| e.ts_us).min().unwrap_or(0);
+        let last = evs.iter().map(|e| e.end_us()).max().unwrap_or(0);
+        table.push(vec![
+            trace_id.clone(),
+            path.join(" -> "),
+            busy.to_string(),
+            last.saturating_sub(first).to_string(),
+        ]);
+        let wait = evs.iter().find(|e| e.name == "serve.queue_wait");
+        let exec = evs.iter().find(|e| e.name == "serve.execute");
+        match (wait, exec) {
+            (Some(w), Some(x)) => {
+                if w.ts_us > x.ts_us {
+                    problems.push(format!(
+                        "trace '{trace_id}': queue_wait begins at {}us, after execute at {}us",
+                        w.ts_us, x.ts_us
+                    ));
+                }
+            }
+            (None, Some(_)) => {
+                problems
+                    .push(format!("trace '{trace_id}': executed but has no queue_wait interval"));
+            }
+            (Some(_), None) => {
+                problems.push(format!("trace '{trace_id}': queue_wait without an execution"));
+            }
+            (None, None) => {}
+        }
+    }
+    CriticalPaths { table, problems, traces: trace_count }
+}
+
+/// Relative growth tolerance `obs diff` applies to per-span times when
+/// the caller does not override it (same spirit as the perf baseline's
+/// default).
+pub const DEFAULT_TIME_TOLERANCE: f64 = 0.5;
+
+/// Absolute jitter floor in µs: a span whose mean/p99 grew by less
+/// than this never counts as a regression, whatever the ratio —
+/// microsecond spans jitter more than any tolerance can bound.
+pub const JITTER_FLOOR_US: u64 = 1_000;
+
+/// Compare a candidate log against a baseline log, span name by span
+/// name. Perf-lab semantics: coverage loss (a span name disappearing)
+/// is a regression, new span names are notes, and per-span mean / p99
+/// may grow by `time_tolerance` (relative) above the baseline with a
+/// [`JITTER_FLOOR_US`] absolute floor.
+pub fn diff(baseline: &[LogEvent], candidate: &[LogEvent], time_tolerance: f64) -> DiffOutcome {
+    let mut out = DiffOutcome::default();
+    let base = aggregate(baseline);
+    let cand = aggregate(candidate);
+    for (name, b) in &base {
+        out.checked += 1;
+        let Some(c) = cand.get(name) else {
+            out.regressions.push(format!(
+                "span '{name}' ({} events in baseline) is missing from the candidate trace",
+                b.count
+            ));
+            continue;
+        };
+        if b.count != c.count {
+            out.notes.push(format!(
+                "span '{name}': count {} -> {} (different workloads? per-event \
+                 comparison still applies)",
+                b.count, c.count
+            ));
+        }
+        let mut gate = |metric: &str, want: f64, got: f64| {
+            out.checked += 1;
+            let limit = want * (1.0 + time_tolerance);
+            if got > limit && got - want > JITTER_FLOOR_US as f64 {
+                out.regressions.push(format!(
+                    "span '{name}': {metric} {got:.0}us exceeds baseline {want:.0}us \
+                     (+{:.0}% tolerance, {}us floor)",
+                    time_tolerance * 100.0,
+                    JITTER_FLOOR_US
+                ));
+            }
+        };
+        gate("mean", b.mean_us, c.mean_us);
+        gate("p99", b.p99_us as f64, c.p99_us as f64);
+    }
+    for name in cand.keys() {
+        if !base.contains_key(name) {
+            out.notes.push(format!("span '{name}' is new in the candidate trace"));
+        }
+    }
+    out
+}
+
+/// `obs check` output.
+#[derive(Debug, Default)]
+pub struct CheckReport {
+    /// Structural violations; non-empty should exit nonzero.
+    pub errors: Vec<String>,
+    /// Informational findings (e.g. unresolvable parents on a log
+    /// that admits drops).
+    pub notes: Vec<String>,
+    pub events: usize,
+}
+
+impl CheckReport {
+    /// True when the log passed validation.
+    pub fn passed(&self) -> bool {
+        self.errors.is_empty()
+    }
+}
+
+/// Structurally validate a log: every span id unique (a duplicate
+/// means a span closed twice — the exactly-once invariant the serve
+/// tests pin live, checked here offline), every parent reference
+/// resolvable on the same thread and containing its child in time,
+/// and every per-trace serve phase appearing at most once. When the
+/// log admits dropped events (`dropped > 0`, from the `trace_meta`
+/// headers), unresolvable parents become notes — the event may have
+/// been dropped or rotated away, which is bounded-buffer behavior,
+/// not corruption.
+pub fn check(events: &[LogEvent], dropped: u64) -> CheckReport {
+    let mut out = CheckReport { events: events.len(), ..Default::default() };
+    let mut by_id: BTreeMap<u64, &LogEvent> = BTreeMap::new();
+    for e in events {
+        if e.span_id == 0 {
+            out.errors.push(format!("event '{}' at {}us has span_id 0", e.name, e.ts_us));
+            continue;
+        }
+        if let Some(prev) = by_id.insert(e.span_id, e) {
+            out.errors.push(format!(
+                "span id {} recorded twice ('{}' at {}us and '{}' at {}us) — \
+                 a span closed more than once",
+                e.span_id, prev.name, prev.ts_us, e.name, e.ts_us
+            ));
+        }
+    }
+    for e in events {
+        if e.parent == 0 {
+            continue;
+        }
+        let Some(p) = by_id.get(&e.parent) else {
+            let msg = format!(
+                "span {} ('{}') references missing parent {}",
+                e.span_id, e.name, e.parent
+            );
+            if dropped > 0 {
+                out.notes.push(format!("{msg} (log admits {dropped} dropped events)"));
+            } else {
+                out.errors.push(msg);
+            }
+            continue;
+        };
+        if p.tid != e.tid {
+            out.errors.push(format!(
+                "span {} ('{}') on tid {} has parent {} on tid {} — nesting is \
+                 per-thread",
+                e.span_id, e.name, e.tid, p.span_id, p.tid
+            ));
+        }
+        if e.ts_us < p.ts_us || e.end_us() > p.end_us() {
+            out.errors.push(format!(
+                "span {} ('{}') [{}, {}]us escapes its parent {} [{}, {}]us",
+                e.span_id,
+                e.name,
+                e.ts_us,
+                e.end_us(),
+                p.span_id,
+                p.ts_us,
+                p.end_us()
+            ));
+        }
+    }
+    // Per-trace exactly-once: a serve job passes each phase once.
+    let mut seen: BTreeMap<(String, String), u64> = BTreeMap::new();
+    for e in events {
+        if let Some(tid) = e.arg_str("trace_id") {
+            *seen.entry((tid.to_string(), e.name.clone())).or_default() += 1;
+        }
+    }
+    for ((trace_id, name), n) in seen {
+        if n > 1 {
+            out.errors.push(format!(
+                "trace '{trace_id}': phase '{name}' recorded {n} times (expected at most once)"
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(
+        name: &str,
+        span_id: u64,
+        parent: u64,
+        tid: u64,
+        ts: u64,
+        dur: u64,
+        trace_id: Option<&str>,
+    ) -> LogEvent {
+        LogEvent {
+            name: name.into(),
+            cat: "serve".into(),
+            tid,
+            ts_us: ts,
+            dur_us: dur,
+            span_id,
+            parent,
+            args: trace_id
+                .map(|t| vec![("trace_id".to_string(), Value::Str(t.into()))])
+                .unwrap_or_default(),
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_the_jsonl_exporter() {
+        let events = vec![
+            crate::obs::Event {
+                name: "serve.execute",
+                cat: "serve",
+                span_id: 7,
+                parent: 0,
+                tid: 2,
+                ts_us: 100,
+                dur_us: 40,
+                args: vec![
+                    ("id", crate::obs::ArgValue::Str("a".into())),
+                    ("trace_id", crate::obs::ArgValue::Str("client-0#0".into())),
+                ],
+            },
+            crate::obs::Event {
+                name: "serve.queue_wait",
+                cat: "serve",
+                span_id: 8,
+                parent: 0,
+                tid: 2,
+                ts_us: 90,
+                dur_us: 10,
+                args: vec![("trace_id", crate::obs::ArgValue::Str("client-0#0".into()))],
+            },
+        ];
+        let text = format!(
+            "{{\"dropped_events\":3,\"kind\":\"trace_meta\",\"rotation\":0}}\n{}",
+            crate::obs::export::jsonl(&events)
+        );
+        let log = parse_log(&text).unwrap();
+        assert_eq!(log.events.len(), 2);
+        assert_eq!(log.dropped_events, 3);
+        assert_eq!(log.events[0].name, "serve.execute");
+        assert_eq!(log.events[0].arg_str("trace_id"), Some("client-0#0"));
+        assert_eq!(log.events[0].span_id, 7);
+    }
+
+    #[test]
+    fn parse_rejects_garbage_with_line_numbers() {
+        let err = parse_log("{\"name\": \"ok\", \"cat\": \"c\", \"tid\": 1, \"ts_us\": 0, \
+                             \"dur_us\": 1, \"span_id\": 1, \"parent\": 0}\nnot json\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        let err = parse_log("{\"cat\": \"only\"}\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn report_aggregates_exact_percentiles_per_name() {
+        let mut events = Vec::new();
+        for (i, dur) in [10u64, 20, 30, 40].iter().enumerate() {
+            events.push(ev("serve.execute", i as u64 + 1, 0, 1, i as u64 * 100, *dur, None));
+        }
+        events.push(ev("serve.decode", 9, 0, 1, 5, 7, None));
+        let agg = aggregate(&events);
+        let exec = &agg["serve.execute"];
+        assert_eq!(exec.count, 4);
+        assert_eq!(exec.total_us, 100);
+        assert_eq!(exec.p50_us, 20, "rank ceil(4*0.5) = 2 -> 20");
+        assert_eq!(exec.p99_us, 40, "rank ceil(4*0.99) = 4 -> 40");
+        let rendered = report(&events).render();
+        assert!(rendered.contains("serve.execute"), "{rendered}");
+        assert!(rendered.contains("serve.decode"), "{rendered}");
+    }
+
+    #[test]
+    fn critical_path_orders_phases_and_flags_missing_waits() {
+        let events = vec![
+            ev("serve.decode", 1, 0, 1, 0, 5, Some("c#0")),
+            ev("serve.queue_wait", 2, 0, 2, 5, 10, Some("c#0")),
+            ev("serve.execute", 3, 0, 2, 15, 100, Some("c#0")),
+            ev("serve.write", 4, 0, 2, 115, 3, Some("c#0")),
+            // A broken trace: executed with no queue_wait.
+            ev("serve.execute", 5, 0, 2, 200, 50, Some("c#1")),
+        ];
+        let cp = critical_path(&events);
+        assert_eq!(cp.traces, 2);
+        let rendered = cp.table.render();
+        assert!(
+            rendered.contains("decode(5us) -> queue_wait(10us) -> execute(100us) -> write(3us)"),
+            "{rendered}"
+        );
+        assert_eq!(cp.problems.len(), 1);
+        assert!(cp.problems[0].contains("c#1"), "{:?}", cp.problems);
+        assert!(cp.problems[0].contains("no queue_wait"), "{:?}", cp.problems);
+    }
+
+    #[test]
+    fn diff_gates_on_growth_and_coverage() {
+        let base = vec![
+            ev("serve.execute", 1, 0, 1, 0, 10_000, None),
+            ev("serve.decode", 2, 0, 1, 0, 100, None),
+        ];
+        // Identical candidate: passes.
+        assert!(diff(&base, &base, DEFAULT_TIME_TOLERANCE).passed());
+        // 3x slower execute (well past +50% and the 1ms floor).
+        let slow = vec![
+            ev("serve.execute", 1, 0, 1, 0, 30_000, None),
+            ev("serve.decode", 2, 0, 1, 0, 100, None),
+        ];
+        let d = diff(&base, &slow, DEFAULT_TIME_TOLERANCE);
+        assert!(!d.passed());
+        assert!(d.regressions[0].contains("serve.execute"), "{:?}", d.regressions);
+        // A sub-millisecond span can triple without tripping the floor.
+        let jitter = vec![
+            ev("serve.execute", 1, 0, 1, 0, 10_000, None),
+            ev("serve.decode", 2, 0, 1, 0, 300, None),
+        ];
+        assert!(diff(&base, &jitter, DEFAULT_TIME_TOLERANCE).passed());
+        // Coverage loss: a span name vanishing is a regression.
+        let missing = vec![ev("serve.execute", 1, 0, 1, 0, 10_000, None)];
+        let d = diff(&base, &missing, DEFAULT_TIME_TOLERANCE);
+        assert!(!d.passed());
+        assert!(d.regressions[0].contains("serve.decode"), "{:?}", d.regressions);
+    }
+
+    #[test]
+    fn check_catches_structural_violations() {
+        // Clean log passes.
+        let ok = vec![
+            ev("outer", 1, 0, 1, 0, 100, None),
+            ev("inner", 2, 1, 1, 10, 20, None),
+            ev("serve.execute", 3, 0, 2, 50, 10, Some("c#0")),
+        ];
+        let r = check(&ok, 0);
+        assert!(r.passed(), "{:?}", r.errors);
+
+        // Duplicate span id = double closure.
+        let dup = vec![ev("a", 1, 0, 1, 0, 10, None), ev("a", 1, 0, 1, 20, 10, None)];
+        assert!(check(&dup, 0).errors[0].contains("recorded twice"));
+
+        // Missing parent: error on a complete log, note when drops
+        // are admitted.
+        let orphan = vec![ev("inner", 2, 99, 1, 10, 20, None)];
+        assert!(check(&orphan, 0).errors[0].contains("missing parent"));
+        let with_drops = check(&orphan, 5);
+        assert!(with_drops.passed());
+        assert!(with_drops.notes[0].contains("dropped"), "{:?}", with_drops.notes);
+
+        // Child escaping its parent's interval.
+        let escape = vec![ev("outer", 1, 0, 1, 0, 10, None), ev("inner", 2, 1, 1, 5, 50, None)];
+        assert!(check(&escape, 0).errors[0].contains("escapes"));
+
+        // Cross-thread parent.
+        let xthread = vec![ev("outer", 1, 0, 1, 0, 100, None), ev("inner", 2, 1, 9, 5, 10, None)];
+        assert!(check(&xthread, 0).errors[0].contains("per-thread"));
+
+        // A trace phase recorded twice.
+        let twice = vec![
+            ev("serve.execute", 1, 0, 1, 0, 10, Some("c#0")),
+            ev("serve.execute", 2, 0, 1, 50, 10, Some("c#0")),
+        ];
+        assert!(check(&twice, 0).errors[0].contains("recorded 2 times"));
+    }
+}

@@ -55,22 +55,29 @@ pub fn chrome_value(events: &[Event]) -> Value {
     ])
 }
 
+/// One event rendered as a compact JSONL log line (no trailing
+/// newline) — the unit the streaming exporter ([`super::trace`])
+/// appends incrementally.
+pub fn jsonl_event(event: &Event) -> String {
+    let line = obj(vec![
+        ("name", Value::Str(event.name.into())),
+        ("cat", Value::Str(event.cat.into())),
+        ("tid", Value::Int(event.tid as i64)),
+        ("ts_us", Value::Int(event.ts_us as i64)),
+        ("dur_us", Value::Int(event.dur_us as i64)),
+        ("span_id", Value::Int(event.span_id as i64)),
+        ("parent", Value::Int(event.parent as i64)),
+        ("args", event_args(event)),
+    ]);
+    crate::json::to_string(&line)
+}
+
 /// The JSONL event log: one compact JSON object per event, one per
 /// line, in drain order (sorted by timestamp then span id).
 pub fn jsonl(events: &[Event]) -> String {
     let mut out = String::new();
     for event in events {
-        let line = obj(vec![
-            ("name", Value::Str(event.name.into())),
-            ("cat", Value::Str(event.cat.into())),
-            ("tid", Value::Int(event.tid as i64)),
-            ("ts_us", Value::Int(event.ts_us as i64)),
-            ("dur_us", Value::Int(event.dur_us as i64)),
-            ("span_id", Value::Int(event.span_id as i64)),
-            ("parent", Value::Int(event.parent as i64)),
-            ("args", event_args(event)),
-        ]);
-        out.push_str(&crate::json::to_string(&line));
+        out.push_str(&jsonl_event(event));
         out.push('\n');
     }
     out

@@ -96,16 +96,28 @@ pub struct HistSnapshot {
     pub min: u64,
     /// Largest recorded value (0 when empty).
     pub max: u64,
-    /// Estimated 50th percentile (bucket upper bound, clamped to
-    /// `[min, max]`; exact when all samples share a bucket).
+    /// Estimated 50th percentile — the upper bound of the bucket
+    /// holding the `ceil(count/2)`-th sample, clamped to `[min, max]`.
+    /// Exact when all samples share a bucket, otherwise within 2× of
+    /// the true percentile (see [`percentile_from_buckets`] for the
+    /// full clamping rules).
     pub p50: u64,
-    /// Estimated 99th percentile, same convention.
+    /// Estimated 99th percentile, same convention (rank
+    /// `ceil(count * 99/100)`, clamped to `[1, count]`).
     pub p99: u64,
     /// Non-empty buckets as `(log2_index, count)` pairs, ascending.
     pub buckets: Vec<(u32, u64)>,
 }
 
-fn bucket_index(value: u64) -> usize {
+/// Bucket index of a sample. The boundaries are pinned:
+///
+/// * `0` → bucket 0 (exact zeros only),
+/// * an exact power of two `2^(i-1)` is the *lowest* value of bucket
+///   `i` — so `1` → bucket 1, `2` → bucket 2, `1024` → bucket 11,
+/// * `2^i - 1` is the *highest* value of bucket `i`,
+/// * `u64::MAX` → bucket 64 (the only bucket whose upper bound is not
+///   `2^i - 1`).
+pub fn bucket_index(value: u64) -> usize {
     if value == 0 {
         0
     } else {
@@ -113,13 +125,46 @@ fn bucket_index(value: u64) -> usize {
     }
 }
 
-/// Inclusive upper bound of a bucket: the largest value it can hold.
-fn bucket_upper(index: usize) -> u64 {
+/// Inclusive upper bound of a bucket: the largest value it can hold
+/// (`0` for bucket 0, `u64::MAX` for bucket 64, `2^i - 1` otherwise).
+pub fn bucket_upper(index: usize) -> u64 {
     match index {
         0 => 0,
         64 => u64::MAX,
         i => (1u64 << i) - 1,
     }
+}
+
+/// Percentile estimate over sparse `(log2_index, count)` buckets.
+///
+/// The clamping rules (shared by the cumulative [`Histogram`] and the
+/// rolling-window variant in [`super::window`]):
+///
+/// 1. The rank of the q-quantile sample is `ceil(count * q)`, 1-based,
+///    clamped to `[1, count]` — so p99 of a single sample is that
+///    sample's bucket, never an empty rank.
+/// 2. The estimate is the *upper bound* of the bucket holding that
+///    rank, clamped to `[min, max]` of the recorded samples. The
+///    result is exact when all samples share one bucket (the bound
+///    clamps to `max`), and otherwise within 2× of the true
+///    percentile (one log2 bucket of slack).
+pub fn percentile_from_buckets(
+    buckets: &[(u32, u64)],
+    count: u64,
+    min: u64,
+    max: u64,
+    q_num: u64,
+    q_den: u64,
+) -> u64 {
+    let rank = (count * q_num).div_ceil(q_den).clamp(1, count);
+    let mut seen = 0u64;
+    for &(i, n) in buckets {
+        seen += n;
+        if seen >= rank {
+            return bucket_upper(i as usize).clamp(min, max);
+        }
+    }
+    max
 }
 
 impl Histogram {
@@ -162,25 +207,13 @@ impl Histogram {
         }
         let min = core.min.load(Ordering::Relaxed);
         let max = core.max.load(Ordering::Relaxed);
-        let percentile = |q_num: u64, q_den: u64| -> u64 {
-            // Rank of the q-quantile sample, 1-based, ceil(q * count).
-            let rank = (count * q_num).div_ceil(q_den).clamp(1, count);
-            let mut seen = 0u64;
-            for &(i, n) in &buckets {
-                seen += n;
-                if seen >= rank {
-                    return bucket_upper(i as usize).clamp(min, max);
-                }
-            }
-            max
-        };
         HistSnapshot {
             count,
             sum: core.sum.load(Ordering::Relaxed),
             min,
             max,
-            p50: percentile(50, 100),
-            p99: percentile(99, 100),
+            p50: percentile_from_buckets(&buckets, count, min, max, 50, 100),
+            p99: percentile_from_buckets(&buckets, count, min, max, 99, 100),
             buckets,
         }
     }
@@ -312,6 +345,61 @@ mod tests {
         assert_eq!(bucket_upper(0), 0);
         assert_eq!(bucket_upper(2), 3);
         assert_eq!(bucket_upper(64), u64::MAX);
+    }
+
+    /// The edge pins of the bucketing scheme: every exact power of two
+    /// `2^(i-1)` opens bucket `i`, every `2^i - 1` closes it, and each
+    /// bucket's upper bound maps back into the same bucket — so a
+    /// percentile estimate (a bucket upper bound) always lands in the
+    /// bucket it summarizes.
+    #[test]
+    fn every_power_of_two_is_a_bucket_floor() {
+        for i in 1..=63usize {
+            let floor = 1u64 << (i - 1);
+            assert_eq!(bucket_index(floor), i, "2^{} opens bucket {i}", i - 1);
+            assert_eq!(bucket_index(floor - 1), i - 1, "2^{} - 1 closes bucket {}", i - 1, i - 1);
+            assert_eq!(bucket_index(bucket_upper(i)), i, "upper bound stays in bucket {i}");
+        }
+        // The top bucket: 2^63 .. u64::MAX all land in bucket 64.
+        assert_eq!(bucket_index(1u64 << 63), 64);
+        assert_eq!(bucket_index(u64::MAX - 1), 64);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_index(bucket_upper(64)), 64);
+        // The zero bucket holds zeros only.
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_upper(0), 0);
+    }
+
+    #[test]
+    fn u64_max_samples_round_trip_without_overflow() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s.buckets, vec![(64, 1)]);
+        assert_eq!((s.min, s.max), (u64::MAX, u64::MAX));
+        assert_eq!((s.p50, s.p99), (u64::MAX, u64::MAX), "bucket 64's bound is u64::MAX");
+    }
+
+    /// Percentile clamping rules, pinned against hand-computed ranks:
+    /// rank = ceil(count * q) clamped to [1, count]; result = bucket
+    /// upper bound clamped to [min, max].
+    #[test]
+    fn percentile_rank_and_clamp_rules_are_exact() {
+        // Two buckets: 4 samples of 10 ([8,15]) + 1 sample of 100
+        // ([64,127]). p50 rank = ceil(5*0.5) = 3 → bucket 4, bound 15.
+        // p99 rank = ceil(5*0.99) = 5 → bucket 7, bound 127 clamped to
+        // max = 100.
+        let buckets = vec![(4u32, 4u64), (7, 1)];
+        assert_eq!(percentile_from_buckets(&buckets, 5, 10, 100, 50, 100), 15);
+        assert_eq!(percentile_from_buckets(&buckets, 5, 10, 100, 99, 100), 100);
+        // Single sample: every percentile clamps to that sample.
+        let one = vec![(4u32, 1u64)];
+        assert_eq!(percentile_from_buckets(&one, 1, 9, 9, 1, 100), 9);
+        assert_eq!(percentile_from_buckets(&one, 1, 9, 9, 99, 100), 9);
+        // min-clamp: when the rank bucket's bound undershoots min
+        // (possible only via the [min, max] clamp on bucket 0).
+        let zeros_then_big = vec![(0u32, 1u64), (10, 99)];
+        assert_eq!(percentile_from_buckets(&zeros_then_big, 100, 0, 1000, 1, 100), 0);
     }
 
     #[test]

@@ -23,8 +23,13 @@
 //! Exporters ([`export`]): Chrome trace-event JSON (loadable in
 //! Perfetto / `chrome://tracing`) and a JSONL event log. The CLI wires
 //! both through `--trace-out` on `perf` / `explore` / `serve`
-//! ([`begin_trace`] / [`TraceSession::finish`]); the serve wire exposes
-//! the metrics snapshot as a `{"type": "metrics"}` control line.
+//! ([`begin_trace`] / [`TraceSession::finish`]); `serve` with a
+//! `.jsonl` path streams incrementally with size-based rotation
+//! instead ([`trace`]). The serve wire exposes the metrics snapshot as
+//! a `{"type": "metrics"}` control line, and its stats lines carry
+//! rolling-window latency digests ([`window`]). Recorded logs are
+//! analyzed offline by `da4ml obs report|critical-path|diff|check`
+//! ([`analyze`]).
 //!
 //! **Determinism contract**: timing lives *beside* the deterministic
 //! surfaces, never inside them. Enabling tracing must not change a
@@ -32,11 +37,16 @@
 //! `rust/tests/failure_injection.rs`. Full field reference:
 //! `docs/observability.md`.
 
+pub mod analyze;
 pub mod export;
 pub mod metrics;
 pub mod schema;
+pub mod trace;
+pub mod window;
 
 pub use metrics::{metrics, Counter, Gauge, Histogram, MetricsRegistry};
+pub use trace::{StreamConfig, StreamingTraceSession};
+pub use window::WindowedHistogram;
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -292,6 +302,15 @@ pub fn drain_events() -> Vec<Event> {
 /// [`take_dropped_events`].
 pub fn dropped_events() -> u64 {
     DROPPED.load(Ordering::SeqCst)
+}
+
+/// Events currently waiting in the per-thread buffers (trace-buffer
+/// pressure): how close the process is to dropping. Counts events
+/// recorded but not yet collected by [`drain_events`] — under the
+/// streaming exporter this is at most one flush interval's worth.
+pub fn buffered_events() -> u64 {
+    let bufs: Vec<Arc<ThreadBuf>> = buffers().lock().unwrap().clone();
+    bufs.iter().map(|b| b.events.lock().unwrap().len() as u64).sum()
 }
 
 /// Read and reset the dropped-event counter.

@@ -1,0 +1,309 @@
+//! Streaming trace export with size-based rotation — the long-lived
+//! server's alternative to [`super::TraceSession`]'s buffer-at-exit
+//! model.
+//!
+//! A [`StreamingTraceSession`] enables tracing and starts one flusher
+//! thread that periodically drains the per-thread event buffers
+//! ([`super::drain_events`]) and appends each event as a JSONL line
+//! ([`super::export::jsonl_event`]) to the output file, so a crash
+//! loses at most one flush interval of events instead of the whole
+//! run. With a rotation cap (`--trace-rotate-mb` on `da4ml serve`) the
+//! total trace footprint on disk is bounded:
+//!
+//! * the live file rotates to `<path>.1` when appending the next line
+//!   would push it past **half** the cap,
+//! * exactly one rotated generation is kept (`<path>.1` is replaced),
+//!   so `size(path) + size(path.1) ≤ cap` at all times,
+//! * every file (re)starts with a `trace_meta` header line carrying
+//!   the cumulative `dropped_events` counter, which is process-global
+//!   — rotation discards old *events*, never the drop accounting.
+//!
+//! Streaming is JSONL-only: a Chrome trace is a single JSON document
+//! and cannot be appended to ([`super::metrics_sibling`] still gets a
+//! metrics snapshot at finish). `da4ml obs check/report` consume the
+//! rotated pair by concatenation; `trace_meta` lines are recognized
+//! and skipped by [`super::analyze`].
+
+use std::fs::File;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How often the flusher thread drains the event buffers.
+const FLUSH_INTERVAL: Duration = Duration::from_millis(200);
+
+/// Configuration for [`StreamingTraceSession::begin`].
+pub struct StreamConfig {
+    /// Output path (must end in `.jsonl`).
+    pub path: String,
+    /// Total on-disk cap in bytes across the live file and the one
+    /// rotated generation; `None` = never rotate.
+    pub rotate_bytes: Option<u64>,
+}
+
+struct Sink {
+    path: String,
+    /// Per-file rotation threshold (`rotate_bytes / 2`), `None` = no
+    /// rotation.
+    file_cap: Option<u64>,
+    file: File,
+    written: u64,
+    rotations: u64,
+}
+
+impl Sink {
+    fn open(path: &str, rotate_bytes: Option<u64>) -> std::io::Result<Sink> {
+        let file = File::create(path)?;
+        let mut sink = Sink {
+            path: path.to_string(),
+            // Two generations share the cap; a cap so small the header
+            // alone would trip it still rotates correctly (the header
+            // is written without a cap check).
+            file_cap: rotate_bytes.map(|b| (b / 2).max(1)),
+            file,
+            written: 0,
+            rotations: 0,
+        };
+        sink.write_meta()?;
+        Ok(sink)
+    }
+
+    /// The `<path>.1` rotated-generation path.
+    fn rotated_path(path: &str) -> String {
+        format!("{path}.1")
+    }
+
+    fn write_meta(&mut self) -> std::io::Result<()> {
+        // Keys sorted like every other artifact in the tree. The
+        // dropped counter is process-global: each generation's header
+        // carries the cumulative value at its creation, so the
+        // accounting survives however many files rotation discards.
+        let line = format!(
+            "{{\"dropped_events\":{},\"kind\":\"trace_meta\",\"rotation\":{}}}\n",
+            super::dropped_events(),
+            self.rotations,
+        );
+        self.written += line.len() as u64;
+        self.file.write_all(line.as_bytes())
+    }
+
+    fn rotate(&mut self) -> std::io::Result<()> {
+        self.file.flush()?;
+        std::fs::rename(&self.path, Self::rotated_path(&self.path))?;
+        self.file = File::create(&self.path)?;
+        self.written = 0;
+        self.rotations += 1;
+        self.write_meta()
+    }
+
+    fn append(&mut self, line: &str) -> std::io::Result<()> {
+        let len = line.len() as u64 + 1;
+        if let Some(cap) = self.file_cap {
+            if self.written > 0 && self.written + len > cap {
+                self.rotate()?;
+            }
+        }
+        self.written += len;
+        self.file.write_all(line.as_bytes())?;
+        self.file.write_all(b"\n")
+    }
+
+    fn flush_events(&mut self) -> std::io::Result<()> {
+        let events = super::drain_events();
+        for event in &events {
+            self.append(&super::export::jsonl_event(event))?;
+        }
+        if !events.is_empty() {
+            self.file.flush()?;
+        }
+        Ok(())
+    }
+}
+
+/// An active streaming `--trace-out` session: tracing is enabled for
+/// its lifetime, a background thread incrementally flushes events, and
+/// [`StreamingTraceSession::finish`] performs the final drain and
+/// writes the metrics snapshot beside the trace.
+pub struct StreamingTraceSession {
+    path: String,
+    stop: Arc<AtomicBool>,
+    error: Arc<Mutex<Option<std::io::Error>>>,
+    flusher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StreamingTraceSession {
+    /// Enable tracing and start the flusher thread. Fails if the path
+    /// does not end in `.jsonl` (streaming has no Chrome-JSON mode) or
+    /// the output file cannot be created.
+    pub fn begin(cfg: StreamConfig) -> crate::Result<StreamingTraceSession> {
+        anyhow::ensure!(
+            cfg.path.ends_with(".jsonl"),
+            "streaming trace export requires a .jsonl path, got '{}' \
+             (Chrome trace JSON cannot be appended to)",
+            cfg.path
+        );
+        super::enable();
+        let mut sink = Sink::open(&cfg.path, cfg.rotate_bytes)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let error: Arc<Mutex<Option<std::io::Error>>> = Arc::new(Mutex::new(None));
+        let flusher = {
+            let stop = Arc::clone(&stop);
+            let error = Arc::clone(&error);
+            std::thread::Builder::new()
+                .name("obs-flush".into())
+                .spawn(move || {
+                    loop {
+                        let stopping = stop.load(Ordering::SeqCst);
+                        if let Err(e) = sink.flush_events() {
+                            *error.lock().unwrap() = Some(e);
+                            return;
+                        }
+                        if stopping {
+                            // The final drain above ran *after* the
+                            // stop flag was observed, so every event
+                            // recorded before finish() is on disk.
+                            return;
+                        }
+                        std::thread::sleep(FLUSH_INTERVAL);
+                    }
+                })
+                .expect("spawn obs flusher thread")
+        };
+        Ok(StreamingTraceSession { path: cfg.path, stop, error, flusher: Some(flusher) })
+    }
+
+    /// Disable tracing, stop the flusher (which performs one final
+    /// drain), and write the metrics snapshot. Returns
+    /// `(trace_path, metrics_path)`.
+    pub fn finish(mut self) -> crate::Result<(String, String)> {
+        super::disable();
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.flusher.take() {
+            let _ = handle.join();
+        }
+        if let Some(e) = self.error.lock().unwrap().take() {
+            return Err(anyhow::anyhow!("trace flusher failed: {e}"));
+        }
+        let metrics_path = super::metrics_sibling(&self.path);
+        std::fs::write(&metrics_path, super::schema::render())?;
+        Ok((self.path, metrics_path))
+    }
+}
+
+impl Drop for StreamingTraceSession {
+    fn drop(&mut self) {
+        // finish() already joined; this only runs on early drops
+        // (error paths) — stop the thread rather than leaking it.
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.flusher.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::tests::obs_lock;
+
+    fn temp_path(tag: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!(
+            "da4ml_trace_{tag}_{}_{:?}.jsonl",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        p.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn non_jsonl_paths_are_rejected() {
+        match StreamingTraceSession::begin(StreamConfig {
+            path: "trace.json".into(),
+            rotate_bytes: None,
+        }) {
+            Ok(_) => panic!("chrome paths cannot stream"),
+            Err(err) => assert!(err.to_string().contains(".jsonl"), "{err}"),
+        }
+    }
+
+    #[test]
+    fn streams_events_and_writes_metrics_sibling() {
+        let _guard = obs_lock();
+        crate::obs::disable();
+        let _ = crate::obs::drain_events();
+        let path = temp_path("stream");
+        let session =
+            StreamingTraceSession::begin(StreamConfig { path: path.clone(), rotate_bytes: None })
+                .unwrap();
+        {
+            let mut s = crate::obs::span("test", "stream.case");
+            s.arg("n", 1);
+        }
+        let (trace_path, metrics_path) = session.finish().unwrap();
+        let body = std::fs::read_to_string(&trace_path).unwrap();
+        let mut names = Vec::new();
+        for line in body.lines() {
+            let v = crate::json::parse(line).expect("every line is valid JSON");
+            if let Ok(name) = v.get("name").map(|n| n.as_str().unwrap().to_string()) {
+                names.push(name);
+            } else {
+                assert_eq!(v.get("kind").unwrap().as_str().unwrap(), "trace_meta");
+            }
+        }
+        assert!(names.contains(&"stream.case".to_string()), "{names:?}");
+        assert!(std::fs::metadata(&metrics_path).is_ok());
+        let _ = std::fs::remove_file(&trace_path);
+        let _ = std::fs::remove_file(&metrics_path);
+    }
+
+    /// The rotation bound: under a sustained hammer of events the live
+    /// file plus the single rotated generation never exceed the cap.
+    #[test]
+    fn rotation_bounds_total_disk_under_sustained_load() {
+        let _guard = obs_lock();
+        crate::obs::disable();
+        let _ = crate::obs::drain_events();
+        let path = temp_path("rotate");
+        let cap: u64 = 16 * 1024;
+        let session = StreamingTraceSession::begin(StreamConfig {
+            path: path.clone(),
+            rotate_bytes: Some(cap),
+        })
+        .unwrap();
+        // Hammer: far more event bytes than the cap, across several
+        // flush intervals so rotation happens mid-stream.
+        for round in 0..4i64 {
+            for i in 0..600i64 {
+                let mut s = crate::obs::span("test", "rotate.hammer");
+                s.arg("round", round);
+                s.arg("i", i);
+            }
+            std::thread::sleep(Duration::from_millis(250));
+            let live = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            let old = std::fs::metadata(Sink::rotated_path(&path)).map(|m| m.len()).unwrap_or(0);
+            assert!(
+                live + old <= cap,
+                "trace disk {live} + {old} exceeds the {cap}-byte cap mid-run"
+            );
+        }
+        let (trace_path, metrics_path) = session.finish().unwrap();
+        let live = std::fs::metadata(&trace_path).map(|m| m.len()).unwrap_or(0);
+        let rotated_path = Sink::rotated_path(&trace_path);
+        let old = std::fs::metadata(&rotated_path).map(|m| m.len()).unwrap_or(0);
+        assert!(live + old <= cap, "final trace disk {live} + {old} exceeds the {cap}-byte cap");
+        assert!(old > 0, "the hammer must actually have rotated");
+        // Rotation preserved the drop accounting: every generation
+        // opens with a trace_meta header carrying the global counter.
+        for p in [&trace_path, &rotated_path] {
+            let body = std::fs::read_to_string(p).unwrap();
+            let first = crate::json::parse(body.lines().next().unwrap()).unwrap();
+            assert_eq!(first.get("kind").unwrap().as_str().unwrap(), "trace_meta");
+            assert!(first.get("dropped_events").unwrap().as_i64().is_ok());
+        }
+        let _ = std::fs::remove_file(&trace_path);
+        let _ = std::fs::remove_file(&rotated_path);
+        let _ = std::fs::remove_file(&metrics_path);
+    }
+}

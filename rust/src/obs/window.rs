@@ -1,0 +1,233 @@
+//! Rolling-window histograms: the same fixed-log2-bucket digest as
+//! [`super::metrics::Histogram`], but over the *last W microseconds*
+//! instead of the process lifetime — so a week-old latency spike
+//! cannot pollute a live server's stats line forever.
+//!
+//! The window is a ring of `SLOTS` sub-histograms, each covering
+//! `window / SLOTS` microseconds. Recording lands a sample in the slot
+//! owning its timestamp; a slot whose epoch has lapsed is reset before
+//! reuse, and snapshots merge only slots still inside the window. Both
+//! operations take explicit timestamps (`record_at` / `snapshot_at`)
+//! so expiry is a pure function of the arguments — the clock-reading
+//! conveniences ([`WindowedHistogram::record`] /
+//! [`WindowedHistogram::snapshot`]) just pass [`super::now_us`].
+//!
+//! Percentile derivation is shared byte-for-byte with the cumulative
+//! histogram ([`super::metrics::percentile_from_buckets`]): on a single
+//! window the two digests agree exactly (pinned by a unit test).
+//!
+//! Unlike registry histograms these are plain values guarded by one
+//! mutex, owned by their call site (e.g. the socket server's stats
+//! digests) — they are windows over a site, not process-global names.
+
+use super::metrics::{percentile_from_buckets, HistSnapshot, HIST_BUCKETS};
+use std::sync::Mutex;
+
+/// Ring granularity: the window is covered by this many slots, so
+/// expiry resolution is `window / SLOTS`.
+pub const SLOTS: usize = 16;
+
+/// Sentinel for "slot never written" (no valid epoch).
+const EMPTY: u64 = u64::MAX;
+
+struct Slot {
+    /// Absolute slot number (`ts / slot_width`) this slot currently
+    /// holds, or [`EMPTY`].
+    epoch: u64,
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot { epoch: EMPTY, buckets: [0; HIST_BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    fn reset(&mut self, epoch: u64) {
+        self.epoch = epoch;
+        self.buckets = [0; HIST_BUCKETS];
+        self.count = 0;
+        self.sum = 0;
+        self.min = u64::MAX;
+        self.max = 0;
+    }
+}
+
+/// A histogram whose snapshot covers only the last `window_us`
+/// microseconds (to slot granularity).
+pub struct WindowedHistogram {
+    window_us: u64,
+    slot_width_us: u64,
+    ring: Mutex<Vec<Slot>>,
+}
+
+impl WindowedHistogram {
+    /// A window of `window_us` microseconds (clamped to at least
+    /// [`SLOTS`], so every slot spans ≥ 1 µs).
+    pub fn new(window_us: u64) -> Self {
+        let window_us = window_us.max(SLOTS as u64);
+        WindowedHistogram {
+            window_us,
+            slot_width_us: window_us.div_ceil(SLOTS as u64),
+            ring: Mutex::new((0..SLOTS).map(|_| Slot::new()).collect()),
+        }
+    }
+
+    /// The configured window width in microseconds.
+    pub fn window_us(&self) -> u64 {
+        self.window_us
+    }
+
+    /// Record one sample stamped `now_us` (microseconds since the
+    /// trace epoch). Samples are attributed to the slot owning their
+    /// timestamp; a slot holding data from a lapsed epoch is reset
+    /// first, so the ring never mixes generations.
+    pub fn record_at(&self, now_us: u64, value: u64) {
+        let epoch = now_us / self.slot_width_us;
+        let mut ring = self.ring.lock().unwrap();
+        let slot = &mut ring[(epoch % SLOTS as u64) as usize];
+        if slot.epoch != epoch {
+            slot.reset(epoch);
+        }
+        slot.buckets[super::metrics::bucket_index(value)] += 1;
+        slot.count += 1;
+        // Wrapping like the cumulative histogram's atomic sum, so the
+        // two digests agree bit-for-bit even on extreme samples.
+        slot.sum = slot.sum.wrapping_add(value);
+        slot.min = slot.min.min(value);
+        slot.max = slot.max.max(value);
+    }
+
+    /// Record one sample at the current monotonic time.
+    pub fn record(&self, value: u64) {
+        self.record_at(super::now_us(), value);
+    }
+
+    /// Digest of the samples whose slots are still inside the window
+    /// ending at `now_us`. A slot is live when its epoch is within the
+    /// last [`SLOTS`] epochs (the current one included); everything
+    /// older has expired and is excluded without being touched.
+    pub fn snapshot_at(&self, now_us: u64) -> HistSnapshot {
+        let epoch = now_us / self.slot_width_us;
+        let oldest_live = epoch.saturating_sub(SLOTS as u64 - 1);
+        let ring = self.ring.lock().unwrap();
+        let mut merged = [0u64; HIST_BUCKETS];
+        let mut count = 0u64;
+        let mut sum = 0u64;
+        let mut min = u64::MAX;
+        let mut max = 0u64;
+        for slot in ring.iter() {
+            if slot.epoch == EMPTY || slot.epoch < oldest_live || slot.epoch > epoch {
+                continue;
+            }
+            for (m, b) in merged.iter_mut().zip(slot.buckets.iter()) {
+                *m += b;
+            }
+            count += slot.count;
+            sum = sum.wrapping_add(slot.sum);
+            min = min.min(slot.min);
+            max = max.max(slot.max);
+        }
+        if count == 0 {
+            return HistSnapshot::default();
+        }
+        let buckets: Vec<(u32, u64)> = merged
+            .iter()
+            .enumerate()
+            .filter(|&(_, &n)| n > 0)
+            .map(|(i, &n)| (i as u32, n))
+            .collect();
+        HistSnapshot {
+            count,
+            sum,
+            min,
+            max,
+            p50: percentile_from_buckets(&buckets, count, min, max, 50, 100),
+            p99: percentile_from_buckets(&buckets, count, min, max, 99, 100),
+            buckets,
+        }
+    }
+
+    /// Digest of the window ending now.
+    pub fn snapshot(&self) -> HistSnapshot {
+        self.snapshot_at(super::now_us())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// On a single window the rolling digest must agree with the
+    /// cumulative histogram exactly — same counts, same buckets, same
+    /// percentile bytes.
+    #[test]
+    fn agrees_with_cumulative_histogram_inside_one_window() {
+        let w = WindowedHistogram::new(1_000_000);
+        // A registry histogram under a test-unique name: the registry
+        // is process-global, so the name must not collide.
+        let c = crate::obs::metrics().histogram("test.window.agreement");
+        let samples = [0u64, 1, 7, 8, 15, 16, 100, 5_000, 5_000, 65_535, u64::MAX];
+        for (i, &v) in samples.iter().enumerate() {
+            w.record_at(10_000 * i as u64, v);
+            c.record(v);
+        }
+        let ws = w.snapshot_at(10_000 * samples.len() as u64);
+        let cs = c.snapshot();
+        assert_eq!(ws, cs, "windowed and cumulative digests diverged on one window");
+    }
+
+    /// Expiry is deterministic in the explicit timestamps: advancing
+    /// `now` past the window drops old samples at slot granularity,
+    /// and a snapshot never mutates the ring.
+    #[test]
+    fn window_advance_expires_old_samples_deterministically() {
+        let w = WindowedHistogram::new(SLOTS as u64 * 100); // slot = 100 µs
+        w.record_at(50, 10); // slot epoch 0
+        w.record_at(150, 20); // slot epoch 1
+        assert_eq!(w.snapshot_at(200).count, 2, "both inside the window");
+        // now = 1_550 → epoch 15, oldest live epoch = 15 - 15 = 0: the
+        // epoch-0 sample is still (just) inside the window.
+        assert_eq!(w.snapshot_at(1_550).count, 2, "epoch 0 is the oldest live slot");
+        // now = 1_650 → epoch 16, oldest live = 1: the epoch-0 sample
+        // has expired, epoch 1 survives.
+        let s = w.snapshot_at(1_650);
+        assert_eq!(s.count, 1);
+        assert_eq!((s.min, s.max), (20, 20));
+        // Snapshots are read-only: the same call repeated agrees.
+        assert_eq!(w.snapshot_at(1_650), s);
+        // A full window later everything is gone.
+        assert_eq!(w.snapshot_at(10_000).count, 0);
+    }
+
+    /// A lapsed slot is reset on reuse, not merged: a sample landing in
+    /// the same ring position one full revolution later must not see
+    /// the old generation's counts.
+    #[test]
+    fn ring_reuse_resets_lapsed_slots() {
+        let w = WindowedHistogram::new(SLOTS as u64 * 100);
+        w.record_at(50, 1); // epoch 0, ring position 0
+        w.record_at(50 + SLOTS as u64 * 100, 2); // epoch 16, same position
+        let s = w.snapshot_at(50 + SLOTS as u64 * 100);
+        assert_eq!(s.count, 1, "old generation must be reset, not merged");
+        assert_eq!((s.min, s.max), (2, 2));
+    }
+
+    #[test]
+    fn empty_window_snapshot_is_zeroed() {
+        let w = WindowedHistogram::new(1_000);
+        assert_eq!(w.snapshot_at(0), HistSnapshot::default());
+        assert_eq!(w.snapshot_at(u64::MAX / 2), HistSnapshot::default());
+    }
+
+    #[test]
+    fn tiny_window_is_clamped_to_slot_count() {
+        let w = WindowedHistogram::new(1);
+        assert_eq!(w.window_us(), SLOTS as u64);
+        w.record_at(0, 5);
+        assert_eq!(w.snapshot_at(0).count, 1);
+    }
+}

@@ -19,6 +19,8 @@
 //! backpressure) and the per-client counters behind the `client_*`
 //! stats fields.
 
+use super::core::{self, JobTiming};
+use crate::json::{self, Value};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::ops::Range;
@@ -144,6 +146,26 @@ impl<R: Read> LineReader<R> {
     }
 }
 
+/// One reply waiting in (or passing through) the resequencing buffer.
+pub(crate) enum Reply {
+    /// A rendered line, written verbatim at its turn. Every untimed
+    /// reply takes this path, so its bytes are fixed the moment the
+    /// job finishes — resequencing cannot perturb them.
+    Ready(String),
+    /// A `"timing": true` job's reply: kept as a [`Value`] and
+    /// rendered at drain time, when the write-wait (time spent parked
+    /// behind earlier replies) is known and can be injected into the
+    /// `"timing"` object.
+    Timed {
+        /// The built reply object, without its `"timing"` key yet.
+        reply: Value,
+        /// Stage timings measured so far (`write_wait_us` still 0).
+        timing: JobTiming,
+        /// Clock at job completion — write wait is measured from here.
+        completed_us: u64,
+    },
+}
+
 /// How a reply line should be counted — the one place the per-client
 /// and global accounting can't drift apart.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -172,6 +194,10 @@ pub(crate) struct ConnCounters {
     pub errors: u64,
     pub rejected_busy: u64,
     pub cache_hits: u64,
+    /// Lowest and highest sequence number of any *executed* job on
+    /// this connection — the `trace_ids` range on the final stats
+    /// line (`<client>#<lo>..<client>#<hi>`). `None` until a job ran.
+    pub job_seq_range: Option<(u64, u64)>,
 }
 
 struct ConnInner {
@@ -180,7 +206,7 @@ struct ConnInner {
     /// Next sequence number whose reply goes on the wire.
     next_write: u64,
     /// Replies that completed ahead of their turn.
-    pending: BTreeMap<u64, String>,
+    pending: BTreeMap<u64, Reply>,
     /// This connection's accepted-but-unanswered jobs.
     inflight: usize,
     counters: ConnCounters,
@@ -262,7 +288,7 @@ impl Conn {
     /// client's replies leave in its own submission order. Returns the
     /// number of sequenced lines drained to the wire in this pass
     /// (the `--stats-every` cadence counter).
-    pub(crate) fn complete(&self, seq: u64, line: String, kind: ReplyKind) -> u64 {
+    pub(crate) fn complete(&self, seq: u64, reply: Reply, kind: ReplyKind) -> u64 {
         let mut g = self.inner.lock().unwrap();
         match kind {
             ReplyKind::Result { cache_hit } => {
@@ -283,10 +309,25 @@ impl Conn {
             ReplyKind::ShuttingDown => g.counters.errors += 1,
             ReplyKind::Control => {}
         }
-        g.pending.insert(seq, line);
+        if matches!(kind, ReplyKind::Result { .. } | ReplyKind::JobError) {
+            g.counters.job_seq_range = Some(match g.counters.job_seq_range {
+                None => (seq, seq),
+                Some((lo, hi)) => (lo.min(seq), hi.max(seq)),
+            });
+        }
+        g.pending.insert(seq, reply);
         let mut wrote = 0u64;
-        while let Some(line) = g.pending.remove(&g.next_write) {
+        while let Some(reply) = g.pending.remove(&g.next_write) {
             g.next_write += 1;
+            let line = match reply {
+                Reply::Ready(line) => line,
+                Reply::Timed { reply, mut timing, completed_us } => {
+                    let mut reply = reply;
+                    timing.write_wait_us = crate::obs::now_us().saturating_sub(completed_us);
+                    core::inject_timing(&mut reply, &timing);
+                    json::to_string(&reply)
+                }
+            };
             // The reply is drained whether or not the socket is still
             // writable: the job was accepted and answered, and the
             // accounting must not depend on the client sticking around.
@@ -421,18 +462,71 @@ mod tests {
         for _ in 0..3 {
             conn.begin_job();
         }
-        conn.complete(2, "r2".into(), ReplyKind::Result { cache_hit: true });
+        conn.complete(2, Reply::Ready("r2".into()), ReplyKind::Result { cache_hit: true });
         conn.job_done();
         assert_eq!(sink.lock().unwrap().len(), 0, "seq 2 must wait for 0 and 1");
-        conn.complete(0, "r0".into(), ReplyKind::Result { cache_hit: false });
+        conn.complete(0, Reply::Ready("r0".into()), ReplyKind::Result { cache_hit: false });
         conn.job_done();
-        conn.complete(1, "e1".into(), ReplyKind::JobError);
+        conn.complete(1, Reply::Ready("e1".into()), ReplyKind::JobError);
         conn.job_done();
         conn.wait_idle();
         let text = String::from_utf8(sink.lock().unwrap().clone()).unwrap();
         assert_eq!(text, "r0\ne1\nr2\n");
         let c = conn.counters();
         assert_eq!((c.jobs, c.replies, c.errors, c.cache_hits), (3, 3, 1, 1));
+        assert_eq!(c.job_seq_range, Some((0, 2)), "trace-id range spans executed jobs");
+    }
+
+    /// A timed reply is rendered at drain time with its `"timing"`
+    /// object injected, so the write wait covers the whole park behind
+    /// earlier replies.
+    #[test]
+    fn timed_replies_render_with_timing_at_drain() {
+        let sink = Arc::new(Mutex::new(Vec::<u8>::new()));
+        struct SharedSink(Arc<Mutex<Vec<u8>>>);
+        impl Write for SharedSink {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let conn = Conn::new("client-0".into(), Box::new(SharedSink(sink.clone())));
+        conn.begin_job();
+        conn.begin_job();
+        let mut o = BTreeMap::new();
+        o.insert("id".to_string(), Value::Str("t".into()));
+        o.insert("type".to_string(), Value::Str("result".into()));
+        let timed = Reply::Timed {
+            reply: Value::Object(o),
+            timing: JobTiming {
+                trace_id: "client-0#1".into(),
+                decode_us: 3,
+                queue_wait_us: 5,
+                exec_us: 7,
+                write_wait_us: 0,
+            },
+            completed_us: 0,
+        };
+        // Seq 1 completes first: it parks behind seq 0 and renders
+        // only when seq 0 unblocks the drain.
+        conn.complete(1, timed, ReplyKind::Result { cache_hit: false });
+        conn.job_done();
+        assert_eq!(sink.lock().unwrap().len(), 0, "seq 1 must wait for 0");
+        conn.complete(0, Reply::Ready("r0".into()), ReplyKind::Result { cache_hit: false });
+        conn.job_done();
+        conn.wait_idle();
+        let text = String::from_utf8(sink.lock().unwrap().clone()).unwrap();
+        let timed_line = text.lines().nth(1).unwrap();
+        let v = json::parse(timed_line).unwrap();
+        let t = v.get("timing").unwrap();
+        assert_eq!(t.get("decode_us").unwrap().as_i64().unwrap(), 3);
+        assert_eq!(t.get("queue_wait_us").unwrap().as_i64().unwrap(), 5);
+        assert_eq!(t.get("exec_us").unwrap().as_i64().unwrap(), 7);
+        assert_eq!(t.get("trace_id").unwrap().as_str().unwrap(), "client-0#1");
+        assert!(t.get("write_wait_us").unwrap().as_i64().unwrap() >= 0);
     }
 
     /// A failing writer marks the connection dead; later completions
@@ -451,11 +545,11 @@ mod tests {
         let conn = Conn::new("client-0".into(), Box::new(FailingSink));
         conn.begin_job();
         conn.begin_job();
-        conn.complete(0, "r0".into(), ReplyKind::Result { cache_hit: false });
+        conn.complete(0, Reply::Ready("r0".into()), ReplyKind::Result { cache_hit: false });
         conn.job_done();
         assert!(conn.is_dead());
         // The second completion must not block or panic.
-        conn.complete(1, "r1".into(), ReplyKind::Result { cache_hit: false });
+        conn.complete(1, Reply::Ready("r1".into()), ReplyKind::Result { cache_hit: false });
         conn.job_done();
         conn.wait_idle();
         assert!(!conn.write_line("stats"));

@@ -42,8 +42,11 @@ pub(crate) enum WorkPayload {
 /// One lowered wire line: executable work, a control request, or an
 /// immediate error reply.
 pub(crate) enum Lowered {
-    /// A job to execute (reply built by [`run_payload`]).
-    Work { id: String, payload: WorkPayload },
+    /// A job to execute (reply built by [`run_payload`]). `timing` is
+    /// the job's `"timing": true` opt-in: the transport then measures
+    /// the job across its stages and attaches a [`JobTiming`] object
+    /// to the reply.
+    Work { id: String, timing: bool, payload: WorkPayload },
     /// A control line (`shutdown` / `stats` / `metrics`):
     /// transport-level, answered by the transport itself.
     Control { id: Option<String>, op: ControlOp },
@@ -62,7 +65,11 @@ pub(crate) fn lower_line(line: &str, line_no: u64, default_dc: i32) -> Lowered {
                 .to_compile_job(id.clone(), default_dc)
                 .and_then(|job| Ok((job, req.emit_lang()?)));
             match lowered {
-                Ok((job, emit)) => Lowered::Work { id, payload: WorkPayload::Job { job, emit } },
+                Ok((job, emit)) => Lowered::Work {
+                    id,
+                    timing: req.timing,
+                    payload: WorkPayload::Job { job, emit },
+                },
                 Err(e) => Lowered::Bad { id: Some(id), error: format!("{e:#}") },
             }
         }
@@ -71,6 +78,7 @@ pub(crate) fn lower_line(line: &str, line_no: u64, default_dc: i32) -> Lowered {
             match req.validate() {
                 Ok((target, space, objective)) => Lowered::Work {
                     id,
+                    timing: req.timing,
                     payload: WorkPayload::Explore { target, space, objective },
                 },
                 Err(e) => Lowered::Bad { id: Some(id), error: format!("{e:#}") },
@@ -241,6 +249,47 @@ pub(crate) fn explore_reply(
     Ok(Value::Object(o))
 }
 
+/// Per-stage wall-clock microseconds for one `"timing": true` job,
+/// assembled by the transport as the job crosses each stage. Becomes
+/// the reply's `"timing"` object — only on jobs that opted in, so an
+/// untimed reply keeps its exact historical bytes.
+pub(crate) struct JobTiming {
+    /// The job's trace correlation id (`client-<n>#<seq>` on the
+    /// socket transport, `stdin#<line#>` on stdin).
+    pub trace_id: String,
+    /// Wire-decode + lowering time.
+    pub decode_us: u64,
+    /// Time between lowering and execution start (queue residency on
+    /// the socket transport, batch residency on stdin).
+    pub queue_wait_us: u64,
+    /// Job execution time.
+    pub exec_us: u64,
+    /// Time the built reply waited for earlier replies to drain
+    /// (socket write resequencing; always 0 on stdin).
+    pub write_wait_us: u64,
+}
+
+impl JobTiming {
+    /// The `"timing"` object (keys sorted, like every reply).
+    pub(crate) fn value(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("decode_us".into(), Value::Int(self.decode_us as i64));
+        o.insert("exec_us".into(), Value::Int(self.exec_us as i64));
+        o.insert("queue_wait_us".into(), Value::Int(self.queue_wait_us as i64));
+        o.insert("trace_id".into(), Value::Str(self.trace_id.clone()));
+        o.insert("write_wait_us".into(), Value::Int(self.write_wait_us as i64));
+        Value::Object(o)
+    }
+}
+
+/// Attach a timing object to a built reply (result, explore, or error
+/// — a failed timed job still reports where its time went).
+pub(crate) fn inject_timing(reply: &mut Value, timing: &JobTiming) {
+    if let Value::Object(o) = reply {
+        o.insert("timing".into(), timing.value());
+    }
+}
+
 /// Build one `"type": "error"` reply (`id` is `null` when the line was
 /// not correlatable).
 pub(crate) fn error_reply(id: Option<&str>, error: &str) -> Value {
@@ -306,12 +355,35 @@ pub(crate) fn metrics_value(id: Option<&str>) -> Value {
     v
 }
 
+/// Decode-stage measurements captured when a `"timing": true` job was
+/// lowered on the stdin transport.
+struct TimedDecode {
+    trace_id: String,
+    decode_us: u64,
+    /// Clock at decode end — batch residency is measured from here.
+    ready_us: u64,
+}
+
 /// One batch entry on the stdin transport: a lowered compile job, a
 /// validated explore job, or an immediate error reply.
 enum Pending {
-    Job { id: String, job: CompileJob, emit: Option<EmitLang> },
-    Explore { id: String, target: ExploreTarget, space: SpaceConfig, objective: Option<Objective> },
-    Bad { id: Option<String>, error: String },
+    Job {
+        id: String,
+        job: CompileJob,
+        emit: Option<EmitLang>,
+        timed: Option<TimedDecode>,
+    },
+    Explore {
+        id: String,
+        target: ExploreTarget,
+        space: SpaceConfig,
+        objective: Option<Objective>,
+        timed: Option<TimedDecode>,
+    },
+    Bad {
+        id: Option<String>,
+        error: String,
+    },
 }
 
 /// Run the serve loop: read JSONL jobs from `input` until EOF, stream
@@ -350,55 +422,72 @@ pub fn serve_with<R: BufRead, W: Write>(
         line_no += 1;
         let entry = match line {
             Ok(line) if line.trim().is_empty() => continue,
-            Ok(line) => match lower_line(&line, line_no, cfg.default_dc) {
-                Lowered::Work { id, payload: WorkPayload::Job { job, emit } } => {
-                    Pending::Job { id, job, emit }
-                }
-                Lowered::Work { id, payload: WorkPayload::Explore { target, space, objective } } => {
-                    Pending::Explore { id, target, space, objective }
-                }
-                Lowered::Bad { id, error } => Pending::Bad { id, error },
-                Lowered::Control { op: ControlOp::Stats { scope }, .. } => {
-                    // On-demand stats: flush buffered jobs first (their
-                    // batch emits its own stats line), then answer with
-                    // a fresh cumulative stats line. On stdin the
-                    // "connection" is the stream itself, so connection
-                    // scope answers with the stream-local counters only.
-                    flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
-                    match scope {
-                        StatsScope::Server => emit_stats_line(coord, output, &summary)?,
-                        StatsScope::Connection => {
-                            let mut o = BTreeMap::new();
-                            o.insert("type".into(), Value::Str("stats".into()));
-                            o.insert("scope".into(), Value::Str("connection".into()));
-                            o.insert("jobs".into(), Value::Int(summary.jobs as i64));
-                            o.insert("replies".into(), Value::Int(summary.replies as i64));
-                            o.insert("errors".into(), Value::Int(summary.errors as i64));
-                            o.insert("batches".into(), Value::Int(summary.batches as i64));
-                            writeln!(output, "{}", json::to_string(&Value::Object(o)))?;
-                            output.flush()?;
+            Ok(line) => {
+                let decode_start_us = crate::obs::now_us();
+                match lower_line(&line, line_no, cfg.default_dc) {
+                    Lowered::Work { id, timing, payload } => {
+                        let timed = timing.then(|| {
+                            let ready_us = crate::obs::now_us();
+                            TimedDecode {
+                                trace_id: format!("stdin#{line_no}"),
+                                decode_us: ready_us.saturating_sub(decode_start_us),
+                                ready_us,
+                            }
+                        });
+                        match payload {
+                            WorkPayload::Job { job, emit } => {
+                                Pending::Job { id, job, emit, timed }
+                            }
+                            WorkPayload::Explore { target, space, objective } => {
+                                Pending::Explore { id, target, space, objective, timed }
+                            }
                         }
                     }
-                    continue;
+                    Lowered::Bad { id, error } => Pending::Bad { id, error },
+                    Lowered::Control { op: ControlOp::Stats { scope }, .. } => {
+                        // On-demand stats: flush buffered jobs first
+                        // (their batch emits its own stats line), then
+                        // answer with a fresh cumulative stats line. On
+                        // stdin the "connection" is the stream itself,
+                        // so connection scope answers with the
+                        // stream-local counters only.
+                        flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
+                        match scope {
+                            StatsScope::Server => emit_stats_line(coord, output, &summary)?,
+                            StatsScope::Connection => {
+                                let mut o = BTreeMap::new();
+                                o.insert("type".into(), Value::Str("stats".into()));
+                                o.insert("scope".into(), Value::Str("connection".into()));
+                                o.insert("jobs".into(), Value::Int(summary.jobs as i64));
+                                o.insert("replies".into(), Value::Int(summary.replies as i64));
+                                o.insert("errors".into(), Value::Int(summary.errors as i64));
+                                o.insert("batches".into(), Value::Int(summary.batches as i64));
+                                writeln!(output, "{}", json::to_string(&Value::Object(o)))?;
+                                output.flush()?;
+                            }
+                        }
+                        continue;
+                    }
+                    Lowered::Control { id, op: ControlOp::Metrics } => {
+                        // Observability snapshot on demand: flush
+                        // buffered jobs so their counters land first,
+                        // then answer with the schema-versioned metrics
+                        // document.
+                        flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
+                        writeln!(output, "{}", json::to_string(&metrics_value(id.as_deref())))?;
+                        output.flush()?;
+                        continue;
+                    }
+                    Lowered::Control { op: ControlOp::Shutdown, .. } => {
+                        // Graceful drain: flush buffered jobs, emit the
+                        // final stats line, stop reading (like EOF).
+                        flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
+                        emit_stats_line(coord, output, &summary)?;
+                        summary.stats = coord.stats();
+                        return Ok(summary);
+                    }
                 }
-                Lowered::Control { id, op: ControlOp::Metrics } => {
-                    // Observability snapshot on demand: flush buffered
-                    // jobs so their counters land first, then answer
-                    // with the schema-versioned metrics document.
-                    flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
-                    writeln!(output, "{}", json::to_string(&metrics_value(id.as_deref())))?;
-                    output.flush()?;
-                    continue;
-                }
-                Lowered::Control { op: ControlOp::Shutdown, .. } => {
-                    // Graceful drain: flush buffered jobs, emit the
-                    // final stats line, stop reading (like EOF).
-                    flush_batch(coord, &mut batch, output, cfg, &mut summary)?;
-                    emit_stats_line(coord, output, &summary)?;
-                    summary.stats = coord.stats();
-                    return Ok(summary);
-                }
-            },
+            }
             // A non-UTF-8 line is one more malformed request, not a
             // reason to tear down the service and drop buffered jobs
             // (`lines()` has already consumed the offending bytes).
@@ -425,11 +514,32 @@ pub fn serve_with<R: BufRead, W: Write>(
 /// One reply slot after the jobs have been moved out for compilation:
 /// correlation metadata only (the job itself is not cloned). Explore
 /// jobs (already validated) are executed at reply time against the
-/// shared coordinator.
+/// shared coordinator — and so are *timed* compile jobs, whose
+/// `exec_us` is a per-job measurement the parallel batch cannot
+/// provide.
 enum Slot {
-    Job { id: String, idx: usize, emit: Option<EmitLang> },
-    Explore { id: String, target: ExploreTarget, space: SpaceConfig, objective: Option<Objective> },
-    Bad { id: Option<String>, error: String },
+    Job {
+        id: String,
+        idx: usize,
+        emit: Option<EmitLang>,
+    },
+    TimedJob {
+        id: String,
+        job: CompileJob,
+        emit: Option<EmitLang>,
+        timed: TimedDecode,
+    },
+    Explore {
+        id: String,
+        target: ExploreTarget,
+        space: SpaceConfig,
+        objective: Option<Objective>,
+        timed: Option<TimedDecode>,
+    },
+    Bad {
+        id: Option<String>,
+        error: String,
+    },
 }
 
 /// Write the cumulative stdin-transport stats line (`batch` counter +
@@ -451,6 +561,19 @@ fn emit_stats_line<W: Write>(
     Ok(())
 }
 
+/// Assemble the stdin transport's [`JobTiming`]: queue wait is batch
+/// residency (decode end → flush start) and stdin replies stream in
+/// input order with no resequencing, so `write_wait_us` is always 0.
+fn stdin_timing(timed: TimedDecode, flush_start_us: u64, exec_us: u64) -> JobTiming {
+    JobTiming {
+        trace_id: timed.trace_id,
+        decode_us: timed.decode_us,
+        queue_wait_us: flush_start_us.saturating_sub(timed.ready_us),
+        exec_us,
+        write_wait_us: 0,
+    }
+}
+
 /// Compile the batched jobs through the coordinator and stream one
 /// reply line per entry (input order), then the batch stats line.
 /// No-op on an empty batch.
@@ -465,18 +588,22 @@ fn flush_batch<W: Write>(
         return Ok(());
     }
     summary.batches += 1;
+    let flush_start_us = crate::obs::now_us();
     // Move the jobs out for the worker pool; keep only correlation
     // metadata (id, original position) on this side.
     let mut jobs = Vec::new();
     let mut slots = Vec::with_capacity(batch.len());
     for entry in std::mem::take(batch) {
         match entry {
-            Pending::Job { id, job, emit } => {
+            Pending::Job { id, job, emit, timed: None } => {
                 slots.push(Slot::Job { id, idx: jobs.len(), emit });
                 jobs.push(job);
             }
-            Pending::Explore { id, target, space, objective } => {
-                slots.push(Slot::Explore { id, target, space, objective })
+            Pending::Job { id, job, emit, timed: Some(timed) } => {
+                slots.push(Slot::TimedJob { id, job, emit, timed })
+            }
+            Pending::Explore { id, target, space, objective, timed } => {
+                slots.push(Slot::Explore { id, target, space, objective, timed })
             }
             Pending::Bad { id, error } => slots.push(Slot::Bad { id, error }),
         }
@@ -489,15 +616,33 @@ fn flush_batch<W: Write>(
                 summary.errors += 1;
                 error_reply(id.as_deref(), &error)
             }
-            Slot::Explore { id, target, space, objective } => {
+            Slot::Explore { id, target, space, objective, timed } => {
                 summary.jobs += 1;
-                match explore_reply(coord, &id, &target, space, objective, cfg) {
+                let exec_start_us = crate::obs::now_us();
+                let mut reply = match explore_reply(coord, &id, &target, space, objective, cfg) {
                     Ok(reply) => reply,
                     Err(e) => {
                         summary.errors += 1;
                         error_reply(Some(id.as_str()), &format!("{e:#}"))
                     }
+                };
+                if let Some(timed) = timed {
+                    let exec_us = crate::obs::now_us().saturating_sub(exec_start_us);
+                    inject_timing(&mut reply, &stdin_timing(timed, flush_start_us, exec_us));
                 }
+                reply
+            }
+            Slot::TimedJob { id, job, emit, timed } => {
+                summary.jobs += 1;
+                let exec_start_us = crate::obs::now_us();
+                let outcome = run_payload(coord, &id, WorkPayload::Job { job, emit }, cfg);
+                let exec_us = crate::obs::now_us().saturating_sub(exec_start_us);
+                if outcome.is_err {
+                    summary.errors += 1;
+                }
+                let mut reply = outcome.reply;
+                inject_timing(&mut reply, &stdin_timing(timed, flush_start_us, exec_us));
+                reply
             }
             Slot::Job { id, idx, emit } => {
                 summary.jobs += 1;

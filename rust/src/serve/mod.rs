@@ -160,6 +160,12 @@ pub struct JobRequest {
     /// carries the combinational RTL text of the solution in an
     /// `"rtl"` field.
     pub emit: Option<String>,
+    /// Per-job timing opt-in (`"timing": true`): the reply then
+    /// carries a `"timing"` object (decode / queue-wait / exec /
+    /// write-wait microseconds plus the job's `trace_id`). Off by
+    /// default — an untimed reply is byte-identical whether or not
+    /// tracing is enabled.
+    pub timing: bool,
 }
 
 /// RTL language requested by a job's `"emit"` field.
@@ -247,6 +253,9 @@ pub struct ExploreRequest {
     /// Optional objective (`min-lut` | `min-latency` | `knee`); the
     /// reply then carries the `picked` front point.
     pub objective: Option<String>,
+    /// Per-job timing opt-in, same semantics as
+    /// [`JobRequest::timing`].
+    pub timing: bool,
 }
 
 impl ExploreRequest {
@@ -312,6 +321,7 @@ impl Request {
         let mut space = None;
         let mut objective = None;
         let mut scope = None;
+        let mut timing: Option<bool> = None;
         d.object_start()?;
         while let Some(key) = d.next_key()? {
             match key.as_ref() {
@@ -326,6 +336,7 @@ impl Request {
                 "space" => space = Some(d.string()?),
                 "objective" => objective = Some(d.string()?),
                 "scope" => scope = Some(d.string()?),
+                "timing" => timing = Some(d.bool()?),
                 _ => d.skip_value()?,
             }
         }
@@ -342,7 +353,8 @@ impl Request {
                 ensure!(scope.is_none(), "field 'scope' requires \"type\": \"stats\"");
                 let matrix = matrix.ok_or_else(|| anyhow::anyhow!("missing field 'matrix'"))?;
                 let bits = bits.unwrap_or(8);
-                Ok(Request::Compile(JobRequest { id, matrix, bits, strategy, dc, emit }))
+                let timing = timing.unwrap_or(false);
+                Ok(Request::Compile(JobRequest { id, matrix, bits, strategy, dc, emit, timing }))
             }
             Some("explore") => {
                 for (field, present) in [
@@ -353,7 +365,16 @@ impl Request {
                     ensure!(!present, "field '{field}' does not apply to explore jobs");
                 }
                 ensure!(scope.is_none(), "field 'scope' requires \"type\": \"stats\"");
-                Ok(Request::Explore(ExploreRequest { id, matrix, spec, bits, space, objective }))
+                let timing = timing.unwrap_or(false);
+                Ok(Request::Explore(ExploreRequest {
+                    id,
+                    matrix,
+                    spec,
+                    bits,
+                    space,
+                    objective,
+                    timing,
+                }))
             }
             Some(ty @ ("shutdown" | "stats" | "metrics")) => {
                 for (field, present) in [
@@ -365,6 +386,7 @@ impl Request {
                     ("spec", spec.is_some()),
                     ("space", space.is_some()),
                     ("objective", objective.is_some()),
+                    ("timing", timing.is_some()),
                 ] {
                     ensure!(!present, "field '{field}' does not apply to control lines");
                 }
@@ -514,6 +536,29 @@ mod tests {
         // dc must fit i32 — no silent wrap-around on the wire.
         let bad_dc = JobRequest::from_json(r#"{"matrix": [[1]], "dc": 4294967296}"#).unwrap();
         assert!(bad_dc.to_compile_job("j".into(), -1).is_err());
+    }
+
+    /// The `"timing"` opt-in decodes on both job types (absent and
+    /// explicit `false` are the same request), is a strict boolean,
+    /// and is rejected on control lines.
+    #[test]
+    fn timing_field_decodes_on_jobs_and_is_strict() {
+        let req = JobRequest::from_json(r#"{"matrix": [[1]]}"#).unwrap();
+        assert!(!req.timing);
+        let req = JobRequest::from_json(r#"{"matrix": [[1]], "timing": false}"#).unwrap();
+        assert!(!req.timing);
+        let req = JobRequest::from_json(r#"{"matrix": [[1]], "timing": true}"#).unwrap();
+        assert!(req.timing);
+        match Request::from_json(r#"{"type": "explore", "matrix": [[1]], "timing": true}"#)
+            .unwrap()
+        {
+            Request::Explore(req) => assert!(req.timing),
+            other => panic!("expected explore job, got {other:?}"),
+        }
+        assert!(Request::from_json(r#"{"matrix": [[1]], "timing": 1}"#).is_err());
+        assert!(Request::from_json(r#"{"type": "shutdown", "timing": true}"#).is_err());
+        assert!(Request::from_json(r#"{"type": "stats", "timing": true}"#).is_err());
+        assert!(Request::from_json(r#"{"type": "metrics", "timing": false}"#).is_err());
     }
 
     /// Control lines decode on the shared wire; job fields on a control
@@ -1130,6 +1175,11 @@ not even json
                 if let Some(e) = &emit {
                     o.insert("emit".into(), Value::Str(e.clone()));
                 }
+                // Explicit false must decode like an absent field.
+                let timing = if rng.chance(0.3) { Some(rng.chance(0.5)) } else { None };
+                if let Some(t) = timing {
+                    o.insert("timing".into(), Value::Bool(t));
+                }
                 Request::Compile(JobRequest {
                     id,
                     matrix,
@@ -1137,6 +1187,7 @@ not even json
                     strategy,
                     dc,
                     emit,
+                    timing: timing.unwrap_or(false),
                 })
             }
             2 => {
@@ -1168,6 +1219,10 @@ not even json
                 if let Some(obj) = &objective {
                     o.insert("objective".into(), Value::Str(obj.clone()));
                 }
+                let timing = if rng.chance(0.3) { Some(rng.chance(0.5)) } else { None };
+                if let Some(t) = timing {
+                    o.insert("timing".into(), Value::Bool(t));
+                }
                 Request::Explore(ExploreRequest {
                     id,
                     matrix: Some(matrix),
@@ -1175,6 +1230,7 @@ not even json
                     bits,
                     space,
                     objective,
+                    timing: timing.unwrap_or(false),
                 })
             }
             _ => {
@@ -1227,6 +1283,12 @@ not even json
                 Some(v) => Ok(Some(v.as_i64()?)),
             }
         };
+        let get_bool = |key: &str| -> Result<Option<bool>> {
+            match obj.get(key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(v.as_bool()?)),
+            }
+        };
         let ty = get_str("type")?;
         let id = get_str("id")?;
         let matrix = match obj.get("matrix") {
@@ -1240,6 +1302,7 @@ not even json
         let space = get_str("space")?;
         let objective = get_str("objective")?;
         let scope = get_str("scope")?;
+        let timing = get_bool("timing")?;
         match ty.as_deref() {
             None | Some("compile") => {
                 ensure!(space.is_none() && objective.is_none(), "explore-only field");
@@ -1252,6 +1315,7 @@ not even json
                     strategy,
                     dc,
                     emit,
+                    timing: timing.unwrap_or(false),
                 }))
             }
             Some("explore") => {
@@ -1267,6 +1331,7 @@ not even json
                     bits,
                     space,
                     objective,
+                    timing: timing.unwrap_or(false),
                 }))
             }
             Some(ty @ ("shutdown" | "stats" | "metrics")) => {
@@ -1277,7 +1342,8 @@ not even json
                         && dc.is_none()
                         && emit.is_none()
                         && space.is_none()
-                        && objective.is_none(),
+                        && objective.is_none()
+                        && timing.is_none(),
                     "job field on a control line"
                 );
                 let op = match ty {
@@ -1333,6 +1399,10 @@ not even json
             r#"{"matrix": [[1]], "scope": "connection"}"#,
             r#"{"type": "explore", "matrix": [[1]], "scope": "server"}"#,
             r#"{"type": "warmup"}"#,
+            r#"{"type": "shutdown", "timing": true}"#,
+            r#"{"type": "stats", "timing": false}"#,
+            r#"{"type": "metrics", "timing": true}"#,
+            r#"{"matrix": [[1]], "timing": "yes"}"#,
             r#"{"matrix": [[1]], "bits": "eight"}"#,
             r#"{}"#,
             r#"[1, 2]"#,

@@ -32,11 +32,12 @@
 //! transport's — both are rendered by the same core. Wire format and
 //! stats fields: `docs/serve.md`.
 
-use super::conn::{Conn, LineReader, NextLine, ReplyKind};
+use super::conn::{Conn, LineReader, NextLine, Reply, ReplyKind};
 use super::core::{self, Lowered, WorkPayload};
 use super::{ControlOp, ServeConfig, StatsScope};
 use crate::coordinator::{Coordinator, CoordinatorStats};
 use crate::json::{self, Value};
+use crate::obs::WindowedHistogram;
 use crate::Result;
 use anyhow::{bail, Context};
 use std::collections::{BTreeMap, VecDeque};
@@ -219,16 +220,26 @@ struct Totals {
     rejected_busy: AtomicU64,
 }
 
+/// Rolling window behind the stats line's latency percentiles: the
+/// socket `queue_wait_us_*` / `exec_us_*` fields digest the last
+/// minute, not the process lifetime, so a long-gone spike ages out of
+/// a long-lived server's stats.
+const STATS_WINDOW_US: u64 = 60_000_000;
+
 /// Metrics-registry handles for the socket transport's hot path. The
-/// counters and gauges are always-on relaxed atomics; only the clock
-/// reads feeding the latency histograms are gated on
-/// [`crate::obs::enabled`], so the disabled path costs one relaxed
-/// load per job and allocates nothing.
+/// counters and gauges are always-on relaxed atomics; the clock reads
+/// feeding the latency histograms run when tracing is enabled or the
+/// job opted into `"timing"`, so the cold path costs one relaxed load
+/// per job and allocates nothing.
 struct ServerObs {
     /// Microseconds a job sat on the shared queue (reader → worker).
     queue_wait_us: crate::obs::Histogram,
     /// Microseconds a worker spent executing a job.
     exec_us: crate::obs::Histogram,
+    /// Rolling-window twin of `queue_wait_us` (stats-line digest).
+    queue_wait_win: WindowedHistogram,
+    /// Rolling-window twin of `exec_us` (stats-line digest).
+    exec_win: WindowedHistogram,
     /// Jobs sitting on the shared queue right now.
     queue_depth: crate::obs::Gauge,
     /// Workers currently executing a job (utilization gauge).
@@ -241,6 +252,8 @@ impl ServerObs {
         Self {
             queue_wait_us: m.histogram("serve.queue_wait_us"),
             exec_us: m.histogram("serve.exec_us"),
+            queue_wait_win: WindowedHistogram::new(STATS_WINDOW_US),
+            exec_win: WindowedHistogram::new(STATS_WINDOW_US),
             queue_depth: m.gauge("serve.queue_depth"),
             workers_busy: m.gauge("serve.workers_busy"),
         }
@@ -253,10 +266,14 @@ struct Work {
     seq: u64,
     id: String,
     payload: WorkPayload,
-    /// Enqueue timestamp ([`crate::obs::now_us`]); `None` when tracing
-    /// is disabled — the queue-wait histogram needs a clock read, which
-    /// is exactly the cost the disabled path avoids.
+    /// Enqueue timestamp ([`crate::obs::now_us`]); `None` when neither
+    /// tracing nor per-job timing wants it — the queue-wait histogram
+    /// needs a clock read, which is exactly the cost the cold path
+    /// avoids.
     enqueued_us: Option<u64>,
+    /// Wire-decode time; `Some` iff the job posted `"timing": true`,
+    /// in which case the reply carries a `"timing"` object.
+    decode_us: Option<u64>,
 }
 
 /// State shared by the accept loop, reader threads, and worker pool.
@@ -357,11 +374,13 @@ enum StatsFlavor {
 fn stats_line(shared: &Shared, conn: &Conn, flavor: StatsFlavor) -> String {
     let c = conn.counters();
     let t = &shared.totals;
-    // Latency digests from the obs histograms. They fill only while
-    // tracing is enabled (the clock reads are gated); untraced servers
-    // report zeros here — the fields stay so clients parse one shape.
-    let qw = shared.obs.queue_wait_us.snapshot();
-    let ex = shared.obs.exec_us.snapshot();
+    // Latency digests from the rolling-window histograms: the
+    // percentiles cover the last STATS_WINDOW_US, not the process
+    // lifetime. They fill only for traced or `"timing": true` jobs
+    // (the clock reads are gated); otherwise the digests report zeros
+    // — the fields stay so clients parse one shape.
+    let qw = shared.obs.queue_wait_win.snapshot();
+    let ex = shared.obs.exec_win.snapshot();
     let mut extra = vec![
         ("clients", Value::Int(shared.live_clients() as i64)),
         ("clients_total", Value::Int(t.clients.load(Ordering::SeqCst) as i64)),
@@ -371,6 +390,11 @@ fn stats_line(shared: &Shared, conn: &Conn, flavor: StatsFlavor) -> String {
         ("queue_wait_us_p99", Value::Int(qw.p99 as i64)),
         ("exec_us_p50", Value::Int(ex.p50 as i64)),
         ("exec_us_p99", Value::Int(ex.p99 as i64)),
+        // Trace-pipeline pressure: events dropped at full per-thread
+        // buffers (process-global, survives rotation) and events
+        // currently buffered awaiting a drain.
+        ("dropped_events", Value::Int(crate::obs::dropped_events() as i64)),
+        ("trace_buffered", Value::Int(crate::obs::buffered_events() as i64)),
         ("client", Value::Str(conn.name.clone())),
         ("client_jobs", Value::Int(c.jobs as i64)),
         ("client_replies", Value::Int(c.replies as i64)),
@@ -382,6 +406,16 @@ fn stats_line(shared: &Shared, conn: &Conn, flavor: StatsFlavor) -> String {
         StatsFlavor::Cumulative => {}
         StatsFlavor::DrainAck => extra.push(("draining", Value::Bool(true))),
         StatsFlavor::Final => extra.push(("final", Value::Bool(true))),
+    }
+    // The final line also reports the connection's trace-id range, so
+    // a client can find its own jobs in an exported trace without
+    // parsing span args.
+    let trace_ids = c.job_seq_range.map(|(lo, hi)| {
+        let name = &conn.name;
+        format!("{name}#{lo}..{name}#{hi}")
+    });
+    if let (StatsFlavor::Final, Some(range)) = (&flavor, trace_ids) {
+        extra.push(("trace_ids", Value::Str(range)));
     }
     json::to_string(&core::stats_value(&shared.coord, &extra))
 }
@@ -406,12 +440,13 @@ fn conn_stats_line(conn: &Conn) -> String {
 
 /// Sequence a reply onto its connection and mirror its accounting into
 /// the global totals; emits the periodic stats line on cadence.
-fn deliver(shared: &Shared, conn: &Conn, seq: u64, reply: String, kind: ReplyKind) {
+fn deliver(shared: &Shared, conn: &Conn, seq: u64, reply: Reply, kind: ReplyKind) {
     {
         // Resequence + write: `complete` buffers out-of-order replies
         // and drains everything consecutive to the socket.
         let mut span = crate::obs::span("serve", "serve.write");
         span.arg("seq", seq as i64);
+        span.arg_str("trace_id", || format!("{}#{seq}", conn.name));
         conn.complete(seq, reply, kind);
     }
     let t = &shared.totals;
@@ -458,28 +493,41 @@ fn worker_loop(shared: &Arc<Shared>) {
             }
         };
         let Some(w) = work else { return };
+        let trace_id = || format!("{}#{}", w.conn.name, w.seq);
         // The queue-wait interval starts on the reader thread and ends
         // here, so it is a complete event, not an RAII span.
+        let mut queue_wait_us = 0u64;
         if let Some(t0) = w.enqueued_us {
             let now = crate::obs::now_us();
-            shared.obs.queue_wait_us.record(now.saturating_sub(t0));
+            queue_wait_us = now.saturating_sub(t0);
+            shared.obs.queue_wait_us.record(queue_wait_us);
+            shared.obs.queue_wait_win.record_at(now, queue_wait_us);
             crate::obs::complete_event(
                 "serve",
                 "serve.queue_wait",
                 t0,
                 now,
-                vec![("id", crate::obs::ArgValue::Str(w.id.clone()))],
+                vec![
+                    ("id", crate::obs::ArgValue::Str(w.id.clone())),
+                    ("trace_id", crate::obs::ArgValue::Str(trace_id())),
+                ],
             );
         }
         shared.obs.workers_busy.add(1);
-        let exec_t0 = crate::obs::enabled().then(std::time::Instant::now);
+        let timed = w.decode_us.is_some();
+        let exec_t0 = (crate::obs::enabled() || timed).then(crate::obs::now_us);
         let outcome = {
             let mut span = crate::obs::span("serve", "serve.execute");
             span.arg_str("id", || w.id.clone());
+            span.arg_str("trace_id", trace_id);
             core::run_payload(&shared.coord, &w.id, w.payload, &shared.cfg.serve)
         };
+        let mut exec_us = 0u64;
         if let Some(t0) = exec_t0 {
-            shared.obs.exec_us.record(t0.elapsed().as_micros() as u64);
+            let now = crate::obs::now_us();
+            exec_us = now.saturating_sub(t0);
+            shared.obs.exec_us.record(exec_us);
+            shared.obs.exec_win.record_at(now, exec_us);
         }
         shared.obs.workers_busy.add(-1);
         let kind = if outcome.is_err {
@@ -487,7 +535,23 @@ fn worker_loop(shared: &Arc<Shared>) {
         } else {
             ReplyKind::Result { cache_hit: outcome.cache_hit }
         };
-        deliver(shared, &w.conn, w.seq, json::to_string(&outcome.reply), kind);
+        let reply = match w.decode_us {
+            // Timed replies render at drain time so the timing object
+            // can carry the measured write wait.
+            Some(decode_us) => Reply::Timed {
+                reply: outcome.reply,
+                timing: core::JobTiming {
+                    trace_id: trace_id(),
+                    decode_us,
+                    queue_wait_us,
+                    exec_us,
+                    write_wait_us: 0,
+                },
+                completed_us: crate::obs::now_us(),
+            },
+            None => Reply::Ready(json::to_string(&outcome.reply)),
+        };
+        deliver(shared, &w.conn, w.seq, reply, kind);
         w.conn.job_done();
         shared.inflight.fetch_sub(1, Ordering::SeqCst);
     }
@@ -521,7 +585,8 @@ fn reader_loop(shared: &Arc<Shared>, conn: &Arc<Conn>, stream: Stream) {
                         shared.cfg.max_line_bytes
                     ),
                 );
-                deliver(shared, conn, seq, json::to_string(&reply), ReplyKind::WireError);
+                let reply = Reply::Ready(json::to_string(&reply));
+                deliver(shared, conn, seq, reply, ReplyKind::WireError);
                 // An unframed client is not a client we can keep
                 // decoding for: answer, then tear the connection down.
                 break;
@@ -533,8 +598,13 @@ fn reader_loop(shared: &Arc<Shared>, conn: &Arc<Conn>, stream: Stream) {
         if bytes.iter().all(|b| b.is_ascii_whitespace()) {
             continue;
         }
+        // The next accepted line gets sequence number `next_seq`, so
+        // the decode span can carry the job's trace id before the
+        // line's type is even known.
+        let decode_start_us = crate::obs::now_us();
         let lowered = {
-            let _span = crate::obs::span("serve", "serve.decode");
+            let mut span = crate::obs::span("serve", "serve.decode");
+            span.arg_str("trace_id", || format!("{}#{next_seq}", conn.name));
             core::lower_line_bytes(bytes, line_no, shared.cfg.serve.default_dc)
         };
         match lowered {
@@ -542,34 +612,35 @@ fn reader_loop(shared: &Arc<Shared>, conn: &Arc<Conn>, stream: Stream) {
                 let seq = next_seq;
                 next_seq += 1;
                 let reply = core::error_reply(id.as_deref(), &error);
-                deliver(shared, conn, seq, json::to_string(&reply), ReplyKind::WireError);
+                let reply = Reply::Ready(json::to_string(&reply));
+                deliver(shared, conn, seq, reply, ReplyKind::WireError);
             }
             Lowered::Control { op: ControlOp::Stats { scope: StatsScope::Server }, .. } => {
                 let seq = next_seq;
                 next_seq += 1;
                 let line = stats_line(shared, conn, StatsFlavor::Cumulative);
-                deliver(shared, conn, seq, line, ReplyKind::Control);
+                deliver(shared, conn, seq, Reply::Ready(line), ReplyKind::Control);
             }
             Lowered::Control { op: ControlOp::Stats { scope: StatsScope::Connection }, .. } => {
                 let seq = next_seq;
                 next_seq += 1;
                 let line = conn_stats_line(conn);
-                deliver(shared, conn, seq, line, ReplyKind::Control);
+                deliver(shared, conn, seq, Reply::Ready(line), ReplyKind::Control);
             }
             Lowered::Control { id, op: ControlOp::Metrics } => {
                 let seq = next_seq;
                 next_seq += 1;
                 let line = json::to_string(&core::metrics_value(id.as_deref()));
-                deliver(shared, conn, seq, line, ReplyKind::Control);
+                deliver(shared, conn, seq, Reply::Ready(line), ReplyKind::Control);
             }
             Lowered::Control { op: ControlOp::Shutdown, .. } => {
                 shared.start_drain();
                 let seq = next_seq;
                 next_seq += 1;
                 let line = stats_line(shared, conn, StatsFlavor::DrainAck);
-                deliver(shared, conn, seq, line, ReplyKind::Control);
+                deliver(shared, conn, seq, Reply::Ready(line), ReplyKind::Control);
             }
-            Lowered::Work { id, payload } => {
+            Lowered::Work { id, timing, payload } => {
                 let seq = next_seq;
                 next_seq += 1;
                 if shared.draining()
@@ -582,7 +653,8 @@ fn reader_loop(shared: &Arc<Shared>, conn: &Arc<Conn>, stream: Stream) {
                         Some(&id),
                         "shutting_down: server is draining, job not accepted",
                     );
-                    deliver(shared, conn, seq, json::to_string(&reply), ReplyKind::ShuttingDown);
+                    let reply = Reply::Ready(json::to_string(&reply));
+                    deliver(shared, conn, seq, reply, ReplyKind::ShuttingDown);
                 } else if !shared.try_admit() {
                     let reply = core::error_reply(
                         Some(&id),
@@ -591,12 +663,26 @@ fn reader_loop(shared: &Arc<Shared>, conn: &Arc<Conn>, stream: Stream) {
                             shared.cfg.max_inflight.max(1)
                         ),
                     );
-                    deliver(shared, conn, seq, json::to_string(&reply), ReplyKind::Busy);
+                    let reply = Reply::Ready(json::to_string(&reply));
+                    deliver(shared, conn, seq, reply, ReplyKind::Busy);
                 } else {
                     conn.begin_job();
-                    let enqueued_us = crate::obs::enabled().then(crate::obs::now_us);
+                    // Timed jobs bill decode from the clock read taken
+                    // before lowering; the enqueue stamp feeds the
+                    // queue-wait measurement whenever anyone (trace or
+                    // this job's `"timing"` opt-in) will consume it.
+                    let decode_us =
+                        timing.then(|| crate::obs::now_us().saturating_sub(decode_start_us));
+                    let enqueued_us = (crate::obs::enabled() || timing).then(crate::obs::now_us);
                     let mut q = shared.queue.lock().unwrap();
-                    q.push_back(Work { conn: Arc::clone(conn), seq, id, payload, enqueued_us });
+                    q.push_back(Work {
+                        conn: Arc::clone(conn),
+                        seq,
+                        id,
+                        payload,
+                        enqueued_us,
+                        decode_us,
+                    });
                     shared.obs.queue_depth.set(q.len() as i64);
                     drop(q);
                     shared.qcv.notify_one();

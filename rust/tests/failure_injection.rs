@@ -437,6 +437,23 @@ mod socket {
         let _ = da4ml::obs::drain_events();
         assert_eq!(untraced.len(), 3, "two results + one error: {untraced:?}");
         assert_eq!(untraced, traced, "tracing changed reply bytes");
+
+        // The streaming exporter (the long-lived-server trace mode,
+        // rotation enabled) is held to the same contract: a live
+        // .jsonl flusher must not perturb a single reply byte.
+        let trace_path = std::env::temp_dir()
+            .join(format!("da4ml-fi-stream-{}.jsonl", std::process::id()));
+        let session = da4ml::obs::StreamingTraceSession::begin(da4ml::obs::StreamConfig {
+            path: trace_path.to_string_lossy().into_owned(),
+            rotate_bytes: Some(64 * 1024),
+        })
+        .expect("begin streaming trace");
+        let streamed = run("streamed");
+        let (trace_file, metrics_file) = session.finish().expect("finish streaming trace");
+        let _ = std::fs::remove_file(&trace_file);
+        let _ = std::fs::remove_file(format!("{trace_file}.1"));
+        let _ = std::fs::remove_file(&metrics_file);
+        assert_eq!(untraced, streamed, "streaming trace export changed reply bytes");
     }
 
     /// A connection that never sends anything must not block the

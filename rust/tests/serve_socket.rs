@@ -338,6 +338,57 @@ fn drain_rejections(summary: &ServerSummary) -> u64 {
     summary.errors - summary.rejected_busy
 }
 
+/// The per-job `"timing": true` opt-in: the reply gains exactly one
+/// `"timing"` object (trace id + per-stage microseconds) and nothing
+/// else — removing it recovers the untimed reply byte for byte, and an
+/// explicit `"timing": false` is indistinguishable from absence.
+#[test]
+fn timing_opt_in_adds_only_the_timing_object() {
+    // Bake the job once so every run replies from the same cached
+    // solution, pinning `opt_ms` and with it the full reply bytes.
+    let req = da4ml::serve::JobRequest::from_json(r#"{"id": "t", "matrix": [[3, 5], [-7, 9]]}"#)
+        .expect("request");
+    let job = req.to_compile_job("t".into(), -1).expect("job");
+    let bake = Coordinator::new();
+    bake.compile_cached(&job).expect("bake");
+    let cache = bake.save_cache();
+    let run = |tag: &str, line: &str| -> String {
+        let coord = Coordinator::new();
+        coord.load_cache(&cache).expect("load cache");
+        let path = socket_path(tag);
+        let server = Server::bind(coord, ServerConfig::default(), &path, None).expect("bind");
+        let handle = server.handle();
+        let join = thread::spawn(move || server.run().expect("server run"));
+        let lines = round_trip(&path, line);
+        handle.shutdown();
+        join.join().expect("server thread");
+        lines.into_iter().next().expect("job reply")
+    };
+
+    let req_on = "{\"id\": \"t\", \"matrix\": [[3, 5], [-7, 9]], \"timing\": true}\n";
+    let plain = run("timing-off", "{\"id\": \"t\", \"matrix\": [[3, 5], [-7, 9]]}\n");
+    let timed = run("timing-on", req_on);
+
+    let v = json::parse(&timed).expect("timed reply is JSON");
+    let t = v.get("timing").expect("opted-in reply carries a timing object");
+    assert_eq!(t.get("trace_id").unwrap().as_str().unwrap(), "client-0#0");
+    for key in ["decode_us", "queue_wait_us", "exec_us", "write_wait_us"] {
+        assert!(t.get(key).unwrap().as_i64().is_ok(), "missing stage time {key}: {timed}");
+    }
+
+    // Strictly additive: dropping the timing object recovers the
+    // untimed reply bytes (both renderings sort keys).
+    let mut stripped = json::parse(&timed).unwrap();
+    if let Value::Object(o) = &mut stripped {
+        o.remove("timing");
+    }
+    assert_eq!(json::to_string(&stripped), plain, "timing must be strictly additive");
+
+    // `"timing": false` must decode — and reply — like an absent field.
+    let req_off = "{\"id\": \"t\", \"matrix\": [[3, 5], [-7, 9]], \"timing\": false}\n";
+    assert_eq!(run("timing-false", req_off), plain);
+}
+
 /// The observability control lines on the socket wire: `metrics`
 /// answers with the schema-versioned snapshot, `stats` with
 /// `"scope": "connection"` answers with the posting connection's own

@@ -1,0 +1,100 @@
+//! End-to-end trace correlation over the socket server: run a traced
+//! server, export the event log through the streaming session, and
+//! reconstruct every job's decode → queue_wait → execute → write story
+//! from the JSONL file with the `obs` analysis layer.
+//!
+//! Tracing is process-global, so this lives in its own test binary:
+//! any untraced test running in the same process while the session is
+//! live would leak its server's events into the captured log (and
+//! colliding `client-0#0` trace ids would trip the checker's
+//! at-most-once rule). Tests added here must not run concurrently with
+//! an active trace session — keep this binary to traced tests only.
+
+use da4ml::coordinator::Coordinator;
+use da4ml::json;
+use da4ml::obs::analyze;
+use da4ml::obs::{StreamConfig, StreamingTraceSession};
+use da4ml::serve::server::{Server, ServerConfig};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::thread;
+
+const JOBS: usize = 3;
+
+/// Write every line, half-close, read every reply line until EOF.
+fn round_trip(path: &std::path::Path, input: &str) -> Vec<String> {
+    let mut tx = UnixStream::connect(path).expect("connect");
+    let rx = tx.try_clone().expect("clone");
+    tx.write_all(input.as_bytes()).expect("send");
+    tx.shutdown(std::net::Shutdown::Write).expect("half-close");
+    BufReader::new(rx).lines().map(|l| l.expect("reply line")).collect()
+}
+
+#[test]
+fn streaming_trace_reconstructs_every_job_stage() {
+    let pid = std::process::id();
+    let trace_path = std::env::temp_dir().join(format!("da4ml-trace-e2e-{pid}.jsonl"));
+    let trace_path = trace_path.to_str().unwrap().to_string();
+    let session = StreamingTraceSession::begin(StreamConfig {
+        path: trace_path.clone(),
+        rotate_bytes: None,
+    })
+    .expect("begin streaming session");
+
+    let sock = std::env::temp_dir().join(format!("da4ml-trace-e2e-{pid}.sock"));
+    let server =
+        Server::bind(Coordinator::new(), ServerConfig::default(), &sock, None).expect("bind");
+    let handle = server.handle();
+    let join = thread::spawn(move || server.run().expect("server run"));
+
+    let input: String = (0..JOBS)
+        .map(|j| format!("{{\"id\": \"tr-{j}\", \"matrix\": [[2, 3], [5, 7]], \"timing\": true}}\n"))
+        .collect();
+    let lines = round_trip(&sock, &input);
+    handle.shutdown();
+    let summary = join.join().expect("server thread");
+    let (trace_file, metrics_file) = session.finish().expect("finish session");
+
+    // Wire-side: each opted-in reply names its own trace id, and the
+    // final stats line reports the connection's full id range.
+    assert_eq!(lines.len(), JOBS + 1, "one reply per job plus final stats: {lines:?}");
+    assert_eq!(summary.jobs, JOBS as u64);
+    for (j, line) in lines[..JOBS].iter().enumerate() {
+        let v = json::parse(line).expect("reply is JSON");
+        let timing = v.get("timing").expect("opted-in reply carries timing");
+        let got = timing.get("trace_id").unwrap().as_str().unwrap().to_string();
+        assert_eq!(got, format!("client-0#{j}"));
+    }
+    let last = json::parse(&lines[JOBS]).expect("final stats line is JSON");
+    assert!(last.get("final").unwrap().as_bool().unwrap());
+    assert_eq!(last.get("trace_ids").unwrap().as_str().unwrap(), "client-0#0..client-0#2");
+
+    // Log-side: the exported JSONL passes the structural checker and
+    // yields a clean critical path for every job's trace id.
+    let text = std::fs::read_to_string(&trace_file).expect("read trace log");
+    let log = analyze::parse_log(&text).expect("parse trace log");
+    let report = analyze::check(&log.events, log.dropped_events);
+    assert!(report.passed(), "trace log fails structural check: {:?}", report.errors);
+
+    let paths = analyze::critical_path(&log.events);
+    assert!(paths.problems.is_empty(), "broken phase stories: {:?}", paths.problems);
+    assert_eq!(paths.traces, JOBS, "one reconstructed path per job");
+
+    let mut by_trace: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for e in &log.events {
+        if let Some(t) = e.arg_str("trace_id") {
+            by_trace.entry(t).or_default().push(e.name.as_str());
+        }
+    }
+    for j in 0..JOBS {
+        let id = format!("client-0#{j}");
+        let names = by_trace.get(id.as_str()).unwrap_or_else(|| panic!("no events for {id}"));
+        for want in ["serve.decode", "serve.queue_wait", "serve.execute", "serve.write"] {
+            assert!(names.contains(&want), "{id} missing {want}: {names:?}");
+        }
+    }
+
+    let _ = std::fs::remove_file(&trace_file);
+    let _ = std::fs::remove_file(&metrics_file);
+}
